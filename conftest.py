@@ -1,0 +1,6 @@
+# Allow `pytest python/tests/` from the repo root: the build-time package
+# lives under python/ (it is not installed; it never runs at sim time).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

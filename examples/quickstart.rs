@@ -1,0 +1,65 @@
+//! Quickstart: model one hybrid training configuration end to end.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+//!
+//! Walks the full DistSim pipeline on BERT-Large with a 2-way-MP /
+//! 2-way-PP / 2-way-DP strategy over 8 A40 GPUs:
+//!   1. partition the model (Megatron-style),
+//!   2. generate + dedup events,
+//!   3. profile them on a 2-node slice,
+//!   4. hierarchically compose the full-cluster timeline,
+//!   5. compare against "actually running it" (the ground-truth engine).
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::exp::eval_cfg;
+use distsim::metrics;
+use distsim::strategy::Strategy;
+use distsim::timeline::analysis;
+use distsim::util::{fmt_us, rel_err_pct, stats};
+
+fn main() -> anyhow::Result<()> {
+    // 1-2-3-4: config -> partition -> events -> profile -> predict
+    let cfg = RunConfig::new(
+        "bert-large",
+        Strategy::parse("2M2P2D")?,
+        ClusterSpec::a40_cluster(4, 4),
+    );
+    println!("== DistSim quickstart: {} / {} ==\n", cfg.model, cfg.strategy);
+
+    let run = eval_cfg(&cfg)?;
+    let predicted = run.predicted.batch_time_us();
+    println!(
+        "events: {} unique, profiled in {:.2} gpu-s on a 2-node slice",
+        run.profile.events_profiled, run.profile.gpu_seconds
+    );
+    println!("predicted batch time: {}", fmt_us(predicted));
+
+    // 5: the "real cluster" (ground-truth engine), 20 iterations
+    let actual = run.gt.mean_batch_time_us(20);
+    println!("actual batch time:    {}", fmt_us(actual));
+    println!("batch-time error:     {:.2}%  (paper: < 4%)", rel_err_pct(predicted, actual));
+
+    // per-GPU activity accuracy (paper Fig. 9)
+    let errs = metrics::per_gpu_activity_error_pct(&run.predicted, &run.gt.run_iteration(0));
+    println!(
+        "per-GPU activity error: mean {:.2}%, max {:.2}%  (paper: < 5%)",
+        stats::mean(&errs),
+        stats::max(&errs)
+    );
+
+    // utilization / bubble analysis from the predicted timeline
+    let (lo, mid, hi) = analysis::utilization_summary(&run.predicted);
+    println!(
+        "\npredicted utilization: min {lo:.2} mean {mid:.2} max {hi:.2}; bubble ratio {:.3}",
+        analysis::bubble_ratio(&run.predicted)
+    );
+
+    // export a Chrome trace for Perfetto
+    let trace = "quickstart_timeline.json";
+    distsim::timeline::chrome::write_chrome_trace(&run.predicted, trace)?;
+    println!("wrote {trace} — open in https://ui.perfetto.dev");
+    Ok(())
+}

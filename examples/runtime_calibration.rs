@@ -1,0 +1,80 @@
+//! End-to-end three-layer driver: prove L1 (Pallas kernels) → L2 (JAX
+//! layer graphs) → L3 (Rust coordinator) compose on a real workload.
+//!
+//! ```bash
+//! make artifacts   # once: python AOT-lowers the event graphs to HLO text
+//! cargo run --release --offline --example runtime_calibration
+//! ```
+//!
+//! Loads every AOT artifact through PJRT-CPU, executes it with real
+//! numerics (this is the paper's CUPTI step, with the GPU swapped for the
+//! CPU PJRT client), fits the cost model's scale to the measurements, and
+//! then re-runs the headline Fig.-8-style accuracy experiment under the
+//! calibrated cost model — demonstrating that profiling, modeling and
+//! validation all run off measured compute. Records results in
+//! EXPERIMENTS.md's end-to-end section.
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::cost::CostModel;
+use distsim::profile::calibrate::{fit_scale, measure_artifacts};
+use distsim::runtime::artifacts_dir;
+use distsim::strategy::Strategy;
+use distsim::util::{fmt_us, rel_err_pct};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    println!("== L1/L2 -> L3 bridge: measuring AOT artifacts in {} ==\n", dir.display());
+    let mut cal = match measure_artifacts(&dir, 3) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+
+    println!("{:<28} {:>12} {:>12}", "artifact", "latency", "GFLOP/s");
+    for p in &cal.points {
+        println!(
+            "{:<28} {:>12} {:>12.2}",
+            p.name,
+            fmt_us(p.measured_us),
+            p.flops as f64 / p.measured_us / 1e3
+        );
+    }
+    println!("\nhost peak observed: {:.2} GFLOP/s", cal.host_gflops);
+
+    // Fit the cost model's scale so a host-shaped device reproduces the
+    // measured latencies, then use the calibrated model end-to-end.
+    let base = CostModel::default();
+    let host_tflops = cal.host_gflops / 1e3;
+    fit_scale(&mut cal, &base, host_tflops);
+    println!("fitted cost-model scale: {:.3}", cal.scale);
+    cal.save(std::path::Path::new("calibration.json"))?;
+
+    // Headline experiment under the calibrated model: DistSim vs ground
+    // truth on BERT-Large 2M2P2D (both sides share the calibrated costs —
+    // the accuracy claim is about *composition*, not absolute latency).
+    let mut cost = CostModel::default();
+    cost.scale = cal.scale;
+    let cfg = RunConfig::new(
+        "bert-large",
+        Strategy::parse("2M2P2D")?,
+        ClusterSpec::a40_cluster(4, 4),
+    );
+    let gt = distsim::engine::GroundTruth::prepare_with_cost(&cfg, cost.clone())?;
+    let mut db = distsim::events::EventDb::new();
+    distsim::engine::build_programs(&gt.part, &gt.sched, &cfg.cluster, &mut db);
+    distsim::profile::profile_events(&mut db, &cfg.cluster, &cost, cfg.jitter_sigma, 100, 123);
+    let ds = distsim::distsim::DistSim::new(&gt.part, &gt.sched, &cfg.cluster);
+    let pred = ds.predict_batch_time_us(&mut db);
+    let actual = gt.mean_batch_time_us(20);
+    println!(
+        "\ncalibrated end-to-end: predicted {} vs actual {} -> error {:.2}%",
+        fmt_us(pred),
+        fmt_us(actual),
+        rel_err_pct(pred, actual)
+    );
+    println!("(wrote calibration.json)");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! The paper's §6 use-case: auto parallel-strategy search.
+//!
+//! ```bash
+//! cargo run --release --offline --example strategy_search
+//! ```
+//!
+//! Grid-searches all 15 hybrid deployments of BERT-exLarge (48 layers) on
+//! 4 nodes x 4 A10 GPUs at global batch 16, using DistSim as the
+//! throughput oracle, then verifies the top/bottom picks on the
+//! ground-truth engine (the paper's Table 2 protocol).
+
+use distsim::cluster::ClusterSpec;
+use distsim::cost::CostModel;
+use distsim::model::zoo;
+use distsim::search::{grid_search, measure_actual};
+
+fn main() -> anyhow::Result<()> {
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+    let global_batch = 16;
+
+    println!("== strategy search: {} on 16 x {} ==\n", model.name, cluster.device.name);
+    let report = grid_search(&model, &cluster, &CostModel::default(), global_batch, 0.02, 50);
+
+    let mut sorted = report.candidates.clone();
+    sorted.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    for c in &sorted {
+        println!(
+            "  {:10} {}",
+            c.strategy.notation(),
+            if c.reachable {
+                format!("{:7.3} it/s", c.throughput)
+            } else {
+                "   unreachable (OOM)".to_string()
+            }
+        );
+    }
+
+    println!(
+        "\nbest {} -> {:.2}x over worst {} (paper: 7.37x, winner pipeline-heavy, loser 16-way MP)",
+        report.best().strategy,
+        report.speedup(),
+        report.worst().strategy
+    );
+    println!(
+        "search cost: {:.2} gpu-s profiling + {:.3} s simulation",
+        report.profile.gpu_seconds, report.simulate_seconds
+    );
+
+    // Verify like the paper's Table 2: run best and worst "for real".
+    println!("\nverifying on the ground-truth engine:");
+    for cand in [report.best(), report.worst()] {
+        let actual = measure_actual("bert-exlarge", cand, &cluster, global_batch, 20)?;
+        println!(
+            "  {:10} DistSim {:.3} it/s   actual {:.3} it/s   ({:+.1}%)",
+            cand.strategy.notation(),
+            cand.throughput,
+            actual,
+            (cand.throughput - actual) / actual * 100.0
+        );
+    }
+    Ok(())
+}

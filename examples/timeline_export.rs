@@ -1,0 +1,58 @@
+//! Timeline inspection: export predicted and actual Chrome traces for one
+//! configuration and report where the pipeline bubbles are — the paper's
+//! §5.4 use-case (placing fault-tolerance work inside bubbles).
+//!
+//! ```bash
+//! cargo run --release --offline --example timeline_export -- 2M4P1D
+//! ```
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::exp::eval_cfg;
+use distsim::strategy::Strategy;
+use distsim::timeline::analysis::{bubbles, utilization_summary};
+use distsim::timeline::chrome::write_chrome_trace;
+use distsim::util::fmt_us;
+
+fn main() -> anyhow::Result<()> {
+    let notation = std::env::args().nth(1).unwrap_or_else(|| "2M4P1D".into());
+    let mut cfg = RunConfig::new(
+        "bert-large",
+        Strategy::parse(&notation)?,
+        ClusterSpec::a40_cluster(4, 4),
+    );
+    cfg.micro_batches = 4;
+    let run = eval_cfg(&cfg)?;
+
+    let predicted = run.predicted.normalized();
+    let actual = run.gt.run_iteration(0).normalized();
+    write_chrome_trace(&predicted, "predicted_trace.json")?;
+    write_chrome_trace(&actual, "actual_trace.json")?;
+    println!("wrote predicted_trace.json and actual_trace.json (open in Perfetto)\n");
+
+    let (lo, mean, hi) = utilization_summary(&predicted);
+    println!("predicted utilization: min {lo:.2} mean {mean:.2} max {hi:.2}");
+
+    // the biggest bubbles per device — candidates for fault-tolerance work
+    let mut bs = bubbles(&predicted, 50.0);
+    bs.sort_by(|a, b| b.dur().partial_cmp(&a.dur()).unwrap());
+    println!("\nlargest pipeline bubbles (predicted):");
+    for b in bs.iter().take(8) {
+        println!(
+            "  GPU {:2}  [{:>12} .. {:>12}]  {:>12}",
+            b.device,
+            fmt_us(b.start),
+            fmt_us(b.end),
+            fmt_us(b.dur())
+        );
+    }
+
+    // did the prediction put bubbles where the real run has them?
+    let actual_bubbles = bubbles(&actual, 50.0);
+    println!(
+        "\nbubble count: predicted {} vs actual {} (min 50 us)",
+        bs.len(),
+        actual_bubbles.len()
+    );
+    Ok(())
+}

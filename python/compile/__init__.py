@@ -1,0 +1,2 @@
+# Build-time-only package: authors and AOT-lowers the compute events that
+# the Rust profiler times through PJRT. Never imported at simulation time.

@@ -1,0 +1,185 @@
+"""AOT lowering: JAX (L2, calling Pallas L1) -> HLO *text* artifacts.
+
+HLO text — NOT `lowered.compiler_ir('hlo')`/`.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (what the published `xla` 0.1.6 crate links)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs, under --out-dir (default ../artifacts):
+  <name>.hlo.txt           one module per (event, shape) pair
+  manifest.json            index the Rust profiler reads: for every artifact
+                           its arg shapes, flop count, and event identity
+
+Run via `make artifacts` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import attention_vjp, matmul_vjp
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Artifact definitions.
+#
+# The profiling shapes mirror the per-rank shards the paper profiles on its
+# 2-node slice: one transformer layer of each benchmark model family at
+# every tensor-MP degree used in the evaluation. seq/batch are the paper's
+# micro-batch granularity (seq 128 keeps CPU-PJRT timing runs fast; the
+# Rust cost model scales by FLOPs to the full sequence length).
+# ---------------------------------------------------------------------------
+
+SHARDS: dict[str, M.LayerShard] = {}
+
+
+def _register_shards() -> None:
+    # (family, hidden, heads, ffn): BERT-Large / GPT-2-345M share h=1024;
+    # T5-Large uses h=1024 ffn=4096 too but we also emit a 768 variant to
+    # give the calibration a second size point.
+    for name, (h, heads, ffn) in {
+        "h1024": (1024, 16, 4096),
+        "h768": (768, 12, 3072),
+    }.items():
+        for mp in (1, 2, 4):
+            if heads % mp:
+                continue
+            SHARDS[f"layer_{name}_mp{mp}"] = M.LayerShard(
+                hidden=h, heads=heads, ffn=ffn, seq=128, batch=1, mp=mp
+            )
+
+
+_register_shards()
+
+# Micro events used for the cost-model efficiency curve: square matmuls of
+# increasing size and one attention core.
+MATMUL_SIZES = (128, 256, 512, 1024)
+ATTN_SHAPES = {"attn_bh16_s128_d64": (16, 128, 64)}
+
+
+def lower_all(out_dir: str, *, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {"artifacts": []}
+
+    def emit(name: str, lowered, args, *, flops: int, kind: str, meta: dict):
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "path": path,
+                "kind": kind,
+                "flops": flops,
+                "args": [
+                    {"shape": list(a.shape), "dtype": str(a.dtype)}
+                    for a in args
+                ],
+                **meta,
+            }
+        )
+        if verbose:
+            print(f"  wrote {path} ({len(text)} chars, {flops/1e9:.2f} GFLOP)")
+
+    # Transformer layer shards: fwd and fwd+bwd.
+    for name, shard in SHARDS.items():
+        args = M.example_args(shard)
+        fwd, _ = M.make_fwd(shard)
+        emit(
+            f"{name}_fwd",
+            jax.jit(fwd).lower(*args),
+            args,
+            flops=shard.flops_fwd(),
+            kind="layer_fwd",
+            meta={
+                "hidden": shard.hidden,
+                "heads": shard.heads,
+                "ffn": shard.ffn,
+                "seq": shard.seq,
+                "batch": shard.batch,
+                "mp": shard.mp,
+            },
+        )
+        fwdbwd, _ = M.make_fwdbwd(shard)
+        emit(
+            f"{name}_bwd",
+            jax.jit(fwdbwd).lower(*args),
+            args,
+            flops=3 * shard.flops_fwd(),  # fwd + ~2x fwd for bwd
+            kind="layer_bwd",
+            meta={
+                "hidden": shard.hidden,
+                "heads": shard.heads,
+                "ffn": shard.ffn,
+                "seq": shard.seq,
+                "batch": shard.batch,
+                "mp": shard.mp,
+            },
+        )
+
+    # Calibration micro-events.
+    for n in MATMUL_SIZES:
+        spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+        def mm(x, w):
+            return (matmul_vjp(x, w),)
+
+        emit(
+            f"matmul_{n}",
+            jax.jit(mm).lower(spec, spec),
+            [spec, spec],
+            flops=2 * n * n * n,
+            kind="matmul",
+            meta={"n": n},
+        )
+    for name, (bh, s, d) in ATTN_SHAPES.items():
+        spec = jax.ShapeDtypeStruct((bh, s, d), jnp.float32)
+
+        def at(q, k, v):
+            return (attention_vjp(q, k, v),)
+
+        emit(
+            name,
+            jax.jit(at).lower(spec, spec, spec),
+            [spec, spec, spec],
+            flops=2 * bh * s * s * d * 2,
+            kind="attention",
+            meta={"bh": bh, "seq": s, "d": d},
+        )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    manifest = lower_all(args.out_dir, verbose=not args.quiet)
+    print(
+        f"wrote {len(manifest['artifacts'])} artifacts + manifest.json "
+        f"to {args.out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+# L1: Pallas kernels for the paper's compute hot-spots (all interpret=True).
+from .attention import attention, attention_vjp  # noqa: F401
+from .layernorm import layernorm, layernorm_vjp  # noqa: F401
+from .matmul import matmul, matmul_vjp  # noqa: F401
+from .ref import attention_ref, layernorm_ref, matmul_ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: row-wise LayerNorm.
+
+Grid over row blocks; each step normalizes a (bm, hidden) tile in VMEM.
+Small compared to the matmuls but present in every transformer event, so it
+is profiled as its own computation event by the Rust side.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _layernorm_kernel(x_ref, g_ref, b_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def layernorm(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    """LayerNorm over the last axis of a (rows, hidden) input."""
+    rows, hidden = x.shape
+    bm = rows if rows <= 128 else next(
+        c for c in range(128, 0, -1) if rows % c == 0
+    )
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_layernorm_kernel, eps=eps),
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, hidden), lambda i: (i, 0)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+            pl.BlockSpec((hidden,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, hidden), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)
+
+
+@jax.custom_vjp
+def layernorm_vjp(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """Differentiable LayerNorm: forward runs the Pallas kernel, backward
+    uses the closed-form LayerNorm gradient."""
+    return layernorm(x, gamma, beta)
+
+
+def _ln_fwd(x, gamma, beta):
+    return layernorm(x, gamma, beta), (x, gamma)
+
+
+def _ln_bwd(res, dy, *, eps: float = 1e-5):
+    x, gamma = res
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mean), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mean) * inv
+    dg = jnp.sum(dy * xhat, axis=0)
+    db = jnp.sum(dy, axis=0)
+    dyg = dy * gamma
+    dx = inv * (
+        dyg
+        - jnp.mean(dyg, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dyg * xhat, axis=-1, keepdims=True)
+    )
+    return dx, dg, db
+
+
+layernorm_vjp.defvjp(_ln_fwd, _ln_bwd)

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: tiled matmul for the transformer hot path.
+
+Hardware adaptation (paper events are CUDA/A40 kernels -> we target TPU
+structure, see DESIGN.md #Hardware-Adaptation): the matmul is tiled over a
+(M/bm, N/bn, K/bk) grid so each step holds an x-tile, a w-tile and an
+accumulator tile in VMEM; tiles are MXU-aligned (multiples of 128 where the
+problem allows). `interpret=True` everywhere: the CPU PJRT client cannot run
+Mosaic custom-calls, so correctness is validated through the interpret path
+and real-TPU efficiency is *estimated* from the block shapes (DESIGN.md
+#Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int):
+    """Compute one (bm, bn) output tile; k is the innermost grid axis.
+
+    The output block is revisited for every k step (its index_map ignores
+    k), so it doubles as the VMEM accumulator — zeroed at k == 0 and
+    accumulated into afterwards, the classic Pallas reduction idiom.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # f32 accumulation regardless of input dtype (MXU-style accumulate).
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps tiles MXU-friendly
+    for power-of-two transformer dims while accepting ragged test shapes)."""
+    if dim <= target:
+        return dim
+    for cand in range(target, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    bm: int | None = None,
+    bn: int | None = None,
+    bk: int | None = None,
+) -> jax.Array:
+    """Tiled Pallas matmul: (m, k) @ (k, n) -> (m, n).
+
+    Default blocks are 128x128 output tiles with a 512-deep k slab: VMEM
+    footprint = bm*bk + bk*bn + bm*bn floats = (128*512*2 + 128*128)*4B
+    ~= 576 KiB << 16 MiB, and both MXU operand dims are 128-aligned for
+    power-of-two transformer shapes.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    bm = bm or _pick_block(m, 128)
+    bn = bn or _pick_block(n, 128)
+    bk = bk or _pick_block(k, 512)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"blocks ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+    )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul_vjp(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable wrapper: the forward AND both backward matmuls run
+    the Pallas kernel, so AOT bwd artifacts exercise L1 as well."""
+    return matmul(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    return dx, dw
+
+
+matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)

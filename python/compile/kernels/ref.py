@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the correctness ground truth: pytest (python/tests/) sweeps
+shapes/dtypes with hypothesis and asserts the Pallas kernels match these
+within float tolerance.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    return jnp.matmul(x, w)
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """softmax(q k^T / sqrt(d)) v over (bh, seq, d) operands."""
+    d = q.shape[-1]
+    s = jnp.einsum("bid,bjd->bij", q, k) / math.sqrt(d)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bij,bjd->bid", p, v)
+
+
+def layernorm_ref(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, *, eps: float = 1e-5
+) -> jax.Array:
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,172 @@
+"""L2: JAX compute graphs for DistSim's *computation events*.
+
+The paper's events are the per-device operators of a Megatron-partitioned
+transformer layer. This module builds exactly those graphs — a tensor-model-
+parallel shard of one transformer layer, forward and forward+backward — by
+calling the L1 Pallas kernels, so the AOT artifacts the Rust profiler times
+contain the same kernels the paper would have profiled with CUPTI.
+
+Megatron sharding of a layer with MP size `mp`:
+  attention: qkv projection is column-parallel (heads/mp heads per rank),
+    output projection row-parallel (h/mp -> h, partial sums all-reduced);
+  MLP: h -> 4h/mp column-parallel, gelu, 4h/mp -> h row-parallel (partial
+    sums all-reduced).
+The all-reduces are *communication* events modeled in Rust (comm/); here we
+compute the per-rank compute shard only, which is what a compute event is.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention_vjp, layernorm_vjp as layernorm, matmul_vjp
+
+
+@dataclass(frozen=True)
+class LayerShard:
+    """A tensor-parallel shard of one transformer layer."""
+
+    hidden: int
+    heads: int
+    ffn: int
+    seq: int
+    batch: int
+    mp: int  # tensor model parallelism degree
+
+    @property
+    def head_dim(self) -> int:
+        return self.hidden // self.heads
+
+    @property
+    def local_heads(self) -> int:
+        assert self.heads % self.mp == 0
+        return self.heads // self.mp
+
+    @property
+    def local_qkv(self) -> int:
+        return 3 * self.hidden // self.mp
+
+    @property
+    def local_ffn(self) -> int:
+        assert self.ffn % self.mp == 0
+        return self.ffn // self.mp
+
+    @property
+    def tokens(self) -> int:
+        return self.seq * self.batch
+
+    def param_shapes(self) -> dict[str, tuple[int, ...]]:
+        h, lf, lq = self.hidden, self.local_ffn, self.local_qkv
+        return {
+            "ln1_g": (h,),
+            "ln1_b": (h,),
+            "w_qkv": (h, lq),
+            "w_proj": (self.local_heads * self.head_dim, h),
+            "ln2_g": (h,),
+            "ln2_b": (h,),
+            "w_fc1": (h, lf),
+            "w_fc2": (lf, h),
+        }
+
+    def init_params(self, key: jax.Array) -> dict[str, jax.Array]:
+        shapes = self.param_shapes()
+        keys = jax.random.split(key, len(shapes))
+        out = {}
+        for (name, shape), k in zip(sorted(shapes.items()), keys):
+            scale = 0.02 if len(shape) > 1 else (1.0 if name.endswith("_g") else 0.0)
+            if len(shape) > 1:
+                out[name] = jax.random.normal(k, shape, jnp.float32) * scale
+            else:
+                out[name] = jnp.full(shape, scale, jnp.float32)
+        return out
+
+    def flops_fwd(self) -> int:
+        """MACs*2 for the per-rank shard forward (matches rust/src/model)."""
+        t = self.tokens
+        h, d = self.hidden, self.head_dim
+        lh, lf = self.local_heads, self.local_ffn
+        qkv = 2 * t * h * (3 * h // self.mp)
+        scores = 2 * lh * self.batch * self.seq * self.seq * d * 2  # qk^T + pv
+        proj = 2 * t * (lh * d) * h
+        mlp = 2 * t * h * lf * 2
+        return qkv + scores + proj + mlp
+
+
+def layer_fwd(params: dict[str, jax.Array], x: jax.Array, shard: LayerShard) -> jax.Array:
+    """Per-rank forward of one Megatron-sharded transformer layer.
+
+    x: (tokens, hidden) activation (tokens = batch*seq).
+    Returns the rank's *partial* layer output (pre-all-reduce residual adds
+    are kept local; the all-reduce is a comm event handled in Rust).
+    """
+    t, h = x.shape
+    assert h == shard.hidden and t == shard.tokens
+    lh, d = shard.local_heads, shard.head_dim
+
+    y = layernorm(x, params["ln1_g"], params["ln1_b"])
+    qkv = matmul_vjp(y, params["w_qkv"])  # (t, 3*h/mp)
+    qkv = qkv.reshape(shard.batch, shard.seq, 3, lh, d)
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(shard.batch * lh, shard.seq, d)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(shard.batch * lh, shard.seq, d)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(shard.batch * lh, shard.seq, d)
+    ctx = attention_vjp(q, k, v)  # (b*lh, s, d)
+    ctx = (
+        ctx.reshape(shard.batch, lh, shard.seq, d)
+        .transpose(0, 2, 1, 3)
+        .reshape(t, lh * d)
+    )
+    attn_out = matmul_vjp(ctx, params["w_proj"])  # (t, h) partial sum
+    x = x + attn_out  # residual (local partial; AR is a comm event)
+
+    y = layernorm(x, params["ln2_g"], params["ln2_b"])
+    y = matmul_vjp(y, params["w_fc1"])
+    y = jax.nn.gelu(y)
+    mlp_out = matmul_vjp(y, params["w_fc2"])  # (t, h) partial sum
+    return x + mlp_out
+
+
+def layer_loss(params: dict[str, jax.Array], x: jax.Array, shard: LayerShard) -> jax.Array:
+    """Scalar reduction so grad() gives the full bwd graph."""
+    return jnp.sum(layer_fwd(params, x, shard) ** 2)
+
+
+def make_fwd(shard: LayerShard):
+    """fn(params..., x) -> (out,) for AOT lowering (flat args, tuple out)."""
+    names = sorted(shard.param_shapes())
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        x = args[-1]
+        return (layer_fwd(params, x, shard),)
+
+    return fn, names
+
+
+def make_fwdbwd(shard: LayerShard):
+    """fn(params..., x) -> (loss, dparams..., dx) for AOT lowering."""
+    names = sorted(shard.param_shapes())
+
+    def fn(*args):
+        params = dict(zip(names, args[:-1]))
+        x = args[-1]
+        loss, grads = jax.value_and_grad(layer_loss, argnums=(0, 1))(
+            params, x, shard
+        )
+        dparams, dx = grads
+        return (loss, *[dparams[n] for n in names], dx)
+
+    return fn, names
+
+
+def example_args(shard: LayerShard) -> list[jax.ShapeDtypeStruct]:
+    shapes = shard.param_shapes()
+    args = [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in sorted(shapes)
+    ]
+    args.append(
+        jax.ShapeDtypeStruct((shard.tokens, shard.hidden), jnp.float32)
+    )
+    return args

@@ -1,0 +1,171 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes; every property asserts allclose against
+the reference implementation — the core correctness signal for the AOT
+artifacts the Rust profiler times.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    attention_ref,
+    attention_vjp,
+    layernorm,
+    layernorm_ref,
+    matmul,
+    matmul_ref,
+    matmul_vjp,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------- matmul --
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([1, 8, 32, 128, 160, 256]),
+    k=st.sampled_from([16, 64, 128, 512, 768]),
+    n=st.sampled_from([8, 32, 128, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    kx, kw = jax.random.split(jax.random.PRNGKey(seed))
+    x, w = _rand(kx, (m, k)), _rand(kw, (k, n))
+    # tolerance: accumulation order differs between the tiled kernel and
+    # the reference, so k-proportional float error is expected
+    np.testing.assert_allclose(
+        matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(0))
+    x = _rand(kx, (64, 128)).astype(dtype)
+    w = _rand(kw, (128, 64)).astype(dtype)
+    got = matmul(x, w).astype(jnp.float32)
+    want = matmul_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize(
+    "bm,bn,bk", [(32, 32, 64), (128, 128, 128), (64, 128, 256)]
+)
+def test_matmul_block_shape_invariance(bm, bn, bk):
+    """Result must not depend on the HBM<->VMEM schedule (BlockSpec)."""
+    kx, kw = jax.random.split(jax.random.PRNGKey(7))
+    x, w = _rand(kx, (128, 256)), _rand(kw, (256, 128))
+    np.testing.assert_allclose(
+        matmul(x, w, bm=bm, bn=bn, bk=bk),
+        matmul_ref(x, w),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_matmul_vjp_grads_match_ref_grads():
+    kx, kw = jax.random.split(jax.random.PRNGKey(3))
+    x, w = _rand(kx, (64, 128)), _rand(kw, (128, 32))
+
+    def loss_pallas(x, w):
+        return jnp.sum(matmul_vjp(x, w) ** 2)
+
+    def loss_ref(x, w):
+        return jnp.sum(matmul_ref(x, w) ** 2)
+
+    gx, gw = jax.grad(loss_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- attention --
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bh=st.sampled_from([1, 4, 8]),
+    seq=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(bh, seq, d, seed):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, k, v = _rand(kq, (bh, seq, d)), _rand(kk, (bh, seq, d)), _rand(kv, (bh, seq, d))
+    np.testing.assert_allclose(
+        attention(q, k, v), attention_ref(q, k, v), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_attention_softmax_rows_are_convex_combination():
+    """Output rows must lie inside the convex hull of v rows: max |o| <=
+    max |v| — a softmax-weights invariant independent of the reference."""
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(11), 3)
+    q, k, v = _rand(kq, (4, 64, 32)), _rand(kk, (4, 64, 32)), _rand(kv, (4, 64, 32))
+    o = attention(q, k, v)
+    assert jnp.max(jnp.abs(o)) <= jnp.max(jnp.abs(v)) + 1e-5
+
+
+def test_attention_scale_invariance_of_uniform_v():
+    """If v is constant across seq, attention returns exactly that constant
+    regardless of q/k (softmax weights sum to 1)."""
+    kq, kk = jax.random.split(jax.random.PRNGKey(5))
+    q, k = _rand(kq, (2, 32, 16)), _rand(kk, (2, 32, 16))
+    v = jnp.broadcast_to(jnp.arange(16, dtype=jnp.float32), (2, 32, 16))
+    np.testing.assert_allclose(
+        attention(q, k, v), v, rtol=1e-5, atol=1e-5
+    )
+
+
+def test_attention_vjp_grads_match_ref_grads():
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(13), 3)
+    q, k, v = _rand(kq, (2, 32, 16)), _rand(kk, (2, 32, 16)), _rand(kv, (2, 32, 16))
+
+    def lp(q, k, v):
+        return jnp.sum(attention_vjp(q, k, v) ** 2)
+
+    def lr(q, k, v):
+        return jnp.sum(attention_ref(q, k, v) ** 2)
+
+    gp = jax.grad(lp, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- layernorm --
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.sampled_from([1, 8, 64, 128, 192]),
+    hidden=st.sampled_from([64, 256, 768]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_matches_ref(rows, hidden, seed):
+    kx, kg, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(kx, (rows, hidden))
+    g = _rand(kg, (hidden,))
+    b = _rand(kb, (hidden,))
+    np.testing.assert_allclose(
+        layernorm(x, g, b), layernorm_ref(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_layernorm_output_is_normalized():
+    x = _rand(jax.random.PRNGKey(1), (32, 512)) * 10 + 3
+    y = layernorm(x, jnp.ones(512), jnp.zeros(512))
+    np.testing.assert_allclose(jnp.mean(y, axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.std(y, axis=-1), 1.0, atol=1e-3)

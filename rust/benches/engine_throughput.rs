@@ -1,0 +1,49 @@
+//! Bench: ground-truth engine throughput (instructions/second).
+//!
+//! The DES engine is the other L3 hot path (§Perf target: >= 1 M
+//! events/s): every Fig.-8/9/10 "actual" data point is an engine run, and
+//! Table 3's direct-run costing executes the whole grid.
+
+use std::time::Instant;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::engine::GroundTruth;
+use distsim::strategy::Strategy;
+
+fn bench_one(model: &str, s: &str, micro_batches: usize) {
+    let strategy = Strategy::parse(s).unwrap();
+    let cluster = if strategy.world_size() > 16 {
+        ClusterSpec::a100_pod(strategy.world_size().div_ceil(8))
+    } else {
+        ClusterSpec::a40_cluster(4, 4)
+    };
+    let mut cfg = RunConfig::new(model, strategy, cluster);
+    cfg.micro_batches = micro_batches;
+    let gt = GroundTruth::prepare(&cfg).unwrap();
+    let instrs = gt.prog.total_instrs();
+
+    // warmup + measure
+    let _ = gt.run_iteration(0);
+    let reps = 20;
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let _ = gt.run_iteration(i);
+    }
+    let secs = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{model:<12} {s:<8} m={micro_batches:<3} {instrs:>7} instrs  {:>9.1} us/iter  {:>8.2} M instr/s",
+        secs * 1e6,
+        instrs as f64 / secs / 1e6
+    );
+}
+
+fn main() {
+    println!("# bench engine: DES throughput\n");
+    bench_one("bert-large", "1M1P1D", 1);
+    bench_one("bert-large", "2M2P2D", 4);
+    bench_one("bert-large", "2M4P2D", 8);
+    bench_one("bert-large", "1M4P4D", 16);
+    bench_one("t5", "2M4P2D", 16);
+    bench_one("gpt-145b", "8M16P1D", 16);
+}

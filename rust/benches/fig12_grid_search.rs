@@ -1,0 +1,55 @@
+//! Bench: Fig. 12 / Table 2 / Table 3 regeneration + search timing.
+//!
+//! Times the full §6 grid search (15 candidates, profile + simulate) and
+//! prints the Fig.-12 throughput series plus the Table-3 cost accounting.
+//! The paper's reference: 0.14 s simulate time for the whole search.
+
+use std::time::Instant;
+
+use distsim::cluster::ClusterSpec;
+use distsim::cost::CostModel;
+use distsim::model::zoo;
+use distsim::search::grid_search;
+
+fn main() {
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+
+    let t0 = Instant::now();
+    let report = grid_search(&model, &cluster, &CostModel::default(), 16, 0.02, 50);
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("# bench fig12: BERT-exLarge grid search on 16 A10\n");
+    let mut sorted = report.candidates.clone();
+    sorted.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    for c in &sorted {
+        println!(
+            "{:10} {:>12}",
+            c.strategy.notation(),
+            if c.reachable {
+                format!("{:.3} it/s", c.throughput)
+            } else {
+                "unreachable".into()
+            }
+        );
+    }
+    println!(
+        "\nspeedup best/worst: {:.2}x  (paper: 7.37x; winner pipeline-heavy, loser 16M)",
+        report.speedup()
+    );
+    println!(
+        "search wall time {:.3} s (simulate {:.3} s, paper: 0.14 s); profiling {:.2} gpu-s",
+        wall, report.simulate_seconds, report.profile.gpu_seconds
+    );
+
+    // per-candidate simulate-only timing (hot path for §Perf)
+    let t0 = Instant::now();
+    let n = 10;
+    for _ in 0..n {
+        let _ = grid_search(&model, &cluster, &CostModel::default(), 16, 0.0, 1);
+    }
+    println!(
+        "minimal-profile search: {:.1} ms per full 15-candidate sweep",
+        t0.elapsed().as_secs_f64() * 1e3 / n as f64
+    );
+}

@@ -1,0 +1,81 @@
+//! Bench: Fig. 8 regeneration + simulator hot-path timing.
+//!
+//! `cargo bench --offline` (harness = false: no criterion in the offline
+//! vendor set). For every (model, strategy) cell of Fig. 8 this measures
+//! the cost of (a) DistSim's full pipeline — event generation, 2-node
+//! profiling, hierarchical modeling — and (b) one ground-truth engine
+//! iteration, then prints the accuracy row. The simulation path is the L3
+//! hot path the §Perf pass optimizes.
+
+use std::time::Instant;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::strategy::Strategy;
+use distsim::util::stats;
+
+fn time_us<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut out = f(); // warmup
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        out = f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    (stats::median(&samples), out)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("# bench fig8: DistSim pipeline vs engine, per configuration\n");
+    println!(
+        "{:<12} {:<8} {:>14} {:>14} {:>14} {:>10}",
+        "model", "strategy", "simulate (us)", "profile (us)", "engine (us)", "err %"
+    );
+    let mut sim_times = Vec::new();
+    for model in ["bert-large", "gpt2-345m", "t5"] {
+        for s in ["1M1P4D", "2M2P2D", "1M4P2D", "2M2P4D", "2M4P2D", "4M2P2D"] {
+            let mut cfg = RunConfig::new(
+                model,
+                Strategy::parse(s)?,
+                ClusterSpec::a40_cluster(4, 4),
+            );
+            cfg.profile_iters = 20;
+            let gt = distsim::engine::GroundTruth::prepare(&cfg)?;
+
+            // profiling cost (event measurement on the 2-node slice)
+            let (profile_us, mut db) = time_us(3, || {
+                let mut db = distsim::events::EventDb::new();
+                distsim::engine::build_programs(&gt.part, &gt.sched, &cfg.cluster, &mut db);
+                distsim::profile::profile_events(
+                    &mut db,
+                    &cfg.cluster,
+                    &distsim::cost::CostModel::default(),
+                    cfg.jitter_sigma,
+                    cfg.profile_iters,
+                    1,
+                );
+                db
+            });
+
+            // pure modeling cost (the paper's "simulate time")
+            let ds = distsim::distsim::DistSim::new(&gt.part, &gt.sched, &cfg.cluster);
+            let (sim_us, predicted) = time_us(10, || ds.predict(&mut db));
+
+            // one engine iteration (the "real cluster")
+            let (engine_us, actual) = time_us(3, || gt.run_iteration(0));
+
+            let err = distsim::metrics::batch_time_error_pct(&predicted, &actual);
+            println!(
+                "{:<12} {:<8} {:>14.0} {:>14.0} {:>14.0} {:>9.2}%",
+                model, s, sim_us, profile_us, engine_us, err
+            );
+            sim_times.push(sim_us);
+        }
+    }
+    println!(
+        "\nsimulate median {:.0} us, max {:.0} us  (paper Table 3: simulation <1% of cost)",
+        stats::median(&sim_times),
+        stats::max(&sim_times)
+    );
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! A Daydream/dPRO-style simulator (paper §2.4): profiled per-operator
+//! times replayed under the **highly-sequential assumption** — when a
+//! device finishes an operator it immediately launches the next one in its
+//! own trace; the only cross-device dependency modeled is the data-parallel
+//! gradient all-reduce.
+//!
+//! For pure data parallelism this is exactly right (and matches DistSim).
+//! For pipeline/model parallelism it is structurally wrong: it cannot
+//! express waiting for another stage's activation or an MP barrier, so it
+//! predicts compute-packed timelines with no bubbles. The `ablate-hierarchy`
+//! experiment quantifies that failure, motivating the paper's hierarchical
+//! modeling.
+
+use crate::cluster::ClusterSpec;
+use crate::events::EventDb;
+use crate::partition::Partition;
+use crate::schedule::PipelineSchedule;
+use crate::timeline::{Span, Timeline};
+
+/// Replay every rank's operator list back-to-back (no inter-device waits
+/// except the final gradient all-reduce).
+pub fn daydream_predict(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    cluster: &ClusterSpec,
+    db: &mut EventDb,
+) -> Timeline {
+    let strategy = part.strategy;
+    let prog = crate::engine::build_programs(part, sched, cluster, db);
+    let mut timeline = Timeline::new(strategy.world_size());
+
+    // sequential replay per rank, ignoring send/recv/barrier semantics
+    let mut finish = vec![0.0f64; strategy.world_size()];
+    for (rank, instrs) in prog.instrs.iter().enumerate() {
+        let mut cur = 0.0f64;
+        for instr in instrs {
+            match instr {
+                crate::engine::Instr::Comp { event, tag } => {
+                    let dur = db.elapsed(*event);
+                    timeline.push(Span {
+                        device: rank,
+                        start: cur,
+                        end: cur + dur,
+                        tag: *tag,
+                    });
+                    cur += dur;
+                }
+                crate::engine::Instr::Recv { event, tag, .. } => {
+                    // sequential assumption: the data is already there;
+                    // only the wire time is replayed
+                    let dur = db.elapsed(*event);
+                    timeline.push(Span {
+                        device: rank,
+                        start: cur,
+                        end: cur + dur,
+                        tag: *tag,
+                    });
+                    cur += dur;
+                }
+                crate::engine::Instr::Send { .. } => {
+                    cur += cluster.device.launch_overhead_us;
+                }
+                crate::engine::Instr::AllReduce { event, tag, .. } => {
+                    // replay MP all-reduces inline; the DP gradient AR is
+                    // the one synchronization Daydream models
+                    let dur = db.elapsed(*event);
+                    timeline.push(Span {
+                        device: rank,
+                        start: cur,
+                        end: cur + dur,
+                        tag: *tag,
+                    });
+                    cur += dur;
+                }
+            }
+        }
+        finish[rank] = cur;
+    }
+    let _ = finish;
+    timeline
+}
+
+/// Daydream's batch-time estimate.
+pub fn daydream_batch_time_us(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    cluster: &ClusterSpec,
+    db: &mut EventDb,
+) -> f64 {
+    daydream_predict(part, sched, cluster, db).batch_time_us()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::engine::GroundTruth;
+    use crate::model::zoo;
+    use crate::partition::partition;
+    use crate::profile::profile_events;
+    use crate::schedule;
+    use crate::strategy::Strategy;
+
+    fn setup(
+        mp: usize,
+        pp: usize,
+        dp: usize,
+        m: usize,
+    ) -> (Partition, PipelineSchedule, ClusterSpec, EventDb) {
+        let model = zoo::bert_large();
+        let s = Strategy::new(mp, pp, dp);
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let part = partition(&model, &s, &c, 4);
+        let sched = schedule::dapple(pp, m);
+        let mut db = EventDb::new();
+        crate::engine::build_programs(&part, &sched, &c, &mut db);
+        profile_events(&mut db, &c, &CostModel::default(), 0.0, 1, 5);
+        (part, sched, c, db)
+    }
+
+    #[test]
+    fn accurate_for_pure_data_parallelism() {
+        // §2.4: the sequential assumption holds for DP
+        let (part, sched, c, mut db) = setup(1, 1, 4, 1);
+        let est = daydream_batch_time_us(&part, &sched, &c, &mut db);
+        let cfg = crate::config::RunConfig {
+            jitter_sigma: 0.0,
+            clock_skew_us: 0.0,
+            micro_batches: 1,
+            ..crate::config::RunConfig::new("bert-large", Strategy::new(1, 1, 4), c)
+        };
+        let gt = GroundTruth::prepare(&cfg).unwrap();
+        let actual = gt.run_iteration(0).batch_time_us();
+        let err = crate::util::rel_err_pct(est, actual);
+        assert!(err < 5.0, "daydream DP error {err}%");
+    }
+
+    #[test]
+    fn misses_pipeline_bubbles_badly() {
+        // §2.4: for PP it underestimates because it cannot express waiting
+        let (part, sched, c, mut db) = setup(1, 4, 1, 4);
+        let est = daydream_batch_time_us(&part, &sched, &c, &mut db);
+        let cfg = crate::config::RunConfig {
+            jitter_sigma: 0.0,
+            clock_skew_us: 0.0,
+            micro_batches: 4,
+            ..crate::config::RunConfig::new("bert-large", Strategy::new(1, 4, 1), c)
+        };
+        let gt = GroundTruth::prepare(&cfg).unwrap();
+        let actual = gt.run_iteration(0).batch_time_us();
+        assert!(
+            est < actual * 0.8,
+            "daydream should badly underestimate PP: est {est} vs actual {actual}"
+        );
+    }
+}

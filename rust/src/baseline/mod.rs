@@ -1,0 +1,12 @@
+//! Baselines the paper compares against.
+//!
+//! * [`analytical`] — the DistIR/AccPar-style heuristic (§2.3): time =
+//!   FLOPs / peak + bytes / bandwidth, no efficiency losses, no overheads.
+//!   Reproduces Fig. 3's 26-40% errors.
+//! * [`daydream`] — the Daydream/dPRO-style replayer (§2.4): profiled
+//!   per-op times replayed under the "highly sequential" assumption, which
+//!   is sound for pure data parallelism but cannot express pipeline
+//!   interleaving or tensor-MP barriers.
+
+pub mod analytical;
+pub mod daydream;

@@ -1,0 +1,298 @@
+//! Cluster topology: nodes x devices, intra-/inter-node links, and device
+//! presets matching the paper's testbeds (A40 x 16 over 4 nodes for §5,
+//! A10 x 16 for §6, and a 128-GPU pod for §5.5).
+
+use crate::config::Json;
+use crate::strategy::Strategy;
+
+/// A GPU-like accelerator's headline characteristics. These anchor the
+/// cost model (`cost/`); the calibration pass can rescale them to measured
+/// PJRT numbers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: String,
+    /// Dense fp32-accumulate tensor throughput, TFLOP/s.
+    pub peak_tflops: f64,
+    /// HBM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Fixed kernel-launch overhead per operator, us.
+    pub launch_overhead_us: f64,
+    /// Device memory, GiB (for deployability checks).
+    pub mem_gib: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA A40: 149.7 TF/s bf16 tensor (with fp32 acc), 696 GB/s GDDR6.
+    pub fn a40() -> Self {
+        DeviceSpec {
+            name: "A40".into(),
+            peak_tflops: 149.7,
+            mem_bw_gbs: 696.0,
+            launch_overhead_us: 8.0,
+            mem_gib: 48.0,
+        }
+    }
+
+    /// NVIDIA A10: 125 TF/s tensor, 600 GB/s.
+    pub fn a10() -> Self {
+        DeviceSpec {
+            name: "A10".into(),
+            peak_tflops: 125.0,
+            mem_bw_gbs: 600.0,
+            launch_overhead_us: 8.0,
+            mem_gib: 24.0,
+        }
+    }
+
+    /// A100-80G SXM: 312 TF/s tensor, 2039 GB/s (for the 128-GPU pod).
+    pub fn a100() -> Self {
+        DeviceSpec {
+            name: "A100".into(),
+            peak_tflops: 312.0,
+            mem_bw_gbs: 2039.0,
+            launch_overhead_us: 6.0,
+            mem_gib: 80.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("peak_tflops", Json::num(self.peak_tflops)),
+            ("mem_bw_gbs", Json::num(self.mem_bw_gbs)),
+            ("launch_overhead_us", Json::num(self.launch_overhead_us)),
+            ("mem_gib", Json::num(self.mem_gib)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(DeviceSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("device missing name"))?
+                .to_string(),
+            peak_tflops: j.get("peak_tflops").and_then(Json::as_f64).unwrap_or(100.0),
+            mem_bw_gbs: j.get("mem_bw_gbs").and_then(Json::as_f64).unwrap_or(600.0),
+            launch_overhead_us: j
+                .get("launch_overhead_us")
+                .and_then(Json::as_f64)
+                .unwrap_or(8.0),
+            mem_gib: j.get("mem_gib").and_then(Json::as_f64).unwrap_or(24.0),
+        })
+    }
+}
+
+/// Link class between two devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkClass {
+    /// Same node: NVLink / PCIe-P2P.
+    Intra,
+    /// Across nodes: IB / Ethernet.
+    Inter,
+}
+
+/// Cluster: homogeneous devices, flat two-level network (the paper's
+/// setting: "clusters with homogeneous devices and no network hierarchy"
+/// beyond the intra/inter-node distinction its comm events carry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub device: DeviceSpec,
+    /// Intra-node per-direction bandwidth, GB/s (NVLink-ish).
+    pub intra_bw_gbs: f64,
+    /// Inter-node per-NIC bandwidth, GB/s (IB-ish).
+    pub inter_bw_gbs: f64,
+    /// One-way latencies, us.
+    pub intra_lat_us: f64,
+    pub inter_lat_us: f64,
+}
+
+impl ClusterSpec {
+    /// The paper's §5 testbed: 4 nodes x 4 A40, PCIe gen4 intra (A40 has
+    /// NVLink pairs but the cluster fabric is PCIe), 100 Gb IB inter.
+    pub fn a40_cluster(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            gpus_per_node,
+            device: DeviceSpec::a40(),
+            intra_bw_gbs: 24.0,
+            inter_bw_gbs: 12.0,
+            intra_lat_us: 6.0,
+            inter_lat_us: 18.0,
+        }
+    }
+
+    /// The paper's §6 testbed: 4 nodes x 4 A10.
+    pub fn a10_cluster(nodes: usize, gpus_per_node: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            gpus_per_node,
+            device: DeviceSpec::a10(),
+            intra_bw_gbs: 20.0,
+            inter_bw_gbs: 12.0,
+            intra_lat_us: 6.0,
+            inter_lat_us: 18.0,
+        }
+    }
+
+    /// A Megatron-style A100 pod for §5.5: 8 GPUs/node, NVLink intra,
+    /// 8x200Gb HDR inter.
+    pub fn a100_pod(nodes: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            gpus_per_node: 8,
+            device: DeviceSpec::a100(),
+            intra_bw_gbs: 300.0,
+            inter_bw_gbs: 100.0,
+            intra_lat_us: 3.0,
+            inter_lat_us: 10.0,
+        }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// Which node a global device index lives on.
+    pub fn node_of(&self, device: usize) -> usize {
+        device / self.gpus_per_node
+    }
+
+    /// Link class between two global device indices.
+    pub fn link_class(&self, a: usize, b: usize) -> LinkClass {
+        if self.node_of(a) == self.node_of(b) {
+            LinkClass::Intra
+        } else {
+            LinkClass::Inter
+        }
+    }
+
+    pub fn bw_gbs(&self, class: LinkClass) -> f64 {
+        match class {
+            LinkClass::Intra => self.intra_bw_gbs,
+            LinkClass::Inter => self.inter_bw_gbs,
+        }
+    }
+
+    pub fn lat_us(&self, class: LinkClass) -> f64 {
+        match class {
+            LinkClass::Intra => self.intra_lat_us,
+            LinkClass::Inter => self.inter_lat_us,
+        }
+    }
+
+    /// Link class of a communication *group*: inter-node as soon as any
+    /// pair of members crosses nodes (the slowest hop gates a ring).
+    pub fn group_link_class(&self, ranks: &[usize]) -> LinkClass {
+        let first = self.node_of(ranks[0]);
+        if ranks.iter().all(|&r| self.node_of(r) == first) {
+            LinkClass::Intra
+        } else {
+            LinkClass::Inter
+        }
+    }
+
+    /// Does one rank's share of the model fit in device memory? Used by
+    /// the search driver to mark configurations as unreachable (paper
+    /// Fig. 12 draws those as 0).
+    pub fn fits(&self, params_per_rank: u64) -> bool {
+        // params + grads + Adam moments = 4x, fp32 = 4 bytes, plus ~25%
+        // activation headroom.
+        let need = params_per_rank as f64 * 4.0 * 4.0 * 1.25;
+        need <= self.device.mem_gib * (1u64 << 30) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("nodes", Json::num(self.nodes as f64)),
+            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
+            ("device", self.device.to_json()),
+            ("intra_bw_gbs", Json::num(self.intra_bw_gbs)),
+            ("inter_bw_gbs", Json::num(self.inter_bw_gbs)),
+            ("intra_lat_us", Json::num(self.intra_lat_us)),
+            ("inter_lat_us", Json::num(self.inter_lat_us)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        Ok(ClusterSpec {
+            nodes: j
+                .get("nodes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("cluster missing nodes"))?,
+            gpus_per_node: j
+                .get("gpus_per_node")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("cluster missing gpus_per_node"))?,
+            device: DeviceSpec::from_json(
+                j.get("device")
+                    .ok_or_else(|| anyhow::anyhow!("cluster missing device"))?,
+            )?,
+            intra_bw_gbs: j.get("intra_bw_gbs").and_then(Json::as_f64).unwrap_or(24.0),
+            inter_bw_gbs: j.get("inter_bw_gbs").and_then(Json::as_f64).unwrap_or(12.0),
+            intra_lat_us: j.get("intra_lat_us").and_then(Json::as_f64).unwrap_or(6.0),
+            inter_lat_us: j.get("inter_lat_us").and_then(Json::as_f64).unwrap_or(18.0),
+        })
+    }
+
+    /// Map a strategy rank onto a physical device index (identity in this
+    /// homogeneous flat layout: rank == device). Kept as an explicit hook
+    /// so heterogeneous mappings can slot in.
+    pub fn device_of_rank(&self, _strategy: &Strategy, rank: usize) -> usize {
+        rank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_mapping() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        assert_eq!(c.total_devices(), 16);
+        assert_eq!(c.node_of(0), 0);
+        assert_eq!(c.node_of(3), 0);
+        assert_eq!(c.node_of(4), 1);
+        assert_eq!(c.node_of(15), 3);
+    }
+
+    #[test]
+    fn link_classes() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        assert_eq!(c.link_class(0, 3), LinkClass::Intra);
+        assert_eq!(c.link_class(0, 4), LinkClass::Inter);
+        assert_eq!(c.group_link_class(&[0, 1, 2, 3]), LinkClass::Intra);
+        assert_eq!(c.group_link_class(&[0, 1, 4]), LinkClass::Inter);
+    }
+
+    #[test]
+    fn intra_is_faster_than_inter_in_presets() {
+        for c in [
+            ClusterSpec::a40_cluster(4, 4),
+            ClusterSpec::a10_cluster(4, 4),
+            ClusterSpec::a100_pod(16),
+        ] {
+            assert!(c.intra_bw_gbs > c.inter_bw_gbs);
+            assert!(c.intra_lat_us < c.inter_lat_us);
+        }
+    }
+
+    #[test]
+    fn fits_rejects_whole_145b_on_one_a100() {
+        let c = ClusterSpec::a100_pod(16);
+        let m = crate::model::zoo::gpt_145b();
+        assert!(!c.fits(m.total_params()));
+        // but a 128-way shard fits
+        assert!(c.fits(m.total_params() / 128));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterSpec::a10_cluster(4, 4);
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(ClusterSpec::from_json(&j).unwrap(), c);
+    }
+}

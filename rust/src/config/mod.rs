@@ -1,0 +1,123 @@
+//! Configuration layer: JSON substrate plus typed run configuration.
+//!
+//! A [`RunConfig`] fully describes one simulation: which model, which
+//! hybrid strategy, the cluster, micro-batching and noise parameters. It
+//! round-trips through JSON so experiment sweeps and the CLI share one
+//! format.
+
+pub mod json;
+
+pub use json::Json;
+
+use crate::cluster::ClusterSpec;
+use crate::strategy::Strategy;
+
+/// One simulation run, fully specified.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Model zoo name, e.g. "bert-large".
+    pub model: String,
+    /// Hybrid strategy, e.g. 2M4P2D.
+    pub strategy: Strategy,
+    /// Number of micro-batches per global batch (pipeline granularity).
+    pub micro_batches: usize,
+    /// Per-device micro-batch size (sequences).
+    pub micro_batch_size: usize,
+    /// Pipeline schedule: "gpipe" | "dapple" | "naive".
+    pub schedule: String,
+    /// Cluster description.
+    pub cluster: ClusterSpec,
+    /// Ground-truth engine noise: multiplicative compute jitter sigma.
+    pub jitter_sigma: f64,
+    /// Ground-truth per-device clock skew sigma (us).
+    pub clock_skew_us: f64,
+    /// RNG seed for the ground-truth engine.
+    pub seed: u64,
+    /// Iterations to average when profiling events.
+    pub profile_iters: usize,
+}
+
+impl RunConfig {
+    pub fn new(model: &str, strategy: Strategy, cluster: ClusterSpec) -> Self {
+        RunConfig {
+            model: model.to_string(),
+            strategy,
+            micro_batches: 4,
+            micro_batch_size: 4,
+            schedule: "dapple".to_string(),
+            cluster,
+            jitter_sigma: 0.02,
+            clock_skew_us: 20.0,
+            seed: 42,
+            profile_iters: 100,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("strategy", Json::str(self.strategy.notation())),
+            ("micro_batches", Json::num(self.micro_batches as f64)),
+            (
+                "micro_batch_size",
+                Json::num(self.micro_batch_size as f64),
+            ),
+            ("schedule", Json::str(&self.schedule)),
+            ("cluster", self.cluster.to_json()),
+            ("jitter_sigma", Json::num(self.jitter_sigma)),
+            ("clock_skew_us", Json::num(self.clock_skew_us)),
+            ("seed", Json::num(self.seed as f64)),
+            ("profile_iters", Json::num(self.profile_iters as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let get = |k: &str| {
+            j.get(k)
+                .ok_or_else(|| anyhow::anyhow!("config missing key '{k}'"))
+        };
+        Ok(RunConfig {
+            model: get("model")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("model must be a string"))?
+                .to_string(),
+            strategy: Strategy::parse(
+                get("strategy")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("strategy must be a string"))?,
+            )?,
+            micro_batches: get("micro_batches")?.as_usize().unwrap_or(4),
+            micro_batch_size: get("micro_batch_size")?.as_usize().unwrap_or(4),
+            schedule: get("schedule")?.as_str().unwrap_or("dapple").to_string(),
+            cluster: ClusterSpec::from_json(get("cluster")?)?,
+            jitter_sigma: get("jitter_sigma")?.as_f64().unwrap_or(0.02),
+            clock_skew_us: get("clock_skew_us")?.as_f64().unwrap_or(20.0),
+            seed: get("seed")?.as_u64().unwrap_or(42),
+            profile_iters: get("profile_iters")?.as_usize().unwrap_or(100),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterSpec;
+
+    #[test]
+    fn run_config_roundtrips_through_json() {
+        let cfg = RunConfig::new(
+            "bert-large",
+            Strategy::new(2, 2, 4),
+            ClusterSpec::a40_cluster(4, 4),
+        );
+        let j = cfg.to_json();
+        let back = RunConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn from_json_rejects_missing_keys() {
+        let j = Json::parse(r#"{"model":"bert-large"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err());
+    }
+}

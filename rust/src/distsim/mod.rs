@@ -1,0 +1,403 @@
+//! DistSim's hierarchical modeling (paper §4.3): compose profiled events
+//! into the full-cluster timeline, level by level.
+//!
+//! * **Model-parallelism modeling** — each layer maps to a *composed
+//!   event*: its per-rank compute event plus the Megatron MP all-reduces,
+//!   replicated across the MP group ([`stage_items`]).
+//! * **Pipeline-parallelism modeling** — Algorithm 1: walk the pipeline
+//!   schedule, always expanding the first stage whose data dependency is
+//!   satisfied, inserting the composed events plus the inter-stage
+//!   point-to-point event, tracking per-stage device availability.
+//! * **Data-parallelism modeling** — replicate the event-list across DP
+//!   replicas and append the gradient all-reduce event per stage.
+//!
+//! The output is a [`Timeline`] with the *same tags* as the ground-truth
+//! engine emits, so the metrics layer aligns spans one-to-one. DistSim
+//! never executes the per-rank programs — it only ever touches profiled
+//! event means, which is the point of the paper.
+
+use crate::cluster::ClusterSpec;
+use crate::events::{CommEvent, Event, EventDb, EventId};
+use crate::partition::Partition;
+use crate::schedule::{Phase, PipelineSchedule};
+use crate::strategy::RankCoords;
+use crate::timeline::{Span, SpanKind, Tag, Timeline};
+use crate::util::TimeUs;
+
+/// One element of a composed event (the paper's "event list" inside a
+/// composed-event): a compute event or an MP all-reduce, with enough
+/// identity to emit engine-compatible tags.
+#[derive(Debug, Clone, Copy)]
+pub enum Item {
+    Comp { event: EventId, layer: u32 },
+    MpAr { event: EventId, layer: u32, idx: u32 },
+}
+
+/// Model-parallelism modeling: the composed event-list of one stage for
+/// one phase. Layers run in order (reversed for backward), each compute
+/// event followed by its MP all-reduces.
+pub fn stage_items(
+    part: &Partition,
+    db: &mut EventDb,
+    stage: usize,
+    phase: Phase,
+) -> Vec<Item> {
+    let work = &part.stages[stage];
+    let mut items = Vec::new();
+    let layers: Vec<&crate::partition::LayerWork> = match phase {
+        Phase::Fwd => work.layers.iter().collect(),
+        Phase::Bwd => work.layers.iter().rev().collect(),
+    };
+    for lw in layers {
+        let (comp, ar_count) = match phase {
+            Phase::Fwd => (&lw.fwd, lw.ar_count_fwd),
+            Phase::Bwd => (&lw.bwd, lw.ar_count_bwd),
+        };
+        items.push(Item::Comp {
+            event: db.intern(Event::Comp(comp.clone())),
+            layer: lw.layer_idx as u32,
+        });
+        if let Some(ar) = &lw.mp_allreduce {
+            let ev = db.intern(Event::Comm(ar.clone()));
+            for k in 0..ar_count {
+                items.push(Item::MpAr {
+                    event: ev,
+                    layer: lw.layer_idx as u32,
+                    idx: k as u32,
+                });
+            }
+        }
+    }
+    items
+}
+
+/// The full DistSim prediction for one configuration.
+pub struct DistSim<'a> {
+    pub part: &'a Partition,
+    pub sched: &'a PipelineSchedule,
+    pub cluster: &'a ClusterSpec,
+}
+
+impl<'a> DistSim<'a> {
+    pub fn new(
+        part: &'a Partition,
+        sched: &'a PipelineSchedule,
+        cluster: &'a ClusterSpec,
+    ) -> Self {
+        DistSim {
+            part,
+            sched,
+            cluster,
+        }
+    }
+
+    /// Hierarchical modeling: MP composition → Algorithm-1 pipeline walk →
+    /// DP expansion. `db` must contain profiled times for every event the
+    /// partition references (run `profile::profile_events` first).
+    pub fn predict(&self, db: &mut EventDb) -> Timeline {
+        let strategy = self.part.strategy;
+        let pp = strategy.pp;
+        let launch = self.cluster.device.launch_overhead_us;
+
+        // -- model parallelism modeling: composed event lists ------------
+        let fwd_items: Vec<Vec<Item>> = (0..pp)
+            .map(|s| stage_items(self.part, db, s, Phase::Fwd))
+            .collect();
+        let bwd_items: Vec<Vec<Item>> = (0..pp)
+            .map(|s| stage_items(self.part, db, s, Phase::Bwd))
+            .collect();
+
+        // inter-stage p2p events (boundary s -> s+1); link class from the
+        // representative dp-0 lane (homogeneous layout)
+        let p2p_fwd: Vec<Option<EventId>> = (0..pp)
+            .map(|s| {
+                if s + 1 < pp {
+                    let a = strategy.rank_of(RankCoords { mp: 0, pp: s, dp: 0 });
+                    let b = strategy.rank_of(RankCoords { mp: 0, pp: s + 1, dp: 0 });
+                    Some(db.intern(Event::Comm(CommEvent::P2p {
+                        bytes: self.part.stages[s].act_bytes,
+                        link: self.cluster.link_class(a, b),
+                    })))
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        // -- pipeline parallelism modeling (Algorithm 1) ------------------
+        let m = self.sched.micro_batches;
+        let mut queue_pos = vec![0usize; pp];
+        let mut free = vec![0.0f64; pp];
+        let mut done_f = vec![vec![None::<TimeUs>; m]; pp];
+        let mut done_b = vec![vec![None::<TimeUs>; m]; pp];
+        // spans per logical stage (replicated over MP and DP at the end)
+        let mut stage_spans: Vec<Vec<(TimeUs, TimeUs, Tag)>> = vec![Vec::new(); pp];
+
+        let total: usize = self.sched.stage_tasks.iter().map(Vec::len).sum();
+        let mut processed = 0usize;
+        while processed < total {
+            let mut advanced = false;
+            for s in 0..pp {
+                let pos = queue_pos[s];
+                if pos >= self.sched.stage_tasks[s].len() {
+                    continue;
+                }
+                let task = self.sched.stage_tasks[s][pos];
+                let (mb, phase) = (task.mb, task.phase);
+                // first_available: data dependency satisfied?
+                let upstream_done = match phase {
+                    Phase::Fwd if s > 0 => done_f[s - 1][mb],
+                    Phase::Bwd if s + 1 < pp => done_b[s + 1][mb],
+                    _ => Some(0.0),
+                };
+                let Some(dep_done) = upstream_done else {
+                    continue;
+                };
+
+                let mut cur = free[s];
+                // inter-stage transfer (a p2p communication event)
+                let recv_ev = match phase {
+                    Phase::Fwd if s > 0 => p2p_fwd[s - 1],
+                    Phase::Bwd if s + 1 < pp => p2p_fwd[s],
+                    _ => None,
+                };
+                if let Some(ev) = recv_ev {
+                    let send_post = dep_done + launch;
+                    let start = cur.max(send_post);
+                    let dur = db.elapsed(ev);
+                    stage_spans[s].push((
+                        start,
+                        start + dur,
+                        Tag {
+                            stage: s as u32,
+                            mb: mb as u32,
+                            phase,
+                            layer: u32::MAX,
+                            kind: SpanKind::P2p,
+                            idx: 0,
+                        },
+                    ));
+                    cur = start + dur;
+                }
+
+                // composed events of this stage
+                let items = match phase {
+                    Phase::Fwd => &fwd_items[s],
+                    Phase::Bwd => &bwd_items[s],
+                };
+                for item in items {
+                    let (ev, tag) = match *item {
+                        Item::Comp { event, layer } => (
+                            event,
+                            Tag {
+                                stage: s as u32,
+                                mb: mb as u32,
+                                phase,
+                                layer,
+                                kind: SpanKind::Comp,
+                                idx: 0,
+                            },
+                        ),
+                        Item::MpAr { event, layer, idx } => (
+                            event,
+                            Tag {
+                                stage: s as u32,
+                                mb: mb as u32,
+                                phase,
+                                layer,
+                                kind: SpanKind::MpAllReduce,
+                                idx,
+                            },
+                        ),
+                    };
+                    let dur = db.elapsed(ev);
+                    stage_spans[s].push((cur, cur + dur, tag));
+                    cur += dur;
+                }
+
+                match phase {
+                    Phase::Fwd => done_f[s][mb] = Some(cur),
+                    Phase::Bwd => done_b[s][mb] = Some(cur),
+                }
+                // sender-side launch overhead for the outgoing transfer
+                let sends = matches!(phase, Phase::Fwd if s + 1 < pp)
+                    || matches!(phase, Phase::Bwd if s > 0);
+                if sends {
+                    cur += launch;
+                }
+                free[s] = cur;
+                queue_pos[s] += 1;
+                processed += 1;
+                advanced = true;
+            }
+            assert!(
+                advanced,
+                "pipeline modeling stuck: schedule has an unsatisfiable dependency"
+            );
+        }
+
+        // -- data parallelism modeling: expansion + gradient all-reduce --
+        let mut timeline = Timeline::new(strategy.world_size());
+        let grad_ar: Vec<Option<EventId>> = (0..pp)
+            .map(|s| {
+                if strategy.dp > 1 {
+                    let group = strategy.dp_group(
+                        strategy.rank_of(RankCoords { mp: 0, pp: s, dp: 0 }),
+                    );
+                    Some(db.intern(Event::Comm(CommEvent::AllReduce {
+                        bytes: self.part.grad_bytes_per_rank[s],
+                        group: strategy.dp,
+                        link: self.cluster.group_link_class(&group),
+                    })))
+                } else {
+                    None
+                }
+            })
+            .collect();
+
+        for dp in 0..strategy.dp {
+            for s in 0..pp {
+                for mp in 0..strategy.mp {
+                    let device = strategy.rank_of(RankCoords { mp, pp: s, dp });
+                    for &(start, end, tag) in &stage_spans[s] {
+                        timeline.push(Span {
+                            device,
+                            start,
+                            end,
+                            tag,
+                        });
+                    }
+                    if let Some(ev) = grad_ar[s] {
+                        let dur = db.elapsed(ev);
+                        timeline.push(Span {
+                            device,
+                            start: free[s],
+                            end: free[s] + dur,
+                            tag: Tag {
+                                stage: s as u32,
+                                mb: 0,
+                                phase: Phase::Bwd,
+                                layer: u32::MAX,
+                                kind: SpanKind::GradAllReduce,
+                                idx: 0,
+                            },
+                        });
+                    }
+                }
+            }
+        }
+        timeline
+    }
+
+    /// Predicted iteration (batch) time in microseconds.
+    pub fn predict_batch_time_us(&self, db: &mut EventDb) -> f64 {
+        self.predict(db).batch_time_us()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::CostModel;
+    use crate::model::zoo;
+    use crate::partition::partition;
+    use crate::profile::profile_events;
+    use crate::schedule;
+    use crate::strategy::Strategy;
+
+    /// Profile (noise-free) + predict for one strategy.
+    fn predict(mp: usize, pp: usize, dp: usize, m: usize) -> Timeline {
+        let model = zoo::bert_large();
+        let s = Strategy::new(mp, pp, dp);
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let part = partition(&model, &s, &c, 4);
+        let sched = schedule::dapple(pp, m);
+        let mut db = EventDb::new();
+        // intern exactly what the model needs, then profile
+        let ds = DistSim::new(&part, &sched, &c);
+        // build event set by a dry predict requires profiled times; intern
+        // via stage_items + comm events first:
+        for stage in 0..pp {
+            stage_items(&part, &mut db, stage, Phase::Fwd);
+            stage_items(&part, &mut db, stage, Phase::Bwd);
+        }
+        // p2p + grad AR events are interned lazily in predict; intern the
+        // same keys here by calling the same constructors through a probe
+        // profile loop:
+        crate::engine::build_programs(&part, &sched, &c, &mut db);
+        profile_events(&mut db, &c, &CostModel::default(), 0.0, 1, 99);
+        ds.predict(&mut db)
+    }
+
+    #[test]
+    fn predicts_positive_batch_time_for_hybrid_shapes() {
+        for (mp, pp, dp, m) in [(1, 1, 1, 1), (2, 2, 2, 4), (1, 4, 1, 8), (4, 1, 2, 2)] {
+            let t = predict(mp, pp, dp, m);
+            assert!(t.batch_time_us() > 0.0);
+            assert_eq!(
+                t.n_devices,
+                mp * pp * dp,
+                "timeline covers the whole world"
+            );
+        }
+    }
+
+    #[test]
+    fn mp_replicas_have_identical_spans() {
+        let t = predict(2, 2, 1, 2);
+        // devices 0,1 are the MP pair of stage 0
+        let a = t.device_spans(0);
+        let b = t.device_spans(1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.start, y.start);
+            assert_eq!(x.tag, y.tag);
+        }
+    }
+
+    #[test]
+    fn dp_replicas_have_identical_spans() {
+        let t = predict(1, 2, 2, 2);
+        let a = t.device_spans(0); // (pp0, dp0)
+        let b = t.device_spans(2); // (pp0, dp1)
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.start, y.start);
+        }
+    }
+
+    #[test]
+    fn pipeline_stages_are_causally_ordered() {
+        let t = predict(1, 4, 1, 4);
+        // F(mb=0) completion at stage s must precede F start at stage s+1
+        for s in 0..3usize {
+            let up: Vec<_> = t
+                .device_comp_spans(s)
+                .into_iter()
+                .filter(|sp| sp.tag.mb == 0 && sp.tag.phase == Phase::Fwd)
+                .collect();
+            let down: Vec<_> = t
+                .device_comp_spans(s + 1)
+                .into_iter()
+                .filter(|sp| sp.tag.mb == 0 && sp.tag.phase == Phase::Fwd)
+                .collect();
+            let up_end = up.iter().map(|x| x.end).fold(f64::NEG_INFINITY, f64::max);
+            let down_start = down.iter().map(|x| x.start).fold(f64::INFINITY, f64::min);
+            assert!(down_start >= up_end, "stage {s} causality");
+        }
+    }
+
+    #[test]
+    fn grad_allreduce_present_iff_dp() {
+        let t1 = predict(1, 2, 1, 2);
+        assert!(!t1
+            .spans
+            .iter()
+            .any(|s| s.tag.kind == SpanKind::GradAllReduce));
+        let t2 = predict(1, 2, 2, 2);
+        assert!(t2
+            .spans
+            .iter()
+            .any(|s| s.tag.kind == SpanKind::GradAllReduce));
+    }
+}

@@ -1,0 +1,206 @@
+//! The paper's core abstraction (§3.2, §4.1): **events**.
+//!
+//! An event is an equivalence class of identical work — "the same
+//! computation and communication performed by different devices can be
+//! gathered into one event and need to be profiled only once". Identity is
+//! (operator name, parameters, input shape) for computation events, plus an
+//! intra-/inter-node attribute for communication events (§4.1).
+//!
+//! [`EventDb`] interns event descriptors to dense [`EventId`]s; profiling
+//! (profile/) fills in elapsed times; hierarchical modeling (distsim/)
+//! composes timelines out of ids without re-profiling duplicates — that
+//! dedup is exactly the paper's Table-3 cost saving.
+
+use std::collections::HashMap;
+
+use crate::cluster::LinkClass;
+use crate::cost::OpClass;
+
+/// Dense handle for an interned event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EventId(pub u32);
+
+/// A computation event: one operator on one device.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CompEvent {
+    /// Operator name + parameter digest, e.g. "layer_fwd/h1024/mp2".
+    pub name: String,
+    pub class: OpClass,
+    /// Per-device FLOPs of the operator.
+    pub flops: u64,
+    /// Per-device bytes touched (activations + weights read/written).
+    pub bytes: u64,
+}
+
+/// A communication event (§4.2 families).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CommEvent {
+    /// Point-to-point activation transfer.
+    P2p { bytes: u64, link: LinkClass },
+    /// Ring all-reduce over a group.
+    AllReduce {
+        bytes: u64,
+        group: usize,
+        link: LinkClass,
+    },
+}
+
+/// Any event.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Event {
+    Comp(CompEvent),
+    Comm(CommEvent),
+}
+
+impl Event {
+    pub fn name(&self) -> String {
+        match self {
+            Event::Comp(c) => c.name.clone(),
+            Event::Comm(CommEvent::P2p { bytes, link }) => {
+                format!("p2p/{bytes}B/{link:?}")
+            }
+            Event::Comm(CommEvent::AllReduce { bytes, group, link }) => {
+                format!("allreduce/{bytes}B/x{group}/{link:?}")
+            }
+        }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        matches!(self, Event::Comm(_))
+    }
+}
+
+/// Interning table + profiled elapsed times.
+#[derive(Debug, Default, Clone)]
+pub struct EventDb {
+    events: Vec<Event>,
+    index: HashMap<Event, EventId>,
+    /// Profiled mean elapsed time per event (us); NaN = not yet profiled.
+    elapsed_us: Vec<f64>,
+}
+
+impl EventDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern an event, returning its id (dedup point — §3.2 observation 1).
+    pub fn intern(&mut self, e: Event) -> EventId {
+        if let Some(&id) = self.index.get(&e) {
+            return id;
+        }
+        let id = EventId(self.events.len() as u32);
+        self.index.insert(e.clone(), id);
+        self.events.push(e);
+        self.elapsed_us.push(f64::NAN);
+        id
+    }
+
+    pub fn get(&self, id: EventId) -> &Event {
+        &self.events[id.0 as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn set_elapsed(&mut self, id: EventId, us: f64) {
+        self.elapsed_us[id.0 as usize] = us;
+    }
+
+    /// Profiled elapsed time; panics if the event was never profiled
+    /// (modeling must not silently invent costs).
+    pub fn elapsed(&self, id: EventId) -> f64 {
+        let t = self.elapsed_us[id.0 as usize];
+        assert!(
+            !t.is_nan(),
+            "event {:?} ({}) used before profiling",
+            id,
+            self.get(id).name()
+        );
+        t
+    }
+
+    pub fn is_profiled(&self, id: EventId) -> bool {
+        !self.elapsed_us[id.0 as usize].is_nan()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = EventId> + '_ {
+        (0..self.events.len() as u32).map(EventId)
+    }
+
+    /// Unprofiled ids (what the profiler still has to measure).
+    pub fn unprofiled(&self) -> Vec<EventId> {
+        self.ids().filter(|&id| !self.is_profiled(id)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn comp(name: &str, flops: u64) -> Event {
+        Event::Comp(CompEvent {
+            name: name.into(),
+            class: OpClass::Matmul,
+            flops,
+            bytes: flops / 100,
+        })
+    }
+
+    #[test]
+    fn interning_dedups_identical_events() {
+        let mut db = EventDb::new();
+        let a = db.intern(comp("layer_fwd/h1024/mp2", 1 << 30));
+        let b = db.intern(comp("layer_fwd/h1024/mp2", 1 << 30));
+        assert_eq!(a, b);
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn different_shapes_are_different_events() {
+        let mut db = EventDb::new();
+        let a = db.intern(comp("layer_fwd", 1 << 30));
+        let b = db.intern(comp("layer_fwd", 1 << 31));
+        assert_ne!(a, b);
+        assert_eq!(db.len(), 2);
+    }
+
+    #[test]
+    fn intra_vs_inter_node_comm_distinct() {
+        // §4.1: the supplementary attribute distinguishes comm events.
+        let mut db = EventDb::new();
+        let a = db.intern(Event::Comm(CommEvent::P2p {
+            bytes: 1 << 20,
+            link: LinkClass::Intra,
+        }));
+        let b = db.intern(Event::Comm(CommEvent::P2p {
+            bytes: 1 << 20,
+            link: LinkClass::Inter,
+        }));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn elapsed_roundtrip_and_unprofiled_tracking() {
+        let mut db = EventDb::new();
+        let a = db.intern(comp("x", 1));
+        let b = db.intern(comp("y", 2));
+        assert_eq!(db.unprofiled(), vec![a, b]);
+        db.set_elapsed(a, 12.5);
+        assert_eq!(db.elapsed(a), 12.5);
+        assert_eq!(db.unprofiled(), vec![b]);
+    }
+
+    #[test]
+    #[should_panic(expected = "used before profiling")]
+    fn elapsed_panics_if_unprofiled() {
+        let mut db = EventDb::new();
+        let a = db.intern(comp("x", 1));
+        let _ = db.elapsed(a);
+    }
+}

@@ -1,0 +1,62 @@
+//! Fig. 3: iteration-time gap between the analytical model and actual
+//! profiling, Bert-Large, 4–16 GPUs. The paper measures up to 40.4% error,
+//! 26.1% average — the motivation for profiling-based modeling.
+
+use crate::baseline::analytical::analytical_from_gt;
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::engine::GroundTruth;
+use crate::util::{rel_err_pct, stats};
+
+pub struct Fig3Row {
+    pub strategy: String,
+    pub gpus: usize,
+    pub actual_ms: f64,
+    pub analytical_ms: f64,
+    pub error_pct: f64,
+}
+
+pub fn run(iters: usize) -> anyhow::Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    for (strategy, gpus) in super::eval_strategies() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cfg = RunConfig::new("bert-large", strategy, cluster);
+        let gt = GroundTruth::prepare(&cfg)?;
+        let actual = gt.mean_batch_time_us(iters);
+        let est = analytical_from_gt(&gt);
+        rows.push(Fig3Row {
+            strategy: strategy.notation(),
+            gpus,
+            actual_ms: actual / 1e3,
+            analytical_ms: est / 1e3,
+            error_pct: rel_err_pct(est, actual),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig3Row]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.strategy.clone(),
+                r.gpus.to_string(),
+                format!("{:.2}", r.actual_ms),
+                format!("{:.2}", r.analytical_ms),
+                format!("{:.1}%", r.error_pct),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig. 3 — analytical model vs actual (Bert-Large)",
+        &["strategy", "GPUs", "actual (ms)", "analytical (ms)", "error"],
+        &table,
+    );
+    let errs: Vec<f64> = rows.iter().map(|r| r.error_pct).collect();
+    println!(
+        "\nmax error {:.1}%  avg error {:.1}%   (paper: 40.4% max, 26.1% avg)",
+        stats::max(&errs),
+        stats::mean(&errs)
+    );
+}

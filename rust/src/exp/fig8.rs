@@ -1,0 +1,65 @@
+//! Fig. 8: DistSim's batch-time (iteration time) accuracy vs actual, on
+//! Bert-Large, GPT-2-345M and T5 across hybrid strategies. The paper
+//! reports < 4% error everywhere (3.51% max).
+
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::util::{rel_err_pct, stats};
+
+pub struct Fig8Row {
+    pub model: String,
+    pub strategy: String,
+    pub gpus: usize,
+    pub actual_ms: f64,
+    pub predicted_ms: f64,
+    pub error_pct: f64,
+}
+
+pub fn run(gt_iters: usize, profile_iters: usize) -> anyhow::Result<Vec<Fig8Row>> {
+    let mut rows = Vec::new();
+    for model in ["bert-large", "gpt2-345m", "t5"] {
+        for (strategy, gpus) in super::eval_strategies() {
+            let mut cfg = RunConfig::new(model, strategy, ClusterSpec::a40_cluster(4, 4));
+            cfg.profile_iters = profile_iters;
+            let run = super::eval_cfg(&cfg)?;
+            let actual = run.gt.mean_batch_time_us(gt_iters);
+            let pred = run.predicted.batch_time_us();
+            rows.push(Fig8Row {
+                model: model.to_string(),
+                strategy: strategy.notation(),
+                gpus,
+                actual_ms: actual / 1e3,
+                predicted_ms: pred / 1e3,
+                error_pct: rel_err_pct(pred, actual),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig8Row]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.strategy.clone(),
+                r.gpus.to_string(),
+                format!("{:.2}", r.actual_ms),
+                format!("{:.2}", r.predicted_ms),
+                format!("{:.2}%", r.error_pct),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig. 8 — DistSim batch-time accuracy",
+        &["model", "strategy", "GPUs", "actual (ms)", "DistSim (ms)", "error"],
+        &table,
+    );
+    let errs: Vec<f64> = rows.iter().map(|r| r.error_pct).collect();
+    println!(
+        "\nmax error {:.2}%  avg error {:.2}%   (paper: < 4%, 3.51% max)",
+        stats::max(&errs),
+        stats::mean(&errs)
+    );
+}

@@ -1,0 +1,65 @@
+//! Fig. 9: per-GPU activity accuracy — the average bias of every
+//! computation event's begin/end timestamps per device, vs the actual
+//! timeline. The paper reports < 5% (4.19% max), with higher errors for
+//! deeper pipeline parallelism.
+
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::metrics::per_gpu_activity_error_pct;
+use crate::util::stats;
+
+pub struct Fig9Row {
+    pub model: String,
+    pub strategy: String,
+    /// one error per GPU (the paper's per-bar values)
+    pub per_gpu_pct: Vec<f64>,
+}
+
+pub fn run(profile_iters: usize) -> anyhow::Result<Vec<Fig9Row>> {
+    let mut rows = Vec::new();
+    for model in ["bert-large", "gpt2-345m", "t5"] {
+        for (strategy, _gpus) in super::eval_strategies() {
+            let mut cfg = RunConfig::new(model, strategy, ClusterSpec::a40_cluster(4, 4));
+            cfg.profile_iters = profile_iters;
+            let run = super::eval_cfg(&cfg)?;
+            let actual = run.gt.run_iteration(0);
+            let errs = per_gpu_activity_error_pct(&run.predicted, &actual);
+            rows.push(Fig9Row {
+                model: model.to_string(),
+                strategy: strategy.notation(),
+                per_gpu_pct: errs,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Fig9Row]) {
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.model.clone(),
+                r.strategy.clone(),
+                format!("{:.2}%", stats::mean(&r.per_gpu_pct)),
+                format!("{:.2}%", stats::max(&r.per_gpu_pct)),
+                r.per_gpu_pct
+                    .iter()
+                    .map(|e| format!("{e:.1}"))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ]
+        })
+        .collect();
+    super::print_table(
+        "Fig. 9 — per-GPU activity accuracy",
+        &["model", "strategy", "mean", "max", "per-GPU errors (%)"],
+        &table,
+    );
+    let all: Vec<f64> = rows.iter().flat_map(|r| r.per_gpu_pct.clone()).collect();
+    println!(
+        "\nglobal max {:.2}%  global mean {:.2}%   (paper: < 5%, 4.19% max)",
+        stats::max(&all),
+        stats::mean(&all)
+    );
+}

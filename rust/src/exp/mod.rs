@@ -1,0 +1,88 @@
+//! Experiment drivers: one function per figure/table of the paper's
+//! evaluation (see DESIGN.md experiment index). Each prints the same
+//! rows/series the paper reports and returns structured results for the
+//! bench harness and EXPERIMENTS.md.
+
+pub mod ablate;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod fig3;
+pub mod fig8;
+pub mod fig9;
+pub mod table3;
+
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::cost::CostModel;
+use crate::distsim::DistSim;
+use crate::engine::GroundTruth;
+use crate::events::EventDb;
+use crate::profile::{profile_events, ProfileReport};
+use crate::strategy::Strategy;
+use crate::timeline::Timeline;
+
+/// The strategy grid used by §5.2/§5.3 for a given GPU budget — mirrors
+/// the paper's x-axes (Figs. 8/9): 4-, 8- and 16-GPU hybrid settings.
+pub fn eval_strategies() -> Vec<(Strategy, usize)> {
+    vec![
+        // (strategy, total GPUs)
+        (Strategy::new(1, 2, 2), 4),
+        (Strategy::new(2, 2, 1), 4),
+        (Strategy::new(1, 1, 4), 4),
+        (Strategy::new(2, 2, 2), 8),
+        (Strategy::new(1, 4, 2), 8),
+        (Strategy::new(2, 1, 4), 8),
+        (Strategy::new(2, 2, 4), 16),
+        (Strategy::new(2, 4, 2), 16),
+        (Strategy::new(4, 2, 2), 16),
+    ]
+}
+
+/// A prediction + ground-truth pair for one configuration.
+pub struct EvalRun {
+    pub cfg: RunConfig,
+    pub gt: GroundTruth,
+    pub predicted: Timeline,
+    pub profile: ProfileReport,
+}
+
+/// Run the full DistSim pipeline (partition → 2-node profile → hierarchical
+/// model) and prepare the ground truth for one configuration.
+pub fn eval_one(model: &str, strategy: Strategy, cluster: ClusterSpec) -> anyhow::Result<EvalRun> {
+    let cfg = RunConfig::new(model, strategy, cluster);
+    eval_cfg(&cfg)
+}
+
+pub fn eval_cfg(cfg: &RunConfig) -> anyhow::Result<EvalRun> {
+    let gt = GroundTruth::prepare(cfg)?;
+    // DistSim path: independent event db, profiled on the 2-node slice
+    let mut db = EventDb::new();
+    crate::engine::build_programs(&gt.part, &gt.sched, &cfg.cluster, &mut db);
+    let profile = profile_events(
+        &mut db,
+        &cfg.cluster,
+        &CostModel::default(),
+        cfg.jitter_sigma,
+        cfg.profile_iters,
+        cfg.seed.wrapping_mul(0x5EED).wrapping_add(1),
+    );
+    let ds = DistSim::new(&gt.part, &gt.sched, &cfg.cluster);
+    let predicted = ds.predict(&mut db);
+    Ok(EvalRun {
+        cfg: cfg.clone(),
+        gt,
+        predicted,
+        profile,
+    })
+}
+
+/// Markdown-ish table printer used by all experiment drivers.
+pub fn print_table(title: &str, headers: &[&str], rows: &[Vec<String>]) {
+    println!("\n## {title}\n");
+    println!("| {} |", headers.join(" | "));
+    println!("|{}|", headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for row in rows {
+        println!("| {} |", row.join(" | "));
+    }
+}

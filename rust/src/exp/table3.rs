@@ -1,0 +1,89 @@
+//! Table 3: the cost of strategy search — DistSim's profiling GPU-time +
+//! simulation wall-time vs directly running every candidate on the real
+//! cluster. The paper measures DistSim at 0.1296x of the direct cost, with
+//! simulation itself < 1% of the total.
+
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::cost::CostModel;
+use crate::engine::GroundTruth;
+use crate::model::zoo;
+use crate::search::{grid, grid_search};
+
+pub struct Table3 {
+    pub simulate_seconds: f64,
+    pub profiling_gpu_seconds: f64,
+    pub direct_gpu_seconds: f64,
+    pub relative: f64,
+}
+
+/// `iters` — iterations the direct run profiles per strategy (paper: 100).
+pub fn run(profile_iters: usize, iters: usize) -> anyhow::Result<Table3> {
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+
+    // DistSim path: 2-node profiling + simulation
+    let report = grid_search(
+        &model,
+        &cluster,
+        &CostModel::default(),
+        super::fig12::GLOBAL_BATCH,
+        0.02,
+        profile_iters,
+    );
+
+    // Direct path: run every *reachable* strategy on all 16 GPUs
+    let mut direct_gpu_seconds = 0.0;
+    for cand in report.candidates.iter().filter(|c| c.reachable) {
+        let per_replica = super::fig12::GLOBAL_BATCH / cand.strategy.dp;
+        let (mbs, m) = if cand.strategy.pp > 1 {
+            (1, per_replica)
+        } else {
+            (per_replica, 1)
+        };
+        let mut cfg = RunConfig::new("bert-exlarge", cand.strategy, cluster.clone());
+        cfg.micro_batch_size = mbs;
+        cfg.micro_batches = m;
+        let gt = GroundTruth::prepare(&cfg)?;
+        direct_gpu_seconds += gt.direct_profiling_gpu_seconds(iters);
+    }
+    let _ = grid(16);
+
+    Ok(Table3 {
+        simulate_seconds: report.simulate_seconds,
+        profiling_gpu_seconds: report.profile.gpu_seconds * iters as f64
+            / profile_iters.max(1) as f64,
+        direct_gpu_seconds,
+        relative: 0.0,
+    }
+    .finish())
+}
+
+impl Table3 {
+    fn finish(mut self) -> Self {
+        self.relative = self.profiling_gpu_seconds / self.direct_gpu_seconds;
+        self
+    }
+}
+
+pub fn print(t: &Table3) {
+    super::print_table(
+        "Table 3 — search cost: DistSim vs direct run",
+        &["", "simulate (s)", "profiling (gpu x s)", "relative"],
+        &[
+            vec![
+                "DistSim".into(),
+                format!("{:.3}", t.simulate_seconds),
+                format!("{:.2}", t.profiling_gpu_seconds),
+                format!("{:.4}x", t.relative),
+            ],
+            vec![
+                "direct run".into(),
+                "-".into(),
+                format!("{:.2}", t.direct_gpu_seconds),
+                "1x".into(),
+            ],
+        ],
+    );
+    println!("\n(paper: 0.14 s simulate, 49.18 vs 380.35 gpu x s = 0.1296x)");
+}

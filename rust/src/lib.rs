@@ -1,0 +1,46 @@
+//! # DistSim — event-based performance model of hybrid distributed DNN training
+//!
+//! A reproduction of *DistSim: A performance model of large-scale hybrid
+//! distributed DNN training* (Lu et al., ACM CF '23) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: event generation
+//!   and dedup ([`events`]), two-node profiling ([`profile`]), hierarchical
+//!   MP→PP→DP timeline modeling ([`distsim`]), plus every substrate it
+//!   needs: a model zoo ([`model`]), a Megatron-style partitioner
+//!   ([`partition`]), pipeline schedules ([`schedule`]), communication laws
+//!   ([`comm`]), a calibrated device cost model ([`cost`]), a ground-truth
+//!   discrete-event cluster engine ([`engine`]) standing in for the paper's
+//!   16-GPU testbed, analytical & Daydream-style baselines ([`baseline`]),
+//!   and the auto-parallel strategy search ([`search`]).
+//! * **Layer 2 (python/compile/model.py)** — JAX transformer-layer event
+//!   graphs, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas matmul/attention/
+//!   layernorm kernels (interpret mode) inside those graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts through PJRT-CPU so the
+//! profiler can anchor the cost model to *measured* compute — python never
+//! runs at simulation time.
+
+pub mod baseline;
+pub mod cluster;
+pub mod comm;
+pub mod config;
+pub mod cost;
+pub mod distsim;
+pub mod engine;
+pub mod events;
+pub mod exp;
+pub mod metrics;
+pub mod model;
+pub mod partition;
+pub mod profile;
+pub mod runtime;
+pub mod schedule;
+pub mod search;
+pub mod strategy;
+pub mod timeline;
+pub mod util;
+
+#[cfg(test)]
+pub mod testutil;

@@ -1,0 +1,290 @@
+//! DistSim CLI — the L3 leader entrypoint.
+//!
+//! Subcommands (hand-rolled parser: no `clap` in the offline vendor set):
+//!
+//! ```text
+//! distsim simulate  --model bert-large --strategy 2M2P2D [--schedule dapple]
+//!                   [--micro-batches 4] [--micro-batch-size 4] [--trace out.json]
+//! distsim search    [--model bert-exlarge] [--global-batch 16]
+//! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
+//! distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
+//!                   ablate-allreduce|ablate-noise|ablate-hierarchy|all
+//!                   [--fast]
+//! distsim models    # list the model zoo
+//! ```
+
+use std::collections::HashMap;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::strategy::Strategy;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, name: &str, default: &'a str) -> &'a str {
+    flags.get(name).map(String::as_str).unwrap_or(default)
+}
+
+fn usize_flag(flags: &HashMap<String, String>, name: &str, default: usize) -> usize {
+    flags
+        .get(name)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print_help();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let (pos, flags) = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "simulate" => cmd_simulate(&flags),
+        "search" => cmd_search(&flags),
+        "calibrate" => cmd_calibrate(&flags),
+        "exp" => cmd_exp(&pos, &flags),
+        "models" => {
+            for name in distsim::model::model_names() {
+                let m = distsim::model::by_name(name).unwrap();
+                println!(
+                    "{name:14} {:3} layers  hidden {:6}  {:7.2} M params",
+                    m.layers.len(),
+                    m.hidden,
+                    m.total_params() as f64 / 1e6
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(anyhow::anyhow!("unknown command '{other}' (try 'distsim help')")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "DistSim — event-based performance model of hybrid distributed DNN training
+
+USAGE:
+  distsim simulate  --model M --strategy xMyPzD [--schedule gpipe|dapple|naive]
+                    [--micro-batches N] [--micro-batch-size B]
+                    [--gt] [--trace out.json] [--trace-actual out.json]
+  distsim search    [--model bert-exlarge] [--global-batch 16] [--nodes 4]
+                    [--gpus-per-node 4] [--device a10|a40|a100]
+  distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
+  distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
+                    ablate-allreduce|ablate-noise|ablate-hierarchy|ablate-schedule|all [--fast]
+  distsim models"
+    );
+}
+
+fn cluster_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<ClusterSpec> {
+    let nodes = usize_flag(flags, "nodes", 4);
+    let gpn = usize_flag(flags, "gpus-per-node", 4);
+    Ok(match flag(flags, "device", "a40") {
+        "a40" => ClusterSpec::a40_cluster(nodes, gpn),
+        "a10" => ClusterSpec::a10_cluster(nodes, gpn),
+        "a100" => ClusterSpec::a100_pod(nodes),
+        other => anyhow::bail!("unknown device '{other}'"),
+    })
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model = flag(flags, "model", "bert-large");
+    let strategy = Strategy::parse(flag(flags, "strategy", "2M2P2D"))?;
+    let mut cfg = RunConfig::new(model, strategy, cluster_from_flags(flags)?);
+    cfg.schedule = flag(flags, "schedule", "dapple").to_string();
+    cfg.micro_batches = usize_flag(flags, "micro-batches", 4);
+    cfg.micro_batch_size = usize_flag(flags, "micro-batch-size", 4);
+    cfg.profile_iters = usize_flag(flags, "profile-iters", 100);
+
+    let run = distsim::exp::eval_cfg(&cfg)?;
+    let pred = run.predicted.batch_time_us();
+    println!(
+        "model {model}  strategy {strategy}  schedule {}  micro-batches {}x{}",
+        cfg.schedule, cfg.micro_batches, cfg.micro_batch_size
+    );
+    println!(
+        "DistSim predicted batch time: {}  ({:.3} it/s)",
+        distsim::util::fmt_us(pred),
+        1e6 / pred
+    );
+    println!(
+        "profiled {} unique events in {:.2} gpu-s ({} extrapolated)",
+        run.profile.events_profiled, run.profile.gpu_seconds, run.profile.extrapolated
+    );
+    let (umin, umean, umax) =
+        distsim::timeline::analysis::utilization_summary(&run.predicted);
+    println!("device utilization: min {umin:.2} mean {umean:.2} max {umax:.2}");
+    println!(
+        "pipeline bubble ratio: {:.3}",
+        distsim::timeline::analysis::bubble_ratio(&run.predicted)
+    );
+
+    if flags.contains_key("gt") {
+        let actual = run.gt.mean_batch_time_us(20);
+        println!(
+            "ground-truth batch time:      {}  (error {:.2}%)",
+            distsim::util::fmt_us(actual),
+            distsim::util::rel_err_pct(pred, actual)
+        );
+    }
+    if let Some(path) = flags.get("trace") {
+        distsim::timeline::chrome::write_chrome_trace(&run.predicted, path)?;
+        println!("wrote predicted trace to {path}");
+    }
+    if let Some(path) = flags.get("trace-actual") {
+        let actual = run.gt.run_iteration(0);
+        distsim::timeline::chrome::write_chrome_trace(&actual, path)?;
+        println!("wrote actual trace to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let model_name = flag(flags, "model", "bert-exlarge");
+    let model = distsim::model::by_name(model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model_name}'"))?;
+    let mut dflags = flags.clone();
+    dflags.entry("device".to_string()).or_insert("a10".to_string());
+    let cluster = cluster_from_flags(&dflags)?;
+    let global_batch = usize_flag(flags, "global-batch", 16);
+    let report = distsim::search::grid_search(
+        &model,
+        &cluster,
+        &distsim::cost::CostModel::default(),
+        global_batch,
+        0.02,
+        usize_flag(flags, "profile-iters", 100),
+    );
+    for c in &report.candidates {
+        println!(
+            "{:10} {:>10}",
+            c.strategy.notation(),
+            if c.reachable {
+                format!("{:.3} it/s", c.throughput)
+            } else {
+                "unreachable".to_string()
+            }
+        );
+    }
+    println!(
+        "\nbest {} ({:.3} it/s), worst {} ({:.3} it/s): {:.2}x speedup",
+        report.best().strategy,
+        report.best().throughput,
+        report.worst().strategy,
+        report.worst().throughput,
+        report.speedup()
+    );
+    println!(
+        "profiling cost {:.2} gpu-s, simulation {:.3} s",
+        report.profile.gpu_seconds, report.simulate_seconds
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(distsim::runtime::artifacts_dir);
+    let iters = usize_flag(flags, "iters", 5);
+    println!("measuring AOT artifacts in {} (PJRT-CPU) ...", dir.display());
+    let mut cal = distsim::profile::calibrate::measure_artifacts(&dir, iters)?;
+    let host_tflops = cal.host_gflops / 1e3;
+    distsim::profile::calibrate::fit_scale(
+        &mut cal,
+        &distsim::cost::CostModel::default(),
+        host_tflops,
+    );
+    for p in &cal.points {
+        println!(
+            "  {:28} {:>12.1} us  {:>8.2} GFLOP/s",
+            p.name,
+            p.measured_us,
+            p.flops as f64 / p.measured_us / 1e3
+        );
+    }
+    println!("host peak observed: {:.2} GFLOP/s", cal.host_gflops);
+    let out = flag(flags, "out", "calibration.json");
+    cal.save(std::path::Path::new(out))?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_exp(pos: &[String], flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let which = pos.first().map(String::as_str).unwrap_or("all");
+    let fast = flags.contains_key("fast");
+    // iteration budgets: paper uses 100-iteration averages; --fast trims
+    let (gt_iters, prof_iters, f10_runs) = if fast { (5, 10, 10) } else { (30, 100, 100) };
+
+    let run_one = |name: &str| -> anyhow::Result<()> {
+        match name {
+            "fig3" => distsim::exp::fig3::print(&distsim::exp::fig3::run(gt_iters)?),
+            "fig8" => distsim::exp::fig8::print(&distsim::exp::fig8::run(gt_iters, prof_iters)?),
+            "fig9" => distsim::exp::fig9::print(&distsim::exp::fig9::run(prof_iters)?),
+            "fig10" => {
+                distsim::exp::fig10::print(&distsim::exp::fig10::run(f10_runs, prof_iters)?)
+            }
+            "fig11" => distsim::exp::fig11::print(&distsim::exp::fig11::run(prof_iters)?),
+            "fig12" | "table2" => {
+                distsim::exp::fig12::print(&distsim::exp::fig12::run(prof_iters, gt_iters)?)
+            }
+            "table3" => distsim::exp::table3::print(&distsim::exp::table3::run(prof_iters, 100)?),
+            "ablate-allreduce" => {
+                distsim::exp::ablate::print_allreduce(&distsim::exp::ablate::allreduce(prof_iters)?)
+            }
+            "ablate-noise" => {
+                distsim::exp::ablate::print_noise(&distsim::exp::ablate::noise(gt_iters, prof_iters)?)
+            }
+            "ablate-hierarchy" => distsim::exp::ablate::print_hierarchy(
+                &distsim::exp::ablate::hierarchy(gt_iters, prof_iters)?,
+            ),
+            "ablate-schedule" => distsim::exp::ablate::print_schedules(
+                &distsim::exp::ablate::schedules(prof_iters)?,
+            ),
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        }
+        Ok(())
+    };
+
+    if which == "all" {
+        for name in [
+            "fig3", "fig8", "fig9", "fig10", "fig11", "fig12", "table3",
+            "ablate-allreduce", "ablate-noise", "ablate-hierarchy",
+            "ablate-schedule",
+        ] {
+            run_one(name)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

@@ -1,0 +1,206 @@
+//! Accuracy metrics — the paper's three evaluation lenses.
+//!
+//! * **Batch-time error** (§5.2 / Fig. 8): relative error of predicted vs
+//!   actual iteration time.
+//! * **Per-GPU activity error** (§5.3 / Fig. 9): average timestamp bias of
+//!   each device's computation events against the actual timeline,
+//!   normalized by the iteration time.
+//! * **Per-stage error** (§5.4 / Fig. 10): per (stage, micro-batch, phase,
+//!   GPU) start/finish timestamp differences — median over repeated actual
+//!   runs.
+//!
+//! Both timelines are normalized to their first span (the paper uses the
+//! first stage's start as the global standard time) before comparison.
+
+use std::collections::HashMap;
+
+use crate::schedule::Phase;
+use crate::timeline::Timeline;
+use crate::util::{rel_err_pct, stats};
+
+/// Relative batch-time error in percent.
+pub fn batch_time_error_pct(pred: &Timeline, truth: &Timeline) -> f64 {
+    rel_err_pct(pred.batch_time_us(), truth.batch_time_us())
+}
+
+/// Per-device activity error (percent of batch time), one entry per device.
+///
+/// Aligns each device's computation spans by order (both sides emit them
+/// in program order) and averages |Δstart| and |Δend|, normalized by the
+/// actual batch time.
+pub fn per_gpu_activity_error_pct(pred: &Timeline, truth: &Timeline) -> Vec<f64> {
+    assert_eq!(pred.n_devices, truth.n_devices, "device count mismatch");
+    let p = pred.normalized();
+    let t = truth.normalized();
+    let bt = t.batch_time_us();
+    (0..t.n_devices)
+        .map(|d| {
+            let ps = p.device_comp_spans(d);
+            let ts = t.device_comp_spans(d);
+            assert_eq!(
+                ps.len(),
+                ts.len(),
+                "device {d}: span count mismatch ({} vs {})",
+                ps.len(),
+                ts.len()
+            );
+            if ts.is_empty() || bt == 0.0 {
+                return 0.0;
+            }
+            let biases: Vec<f64> = ps
+                .iter()
+                .zip(&ts)
+                .flat_map(|(a, b)| [(a.start - b.start).abs(), (a.end - b.end).abs()])
+                .collect();
+            stats::mean(&biases) / bt * 100.0
+        })
+        .collect()
+}
+
+/// Key for one pipeline-stage execution on one device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StageKey {
+    pub device: usize,
+    pub mb: u32,
+    pub phase_fwd: bool,
+}
+
+/// Per-stage timestamps: for each (device, micro-batch, phase), the start
+/// of the first and end of the last computation span of that task.
+pub fn stage_timestamps(t: &Timeline) -> HashMap<StageKey, (f64, f64)> {
+    let t = t.normalized();
+    let mut out: HashMap<StageKey, (f64, f64)> = HashMap::new();
+    for d in 0..t.n_devices {
+        for s in t.device_comp_spans(d) {
+            let key = StageKey {
+                device: d,
+                mb: s.tag.mb,
+                phase_fwd: s.tag.phase == Phase::Fwd,
+            };
+            let e = out.entry(key).or_insert((f64::INFINITY, f64::NEG_INFINITY));
+            e.0 = e.0.min(s.start);
+            e.1 = e.1.max(s.end);
+        }
+    }
+    out
+}
+
+/// Per-stage error (§5.4): for every (device, mb, phase), the mean of
+/// |Δstart| and |Δend| between prediction and one actual run, as percent
+/// of the actual batch time. Callers aggregate the per-run values into
+/// medians across repeated runs (Fig. 10).
+pub fn per_stage_error_pct(pred: &Timeline, truth: &Timeline) -> HashMap<StageKey, f64> {
+    let p = stage_timestamps(pred);
+    let t = stage_timestamps(truth);
+    let bt = truth.batch_time_us();
+    let mut out = HashMap::new();
+    for (key, (ts, te)) in &t {
+        let Some((ps, pe)) = p.get(key) else { continue };
+        let err = ((ps - ts).abs() + (pe - te).abs()) / 2.0 / bt * 100.0;
+        out.insert(*key, err);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timeline::{Span, SpanKind, Tag};
+
+    fn mk(device: usize, start: f64, end: f64, mb: u32, fwd: bool) -> Span {
+        Span {
+            device,
+            start,
+            end,
+            tag: Tag {
+                stage: 0,
+                mb,
+                phase: if fwd { Phase::Fwd } else { Phase::Bwd },
+                layer: 0,
+                kind: SpanKind::Comp,
+                idx: 0,
+            },
+        }
+    }
+
+    fn tl(spans: Vec<Span>, n: usize) -> Timeline {
+        let mut t = Timeline::new(n);
+        for s in spans {
+            t.push(s);
+        }
+        t
+    }
+
+    #[test]
+    fn batch_time_error_pct_basic() {
+        let a = tl(vec![mk(0, 0.0, 104.0, 0, true)], 1);
+        let b = tl(vec![mk(0, 0.0, 100.0, 0, true)], 1);
+        assert!((batch_time_error_pct(&a, &b) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identical_timelines_have_zero_activity_error() {
+        let a = tl(
+            vec![mk(0, 0.0, 10.0, 0, true), mk(0, 12.0, 30.0, 1, true)],
+            1,
+        );
+        let errs = per_gpu_activity_error_pct(&a, &a.clone());
+        assert!(errs.iter().all(|&e| e == 0.0));
+    }
+
+    #[test]
+    fn shifted_spans_produce_expected_error() {
+        // truth: [0,100]; pred: same span but second event shifted +5
+        let truth = tl(
+            vec![mk(0, 0.0, 50.0, 0, true), mk(0, 50.0, 100.0, 1, true)],
+            1,
+        );
+        let pred = tl(
+            vec![mk(0, 0.0, 50.0, 0, true), mk(0, 55.0, 105.0, 1, true)],
+            1,
+        );
+        let errs = per_gpu_activity_error_pct(&pred, &truth);
+        // biases: 0,0 for first; 5,5 for second -> mean 2.5 over bt 100
+        assert!((errs[0] - 2.5).abs() < 1e-9, "{errs:?}");
+    }
+
+    #[test]
+    fn normalization_removes_global_offsets() {
+        let truth = tl(vec![mk(0, 0.0, 10.0, 0, true)], 1);
+        let pred = tl(vec![mk(0, 1000.0, 1010.0, 0, true)], 1);
+        let errs = per_gpu_activity_error_pct(&pred, &truth);
+        assert_eq!(errs[0], 0.0);
+    }
+
+    #[test]
+    fn stage_timestamps_group_by_task() {
+        let t = tl(
+            vec![
+                mk(0, 0.0, 10.0, 0, true),
+                mk(0, 10.0, 20.0, 0, true), // second layer, same task
+                mk(0, 20.0, 40.0, 0, false),
+            ],
+            1,
+        );
+        let m = stage_timestamps(&t);
+        assert_eq!(
+            m[&StageKey {
+                device: 0,
+                mb: 0,
+                phase_fwd: true
+            }],
+            (0.0, 20.0)
+        );
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn per_stage_error_zero_for_identical() {
+        let t = tl(
+            vec![mk(0, 0.0, 10.0, 0, true), mk(0, 20.0, 40.0, 0, false)],
+            1,
+        );
+        let e = per_stage_error_pct(&t, &t.clone());
+        assert!(e.values().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! DNN model descriptions: the paper's benchmark workloads as layer graphs
+//! with exact parameter / FLOP / activation-size accounting.
+//!
+//! Models are sequences of [`Layer`]s (embedding, transformer blocks, head),
+//! which is the granularity the paper's partitioner works at: pipeline
+//! stages are contiguous layer ranges, tensor-MP splits inside a layer, DP
+//! replicates the whole thing.
+
+pub mod zoo;
+
+pub use zoo::{by_name, model_names};
+
+pub const BYTES_PER_PARAM: u64 = 4; // fp32 training state (paper testbed)
+
+/// One layer of a model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Token + position embedding lookup.
+    Embedding { vocab: usize, hidden: usize },
+    /// A standard pre-LN transformer block.
+    Transformer(TransformerLayer),
+    /// LM head / pooler projection back to vocab.
+    Head { vocab: usize, hidden: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TransformerLayer {
+    pub hidden: usize,
+    pub heads: usize,
+    pub ffn: usize,
+}
+
+/// A whole model plus its training sequence length.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<Layer>,
+    pub seq: usize,
+    pub heads: usize,
+    pub hidden: usize,
+}
+
+impl TransformerLayer {
+    /// Parameters of the full (unsharded) block, incl. LN and biases.
+    pub fn params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let qkv = h * 3 * h + 3 * h;
+        let proj = h * h + h;
+        let mlp = h * f + f + f * h + h;
+        let ln = 4 * h;
+        qkv + proj + mlp + ln
+    }
+
+    /// Forward FLOPs for the full block at (batch, seq) — 2*MACs.
+    pub fn flops_fwd(&self, batch: usize, seq: usize) -> u64 {
+        let t = (batch * seq) as u64;
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let d = (self.hidden / self.heads) as u64;
+        let lh = self.heads as u64;
+        let qkv = 2 * t * h * 3 * h;
+        let scores = 2 * lh * (batch as u64) * (seq as u64).pow(2) * d * 2;
+        let proj = 2 * t * h * h;
+        let mlp = 2 * t * h * f * 2;
+        qkv + scores + proj + mlp
+    }
+
+    /// Per-rank forward FLOPs under tensor-MP degree `mp` (Megatron split:
+    /// the attention-score term scales with local heads, matmuls with the
+    /// sharded output/input dim).
+    pub fn flops_fwd_mp(&self, batch: usize, seq: usize, mp: usize) -> u64 {
+        self.flops_fwd(batch, seq) / mp as u64
+    }
+
+    /// Activation bytes leaving the block: (batch*seq, hidden) fp32.
+    pub fn activation_bytes(&self, batch: usize, seq: usize) -> u64 {
+        (batch * seq * self.hidden) as u64 * 4
+    }
+}
+
+impl Layer {
+    pub fn params(&self) -> u64 {
+        match self {
+            Layer::Embedding { vocab, hidden } => (vocab * hidden) as u64,
+            Layer::Transformer(t) => t.params(),
+            Layer::Head { vocab, hidden } => (vocab * hidden) as u64,
+        }
+    }
+
+    /// Full-layer forward FLOPs at (batch, seq).
+    pub fn flops_fwd(&self, batch: usize, seq: usize) -> u64 {
+        let t = (batch * seq) as u64;
+        match self {
+            // embedding lookup is bandwidth-bound; count the gather reads
+            Layer::Embedding { hidden, .. } => t * *hidden as u64,
+            Layer::Transformer(l) => l.flops_fwd(batch, seq),
+            Layer::Head { vocab, hidden } => 2 * t * (*hidden as u64) * (*vocab as u64),
+        }
+    }
+
+    /// Bytes of activation this layer outputs per (batch, seq).
+    pub fn activation_bytes(&self, batch: usize, seq: usize, hidden: usize) -> u64 {
+        let _ = self;
+        (batch * seq * hidden) as u64 * 4
+    }
+}
+
+impl ModelSpec {
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params()).sum()
+    }
+
+    pub fn num_transformer_layers(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Transformer(_)))
+            .count()
+    }
+
+    /// Full-model forward FLOPs for one micro-batch.
+    pub fn flops_fwd(&self, batch: usize) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.flops_fwd(batch, self.seq))
+            .sum()
+    }
+
+    /// Gradient bytes all-reduced by data parallelism (all parameters).
+    pub fn grad_bytes(&self) -> u64 {
+        self.total_params() * BYTES_PER_PARAM
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(h: usize, heads: usize, f: usize) -> TransformerLayer {
+        TransformerLayer {
+            hidden: h,
+            heads,
+            ffn: f,
+        }
+    }
+
+    #[test]
+    fn bert_large_param_count_matches_paper() {
+        // Paper intro: Bert-Large ~= 0.34 B params.
+        let m = zoo::bert_large();
+        let p = m.total_params() as f64 / 1e9;
+        assert!((0.30..0.37).contains(&p), "bert-large params = {p} B");
+    }
+
+    #[test]
+    fn gpt2_345m_param_count() {
+        let m = zoo::gpt2_345m();
+        let p = m.total_params() as f64 / 1e6;
+        assert!((330.0..430.0).contains(&p), "gpt-2 params = {p} M");
+    }
+
+    #[test]
+    fn gpt_145b_param_count() {
+        // §5.5: 145-billion-parameter GPT (Megatron configuration).
+        let m = zoo::gpt_145b();
+        let p = m.total_params() as f64 / 1e9;
+        assert!((135.0..155.0).contains(&p), "gpt-145b params = {p} B");
+    }
+
+    #[test]
+    fn transformer_flops_quadratic_in_seq_attention_term() {
+        let l = block(64, 4, 256);
+        let f1 = l.flops_fwd(1, 64);
+        let f2 = l.flops_fwd(1, 128);
+        // doubling seq more than doubles FLOPs (attention term quadratic)
+        assert!(f2 > 2 * f1);
+        // but batch is exactly linear
+        assert_eq!(l.flops_fwd(2, 64), 2 * f1);
+    }
+
+    #[test]
+    fn mp_shard_flops_divide_evenly() {
+        let l = block(1024, 16, 4096);
+        let full = l.flops_fwd(4, 128);
+        for mp in [1, 2, 4, 8, 16] {
+            assert_eq!(l.flops_fwd_mp(4, 128, mp) * mp as u64, full);
+        }
+    }
+
+    #[test]
+    fn grad_bytes_is_4x_params() {
+        let m = zoo::bert_large();
+        assert_eq!(m.grad_bytes(), m.total_params() * 4);
+    }
+
+    #[test]
+    fn zoo_models_have_consistent_heads() {
+        for name in zoo::model_names() {
+            let m = zoo::by_name(name).unwrap();
+            for l in &m.layers {
+                if let Layer::Transformer(t) = l {
+                    assert_eq!(t.hidden, m.hidden, "{name}");
+                    assert_eq!(t.heads, m.heads, "{name}");
+                    assert_eq!(t.hidden % t.heads, 0, "{name}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_unknown_is_none() {
+        assert!(zoo::by_name("resnet-50").is_none());
+    }
+}

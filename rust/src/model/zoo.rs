@@ -1,0 +1,116 @@
+//! The paper's benchmark models (§5.1, §5.5, §6).
+//!
+//! | model        | layers | hidden | heads | ffn   | seq  | params |
+//! |--------------|--------|--------|-------|-------|------|--------|
+//! | BERT-Large   | 24     | 1024   | 16    | 4096  | 512  | ~0.34B |
+//! | GPT-2-345M   | 24     | 1024   | 16    | 4096  | 1024 | ~0.35B |
+//! | T5 (large)   | 24+24  | 1024   | 16    | 4096  | 512  | ~0.77B |
+//! | BERT-exLarge | 48     | 1024   | 16    | 4096  | 512  | ~0.64B |
+//! | GPT-145B     | 80     | 12288  | 96    | 49152 | 2048 | ~145B  |
+//!
+//! T5's encoder-decoder structure is flattened into a 48-block stack for
+//! partitioning purposes (the paper's partitioner does the same: stages are
+//! contiguous layer ranges across the enc/dec boundary). GPT-145B follows
+//! Megatron-LM SC'21's 8-way-MP x 16-stage configuration.
+
+use super::{Layer, ModelSpec, TransformerLayer};
+
+fn transformer_stack(
+    name: &str,
+    n_layers: usize,
+    hidden: usize,
+    heads: usize,
+    ffn: usize,
+    seq: usize,
+    vocab: usize,
+) -> ModelSpec {
+    let mut layers = Vec::with_capacity(n_layers + 2);
+    layers.push(Layer::Embedding { vocab, hidden });
+    for _ in 0..n_layers {
+        layers.push(Layer::Transformer(TransformerLayer {
+            hidden,
+            heads,
+            ffn,
+        }));
+    }
+    layers.push(Layer::Head { vocab, hidden });
+    ModelSpec {
+        name: name.to_string(),
+        layers,
+        seq,
+        heads,
+        hidden,
+    }
+}
+
+/// BERT-Large (Devlin et al.): 24 x (1024, 16 heads, 4096 ffn).
+pub fn bert_large() -> ModelSpec {
+    transformer_stack("bert-large", 24, 1024, 16, 4096, 512, 30522)
+}
+
+/// GPT-2-345M (Radford et al.): 24 x (1024, 16 heads, 4096 ffn).
+pub fn gpt2_345m() -> ModelSpec {
+    transformer_stack("gpt2-345m", 24, 1024, 16, 4096, 1024, 50257)
+}
+
+/// T5 (Raffel et al.), large-ish: 24 encoder + 24 decoder blocks flattened.
+pub fn t5() -> ModelSpec {
+    transformer_stack("t5", 48, 1024, 16, 4096, 512, 32128)
+}
+
+/// BERT-exLarge (paper §6): the unseen 48-layer BERT variant used for the
+/// auto-strategy search on 16 A10 GPUs.
+pub fn bert_ex_large() -> ModelSpec {
+    transformer_stack("bert-exlarge", 48, 1024, 16, 4096, 512, 30522)
+}
+
+/// GPT-145B (paper §5.5 / Megatron-LM SC'21): 80 x (12288, 96 heads).
+pub fn gpt_145b() -> ModelSpec {
+    transformer_stack("gpt-145b", 80, 12288, 96, 49152, 2048, 51200)
+}
+
+/// Look a model up by CLI name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "bert-large" | "bert_large" | "bert" => Some(bert_large()),
+        "gpt2-345m" | "gpt2" | "gpt-2-345m" => Some(gpt2_345m()),
+        "t5" => Some(t5()),
+        "bert-exlarge" | "bert_exlarge" | "bert-ex-large" => Some(bert_ex_large()),
+        "gpt-145b" | "gpt145b" => Some(gpt_145b()),
+        _ => None,
+    }
+}
+
+/// All zoo names (stable order, for CLI help and sweep drivers).
+pub fn model_names() -> &'static [&'static str] {
+    &["bert-large", "gpt2-345m", "t5", "bert-exlarge", "gpt-145b"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_lookup_aliases() {
+        assert_eq!(by_name("BERT").unwrap().name, "bert-large");
+        assert_eq!(by_name("gpt2").unwrap().name, "gpt2-345m");
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn layer_counts() {
+        assert_eq!(bert_large().num_transformer_layers(), 24);
+        assert_eq!(t5().num_transformer_layers(), 48);
+        assert_eq!(bert_ex_large().num_transformer_layers(), 48);
+        assert_eq!(gpt_145b().num_transformer_layers(), 80);
+    }
+
+    #[test]
+    fn every_model_has_embedding_and_head() {
+        for name in model_names() {
+            let m = by_name(name).unwrap();
+            assert!(matches!(m.layers.first(), Some(Layer::Embedding { .. })));
+            assert!(matches!(m.layers.last(), Some(Layer::Head { .. })));
+        }
+    }
+}

@@ -1,0 +1,386 @@
+//! Megatron-style model partitioner.
+//!
+//! Mirrors the role of "the model partition function in current distributed
+//! training frameworks" the paper takes over (§4.1): given a model and a
+//! hybrid strategy it produces, per pipeline stage, the per-rank shard of
+//! work — compute events for every layer (tensor-MP sharded), the MP
+//! all-reduce communication events inside layers, the inter-stage
+//! activation transfer, and the DP gradient all-reduce payload.
+//!
+//! Both the ground-truth engine and DistSim's modeling consume this one
+//! partition, exactly like the real framework deploys the same sub-models
+//! that DistSim parses.
+
+use crate::cluster::ClusterSpec;
+use crate::cost::OpClass;
+use crate::events::{CommEvent, CompEvent};
+use crate::model::{Layer, ModelSpec};
+use crate::strategy::Strategy;
+
+/// Per-layer, per-rank work under the strategy.
+#[derive(Debug, Clone)]
+pub struct LayerWork {
+    /// Index into `ModelSpec::layers`.
+    pub layer_idx: usize,
+    /// Forward compute event for one micro-batch on one rank.
+    pub fwd: CompEvent,
+    /// Backward compute event (~2x forward FLOPs).
+    pub bwd: CompEvent,
+    /// The tensor-MP all-reduce inside this layer (None when mp == 1 or
+    /// the layer is not tensor-sharded).
+    pub mp_allreduce: Option<CommEvent>,
+    /// How many MP all-reduces per forward pass (Megatron: 2 — attention
+    /// proj + MLP fc2) and per backward pass (2 more).
+    pub ar_count_fwd: usize,
+    pub ar_count_bwd: usize,
+    /// Parameters held by one rank for this layer.
+    pub params_per_rank: u64,
+}
+
+/// One pipeline stage's per-rank work.
+#[derive(Debug, Clone)]
+pub struct StageWork {
+    pub stage: usize,
+    pub layers: Vec<LayerWork>,
+    /// Activation bytes sent to the next stage per micro-batch (0 for the
+    /// last stage).
+    pub act_bytes: u64,
+    pub params_per_rank: u64,
+}
+
+/// The full partition of a model under a strategy.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub strategy: Strategy,
+    pub stages: Vec<StageWork>,
+    /// Micro-batch size (sequences) used to size the events.
+    pub micro_batch_size: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    /// Gradient bytes each rank all-reduces across its DP group.
+    pub grad_bytes_per_rank: Vec<u64>,
+}
+
+/// Contiguously assign `n_layers` model layers to `pp` stages, balancing
+/// counts (earlier stages get the remainder, matching Megatron's default).
+pub fn stage_ranges(n_layers: usize, pp: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(pp >= 1 && pp <= n_layers.max(1), "pp {pp} > layers {n_layers}");
+    let base = n_layers / pp;
+    let extra = n_layers % pp;
+    let mut out = Vec::with_capacity(pp);
+    let mut start = 0;
+    for s in 0..pp {
+        let len = base + usize::from(s < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+fn layer_comp_events(
+    layer: &Layer,
+    layer_idx: usize,
+    mbs: usize,
+    seq: usize,
+    mp: usize,
+) -> (CompEvent, CompEvent, u64) {
+    let tokens = (mbs * seq) as u64;
+    match layer {
+        Layer::Embedding { vocab, hidden } => {
+            let bytes = tokens * *hidden as u64 * 4 * 2;
+            let params = (*vocab * *hidden) as u64 / mp as u64;
+            (
+                CompEvent {
+                    name: format!("embed/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    class: OpClass::Gather,
+                    flops: tokens * *hidden as u64 / mp as u64,
+                    bytes: bytes / mp as u64,
+                },
+                CompEvent {
+                    name: format!("embed_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    class: OpClass::Gather,
+                    flops: tokens * *hidden as u64 / mp as u64,
+                    bytes: bytes / mp as u64,
+                },
+                params,
+            )
+        }
+        Layer::Transformer(t) => {
+            let flops = t.flops_fwd_mp(mbs, seq, mp);
+            // bytes: weights read + activations read/written (rough but
+            // consistent; the profiler measures actual times anyway)
+            let bytes = t.params() * 4 / mp as u64
+                + tokens * t.hidden as u64 * 4 * 8 / mp as u64;
+            let _ = layer_idx;
+            (
+                CompEvent {
+                    name: format!(
+                        "xfmr_fwd/h{}f{}a{}/mp{}/b{}s{}",
+                        t.hidden, t.ffn, t.heads, mp, mbs, seq
+                    ),
+                    class: OpClass::Matmul,
+                    flops,
+                    bytes,
+                },
+                CompEvent {
+                    name: format!(
+                        "xfmr_bwd/h{}f{}a{}/mp{}/b{}s{}",
+                        t.hidden, t.ffn, t.heads, mp, mbs, seq
+                    ),
+                    class: OpClass::Matmul,
+                    flops: 2 * flops,
+                    bytes: 2 * bytes,
+                },
+                t.params() / mp as u64,
+            )
+        }
+        Layer::Head { vocab, hidden } => {
+            let flops = 2 * tokens * (*hidden as u64) * (*vocab as u64) / mp as u64;
+            let bytes = (*vocab * *hidden) as u64 * 4 / mp as u64;
+            (
+                CompEvent {
+                    name: format!("head/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    class: OpClass::Matmul,
+                    flops,
+                    bytes,
+                },
+                CompEvent {
+                    name: format!("head_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    class: OpClass::Matmul,
+                    flops: 2 * flops,
+                    bytes: 2 * bytes,
+                },
+                (*vocab * *hidden) as u64 / mp as u64,
+            )
+        }
+    }
+}
+
+/// Partition `model` under `strategy` for micro-batches of `mbs` sequences.
+pub fn partition(
+    model: &ModelSpec,
+    strategy: &Strategy,
+    cluster: &ClusterSpec,
+    mbs: usize,
+) -> Partition {
+    let pp = strategy.pp;
+    let mp = strategy.mp;
+    assert!(
+        model.heads % mp == 0,
+        "mp {mp} does not divide {} heads",
+        model.heads
+    );
+    let ranges = stage_ranges(model.layers.len(), pp);
+
+    // MP group link class: MP ranks are contiguous, so the group for stage
+    // 0 / dp 0 is representative for all (homogeneous layout).
+    let mp_link = cluster.group_link_class(&strategy.mp_group(0));
+
+    let tokens = (mbs * model.seq) as u64;
+    let act_bytes = tokens * model.hidden as u64 * 4;
+
+    let mut stages = Vec::with_capacity(pp);
+    for (s, range) in ranges.iter().enumerate() {
+        let mut layers = Vec::with_capacity(range.len());
+        let mut stage_params = 0u64;
+        for li in range.clone() {
+            let layer = &model.layers[li];
+            let (fwd, bwd, params) =
+                layer_comp_events(layer, li, mbs, model.seq, mp);
+            let is_sharded = mp > 1;
+            let mp_allreduce = if is_sharded {
+                Some(CommEvent::AllReduce {
+                    bytes: act_bytes,
+                    group: mp,
+                    link: mp_link,
+                })
+            } else {
+                None
+            };
+            let (arf, arb) = match layer {
+                Layer::Transformer(_) if is_sharded => (2, 2),
+                _ if is_sharded => (1, 1),
+                _ => (0, 0),
+            };
+            stage_params += params;
+            layers.push(LayerWork {
+                layer_idx: li,
+                fwd,
+                bwd,
+                mp_allreduce,
+                ar_count_fwd: arf,
+                ar_count_bwd: arb,
+                params_per_rank: params,
+            });
+        }
+        stages.push(StageWork {
+            stage: s,
+            layers,
+            act_bytes: if s + 1 < pp { act_bytes } else { 0 },
+            params_per_rank: stage_params,
+        });
+    }
+
+    let grad_bytes_per_rank = stages
+        .iter()
+        .map(|st| {
+            if strategy.dp > 1 {
+                st.params_per_rank * 4
+            } else {
+                0
+            }
+        })
+        .collect();
+
+    Partition {
+        strategy: *strategy,
+        stages,
+        micro_batch_size: mbs,
+        seq: model.seq,
+        hidden: model.hidden,
+        grad_bytes_per_rank,
+    }
+}
+
+impl Partition {
+    /// Total FLOPs one rank of `stage` computes for one micro-batch fwd.
+    pub fn stage_fwd_flops(&self, stage: usize) -> u64 {
+        self.stages[stage].layers.iter().map(|l| l.fwd.flops).sum()
+    }
+
+    /// Max parameters any rank holds (deployability check).
+    pub fn max_params_per_rank(&self) -> u64 {
+        self.stages
+            .iter()
+            .map(|s| s.params_per_rank)
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn setup(mp: usize, pp: usize, dp: usize) -> (ModelSpec, Strategy, ClusterSpec) {
+        (
+            zoo::bert_large(),
+            Strategy::new(mp, pp, dp),
+            ClusterSpec::a40_cluster(4, 4),
+        )
+    }
+
+    #[test]
+    fn stage_ranges_cover_all_layers_contiguously() {
+        for (n, pp) in [(26, 4), (26, 1), (10, 3), (7, 7)] {
+            let rs = stage_ranges(n, pp);
+            assert_eq!(rs.len(), pp);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, n);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // balanced: lengths differ by at most 1
+            let lens: Vec<usize> = rs.iter().map(|r| r.len()).collect();
+            assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+        }
+    }
+
+    #[test]
+    fn partition_conserves_parameters() {
+        let (m, s, c) = setup(2, 4, 2);
+        let p = partition(&m, &s, &c, 4);
+        let per_rank_total: u64 = p.stages.iter().map(|st| st.params_per_rank).sum();
+        // all stages together, times mp ranks, give the full model
+        assert_eq!(per_rank_total * s.mp as u64, m.total_params());
+    }
+
+    #[test]
+    fn partition_conserves_flops() {
+        let (m, s, c) = setup(4, 2, 2);
+        let mbs = 4;
+        let p = partition(&m, &s, &c, mbs);
+        let sharded: u64 = (0..s.pp).map(|st| p.stage_fwd_flops(st)).sum();
+        assert_eq!(sharded * s.mp as u64, m.flops_fwd(mbs));
+    }
+
+    #[test]
+    fn mp1_has_no_allreduce_events() {
+        let (m, s, c) = setup(1, 2, 2);
+        let p = partition(&m, &s, &c, 4);
+        for st in &p.stages {
+            for l in &st.layers {
+                assert!(l.mp_allreduce.is_none());
+                assert_eq!(l.ar_count_fwd, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn mp2_transformer_layers_have_two_fwd_allreduces() {
+        let (m, s, c) = setup(2, 1, 1);
+        let p = partition(&m, &s, &c, 4);
+        let xfmr = p.stages[0]
+            .layers
+            .iter()
+            .find(|l| l.fwd.name.starts_with("xfmr"))
+            .unwrap();
+        assert_eq!(xfmr.ar_count_fwd, 2);
+        assert_eq!(xfmr.ar_count_bwd, 2);
+        assert!(xfmr.mp_allreduce.is_some());
+    }
+
+    #[test]
+    fn last_stage_sends_no_activation() {
+        let (m, s, c) = setup(1, 4, 1);
+        let p = partition(&m, &s, &c, 4);
+        assert!(p.stages[..3].iter().all(|st| st.act_bytes > 0));
+        assert_eq!(p.stages[3].act_bytes, 0);
+    }
+
+    #[test]
+    fn identical_layers_produce_identical_event_names() {
+        // the dedup premise: all 24 BERT blocks map to one event name
+        let (m, s, c) = setup(2, 1, 1);
+        let p = partition(&m, &s, &c, 4);
+        let names: std::collections::HashSet<String> = p.stages[0]
+            .layers
+            .iter()
+            .filter(|l| l.fwd.name.starts_with("xfmr"))
+            .map(|l| l.fwd.name.clone())
+            .collect();
+        assert_eq!(names.len(), 1);
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd_flops_for_transformer() {
+        let (m, s, c) = setup(2, 2, 1);
+        let p = partition(&m, &s, &c, 4);
+        for st in &p.stages {
+            for l in &st.layers {
+                if l.fwd.name.starts_with("xfmr") {
+                    assert_eq!(l.bwd.flops, 2 * l.fwd.flops);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grad_bytes_zero_without_dp() {
+        let (m, s, c) = setup(2, 2, 1);
+        let p = partition(&m, &s, &c, 4);
+        assert!(p.grad_bytes_per_rank.iter().all(|&b| b == 0));
+        let (m2, s2, c2) = setup(2, 2, 2);
+        let p2 = partition(&m2, &s2, &c2, 4);
+        assert!(p2.grad_bytes_per_rank.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn rejects_mp_not_dividing_heads() {
+        let (m, _, c) = setup(1, 1, 1);
+        let s = Strategy::new(3, 1, 1);
+        partition(&m, &s, &c, 4);
+    }
+}

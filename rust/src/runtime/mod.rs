@@ -1,0 +1,209 @@
+//! PJRT runtime: load and execute the AOT HLO artifacts from Rust.
+//!
+//! This is the L3↔L2 bridge: `python/compile/aot.py` lowers the JAX/Pallas
+//! event graphs to HLO *text* once at build time; this module compiles and
+//! runs them on the PJRT CPU client so the profiler can time real compute
+//! (`profile::calibrate`). Python never runs at simulation time.
+//!
+//! Everything here degrades gracefully: if `artifacts/` is absent the
+//! simulator falls back to the analytic device model, so `cargo test`
+//! works without a prior `make artifacts`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::config::Json;
+
+/// One entry of `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub flops: u64,
+    /// Argument shapes (row-major dims) — all f32 in this project.
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let arr = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            let get_str = |k: &str| {
+                a.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("artifact missing '{k}'"))
+            };
+            let arg_shapes = a
+                .get("args")
+                .and_then(Json::as_arr)
+                .context("artifact missing args")?
+                .iter()
+                .map(|arg| {
+                    arg.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|dims| {
+                            dims.iter()
+                                .filter_map(Json::as_usize)
+                                .collect::<Vec<usize>>()
+                        })
+                        .context("arg missing shape")
+                })
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactSpec {
+                name: get_str("name")?,
+                path: dir.join(get_str("path")?),
+                kind: get_str("kind")?,
+                flops: a.get("flops").and_then(Json::as_u64).unwrap_or(0),
+                arg_shapes,
+            });
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// A compiled, executable HLO module on the PJRT CPU client.
+pub struct LoadedExecutable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    args: Vec<xla::Literal>,
+}
+
+/// PJRT-CPU runtime holding the client and loaded executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (HLO text → executable) and pre-build zero
+    /// literals for its arguments.
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<LoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", spec.name))?;
+        let args = spec
+            .arg_shapes
+            .iter()
+            .map(|dims| {
+                let n: usize = dims.iter().product();
+                // small pseudo-random fill (timing is data-independent for
+                // dense kernels; non-zero avoids denormal weirdness)
+                let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
+                let lit = xla::Literal::vec1(&data);
+                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims_i64)
+                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LoadedExecutable {
+            spec: spec.clone(),
+            exe,
+            args,
+        })
+    }
+}
+
+impl LoadedExecutable {
+    /// Execute once, synchronously, returning elapsed wall time (us).
+    pub fn run_once_us(&self) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&self.args)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.spec.name))?;
+        // force completion
+        let _lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
+        Ok(t0.elapsed().as_secs_f64() * 1e6)
+    }
+
+    /// Median-of-`iters` timing after one warmup run.
+    pub fn bench_us(&self, iters: usize) -> Result<f64> {
+        self.run_once_us()?; // warmup (compile caches, allocator)
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            samples.push(self.run_once_us()?);
+        }
+        Ok(crate::util::stats::median(&samples))
+    }
+}
+
+/// Default artifacts directory: `$DISTSIM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DISTSIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_minimal_example() {
+        let dir = std::env::temp_dir().join("distsim_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts":[{"name":"m","path":"m.hlo.txt","kind":"matmul","flops":4194304,
+                "args":[{"shape":[128,128],"dtype":"float32"},{"shape":[128,128],"dtype":"float32"}]}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.artifacts[0].arg_shapes[0], vec![128, 128]);
+        assert_eq!(m.by_kind("matmul").len(), 1);
+        assert!(m.by_name("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_load_fails_cleanly_when_absent() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    // Full PJRT round-trip tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts` to have run).
+}

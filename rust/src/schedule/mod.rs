@@ -1,0 +1,297 @@
+//! Pipeline-parallel schedules (paper §2.1.3, §4.3): the per-stage order
+//! in which micro-batch forward/backward tasks execute.
+//!
+//! Implemented algorithms, as in the paper: **GPipe** (all forwards, then
+//! all backwards) and **Dapple** (1F1B: a warmup of forwards, then strict
+//! forward/backward alternation, then a backward cooldown), plus the
+//! no-micro-batching **naive** pipeline for reference.
+//!
+//! The schedule fixes *order only*; timing comes from dependencies —
+//! enforced physically by the ground-truth engine (send/recv rendezvous)
+//! and analytically by DistSim's Algorithm-1 modeling.
+
+use std::fmt;
+
+/// Training phase of a micro-batch at a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Fwd,
+    Bwd,
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Phase::Fwd => write!(f, "F"),
+            Phase::Bwd => write!(f, "B"),
+        }
+    }
+}
+
+/// One entry in a stage's execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StageTask {
+    pub mb: usize,
+    pub phase: Phase,
+}
+
+/// A complete pipeline schedule.
+#[derive(Debug, Clone)]
+pub struct PipelineSchedule {
+    pub name: String,
+    pub micro_batches: usize,
+    /// `stage_tasks[s]` = execution order on stage `s`.
+    pub stage_tasks: Vec<Vec<StageTask>>,
+}
+
+/// GPipe: F(0) .. F(M-1), then B(M-1) .. B(0) on every stage.
+pub fn gpipe(pp: usize, micro_batches: usize) -> PipelineSchedule {
+    let mut stage_tasks = Vec::with_capacity(pp);
+    for _ in 0..pp {
+        let mut tasks = Vec::with_capacity(2 * micro_batches);
+        for m in 0..micro_batches {
+            tasks.push(StageTask { mb: m, phase: Phase::Fwd });
+        }
+        for m in (0..micro_batches).rev() {
+            tasks.push(StageTask { mb: m, phase: Phase::Bwd });
+        }
+        stage_tasks.push(tasks);
+    }
+    PipelineSchedule {
+        name: "gpipe".into(),
+        micro_batches,
+        stage_tasks,
+    }
+}
+
+/// Dapple / 1F1B: stage `s` runs `min(pp - s - 1, M)` warmup forwards,
+/// then alternates one-forward-one-backward, then drains backwards.
+/// Caps in-flight activations at `pp - s`, Dapple's memory advantage.
+pub fn dapple(pp: usize, micro_batches: usize) -> PipelineSchedule {
+    let m_total = micro_batches;
+    let mut stage_tasks = Vec::with_capacity(pp);
+    for s in 0..pp {
+        let warmup = (pp - s - 1).min(m_total);
+        let mut tasks = Vec::with_capacity(2 * m_total);
+        for m in 0..warmup {
+            tasks.push(StageTask { mb: m, phase: Phase::Fwd });
+        }
+        // steady state: F(warmup + i), B(i)
+        for i in 0..m_total - warmup {
+            tasks.push(StageTask { mb: warmup + i, phase: Phase::Fwd });
+            tasks.push(StageTask { mb: i, phase: Phase::Bwd });
+        }
+        // cooldown: remaining backwards
+        for m in m_total - warmup..m_total {
+            tasks.push(StageTask { mb: m, phase: Phase::Bwd });
+        }
+        stage_tasks.push(tasks);
+    }
+    PipelineSchedule {
+        name: "dapple".into(),
+        micro_batches,
+        stage_tasks,
+    }
+}
+
+/// Naive pipeline: the whole batch flows as a single micro-batch.
+pub fn naive(pp: usize) -> PipelineSchedule {
+    let mut s = gpipe(pp, 1);
+    s.name = "naive".into();
+    s
+}
+
+/// Look up a schedule builder by CLI name.
+pub fn by_name(name: &str, pp: usize, micro_batches: usize) -> anyhow::Result<PipelineSchedule> {
+    match name.to_ascii_lowercase().as_str() {
+        "gpipe" => Ok(gpipe(pp, micro_batches)),
+        "dapple" | "1f1b" => Ok(dapple(pp, micro_batches)),
+        "naive" => Ok(naive(pp)),
+        other => anyhow::bail!("unknown schedule '{other}' (gpipe|dapple|naive)"),
+    }
+}
+
+impl PipelineSchedule {
+    pub fn pp(&self) -> usize {
+        self.stage_tasks.len()
+    }
+
+    /// Sanity invariants every schedule must satisfy; used by tests and
+    /// asserted (debug) before simulation.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (s, tasks) in self.stage_tasks.iter().enumerate() {
+            let m = self.micro_batches;
+            anyhow::ensure!(
+                tasks.len() == 2 * m,
+                "stage {s}: {} tasks != 2*{m}",
+                tasks.len()
+            );
+            let mut fwd_pos = vec![None; m];
+            let mut bwd_pos = vec![None; m];
+            for (i, t) in tasks.iter().enumerate() {
+                let slot = match t.phase {
+                    Phase::Fwd => &mut fwd_pos,
+                    Phase::Bwd => &mut bwd_pos,
+                };
+                anyhow::ensure!(
+                    slot[t.mb].replace(i).is_none(),
+                    "stage {s}: duplicate {t:?}"
+                );
+            }
+            for mb in 0..m {
+                let (f, b) = (fwd_pos[mb].unwrap(), bwd_pos[mb].unwrap());
+                anyhow::ensure!(f < b, "stage {s}: B({mb}) before F({mb})");
+            }
+        }
+        Ok(())
+    }
+
+    /// Max number of micro-batches whose activations are alive at once on
+    /// `stage` (forward done, backward not yet) — the memory high-water.
+    pub fn max_in_flight(&self, stage: usize) -> usize {
+        let mut alive = 0usize;
+        let mut peak = 0usize;
+        for t in &self.stage_tasks[stage] {
+            match t.phase {
+                Phase::Fwd => {
+                    alive += 1;
+                    peak = peak.max(alive);
+                }
+                Phase::Bwd => alive -= 1,
+            }
+        }
+        peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_valid_for_many_shapes() {
+        for (pp, m) in [(1, 1), (2, 4), (4, 4), (8, 16), (4, 1)] {
+            gpipe(pp, m).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn dapple_valid_for_many_shapes() {
+        for (pp, m) in [(1, 1), (2, 4), (4, 4), (8, 16), (4, 2), (16, 4)] {
+            dapple(pp, m).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn gpipe_order_all_f_then_all_b() {
+        let s = gpipe(2, 3);
+        let t = &s.stage_tasks[0];
+        assert_eq!(
+            t.iter().map(|x| (x.mb, x.phase)).collect::<Vec<_>>(),
+            vec![
+                (0, Phase::Fwd),
+                (1, Phase::Fwd),
+                (2, Phase::Fwd),
+                (2, Phase::Bwd),
+                (1, Phase::Bwd),
+                (0, Phase::Bwd),
+            ]
+        );
+    }
+
+    #[test]
+    fn dapple_last_stage_alternates_immediately() {
+        let s = dapple(4, 4);
+        let last = &s.stage_tasks[3];
+        assert_eq!(last[0], StageTask { mb: 0, phase: Phase::Fwd });
+        assert_eq!(last[1], StageTask { mb: 0, phase: Phase::Bwd });
+    }
+
+    #[test]
+    fn dapple_caps_in_flight_memory() {
+        let pp = 4;
+        let m = 8;
+        let g = gpipe(pp, m);
+        let d = dapple(pp, m);
+        // GPipe stage 0 holds all M activations; Dapple holds at most pp.
+        assert_eq!(g.max_in_flight(0), m);
+        assert_eq!(d.max_in_flight(0), pp);
+        assert!(d.max_in_flight(pp - 1) <= 1 + 1);
+    }
+
+    #[test]
+    fn dapple_equals_gpipe_for_pp1() {
+        // no pipeline -> both degenerate to sequential F/B per micro-batch
+        let d = dapple(1, 4);
+        d.validate().unwrap();
+        assert_eq!(d.max_in_flight(0), 1);
+    }
+
+    #[test]
+    fn naive_is_single_microbatch() {
+        let n = naive(4);
+        n.validate().unwrap();
+        assert_eq!(n.micro_batches, 1);
+    }
+
+    #[test]
+    fn by_name_dispatch() {
+        assert_eq!(by_name("gpipe", 2, 4).unwrap().name, "gpipe");
+        assert_eq!(by_name("1F1B", 2, 4).unwrap().name, "dapple");
+        assert!(by_name("chimera", 2, 4).is_err());
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn prop_random_schedules_are_valid() {
+        testutil::check("schedule-valid", 200, |rng| {
+            let pp = 1 + rng.below(12) as usize;
+            let m = 1 + rng.below(24) as usize;
+            gpipe(pp, m).validate().unwrap();
+            dapple(pp, m).validate().unwrap();
+        });
+    }
+
+    #[test]
+    fn prop_dapple_in_flight_never_exceeds_pipeline_depth() {
+        testutil::check("dapple-memory", 200, |rng| {
+            let pp = 1 + rng.below(12) as usize;
+            let m = 1 + rng.below(24) as usize;
+            let d = dapple(pp, m);
+            for s in 0..pp {
+                assert!(
+                    d.max_in_flight(s) <= pp.min(m).max(1),
+                    "pp={pp} m={m} stage {s}: in-flight {}",
+                    d.max_in_flight(s)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_gpipe_and_dapple_agree_on_task_multiset() {
+        testutil::check("same-tasks", 100, |rng| {
+            let pp = 1 + rng.below(8) as usize;
+            let m = 1 + rng.below(16) as usize;
+            let (g, d) = (gpipe(pp, m), dapple(pp, m));
+            for s in 0..pp {
+                let mut a: Vec<(usize, bool)> = g.stage_tasks[s]
+                    .iter()
+                    .map(|t| (t.mb, t.phase == Phase::Fwd))
+                    .collect();
+                let mut b: Vec<(usize, bool)> = d.stage_tasks[s]
+                    .iter()
+                    .map(|t| (t.mb, t.phase == Phase::Fwd))
+                    .collect();
+                a.sort();
+                b.sort();
+                assert_eq!(a, b);
+            }
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Auto parallel-strategy search (paper §6): grid-search the hybrid
+//! strategy space with DistSim as the throughput oracle, at a fixed global
+//! batch size, and rank strategies by predicted iterations/second.
+//!
+//! This is the paper's use-case: evaluating 15 candidate deployments of
+//! BERT-exLarge on 16 GPUs *without* touching the full cluster — profiling
+//! happens on the 2-node slice, simulation is milliseconds per candidate.
+
+use crate::cluster::ClusterSpec;
+use crate::config::RunConfig;
+use crate::cost::CostModel;
+use crate::distsim::DistSim;
+use crate::engine::GroundTruth;
+use crate::events::EventDb;
+use crate::model::ModelSpec;
+use crate::partition::partition;
+use crate::profile::{profile_events, ProfileReport};
+use crate::schedule;
+use crate::strategy::Strategy;
+
+/// One evaluated candidate.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub strategy: Strategy,
+    /// Predicted throughput, iterations/second (0 if unreachable).
+    pub throughput: f64,
+    /// Whether the model shard fits device memory (Fig. 12 draws
+    /// unreachable configs as 0).
+    pub reachable: bool,
+    /// Micro-batches per replica used for this candidate.
+    pub micro_batches: usize,
+}
+
+/// Search report: all candidates plus profiling-cost accounting (Table 3).
+#[derive(Debug, Clone)]
+pub struct SearchReport {
+    pub candidates: Vec<Candidate>,
+    pub profile: ProfileReport,
+    /// Wall-clock spent in simulation (not profiling), seconds.
+    pub simulate_seconds: f64,
+}
+
+impl SearchReport {
+    pub fn best(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .filter(|c| c.reachable)
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .expect("no reachable candidate")
+    }
+
+    pub fn second_best(&self) -> &Candidate {
+        let best = self.best().strategy;
+        self.candidates
+            .iter()
+            .filter(|c| c.reachable && c.strategy != best)
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .expect("fewer than two reachable candidates")
+    }
+
+    pub fn worst(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .filter(|c| c.reachable && c.throughput > 0.0)
+            .min_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .expect("no reachable candidate")
+    }
+
+    /// Best/worst speedup — the paper's 7.37x headline.
+    pub fn speedup(&self) -> f64 {
+        self.best().throughput / self.worst().throughput
+    }
+}
+
+/// Enumerate the paper's §6 grid: sizes in {1, 2, 4, .., devices} per
+/// axis, DP derived as devices / MP / PP.
+pub fn grid(devices: usize) -> Vec<Strategy> {
+    let mut axis = Vec::new();
+    let mut v = 1;
+    while v <= devices {
+        axis.push(v);
+        v *= 2;
+    }
+    let mut out = Vec::new();
+    for &mp in &axis {
+        for &pp in &axis {
+            if mp * pp <= devices && devices % (mp * pp) == 0 {
+                out.push(Strategy::new(mp, pp, devices / (mp * pp)));
+            }
+        }
+    }
+    out
+}
+
+/// Evaluate one candidate with DistSim. Returns (throughput it/s,
+/// reachable, micro_batches).
+pub fn evaluate_candidate(
+    model: &ModelSpec,
+    strategy: &Strategy,
+    cluster: &ClusterSpec,
+    cost: &CostModel,
+    global_batch: usize,
+    jitter_sigma: f64,
+    profile_iters: usize,
+    report: &mut ProfileReport,
+) -> Candidate {
+    // validity: heads divisibility, pipeline depth, batch divisibility
+    if !strategy.is_valid_for(model.heads, model.num_transformer_layers(), strategy.world_size())
+        || global_batch % strategy.dp != 0
+    {
+        return Candidate {
+            strategy: *strategy,
+            throughput: 0.0,
+            reachable: false,
+            micro_batches: 0,
+        };
+    }
+    let per_replica = global_batch / strategy.dp;
+    // micro-batch granularity: one sequence per micro-batch when
+    // pipelining (maximizes overlap at fixed global batch), the whole
+    // replica batch otherwise
+    let (mbs, micro_batches) = if strategy.pp > 1 {
+        (1, per_replica)
+    } else {
+        (per_replica, 1)
+    };
+
+    let part = partition(model, strategy, cluster, mbs);
+    // memory reachability
+    if !cluster.fits(part.max_params_per_rank()) {
+        return Candidate {
+            strategy: *strategy,
+            throughput: 0.0,
+            reachable: false,
+            micro_batches,
+        };
+    }
+    let sched = schedule::dapple(strategy.pp, micro_batches);
+    let mut db = EventDb::new();
+    crate::engine::build_programs(&part, &sched, cluster, &mut db);
+    let r = profile_events(&mut db, cluster, cost, jitter_sigma, profile_iters, 7777);
+    report.gpu_seconds += r.gpu_seconds;
+    report.events_profiled += r.events_profiled;
+    report.extrapolated += r.extrapolated;
+
+    let ds = DistSim::new(&part, &sched, cluster);
+    let batch_us = ds.predict_batch_time_us(&mut db);
+    Candidate {
+        strategy: *strategy,
+        throughput: 1e6 / batch_us,
+        reachable: true,
+        micro_batches,
+    }
+}
+
+/// Full grid search (paper §6 protocol).
+pub fn grid_search(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    cost: &CostModel,
+    global_batch: usize,
+    jitter_sigma: f64,
+    profile_iters: usize,
+) -> SearchReport {
+    let mut profile = ProfileReport::default();
+    let t0 = std::time::Instant::now();
+    let candidates: Vec<Candidate> = grid(cluster.total_devices())
+        .iter()
+        .map(|s| {
+            evaluate_candidate(
+                model,
+                s,
+                cluster,
+                cost,
+                global_batch,
+                jitter_sigma,
+                profile_iters,
+                &mut profile,
+            )
+        })
+        .collect();
+    let simulate_seconds = t0.elapsed().as_secs_f64();
+    SearchReport {
+        candidates,
+        profile,
+        simulate_seconds,
+    }
+}
+
+/// Measure a candidate on the "real cluster" (ground-truth engine) — used
+/// to verify the search result (Table 2).
+pub fn measure_actual(
+    model_name: &str,
+    cand: &Candidate,
+    cluster: &ClusterSpec,
+    global_batch: usize,
+    iters: usize,
+) -> anyhow::Result<f64> {
+    let per_replica = global_batch / cand.strategy.dp;
+    let (mbs, micro_batches) = if cand.strategy.pp > 1 {
+        (1, per_replica)
+    } else {
+        (per_replica, 1)
+    };
+    let mut cfg = RunConfig::new(model_name, cand.strategy, cluster.clone());
+    cfg.micro_batch_size = mbs;
+    cfg.micro_batches = micro_batches;
+    let gt = GroundTruth::prepare(&cfg)?;
+    Ok(1e6 / gt.mean_batch_time_us(iters))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn grid_of_16_has_15_entries() {
+        // paper §6: "overall, there are 15 different hybrid parallelism
+        // settings"
+        assert_eq!(grid(16).len(), 15);
+    }
+
+    #[test]
+    fn grid_covers_all_devices() {
+        for s in grid(16) {
+            assert_eq!(s.world_size(), 16);
+        }
+    }
+
+    #[test]
+    fn search_finds_a_pipeline_heavy_winner_for_bert_exlarge() {
+        // Fig. 12: the winner uses pipeline parallelism (2D8P in the
+        // paper); pure 16-way MP is the worst by far.
+        let model = zoo::bert_ex_large();
+        let cluster = ClusterSpec::a10_cluster(4, 4);
+        let rep = grid_search(&model, &cluster, &CostModel::default(), 16, 0.0, 1);
+        assert_eq!(rep.candidates.len(), 15);
+        let best = rep.best();
+        assert!(best.strategy.pp >= 2, "winner {} should pipeline", best.strategy);
+        let worst = rep.worst();
+        assert_eq!(worst.strategy.mp, 16, "worst should be 16-way MP, got {}", worst.strategy);
+        let speedup = rep.speedup();
+        assert!(
+            (3.0..15.0).contains(&speedup),
+            "speedup {speedup} out of the paper's order of magnitude"
+        );
+    }
+
+    #[test]
+    fn unreachable_candidates_marked() {
+        // GPT-145B cannot fit mp*pp=1 shards on 16 A10s
+        let model = zoo::gpt_145b();
+        let cluster = ClusterSpec::a10_cluster(4, 4);
+        let rep = grid_search(&model, &cluster, &CostModel::default(), 16, 0.0, 1);
+        assert!(rep.candidates.iter().any(|c| !c.reachable));
+        let dp16 = rep
+            .candidates
+            .iter()
+            .find(|c| c.strategy.dp == 16)
+            .unwrap();
+        assert!(!dp16.reachable);
+        assert_eq!(dp16.throughput, 0.0);
+    }
+}

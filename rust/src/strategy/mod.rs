@@ -1,0 +1,265 @@
+//! Hybrid parallelism strategy: the paper's "xM yP zD" notation (§5.1).
+//!
+//! `mp` = tensor model parallelism degree (intra-layer, Megatron-style),
+//! `pp` = pipeline parallelism degree (layer-wise stages),
+//! `dp` = data parallelism degree (model replicas).
+//! Total devices = mp * pp * dp.
+//!
+//! Rank layout follows Megatron: MP ranks are contiguous (fastest-varying,
+//! so an MP group sits inside one node whenever mp <= gpus/node), then PP,
+//! then DP.
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Strategy {
+    pub mp: usize,
+    pub pp: usize,
+    pub dp: usize,
+}
+
+/// A device's coordinates in the 3-D strategy grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RankCoords {
+    pub mp: usize,
+    pub pp: usize,
+    pub dp: usize,
+}
+
+impl Strategy {
+    pub fn new(mp: usize, pp: usize, dp: usize) -> Self {
+        assert!(mp >= 1 && pp >= 1 && dp >= 1, "degrees must be >= 1");
+        Strategy { mp, pp, dp }
+    }
+
+    /// Parse the paper's notation: "2M4P1D" (case-insensitive, any order).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (mut mp, mut pp, mut dp) = (None, None, None);
+        let mut num = String::new();
+        for c in s.chars() {
+            if c.is_ascii_digit() {
+                num.push(c);
+                continue;
+            }
+            let v: usize = num
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad strategy notation '{s}'"))?;
+            num.clear();
+            match c.to_ascii_uppercase() {
+                'M' => mp = Some(v),
+                'P' => pp = Some(v),
+                'D' => dp = Some(v),
+                _ => anyhow::bail!("bad strategy notation '{s}': unknown axis '{c}'"),
+            }
+        }
+        if !num.is_empty() {
+            anyhow::bail!("bad strategy notation '{s}': trailing number");
+        }
+        match (mp, pp, dp) {
+            (Some(m), Some(p), Some(d)) => {
+                anyhow::ensure!(m >= 1 && p >= 1 && d >= 1, "degrees must be >= 1");
+                Ok(Strategy { mp: m, pp: p, dp: d })
+            }
+            _ => anyhow::bail!("bad strategy notation '{s}': need all of M, P, D"),
+        }
+    }
+
+    /// Canonical paper notation, e.g. "2M4P1D".
+    pub fn notation(&self) -> String {
+        format!("{}M{}P{}D", self.mp, self.pp, self.dp)
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.mp * self.pp * self.dp
+    }
+
+    /// Grid coordinates of a global rank (Megatron order: MP fastest).
+    pub fn coords(&self, rank: usize) -> RankCoords {
+        assert!(rank < self.world_size(), "rank {rank} out of range");
+        RankCoords {
+            mp: rank % self.mp,
+            pp: (rank / self.mp) % self.pp,
+            dp: rank / (self.mp * self.pp),
+        }
+    }
+
+    /// Inverse of [`coords`].
+    pub fn rank_of(&self, c: RankCoords) -> usize {
+        assert!(c.mp < self.mp && c.pp < self.pp && c.dp < self.dp);
+        (c.dp * self.pp + c.pp) * self.mp + c.mp
+    }
+
+    /// The MP group (all tensor-parallel peers) containing `rank`.
+    pub fn mp_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coords(rank);
+        (0..self.mp)
+            .map(|m| self.rank_of(RankCoords { mp: m, ..c }))
+            .collect()
+    }
+
+    /// The DP group (gradient all-reduce peers) containing `rank`.
+    pub fn dp_group(&self, rank: usize) -> Vec<usize> {
+        let c = self.coords(rank);
+        (0..self.dp)
+            .map(|d| self.rank_of(RankCoords { dp: d, ..c }))
+            .collect()
+    }
+
+    /// The pipeline-stage peer on stage `pp` for `rank`'s (mp, dp) lane.
+    pub fn pp_peer(&self, rank: usize, pp: usize) -> usize {
+        let c = self.coords(rank);
+        self.rank_of(RankCoords { pp, ..c })
+    }
+
+    /// Valid deployments of `total` devices: every (mp, pp, dp) factoring.
+    pub fn enumerate(total: usize) -> Vec<Strategy> {
+        let mut out = Vec::new();
+        for mp in 1..=total {
+            if total % mp != 0 {
+                continue;
+            }
+            let rest = total / mp;
+            for pp in 1..=rest {
+                if rest % pp != 0 {
+                    continue;
+                }
+                out.push(Strategy::new(mp, pp, rest / pp));
+            }
+        }
+        out
+    }
+
+    /// Paper §6 search-space validity: MP must divide attention heads, PP
+    /// must not exceed layer count, and degrees must cover all devices.
+    pub fn is_valid_for(&self, heads: usize, layers: usize, devices: usize) -> bool {
+        self.world_size() == devices
+            && heads % self.mp == 0
+            && self.pp <= layers
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.notation())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_paper_notation() {
+        let s = Strategy::parse("2M4P1D").unwrap();
+        assert_eq!((s.mp, s.pp, s.dp), (2, 4, 1));
+        let s = Strategy::parse("1m2p2d").unwrap();
+        assert_eq!((s.mp, s.pp, s.dp), (1, 2, 2));
+        // order-insensitive
+        let s = Strategy::parse("4D2P1M").unwrap();
+        assert_eq!((s.mp, s.pp, s.dp), (1, 2, 4));
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(Strategy::parse("2M4P").is_err());
+        assert!(Strategy::parse("xMyPzD").is_err());
+        assert!(Strategy::parse("2M4P1D3").is_err());
+        assert!(Strategy::parse("0M1P1D").is_err());
+    }
+
+    #[test]
+    fn notation_roundtrip() {
+        for s in Strategy::enumerate(16) {
+            assert_eq!(Strategy::parse(&s.notation()).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn coords_roundtrip_all_ranks() {
+        let s = Strategy::new(2, 4, 2);
+        for r in 0..s.world_size() {
+            assert_eq!(s.rank_of(s.coords(r)), r);
+        }
+    }
+
+    #[test]
+    fn megatron_rank_order_mp_fastest() {
+        let s = Strategy::new(2, 2, 2);
+        // rank 0,1 = MP pair of (pp0, dp0); rank 2,3 = (pp1, dp0) ...
+        assert_eq!(s.mp_group(0), vec![0, 1]);
+        assert_eq!(s.mp_group(3), vec![2, 3]);
+        assert_eq!(s.dp_group(0), vec![0, 4]);
+        assert_eq!(s.pp_peer(0, 1), 2);
+    }
+
+    #[test]
+    fn enumerate_16_has_15_strategies() {
+        // The paper (§6): 15 valid factorings of 16 devices over 3 axes
+        // with sizes in {1,2,4,8,16}.
+        assert_eq!(Strategy::enumerate(16).len(), 15);
+    }
+
+    #[test]
+    fn groups_contain_self_and_are_disjoint_partitions() {
+        let s = Strategy::new(2, 2, 4);
+        let mut seen = vec![0usize; s.world_size()];
+        for r in 0..s.world_size() {
+            assert!(s.mp_group(r).contains(&r));
+            assert!(s.dp_group(r).contains(&r));
+        }
+        // MP groups partition the world
+        for r in 0..s.world_size() {
+            for m in s.mp_group(r) {
+                seen[m] += 1;
+            }
+        }
+        // each rank appears exactly mp times (once per member's view)
+        assert!(seen.iter().all(|&c| c == s.mp));
+    }
+
+    #[test]
+    fn validity_rules() {
+        // BERT-exLarge: 48 layers, 16 heads, 16 devices
+        assert!(Strategy::new(2, 8, 1).is_valid_for(16, 48, 16));
+        // MP=32 does not divide 16 heads
+        assert!(!Strategy::new(32, 1, 1).is_valid_for(16, 48, 32));
+        // wrong world size
+        assert!(!Strategy::new(2, 8, 1).is_valid_for(16, 48, 32));
+        // PP deeper than the layer count
+        assert!(!Strategy::new(2, 64, 1).is_valid_for(16, 48, 128));
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn prop_coords_bijective_for_random_strategies() {
+        testutil::check("coords-bijective", 200, |rng| {
+            let mp = 1 << rng.below(4);
+            let pp = 1 << rng.below(4);
+            let dp = 1 << rng.below(3);
+            let s = Strategy::new(mp, pp, dp);
+            let mut seen = std::collections::HashSet::new();
+            for r in 0..s.world_size() {
+                let c = s.coords(r);
+                assert_eq!(s.rank_of(c), r);
+                assert!(seen.insert((c.mp, c.pp, c.dp)));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_notation_roundtrips() {
+        testutil::check("notation-roundtrip", 200, |rng| {
+            let s = Strategy::new(
+                1 + rng.below(64) as usize,
+                1 + rng.below(64) as usize,
+                1 + rng.below(64) as usize,
+            );
+            assert_eq!(Strategy::parse(&s.notation()).unwrap(), s);
+        });
+    }
+}

@@ -1,0 +1,56 @@
+//! Tiny property-testing harness (no `proptest` in the offline vendor
+//! set): generate seeded random cases, shrink is traded for printing the
+//! failing seed so cases replay deterministically.
+
+use crate::util::Rng;
+
+/// Run `f` on `cases` seeded RNG streams; panics with the failing seed.
+pub fn check<F: Fn(&mut Rng)>(name: &str, cases: u64, f: F) {
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xD15751A ^ seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Pick one element of a slice.
+pub fn pick<'a, T>(rng: &mut Rng, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len() as u64) as usize]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u64);
+        check("count", 25, |_| {
+            counter.set(counter.get() + 1);
+        });
+        assert_eq!(counter.get(), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        check("fail", 10, |rng| {
+            assert!(rng.f64() < 2.0); // always true
+            assert!(rng.f64() >= 0.5); // fails quickly for some seed
+        });
+    }
+
+    #[test]
+    fn pick_is_in_range() {
+        let xs = [1, 2, 3];
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            assert!(xs.contains(pick(&mut rng, &xs)));
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Timeline analyses the paper motivates: device utilization summaries and
+//! pipeline-bubble extraction (§5: "helps programmers to locate pipeline
+//! bubbles and perform practical operations such as fault-tolerance during
+//! bubbles").
+
+use super::Timeline;
+use crate::util::TimeUs;
+
+/// An idle interval on a device between two activities.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bubble {
+    pub device: usize,
+    pub start: TimeUs,
+    pub end: TimeUs,
+}
+
+impl Bubble {
+    pub fn dur(&self) -> TimeUs {
+        self.end - self.start
+    }
+}
+
+/// All idle gaps longer than `min_us` on every device, within the span of
+/// the whole step (leading/trailing idle included).
+pub fn bubbles(t: &Timeline, min_us: TimeUs) -> Vec<Bubble> {
+    let mut out = Vec::new();
+    if t.spans.is_empty() {
+        return out;
+    }
+    let t0 = t.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+    let t1 = t
+        .spans
+        .iter()
+        .map(|s| s.end)
+        .fold(f64::NEG_INFINITY, f64::max);
+    for d in 0..t.n_devices {
+        let spans = t.device_spans(d);
+        let mut cursor = t0;
+        for s in &spans {
+            if s.start - cursor > min_us {
+                out.push(Bubble {
+                    device: d,
+                    start: cursor,
+                    end: s.start,
+                });
+            }
+            cursor = cursor.max(s.end);
+        }
+        if t1 - cursor > min_us {
+            out.push(Bubble {
+                device: d,
+                start: cursor,
+                end: t1,
+            });
+        }
+    }
+    out
+}
+
+/// Fraction of total device-time lost to bubbles.
+pub fn bubble_ratio(t: &Timeline) -> f64 {
+    let bt = t.batch_time_us();
+    if bt == 0.0 || t.n_devices == 0 {
+        return 0.0;
+    }
+    let idle: TimeUs = bubbles(t, 0.0).iter().map(Bubble::dur).sum();
+    idle / (bt * t.n_devices as f64)
+}
+
+/// Utilization summary across devices: (min, mean, max).
+pub fn utilization_summary(t: &Timeline) -> (f64, f64, f64) {
+    if t.n_devices == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let us: Vec<f64> = (0..t.n_devices).map(|d| t.utilization(d)).collect();
+    (
+        crate::util::stats::min(&us),
+        crate::util::stats::mean(&us),
+        crate::util::stats::max(&us),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Phase;
+    use crate::timeline::{Span, SpanKind, Tag};
+
+    fn tl() -> Timeline {
+        let mut t = Timeline::new(2);
+        let tag = Tag {
+            stage: 0,
+            mb: 0,
+            phase: Phase::Fwd,
+            layer: 0,
+            kind: SpanKind::Comp,
+            idx: 0,
+        };
+        // device 0: busy [0,10] and [20,30]; device 1: busy [0,30]
+        t.push(Span { device: 0, start: 0.0, end: 10.0, tag });
+        t.push(Span { device: 0, start: 20.0, end: 30.0, tag });
+        t.push(Span { device: 1, start: 0.0, end: 30.0, tag });
+        t
+    }
+
+    #[test]
+    fn finds_the_gap() {
+        let bs = bubbles(&tl(), 1.0);
+        assert_eq!(bs.len(), 1);
+        assert_eq!(bs[0].device, 0);
+        assert_eq!((bs[0].start, bs[0].end), (10.0, 20.0));
+    }
+
+    #[test]
+    fn bubble_ratio_matches_hand_count() {
+        // total device-time = 2 * 30 = 60; idle = 10 -> ratio 1/6
+        assert!((bubble_ratio(&tl()) - 10.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_summary_ordering() {
+        let (lo, mid, hi) = utilization_summary(&tl());
+        assert!(lo <= mid && mid <= hi);
+        assert!((hi - 1.0).abs() < 1e-12);
+        assert!((lo - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_us_filter_suppresses_small_gaps() {
+        assert!(bubbles(&tl(), 15.0).is_empty());
+    }
+}

@@ -1,0 +1,250 @@
+//! Per-device activity timelines — DistSim's output artifact (§3.2: "a
+//! detailed execution timeline ... when and which device will compute and
+//! communicate for certain operators").
+//!
+//! Both the ground-truth engine and DistSim's hierarchical modeling emit
+//! this same structure, so the metrics layer can align spans one-to-one
+//! and compute the paper's three error families (batch time, per-GPU
+//! activity, per-stage timestamps).
+
+pub mod analysis;
+pub mod chrome;
+
+use crate::schedule::Phase;
+use crate::util::TimeUs;
+
+/// What a span on a device's lane represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// A computation event (layer fwd/bwd, embedding, head).
+    Comp,
+    /// Receiving an inter-stage activation / gradient transfer.
+    P2p,
+    /// Tensor-MP partial-sum all-reduce inside a layer.
+    MpAllReduce,
+    /// Data-parallel gradient all-reduce at batch end.
+    GradAllReduce,
+}
+
+/// Identity of a span within the training step — identical between the
+/// ground truth and the model, so spans align by (device, tag, order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tag {
+    pub stage: u32,
+    pub mb: u32,
+    pub phase: Phase,
+    /// Layer index within the model (u32::MAX when not layer-specific,
+    /// e.g. the DP gradient all-reduce).
+    pub layer: u32,
+    pub kind: SpanKind,
+    /// Disambiguator for repeated events inside one (stage, mb, phase,
+    /// layer), e.g. the two Megatron MP all-reduces.
+    pub idx: u32,
+}
+
+impl Tag {
+    pub fn comp(stage: usize, mb: usize, phase: Phase, layer: usize) -> Tag {
+        Tag {
+            stage: stage as u32,
+            mb: mb as u32,
+            phase,
+            layer: layer as u32,
+            kind: SpanKind::Comp,
+            idx: 0,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self.kind {
+            SpanKind::Comp => format!(
+                "{}{} s{} L{}",
+                self.phase, self.mb, self.stage, self.layer
+            ),
+            SpanKind::P2p => format!("p2p {}{} s{}", self.phase, self.mb, self.stage),
+            SpanKind::MpAllReduce => format!(
+                "mp-ar {}{} s{} L{}#{}",
+                self.phase, self.mb, self.stage, self.layer, self.idx
+            ),
+            SpanKind::GradAllReduce => format!("grad-ar s{}", self.stage),
+        }
+    }
+}
+
+/// One activity interval on one device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub device: usize,
+    pub start: TimeUs,
+    pub end: TimeUs,
+    pub tag: Tag,
+}
+
+impl Span {
+    pub fn dur(&self) -> TimeUs {
+        self.end - self.start
+    }
+}
+
+/// A complete step timeline over all devices.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    pub n_devices: usize,
+    pub spans: Vec<Span>,
+}
+
+impl Timeline {
+    pub fn new(n_devices: usize) -> Self {
+        Timeline {
+            n_devices,
+            spans: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, span: Span) {
+        debug_assert!(span.end >= span.start, "negative span {span:?}");
+        debug_assert!(span.device < self.n_devices);
+        self.spans.push(span);
+    }
+
+    /// Iteration (batch) time: last end minus first start.
+    pub fn batch_time_us(&self) -> TimeUs {
+        if self.spans.is_empty() {
+            return 0.0;
+        }
+        let start = self.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+        let end = self
+            .spans
+            .iter()
+            .map(|s| s.end)
+            .fold(f64::NEG_INFINITY, f64::max);
+        end - start
+    }
+
+    /// All spans of one device, in start order.
+    pub fn device_spans(&self, device: usize) -> Vec<Span> {
+        let mut v: Vec<Span> = self
+            .spans
+            .iter()
+            .copied()
+            .filter(|s| s.device == device)
+            .collect();
+        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+        v
+    }
+
+    /// Compute spans of one device, in start order (the paper's per-GPU
+    /// activity metric aligns these).
+    pub fn device_comp_spans(&self, device: usize) -> Vec<Span> {
+        self.device_spans(device)
+            .into_iter()
+            .filter(|s| s.tag.kind == SpanKind::Comp)
+            .collect()
+    }
+
+    /// Busy time (sum of span durations) of a device.
+    pub fn busy_us(&self, device: usize) -> TimeUs {
+        self.spans
+            .iter()
+            .filter(|s| s.device == device)
+            .map(Span::dur)
+            .sum()
+    }
+
+    /// Device utilization = busy / batch time.
+    pub fn utilization(&self, device: usize) -> f64 {
+        let bt = self.batch_time_us();
+        if bt == 0.0 {
+            return 0.0;
+        }
+        (self.busy_us(device) / bt).min(1.0)
+    }
+
+    /// Shift all spans so the earliest start is 0 (the paper aligns both
+    /// timelines to the first stage's start before comparing).
+    pub fn normalized(&self) -> Timeline {
+        if self.spans.is_empty() {
+            return self.clone();
+        }
+        let t0 = self.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
+        Timeline {
+            n_devices: self.n_devices,
+            spans: self
+                .spans
+                .iter()
+                .map(|s| Span {
+                    start: s.start - t0,
+                    end: s.end - t0,
+                    ..*s
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(device: usize, start: f64, end: f64, kind: SpanKind) -> Span {
+        Span {
+            device,
+            start,
+            end,
+            tag: Tag {
+                stage: 0,
+                mb: 0,
+                phase: Phase::Fwd,
+                layer: 0,
+                kind,
+                idx: 0,
+            },
+        }
+    }
+
+    #[test]
+    fn batch_time_spans_extremes() {
+        let mut t = Timeline::new(2);
+        t.push(span(0, 10.0, 20.0, SpanKind::Comp));
+        t.push(span(1, 5.0, 12.0, SpanKind::Comp));
+        t.push(span(1, 30.0, 45.0, SpanKind::P2p));
+        assert_eq!(t.batch_time_us(), 40.0);
+    }
+
+    #[test]
+    fn device_spans_sorted_and_filtered() {
+        let mut t = Timeline::new(2);
+        t.push(span(0, 20.0, 25.0, SpanKind::Comp));
+        t.push(span(0, 0.0, 5.0, SpanKind::Comp));
+        t.push(span(0, 10.0, 15.0, SpanKind::P2p));
+        t.push(span(1, 0.0, 1.0, SpanKind::Comp));
+        let d0 = t.device_spans(0);
+        assert_eq!(d0.len(), 3);
+        assert!(d0.windows(2).all(|w| w[0].start <= w[1].start));
+        assert_eq!(t.device_comp_spans(0).len(), 2);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut t = Timeline::new(2);
+        t.push(span(0, 0.0, 100.0, SpanKind::Comp));
+        t.push(span(1, 0.0, 25.0, SpanKind::Comp));
+        assert!((t.utilization(0) - 1.0).abs() < 1e-12);
+        assert!((t.utilization(1) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn normalized_starts_at_zero() {
+        let mut t = Timeline::new(1);
+        t.push(span(0, 100.0, 110.0, SpanKind::Comp));
+        let n = t.normalized();
+        assert_eq!(n.spans[0].start, 0.0);
+        assert_eq!(n.batch_time_us(), t.batch_time_us());
+    }
+
+    #[test]
+    fn empty_timeline_is_safe() {
+        let t = Timeline::new(4);
+        assert_eq!(t.batch_time_us(), 0.0);
+        assert_eq!(t.utilization(0), 0.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Small shared utilities: a deterministic PRNG (no `rand` offline), basic
+//! statistics, and time formatting. Everything downstream (the ground-truth
+//! engine's jitter, the profiler's averaging, the property-test harness)
+//! draws randomness from [`Rng`] so runs are reproducible from a seed.
+
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;
+
+/// Simulation time in microseconds. All layers (cost model, comm laws,
+/// engine, timelines) agree on this unit.
+pub type TimeUs = f64;
+
+/// Format a microsecond duration human-readably.
+pub fn fmt_us(t: TimeUs) -> String {
+    if t >= 1e6 {
+        format!("{:.3} s", t / 1e6)
+    } else if t >= 1e3 {
+        format!("{:.3} ms", t / 1e3)
+    } else {
+        format!("{t:.1} us")
+    }
+}
+
+/// Relative error |a - b| / b (b is ground truth), in percent.
+pub fn rel_err_pct(pred: f64, truth: f64) -> f64 {
+    if truth == 0.0 {
+        return if pred == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    ((pred - truth) / truth).abs() * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_us_units() {
+        assert_eq!(fmt_us(1.5), "1.5 us");
+        assert_eq!(fmt_us(1500.0), "1.500 ms");
+        assert_eq!(fmt_us(2_500_000.0), "2.500 s");
+    }
+
+    #[test]
+    fn rel_err_basic() {
+        assert!((rel_err_pct(104.0, 100.0) - 4.0).abs() < 1e-12);
+        assert!((rel_err_pct(96.0, 100.0) - 4.0).abs() < 1e-12);
+        assert_eq!(rel_err_pct(0.0, 0.0), 0.0);
+        assert!(rel_err_pct(1.0, 0.0).is_infinite());
+    }
+}

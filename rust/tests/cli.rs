@@ -1,0 +1,90 @@
+//! CLI integration: drive the `distsim` binary like a user would.
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_distsim"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = bin().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["simulate", "search", "calibrate", "exp", "models"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn no_args_prints_help_and_fails() {
+    let out = bin().output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn models_lists_the_zoo() {
+    let out = bin().arg("models").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for m in ["bert-large", "gpt2-345m", "t5", "bert-exlarge", "gpt-145b"] {
+        assert!(text.contains(m), "models missing '{m}'");
+    }
+}
+
+#[test]
+fn simulate_reports_prediction_and_error() {
+    let out = bin()
+        .args([
+            "simulate",
+            "--model",
+            "bert-large",
+            "--strategy",
+            "2M2P2D",
+            "--profile-iters",
+            "10",
+            "--gt",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("DistSim predicted batch time"));
+    assert!(text.contains("ground-truth batch time"));
+}
+
+#[test]
+fn simulate_writes_chrome_trace() {
+    let trace = std::env::temp_dir().join("distsim_cli_trace.json");
+    let out = bin()
+        .args([
+            "simulate",
+            "--strategy",
+            "1M2P2D",
+            "--profile-iters",
+            "5",
+            "--trace",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(text.contains("traceEvents"));
+}
+
+#[test]
+fn unknown_command_fails_with_message() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn bad_strategy_rejected() {
+    let out = bin()
+        .args(["simulate", "--strategy", "9X"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}

@@ -1,0 +1,85 @@
+//! PJRT integration: load the AOT artifacts (L2/L1 output) and execute
+//! them from Rust. Requires `make artifacts`; every test self-skips when
+//! the artifacts are absent so `cargo test` stays green pre-build.
+
+use distsim::runtime::{artifacts_dir, Manifest, Runtime};
+
+fn manifest_or_skip() -> Option<Manifest> {
+    let dir = artifacts_dir();
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("skipping: no artifacts at {} (run `make artifacts`)", dir.display());
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_has_all_event_kinds() {
+    let Some(m) = manifest_or_skip() else { return };
+    for kind in ["matmul", "layer_fwd", "layer_bwd", "attention"] {
+        assert!(!m.by_kind(kind).is_empty(), "missing artifacts of kind {kind}");
+    }
+    // every MP degree the paper's strategies use has a layer artifact
+    for mp in [1, 2, 4] {
+        assert!(
+            m.by_name(&format!("layer_h1024_mp{mp}_fwd")).is_some(),
+            "missing h1024 mp{mp} fwd artifact"
+        );
+    }
+}
+
+#[test]
+fn pjrt_loads_and_executes_matmul_artifact() {
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    assert!(rt.platform().to_lowercase().contains("cpu")
+        || rt.platform().to_lowercase().contains("host"));
+    let spec = m.by_name("matmul_128").expect("matmul_128 artifact");
+    let exe = rt.load(spec).expect("compile matmul HLO");
+    let us = exe.run_once_us().expect("execute");
+    assert!(us > 0.0 && us < 5e6, "implausible latency {us} us");
+}
+
+#[test]
+fn pjrt_executes_pallas_layer_fwd_and_bwd() {
+    // The full three-layer path: Pallas kernels (L1) inside the JAX layer
+    // graph (L2), AOT-lowered and executed from Rust (L3).
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    for name in ["layer_h1024_mp2_fwd", "layer_h1024_mp2_bwd"] {
+        let spec = m.by_name(name).unwrap();
+        let exe = rt.load(spec).unwrap();
+        let us = exe.bench_us(2).unwrap();
+        assert!(us > 0.0, "{name}: zero latency");
+    }
+}
+
+#[test]
+fn measured_latency_scales_with_flops() {
+    // matmul_1024 has 512x the FLOPs of matmul_128; wall time must grow
+    // substantially (not necessarily linearly on CPU caches).
+    let Some(m) = manifest_or_skip() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let small = rt.load(m.by_name("matmul_128").unwrap()).unwrap();
+    let big = rt.load(m.by_name("matmul_1024").unwrap()).unwrap();
+    let ts = small.bench_us(3).unwrap();
+    let tb = big.bench_us(3).unwrap();
+    assert!(tb > 5.0 * ts, "1024^3 matmul ({tb} us) should dwarf 128^3 ({ts} us)");
+}
+
+#[test]
+fn calibration_fits_from_artifacts() {
+    let Some(_) = manifest_or_skip() else { return };
+    let mut cal =
+        distsim::profile::calibrate::measure_artifacts(&artifacts_dir(), 2).unwrap();
+    assert!(cal.host_gflops > 0.1, "host gflops {}", cal.host_gflops);
+    let host_tflops = cal.host_gflops / 1e3;
+    distsim::profile::calibrate::fit_scale(
+        &mut cal,
+        &distsim::cost::CostModel::default(),
+        host_tflops,
+    );
+    assert!(cal.scale > 0.0 && cal.scale.is_finite());
+}

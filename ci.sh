@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Repo-local CI: exactly what .github/workflows/ci.yml runs, for offline
+# environments. All dependencies are path-local (rust/vendor/), so
+# --offline needs no registry.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release --offline
+cargo test -q --offline
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --check
+else
+    echo "cargo fmt unavailable; skipping format check"
+fi

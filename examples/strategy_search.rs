@@ -1,34 +1,43 @@
-//! The paper's §6 use-case: auto parallel-strategy search.
+//! The paper's §6 use-case: auto parallel-strategy search, served by the
+//! parallel cache-aware sweep engine.
 //!
 //! ```bash
 //! cargo run --release --offline --example strategy_search
 //! ```
 //!
-//! Grid-searches all 15 hybrid deployments of BERT-exLarge (48 layers) on
+//! Sweeps all 15 hybrid deployments of BERT-exLarge (48 layers) on
 //! 4 nodes x 4 A10 GPUs at global batch 16, using DistSim as the
-//! throughput oracle, then verifies the top/bottom picks on the
-//! ground-truth engine (the paper's Table 2 protocol).
+//! throughput oracle — profiled event costs shared across candidates
+//! through the sweep's `ProfileCache`, candidates evaluated across worker
+//! threads — then verifies the top/bottom picks on the ground-truth
+//! engine (the paper's Table 2 protocol).
 
 use distsim::cluster::ClusterSpec;
 use distsim::cost::CostModel;
 use distsim::model::zoo;
-use distsim::search::{grid_search, measure_actual};
+use distsim::search::{measure_actual_sweep, SearchEngine, SweepConfig};
 
 fn main() -> anyhow::Result<()> {
     let model = zoo::bert_ex_large();
     let cluster = ClusterSpec::a10_cluster(4, 4);
-    let global_batch = 16;
-
+    let cfg = SweepConfig {
+        global_batch: 16,
+        jitter_sigma: 0.02,
+        profile_iters: 50,
+        ..SweepConfig::default()
+    };
     println!("== strategy search: {} on 16 x {} ==\n", model.name, cluster.device.name);
-    let report = grid_search(&model, &cluster, &CostModel::default(), global_batch, 0.02, 50);
+    let cost = CostModel::default();
+    let engine = SearchEngine::new(&model, &cluster, &cost, cfg);
+    let report = engine.sweep();
 
     let mut sorted = report.candidates.clone();
-    sorted.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    sorted.sort_by(|a, b| b.throughput.total_cmp(&a.throughput));
     for c in &sorted {
         println!(
             "  {:10} {}",
             c.strategy.notation(),
-            if c.reachable {
+            if c.evaluated() {
                 format!("{:7.3} it/s", c.throughput)
             } else {
                 "   unreachable (OOM)".to_string()
@@ -36,27 +45,39 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    let best = report.best().expect("a reachable candidate");
+    let worst = report.worst().expect("a reachable candidate");
     println!(
         "\nbest {} -> {:.2}x over worst {} (paper: 7.37x, winner pipeline-heavy, loser 16-way MP)",
-        report.best().strategy,
-        report.speedup(),
-        report.worst().strategy
+        best.strategy,
+        report.speedup().unwrap_or(f64::NAN),
+        worst.strategy
     );
     println!(
-        "search cost: {:.2} gpu-s profiling + {:.3} s simulation",
-        report.profile.gpu_seconds, report.simulate_seconds
+        "search cost: {:.2} gpu-s profiling over {} unique events + {:.3} s wall on {} threads",
+        report.profile.gpu_seconds,
+        report.profile.events_profiled,
+        report.timing.total_seconds,
+        report.threads_used
+    );
+    println!(
+        "profile cache: {} hits / {} misses ({:.0}% of lookups deduped)",
+        report.cache.hits,
+        report.cache.misses,
+        report.cache.hit_rate() * 100.0
     );
 
-    // Verify like the paper's Table 2: run best and worst "for real".
+    // Verify like the paper's Table 2: run best and worst "for real",
+    // with the exact micro-batching the sweep simulated.
     println!("\nverifying on the ground-truth engine:");
-    for cand in [report.best(), report.worst()] {
-        let actual = measure_actual("bert-exlarge", cand, &cluster, global_batch, 20)?;
+    for c in [best, worst] {
+        let actual = measure_actual_sweep("bert-exlarge", c, &cluster, 20)?;
         println!(
             "  {:10} DistSim {:.3} it/s   actual {:.3} it/s   ({:+.1}%)",
-            cand.strategy.notation(),
-            cand.throughput,
+            c.strategy.notation(),
+            c.throughput,
             actual,
-            (cand.throughput - actual) / actual * 100.0
+            (c.throughput - actual) / actual * 100.0
         );
     }
     Ok(())

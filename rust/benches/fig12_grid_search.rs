@@ -1,32 +1,58 @@
-//! Bench: Fig. 12 / Table 2 / Table 3 regeneration + search timing.
+//! Bench: Fig. 12 / Table 2 / Table 3 regeneration + sweep-engine timing.
 //!
-//! Times the full §6 grid search (15 candidates, profile + simulate) and
-//! prints the Fig.-12 throughput series plus the Table-3 cost accounting.
-//! The paper's reference: 0.14 s simulate time for the whole search.
+//! Runs the full §6 grid sweep (15 candidates, profile + simulate) two
+//! ways and reports the wall-clock ratio:
+//!
+//! * **serial seed path** — one worker, no profile cache: every candidate
+//!   re-profiles its own event set (the historical free-function search);
+//! * **engine path** — all available workers sharing one `ProfileCache`.
+//!
+//! Values are asserted bit-identical between the two paths (the cache
+//! returns exactly what a fresh measurement would), so the ratio is pure
+//! infrastructure win. The paper's reference: 0.14 s simulate time for
+//! the whole search.
 
 use std::time::Instant;
 
 use distsim::cluster::ClusterSpec;
 use distsim::cost::CostModel;
 use distsim::model::zoo;
-use distsim::search::grid_search;
+use distsim::search::{SearchEngine, SweepConfig, SweepReport};
+
+fn sweep(model: &distsim::model::ModelSpec, cluster: &ClusterSpec, cfg: SweepConfig) -> (SweepReport, f64) {
+    let cost = CostModel::default();
+    let engine = SearchEngine::new(model, cluster, &cost, cfg);
+    let t0 = Instant::now();
+    let report = engine.sweep();
+    (report, t0.elapsed().as_secs_f64())
+}
 
 fn main() {
     let model = zoo::bert_ex_large();
     let cluster = ClusterSpec::a10_cluster(4, 4);
+    let base = SweepConfig {
+        global_batch: 16,
+        jitter_sigma: 0.02,
+        profile_iters: 50,
+        ..SweepConfig::default()
+    };
 
-    let t0 = Instant::now();
-    let report = grid_search(&model, &cluster, &CostModel::default(), 16, 0.02, 50);
-    let wall = t0.elapsed().as_secs_f64();
+    let serial_cfg = SweepConfig {
+        threads: 1,
+        use_cache: false,
+        ..base.clone()
+    };
+    let (serial, serial_wall) = sweep(&model, &cluster, serial_cfg);
+    let (engine, engine_wall) = sweep(&model, &cluster, base);
 
     println!("# bench fig12: BERT-exLarge grid search on 16 A10\n");
-    let mut sorted = report.candidates.clone();
-    sorted.sort_by(|a, b| b.throughput.partial_cmp(&a.throughput).unwrap());
+    let mut sorted = engine.candidates.clone();
+    sorted.sort_by(|a, b| b.throughput.total_cmp(&a.throughput));
     for c in &sorted {
         println!(
             "{:10} {:>12}",
             c.strategy.notation(),
-            if c.reachable {
+            if c.evaluated() {
                 format!("{:.3} it/s", c.throughput)
             } else {
                 "unreachable".into()
@@ -35,21 +61,48 @@ fn main() {
     }
     println!(
         "\nspeedup best/worst: {:.2}x  (paper: 7.37x; winner pipeline-heavy, loser 16M)",
-        report.speedup()
+        engine.speedup().unwrap_or(f64::NAN)
+    );
+
+    // the two paths must agree bit-for-bit on every candidate — enforced,
+    // not just printed: the wall-clock ratio is meaningless otherwise
+    let identical = serial
+        .candidates
+        .iter()
+        .zip(&engine.candidates)
+        .all(|(a, b)| a == b);
+    assert!(
+        identical && serial.candidates.len() == engine.candidates.len(),
+        "serial and engine sweeps diverged"
+    );
+    println!("\nserial seed path:  {serial_wall:.3} s wall (1 thread, no cache)");
+    println!(
+        "engine path:       {engine_wall:.3} s wall ({} threads, cache {} hits / {} misses)",
+        engine.threads_used, engine.cache.hits, engine.cache.misses
     );
     println!(
-        "search wall time {:.3} s (simulate {:.3} s, paper: 0.14 s); profiling {:.2} gpu-s",
-        wall, report.simulate_seconds, report.profile.gpu_seconds
+        "wall-clock improvement: {:.2}x   values identical: {identical}",
+        serial_wall / engine_wall
+    );
+    println!(
+        "profiling cost: serial {:.2} gpu-s vs deduped {:.2} gpu-s ({} unique events)",
+        serial.profile.gpu_seconds, engine.profile.gpu_seconds, engine.profile.events_profiled
     );
 
     // per-candidate simulate-only timing (hot path for §Perf)
     let t0 = Instant::now();
     let n = 10;
     for _ in 0..n {
-        let _ = grid_search(&model, &cluster, &CostModel::default(), 16, 0.0, 1);
+        let cfg = SweepConfig {
+            global_batch: 16,
+            jitter_sigma: 0.0,
+            profile_iters: 1,
+            ..SweepConfig::default()
+        };
+        let _ = sweep(&model, &cluster, cfg);
     }
     println!(
-        "minimal-profile search: {:.1} ms per full 15-candidate sweep",
+        "\nminimal-profile sweep: {:.1} ms per full 15-candidate sweep",
         t0.elapsed().as_secs_f64() * 1e3 / n as f64
     );
 }

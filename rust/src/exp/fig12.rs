@@ -33,10 +33,14 @@ pub fn run(profile_iters: usize, verify_iters: usize) -> anyhow::Result<Fig12Res
     );
 
     let mut table2 = Vec::new();
+    let pick = |c: Option<&crate::search::Candidate>, what: &str| {
+        c.cloned()
+            .ok_or_else(|| anyhow::anyhow!("grid search found no {what} candidate"))
+    };
     let picks = [
-        report.best().clone(),
-        report.second_best().clone(),
-        report.worst().clone(),
+        pick(report.best(), "best")?,
+        pick(report.second_best(), "second-best")?,
+        pick(report.worst(), "worst")?,
     ];
     for cand in &picks {
         let actual = measure_actual("bert-exlarge", cand, &cluster, GLOBAL_BATCH, verify_iters)?;
@@ -44,7 +48,9 @@ pub fn run(profile_iters: usize, verify_iters: usize) -> anyhow::Result<Fig12Res
     }
     let speedup_actual = table2[0].2 / table2[2].2;
     Ok(Fig12Result {
-        speedup_distsim: report.speedup(),
+        speedup_distsim: report
+            .speedup()
+            .ok_or_else(|| anyhow::anyhow!("speedup undefined: no reachable candidates"))?,
         report,
         table2,
         speedup_actual,

@@ -42,5 +42,4 @@ pub mod strategy;
 pub mod timeline;
 pub mod util;
 
-#[cfg(test)]
 pub mod testutil;

@@ -97,7 +97,8 @@ USAGE:
                     [--micro-batches N] [--micro-batch-size B]
                     [--gt] [--trace out.json] [--trace-actual out.json]
   distsim search    [--model bert-exlarge] [--global-batch 16] [--nodes 4]
-                    [--gpus-per-node 4] [--device a10|a40|a100]
+                    [--gpus-per-node 4] [--device a10|a40|a100] [--threads N]
+                    [--wide] [--mbs-axis] [--prune] [--no-cache]
   distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
   distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
                     ablate-allreduce|ablate-noise|ablate-hierarchy|ablate-schedule|all [--fast]
@@ -175,37 +176,65 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut dflags = flags.clone();
     dflags.entry("device".to_string()).or_insert("a10".to_string());
     let cluster = cluster_from_flags(&dflags)?;
-    let global_batch = usize_flag(flags, "global-batch", 16);
-    let report = distsim::search::grid_search(
-        &model,
-        &cluster,
-        &distsim::cost::CostModel::default(),
-        global_batch,
-        0.02,
-        usize_flag(flags, "profile-iters", 100),
-    );
-    for c in &report.candidates {
+    let cfg = distsim::search::SweepConfig {
+        global_batch: usize_flag(flags, "global-batch", 16),
+        jitter_sigma: 0.02,
+        profile_iters: usize_flag(flags, "profile-iters", 100),
+        threads: usize_flag(flags, "threads", 0),
+        widened: flags.contains_key("wide"),
+        micro_batch_axis: flags.contains_key("mbs-axis"),
+        prune: flags.contains_key("prune"),
+        use_cache: !flags.contains_key("no-cache"),
+        ..distsim::search::SweepConfig::default()
+    };
+    let cost = distsim::cost::CostModel::default();
+    let engine = distsim::search::SearchEngine::new(&model, &cluster, &cost, cfg);
+    let report = engine.sweep();
+
+    for (c, ms) in report.candidates.iter().zip(&report.timing.per_candidate_ms) {
+        let status = if c.pruned {
+            format!("pruned (bound {:.3} it/s)", c.bound_throughput)
+        } else if !c.reachable {
+            "unreachable".to_string()
+        } else {
+            format!("{:.3} it/s", c.throughput)
+        };
         println!(
-            "{:10} {:>10}",
+            "{:10} mbs {:>2} x{:<3} {:>26}   [{:7.1} ms]",
             c.strategy.notation(),
-            if c.reachable {
-                format!("{:.3} it/s", c.throughput)
-            } else {
-                "unreachable".to_string()
-            }
+            c.micro_batch_size,
+            c.micro_batches,
+            status,
+            ms
         );
     }
+    let (best, worst) = (report.best(), report.worst());
+    match (best, worst) {
+        (Some(b), Some(w)) => println!(
+            "\nbest {} ({:.3} it/s), worst {} ({:.3} it/s): {:.2}x speedup",
+            b.strategy,
+            b.throughput,
+            w.strategy,
+            w.throughput,
+            report.speedup().unwrap_or(f64::NAN)
+        ),
+        _ => println!("\nno reachable candidate for this model/cluster"),
+    }
     println!(
-        "\nbest {} ({:.3} it/s), worst {} ({:.3} it/s): {:.2}x speedup",
-        report.best().strategy,
-        report.best().throughput,
-        report.worst().strategy,
-        report.worst().throughput,
-        report.speedup()
+        "{} candidates: {} evaluated, {} pruned, on {} threads in {:.3} s",
+        report.candidates.len(),
+        report.evaluated_count(),
+        report.pruned_count(),
+        report.threads_used,
+        report.timing.total_seconds
     );
     println!(
-        "profiling cost {:.2} gpu-s, simulation {:.3} s",
-        report.profile.gpu_seconds, report.simulate_seconds
+        "profiling: {:.2} gpu-s over {} unique events; cache {} hits / {} misses ({:.0}% hit rate)",
+        report.profile.gpu_seconds,
+        report.profile.events_profiled,
+        report.cache.hits,
+        report.cache.misses,
+        report.cache.hit_rate() * 100.0
     );
     Ok(())
 }

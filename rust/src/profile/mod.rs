@@ -28,7 +28,7 @@ use crate::util::stats;
 pub const MAX_PROFILE_RING: usize = 8;
 
 /// Accounting of what profiling cost (Table 3).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ProfileReport {
     /// Total GPU-time consumed: sum over events of devices x elapsed x iters.
     pub gpu_seconds: f64,
@@ -36,6 +36,28 @@ pub struct ProfileReport {
     pub events_profiled: usize,
     /// Events that needed ring-law extrapolation (group > cap).
     pub extrapolated: usize,
+    /// Event lookups answered from a shared [`crate::search::ProfileCache`]
+    /// instead of re-profiling (0 on uncached paths) — the measured form of
+    /// the paper's Table-3 dedup saving.
+    pub cache_hits: usize,
+}
+
+/// The measured cost of one event, as produced by [`profile_single`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProfiledEvent {
+    /// Mean elapsed time over the profiling iterations, us.
+    pub mean_us: f64,
+    /// Devices the profiling micro-program occupied.
+    pub devices: usize,
+    /// Whether the ring law extrapolated beyond the 2-node slice.
+    pub extrapolated: bool,
+}
+
+impl ProfiledEvent {
+    /// GPU-seconds this measurement burned (Table-3 currency).
+    pub fn gpu_seconds(&self, iters: usize) -> f64 {
+        self.mean_us * 1e-6 * iters as f64 * self.devices as f64
+    }
 }
 
 /// The profiling testbed: a 2-node slice of the target cluster.
@@ -69,50 +91,73 @@ pub fn profile_events(
     iters: usize,
     seed: u64,
 ) -> ProfileReport {
-    let slice = profiling_slice(cluster);
     let mut report = ProfileReport::default();
-
     for id in db.unprofiled() {
-        let event = db.get(id).clone();
-        let (mean_us, devices, extrapolated) = match &event {
-            Event::Comp(_) => {
-                let t = profile_comp(id, db, &slice, cost, jitter_sigma, iters, seed);
-                (t, 1, false)
-            }
-            Event::Comm(CommEvent::P2p { link, .. }) => {
-                let t = profile_p2p(id, db, &slice, cost, jitter_sigma, iters, seed, *link);
-                (t, 2, false)
-            }
-            Event::Comm(CommEvent::AllReduce { group, link, bytes }) => {
-                let profiled_n = (*group).min(ring_cap(&slice, *link));
-                let t = profile_allreduce(
-                    id, db, &slice, cost, jitter_sigma, iters, seed, *link, profiled_n,
-                );
-                let t = if profiled_n < *group {
-                    // §4.2 extrapolation beyond the 2-node slice: scale the
-                    // measurement by the ring-law ratio between the target
-                    // group (synthetic Megatron placement on the full
-                    // cluster) and the profiled group — the analytic
-                    // relation the paper derives from 2(N-1)P/N.
-                    let target = comm::synthetic_group(cluster, *group, *link);
-                    let prof_members = profile_members(&slice, *link, profiled_n);
-                    let law_target =
-                        comm::hierarchical_allreduce_time_us(cluster, &target, *bytes);
-                    let law_prof =
-                        comm::hierarchical_allreduce_time_us(&slice, &prof_members, *bytes);
-                    t * law_target / law_prof
-                } else {
-                    t
-                };
-                (t, profiled_n, profiled_n < *group)
-            }
-        };
-        db.set_elapsed(id, mean_us);
-        report.gpu_seconds += mean_us * 1e-6 * iters as f64 * devices as f64;
+        let p = profile_single(db, id, cluster, cost, jitter_sigma, iters, seed);
+        db.set_elapsed(id, p.mean_us);
+        report.gpu_seconds += p.gpu_seconds(iters);
         report.events_profiled += 1;
-        report.extrapolated += usize::from(extrapolated);
+        report.extrapolated += usize::from(p.extrapolated);
     }
     report
+}
+
+/// Profile one event in isolation on the 2-node slice.
+///
+/// The measurement depends only on the event *descriptor* (shape/bytes/
+/// group/link), the cluster, the cost model and the (jitter, iters, seed)
+/// protocol — never on which candidate interned it or in what order. That
+/// independence is what lets [`crate::search::ProfileCache`] share results
+/// across an entire strategy sweep while staying bit-deterministic.
+pub fn profile_single(
+    db: &EventDb,
+    id: EventId,
+    cluster: &ClusterSpec,
+    cost: &CostModel,
+    jitter_sigma: f64,
+    iters: usize,
+    seed: u64,
+) -> ProfiledEvent {
+    let slice = profiling_slice(cluster);
+    let event = db.get(id).clone();
+    let (mean_us, devices, extrapolated) = match &event {
+        Event::Comp(_) => {
+            let t = profile_comp(id, db, &slice, cost, jitter_sigma, iters, seed);
+            (t, 1, false)
+        }
+        Event::Comm(CommEvent::P2p { link, .. }) => {
+            let t = profile_p2p(id, db, &slice, cost, jitter_sigma, iters, seed, *link);
+            (t, 2, false)
+        }
+        Event::Comm(CommEvent::AllReduce { group, link, bytes }) => {
+            let profiled_n = (*group).min(ring_cap(&slice, *link));
+            let t = profile_allreduce(
+                id, db, &slice, cost, jitter_sigma, iters, seed, *link, profiled_n,
+            );
+            let t = if profiled_n < *group {
+                // §4.2 extrapolation beyond the 2-node slice: scale the
+                // measurement by the ring-law ratio between the target
+                // group (synthetic Megatron placement on the full
+                // cluster) and the profiled group — the analytic
+                // relation the paper derives from 2(N-1)P/N.
+                let target = comm::synthetic_group(cluster, *group, *link);
+                let prof_members = profile_members(&slice, *link, profiled_n);
+                let law_target =
+                    comm::hierarchical_allreduce_time_us(cluster, &target, *bytes);
+                let law_prof =
+                    comm::hierarchical_allreduce_time_us(&slice, &prof_members, *bytes);
+                t * law_target / law_prof
+            } else {
+                t
+            };
+            (t, profiled_n, profiled_n < *group)
+        }
+    };
+    ProfiledEvent {
+        mean_us,
+        devices,
+        extrapolated,
+    }
 }
 
 /// Where the profiler physically places an n-rank ring on the slice.

@@ -7,13 +7,28 @@
 //!
 //! Everything here degrades gracefully: if `artifacts/` is absent the
 //! simulator falls back to the analytic device model, so `cargo test`
-//! works without a prior `make artifacts`.
+//! works without a prior `make artifacts`. The PJRT client itself needs
+//! the `xla` bindings, which the offline vendor set does not carry, so the
+//! executing backend is gated behind the `pjrt` cargo feature: without it,
+//! [`Runtime::cpu`] returns an error (callers like `profile::calibrate`
+//! and the `calibrate` CLI surface it cleanly) while manifest parsing and
+//! the whole simulator keep working.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
 use crate::config::Json;
+
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{LoadedExecutable, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{LoadedExecutable, Runtime};
 
 /// One entry of `artifacts/manifest.json`.
 #[derive(Debug, Clone)]
@@ -83,90 +98,6 @@ impl Manifest {
 
     pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
         self.artifacts.iter().find(|a| a.name == name)
-    }
-}
-
-/// A compiled, executable HLO module on the PJRT CPU client.
-pub struct LoadedExecutable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-    args: Vec<xla::Literal>,
-}
-
-/// PJRT-CPU runtime holding the client and loaded executables.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile one artifact (HLO text → executable) and pre-build zero
-    /// literals for its arguments.
-    pub fn load(&self, spec: &ArtifactSpec) -> Result<LoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.path
-                .to_str()
-                .context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("loading {}: {e:?}", spec.path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", spec.name))?;
-        let args = spec
-            .arg_shapes
-            .iter()
-            .map(|dims| {
-                let n: usize = dims.iter().product();
-                // small pseudo-random fill (timing is data-independent for
-                // dense kernels; non-zero avoids denormal weirdness)
-                let data: Vec<f32> = (0..n).map(|i| ((i % 13) as f32 - 6.0) * 0.01).collect();
-                let lit = xla::Literal::vec1(&data);
-                let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-                lit.reshape(&dims_i64)
-                    .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
-            })
-            .collect::<Result<Vec<_>>>()?;
-        Ok(LoadedExecutable {
-            spec: spec.clone(),
-            exe,
-            args,
-        })
-    }
-}
-
-impl LoadedExecutable {
-    /// Execute once, synchronously, returning elapsed wall time (us).
-    pub fn run_once_us(&self) -> Result<f64> {
-        let t0 = std::time::Instant::now();
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&self.args)
-            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.spec.name))?;
-        // force completion
-        let _lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("sync: {e:?}"))?;
-        Ok(t0.elapsed().as_secs_f64() * 1e6)
-    }
-
-    /// Median-of-`iters` timing after one warmup run.
-    pub fn bench_us(&self, iters: usize) -> Result<f64> {
-        self.run_once_us()?; // warmup (compile caches, allocator)
-        let mut samples = Vec::with_capacity(iters);
-        for _ in 0..iters {
-            samples.push(self.run_once_us()?);
-        }
-        Ok(crate::util::stats::median(&samples))
     }
 }
 

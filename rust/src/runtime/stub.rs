@@ -1,0 +1,60 @@
+//! Offline stand-in for the PJRT backend (the default build): the `xla`
+//! bindings are unavailable without network access, so creating the
+//! runtime reports a clear error instead of failing to link. Callers that
+//! degrade gracefully (`profile::calibrate`, the integration tests'
+//! artifact self-skip) keep working; only actually *executing* an HLO
+//! artifact requires `--features pjrt` plus the `xla` dependency.
+
+use anyhow::Result;
+
+use super::ArtifactSpec;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: built without the `pjrt` feature (needs the `xla` bindings)";
+
+/// Placeholder for the compiled-executable handle.
+pub struct LoadedExecutable {
+    pub spec: ArtifactSpec,
+}
+
+/// Placeholder runtime; [`Runtime::cpu`] always errors.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<LoadedExecutable> {
+        let _ = spec;
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+impl LoadedExecutable {
+    pub fn run_once_us(&self) -> Result<f64> {
+        anyhow::bail!(UNAVAILABLE)
+    }
+
+    pub fn bench_us(&self, iters: usize) -> Result<f64> {
+        let _ = iters;
+        anyhow::bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_errors_cleanly_without_pjrt() {
+        let err = Runtime::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

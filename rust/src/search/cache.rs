@@ -1,0 +1,286 @@
+//! Shared, thread-safe profile cache for strategy sweeps.
+//!
+//! **Cache key.** An interned [`Event`] descriptor *is* the key. For
+//! computation events the descriptor name encodes the model layer kind,
+//! the tensor-MP shard shape (`.../mp{mp}/...`) and the micro-batch size
+//! (`.../b{mbs}s{seq}`); for communication events the payload bytes, group
+//! size and intra/inter link class are the identity (paper §4.1). Two
+//! sweep candidates that shard a layer the same way therefore hash to the
+//! same key and the second one reuses the first's measured cost instead of
+//! re-running the profiling micro-program — the cross-candidate
+//! generalization of the paper's §3.2 within-candidate dedup, and the
+//! saving Table 3 accounts in GPU-seconds.
+//!
+//! **Determinism.** [`profile_single`] depends only on the descriptor and
+//! the (jitter, iters, seed) protocol, never on arrival order, so a cache
+//! hit returns bit-identical values to a fresh measurement. Each entry is
+//! an `Arc<OnceLock<..>>`: when two workers race on the same un-profiled
+//! event, exactly one runs the measurement and the other blocks on the
+//! cell, which keeps the *unique-event* GPU-second accounting exact (no
+//! double-billing) regardless of thread count.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::cluster::ClusterSpec;
+use crate::cost::CostModel;
+use crate::events::{Event, EventDb};
+use crate::profile::{profile_single, ProfileReport, ProfiledEvent};
+
+/// Shared cache of profiled event costs.
+///
+/// Entries are keyed by event descriptor only, so a cache is only valid
+/// for **one** profiling protocol (jitter, iters, seed). The first lookup
+/// pins the protocol; later lookups under a different one panic rather
+/// than silently returning measurements taken under other settings.
+#[derive(Debug, Default)]
+pub struct ProfileCache {
+    entries: Mutex<HashMap<Event, Arc<OnceLock<ProfiledEvent>>>>,
+    /// (jitter_sigma bits, iters, seed) of the first lookup.
+    protocol: OnceLock<(u64, usize, u64)>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+/// Deterministic summary of cache activity.
+///
+/// `misses` equals the number of unique events measured (each `OnceLock`
+/// initializes exactly once) and `hits = lookups - misses`; both are
+/// independent of thread interleaving, as is `gpu_seconds` (summed in
+/// sorted key order).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: usize,
+    pub misses: usize,
+    pub unique_events: usize,
+    /// GPU-seconds burned measuring the unique events (each once).
+    pub gpu_seconds: f64,
+    /// Unique events that needed ring-law extrapolation.
+    pub extrapolated: usize,
+}
+
+impl CacheStats {
+    /// Lookups served overall (hits + misses).
+    pub fn lookups(&self) -> usize {
+        self.hits + self.misses
+    }
+
+    /// Fraction of lookups served from cache, in [0, 1].
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+impl ProfileCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up the cost of `db`'s event `id`, measuring it on a miss.
+    ///
+    /// Concurrent misses on the same event serialize on the entry's
+    /// `OnceLock`; only the winner runs [`profile_single`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_profile(
+        &self,
+        db: &EventDb,
+        id: crate::events::EventId,
+        cluster: &ClusterSpec,
+        cost: &CostModel,
+        jitter_sigma: f64,
+        iters: usize,
+        seed: u64,
+    ) -> ProfiledEvent {
+        let proto = (jitter_sigma.to_bits(), iters, seed);
+        let pinned = *self.protocol.get_or_init(|| proto);
+        assert_eq!(
+            pinned, proto,
+            "ProfileCache reused under a different profiling protocol \
+             (jitter/iters/seed); use one cache per protocol"
+        );
+        let key = db.get(id).clone();
+        let cell = {
+            let mut map = self.entries.lock().unwrap();
+            map.entry(key).or_default().clone()
+        };
+        let mut measured = false;
+        let out = *cell.get_or_init(|| {
+            measured = true;
+            profile_single(db, id, cluster, cost, jitter_sigma, iters, seed)
+        });
+        if measured {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Fill in every unprofiled event of `db` through the cache, returning
+    /// how many lookups this candidate resolved from cache vs fresh.
+    #[allow(clippy::too_many_arguments)]
+    pub fn profile_into(
+        &self,
+        db: &mut EventDb,
+        cluster: &ClusterSpec,
+        cost: &CostModel,
+        jitter_sigma: f64,
+        iters: usize,
+        seed: u64,
+    ) -> usize {
+        let ids = db.unprofiled();
+        let n = ids.len();
+        for id in ids {
+            let p = self.get_or_profile(db, id, cluster, cost, jitter_sigma, iters, seed);
+            db.set_elapsed(id, p.mean_us);
+        }
+        n
+    }
+
+    /// Snapshot of the cache's deterministic totals. `iters` must match
+    /// the profiling protocol used to fill the cache (GPU-second scaling).
+    pub fn stats(&self, iters: usize) -> CacheStats {
+        let map = self.entries.lock().unwrap();
+        // sort by event name so the f64 sum is bit-stable across runs
+        // (HashMap iteration order is not)
+        let mut profiled: Vec<(String, ProfiledEvent)> = map
+            .iter()
+            .filter_map(|(ev, cell)| cell.get().map(|p| (ev.name(), *p)))
+            .collect();
+        profiled.sort_by(|a, b| a.0.cmp(&b.0));
+        let mut stats = CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            unique_events: profiled.len(),
+            ..CacheStats::default()
+        };
+        for (_, p) in &profiled {
+            stats.gpu_seconds += p.gpu_seconds(iters);
+            stats.extrapolated += usize::from(p.extrapolated);
+        }
+        stats
+    }
+
+    /// The cache's totals in legacy [`ProfileReport`] form (what
+    /// `SearchReport::profile` carries).
+    pub fn report(&self, iters: usize) -> ProfileReport {
+        let s = self.stats(iters);
+        ProfileReport {
+            gpu_seconds: s.gpu_seconds,
+            events_profiled: s.unique_events,
+            extrapolated: s.extrapolated,
+            cache_hits: s.hits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::OpClass;
+    use crate::events::CompEvent;
+
+    fn comp(name: &str, flops: u64) -> Event {
+        Event::Comp(CompEvent {
+            name: name.into(),
+            class: OpClass::Matmul,
+            flops,
+            bytes: flops / 64,
+        })
+    }
+
+    #[test]
+    fn second_lookup_hits_and_matches_fresh_measurement() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+
+        let mut db1 = EventDb::new();
+        let a1 = db1.intern(comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 30));
+        let fresh = profile_single(&db1, a1, &cluster, &cost, 0.0, 2, 7);
+        let first = cache.get_or_profile(&db1, a1, &cluster, &cost, 0.0, 2, 7);
+        assert_eq!(first.mean_us, fresh.mean_us);
+
+        // a different db interning the same descriptor must hit
+        let mut db2 = EventDb::new();
+        let a2 = db2.intern(comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 30));
+        let second = cache.get_or_profile(&db2, a2, &cluster, &cost, 0.0, 2, 7);
+        assert_eq!(second.mean_us, first.mean_us);
+
+        let s = cache.stats(2);
+        assert_eq!((s.hits, s.misses, s.unique_events), (1, 1, 1));
+        assert!(s.gpu_seconds > 0.0);
+    }
+
+    #[test]
+    fn distinct_shard_shapes_do_not_collide() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("xfmr_fwd/h1024/mp1/b4s128", 1 << 30));
+        let b = db.intern(comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 29));
+        cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        cache.get_or_profile(&db, b, &cluster, &cost, 0.0, 1, 7);
+        let s = cache.stats(1);
+        assert_eq!((s.hits, s.misses, s.unique_events), (0, 2, 2));
+    }
+
+    #[test]
+    fn profile_into_fills_db_and_counts_lookups() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("a", 1 << 28));
+        let b = db.intern(comp("b", 1 << 29));
+        let n = cache.profile_into(&mut db, &cluster, &cost, 0.0, 1, 7);
+        assert_eq!(n, 2);
+        assert!(db.is_profiled(a) && db.is_profiled(b));
+        assert_eq!(cache.profile_into(&mut db, &cluster, &cost, 0.0, 1, 7), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different profiling protocol")]
+    fn protocol_mismatch_is_rejected() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("a", 1 << 28));
+        cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 2, 7); // different iters
+    }
+
+    #[test]
+    fn concurrent_lookups_measure_each_event_once() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        for i in 0..6 {
+            db.intern(comp(&format!("e{i}"), 1 << (20 + i)));
+        }
+        let db = &db;
+        let cache = &cache;
+        let cluster = &cluster;
+        let cost = &cost;
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(move || {
+                    for id in db.ids() {
+                        cache.get_or_profile(db, id, cluster, cost, 0.0, 1, 7);
+                    }
+                });
+            }
+        });
+        let stats = cache.stats(1);
+        assert_eq!(stats.misses, 6, "each unique event measured exactly once");
+        assert_eq!(stats.hits, 4 * 6 - 6);
+    }
+}

@@ -1,0 +1,623 @@
+//! The parallel, cache-aware strategy-sweep engine.
+//!
+//! Replaces the one-candidate-at-a-time free-function search: a
+//! [`SearchEngine`] owns a [`ProfileCache`](super::ProfileCache) shared by
+//! every candidate, evaluates candidates on a deterministic work queue
+//! across `std::thread::scope` workers, optionally widens the strategy
+//! space beyond the paper's power-of-two grid, and can prune candidates
+//! that an analytical lower bound proves worse than an incumbent.
+//!
+//! **Determinism contract.** The [`SweepReport`]'s `candidates`, `profile`
+//! and `cache` fields are bit-identical for any worker count: candidates
+//! are indexed up front and results land by index; every profiled cost
+//! depends only on the event descriptor + profiling protocol; cache
+//! totals are summed in sorted-key order. Only `timing` carries wall-clock
+//! (inherently non-deterministic) data.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::baseline::analytical::analytical_batch_time_us;
+use crate::cluster::ClusterSpec;
+use crate::cost::CostModel;
+use crate::distsim::DistSim;
+use crate::events::EventDb;
+use crate::model::ModelSpec;
+use crate::partition::partition;
+use crate::profile::{profile_events, ProfileReport};
+use crate::schedule;
+use crate::strategy::Strategy;
+
+use super::cache::{CacheStats, ProfileCache};
+use super::{grid, widened_grid};
+
+/// Sweep parameters. `Default` mirrors the seed's protocol (power-of-two
+/// grid, DistSim profiling seed 7777, cache on, no pruning).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepConfig {
+    /// Global batch size (sequences) shared by every candidate.
+    pub global_batch: usize,
+    /// Multiplicative jitter sigma used while profiling events.
+    pub jitter_sigma: f64,
+    /// Iterations averaged per profiled event (paper: 100).
+    pub profile_iters: usize,
+    /// Profiling RNG seed (independent of the ground truth's).
+    pub profile_seed: u64,
+    /// Worker threads; 0 = `std::thread::available_parallelism()`.
+    pub threads: usize,
+    /// Widen beyond powers of two: every (mp, pp, dp) factoring of the
+    /// device count (non-trivial only when the device count itself has
+    /// non-power-of-two divisors).
+    pub widened: bool,
+    /// Explore the micro-batch-size axis for pipelined candidates instead
+    /// of fixing one sequence per micro-batch.
+    pub micro_batch_axis: bool,
+    /// Skip candidates whose analytical throughput upper bound cannot beat
+    /// the incumbent (see [`SearchEngine::sweep`] for the bound).
+    pub prune: bool,
+    /// Safety margin on the pruning bound: a candidate is pruned only if
+    /// `bound * (1 + prune_margin) < incumbent`. Guards against the
+    /// analytical model's residual error; 0.10 by default.
+    pub prune_margin: f64,
+    /// Share profiled event costs across candidates. Off reproduces the
+    /// seed's re-profile-per-candidate behaviour (the serial baseline the
+    /// fig12 bench compares against).
+    pub use_cache: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            global_batch: 16,
+            jitter_sigma: 0.0,
+            profile_iters: 1,
+            profile_seed: 7777,
+            threads: 0,
+            widened: false,
+            micro_batch_axis: false,
+            prune: false,
+            prune_margin: 0.10,
+            use_cache: true,
+        }
+    }
+}
+
+/// One point of the sweep space: a strategy plus its micro-batching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CandidateSpec {
+    pub strategy: Strategy,
+    /// Sequences per micro-batch (0 when dp does not divide the batch —
+    /// evaluated as unreachable).
+    pub micro_batch_size: usize,
+    /// Micro-batches per replica per iteration.
+    pub micro_batches: usize,
+}
+
+impl CandidateSpec {
+    /// The seed protocol's micro-batching for a strategy: one sequence per
+    /// micro-batch when pipelining, the whole replica batch otherwise.
+    pub fn default_for(strategy: Strategy, global_batch: usize) -> CandidateSpec {
+        if global_batch % strategy.dp != 0 {
+            return CandidateSpec {
+                strategy,
+                micro_batch_size: 0,
+                micro_batches: 0,
+            };
+        }
+        let per_replica = global_batch / strategy.dp;
+        let (mbs, m) = if strategy.pp > 1 {
+            (1, per_replica)
+        } else {
+            (per_replica, 1)
+        };
+        CandidateSpec {
+            strategy,
+            micro_batch_size: mbs,
+            micro_batches: m,
+        }
+    }
+}
+
+/// One evaluated (or pruned) sweep point. Deterministic: no wall-clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCandidate {
+    pub strategy: Strategy,
+    pub micro_batch_size: usize,
+    pub micro_batches: usize,
+    /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
+    pub throughput: f64,
+    /// Deployable: valid strategy and the shard fits device memory.
+    pub reachable: bool,
+    /// Skipped by the analytical-bound pruning pass (never simulated).
+    pub pruned: bool,
+    /// Analytical throughput upper bound, it/s (0 when not computed or
+    /// not deployable).
+    pub bound_throughput: f64,
+}
+
+impl SweepCandidate {
+    /// Did this candidate produce a usable throughput number?
+    pub fn evaluated(&self) -> bool {
+        self.reachable && !self.pruned && self.throughput > 0.0
+    }
+
+    /// Legacy [`super::Candidate`] view (pruned counts as not reachable,
+    /// since no throughput was produced).
+    pub fn to_candidate(&self) -> super::Candidate {
+        super::Candidate {
+            strategy: self.strategy,
+            throughput: self.throughput,
+            reachable: self.reachable && !self.pruned,
+            micro_batches: self.micro_batches,
+        }
+    }
+}
+
+/// Wall-clock accounting — the only non-deterministic part of a report.
+#[derive(Debug, Clone, Default)]
+pub struct SweepTiming {
+    /// Whole sweep (space construction + pruning + evaluation), seconds.
+    pub total_seconds: f64,
+    /// Per-candidate evaluation time, ms, index-aligned with
+    /// `SweepReport::candidates` (0 for pruned candidates).
+    pub per_candidate_ms: Vec<f64>,
+}
+
+/// Everything a sweep produced.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub candidates: Vec<SweepCandidate>,
+    /// Aggregate profiling cost. With the cache on this counts every
+    /// unique event once — the Table-3 dedup; without it, the sum over
+    /// candidates.
+    pub profile: ProfileReport,
+    pub cache: CacheStats,
+    pub timing: SweepTiming,
+    pub threads_used: usize,
+}
+
+impl SweepReport {
+    fn ranked(&self) -> impl Iterator<Item = &SweepCandidate> {
+        self.candidates.iter().filter(|c| c.evaluated())
+    }
+
+    /// Highest-throughput evaluated candidate, if any.
+    pub fn best(&self) -> Option<&SweepCandidate> {
+        self.ranked()
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+    }
+
+    /// Runner-up over distinct strategies, if at least two were evaluated.
+    pub fn second_best(&self) -> Option<&SweepCandidate> {
+        let best = self.best()?.strategy;
+        self.ranked()
+            .filter(|c| c.strategy != best)
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+    }
+
+    /// Lowest-throughput evaluated candidate, if any.
+    pub fn worst(&self) -> Option<&SweepCandidate> {
+        self.ranked()
+            .min_by(|a, b| a.throughput.total_cmp(&b.throughput))
+    }
+
+    /// Best/worst ratio — the paper's 7.37x headline shape.
+    pub fn speedup(&self) -> Option<f64> {
+        Some(self.best()?.throughput / self.worst()?.throughput)
+    }
+
+    pub fn pruned_count(&self) -> usize {
+        self.candidates.iter().filter(|c| c.pruned).count()
+    }
+
+    pub fn evaluated_count(&self) -> usize {
+        self.candidates.iter().filter(|c| c.evaluated()).count()
+    }
+
+    /// Legacy view for the paper-protocol consumers (fig12/table2/table3).
+    pub fn to_search_report(&self) -> super::SearchReport {
+        super::SearchReport {
+            candidates: self.candidates.iter().map(SweepCandidate::to_candidate).collect(),
+            profile: self.profile.clone(),
+            simulate_seconds: self.timing.total_seconds,
+        }
+    }
+}
+
+/// The sweep engine itself; see the module docs for the contract.
+pub struct SearchEngine<'a> {
+    model: &'a ModelSpec,
+    cluster: &'a ClusterSpec,
+    cost: &'a CostModel,
+    cfg: SweepConfig,
+    cache: ProfileCache,
+}
+
+impl<'a> SearchEngine<'a> {
+    pub fn new(
+        model: &'a ModelSpec,
+        cluster: &'a ClusterSpec,
+        cost: &'a CostModel,
+        cfg: SweepConfig,
+    ) -> Self {
+        SearchEngine {
+            model,
+            cluster,
+            cost,
+            cfg,
+            cache: ProfileCache::new(),
+        }
+    }
+
+    pub fn config(&self) -> &SweepConfig {
+        &self.cfg
+    }
+
+    /// The candidate space, in deterministic order: strategies in
+    /// enumeration order, each followed by its extra micro-batch-size
+    /// points (ascending) when the axis is enabled.
+    pub fn specs(&self) -> Vec<CandidateSpec> {
+        let devices = self.cluster.total_devices();
+        let strategies = if self.cfg.widened {
+            widened_grid(devices)
+        } else {
+            grid(devices)
+        };
+        let mut specs = Vec::new();
+        for s in strategies {
+            let base = CandidateSpec::default_for(s, self.cfg.global_batch);
+            specs.push(base);
+            if !self.cfg.micro_batch_axis || s.pp <= 1 || base.micro_batch_size == 0 {
+                continue;
+            }
+            let per_replica = self.cfg.global_batch / s.dp;
+            for mbs in 2..=per_replica {
+                if per_replica % mbs == 0 {
+                    specs.push(CandidateSpec {
+                        strategy: s,
+                        micro_batch_size: mbs,
+                        micro_batches: per_replica / mbs,
+                    });
+                }
+            }
+        }
+        specs
+    }
+
+    fn valid(&self, spec: &CandidateSpec) -> bool {
+        spec.micro_batch_size >= 1
+            && spec.strategy.is_valid_for(
+                self.model.heads,
+                self.model.num_transformer_layers(),
+                spec.strategy.world_size(),
+            )
+            && self.cfg.global_batch % spec.strategy.dp == 0
+    }
+
+    /// Analytical throughput upper bound for the pruning pass (it/s).
+    ///
+    /// `baseline::analytical` prices compute at peak FLOPs with ideal
+    /// communication and no overheads, so its batch time lower-bounds the
+    /// simulated one and `1e6 / analytical_us` upper-bounds the
+    /// simulated throughput. 0.0 when the candidate is invalid or the
+    /// shard does not fit (those are evaluated anyway — they are cheap).
+    pub fn bound_throughput(&self, spec: &CandidateSpec) -> f64 {
+        if !self.valid(spec) {
+            return 0.0;
+        }
+        let part = partition(
+            self.model,
+            &spec.strategy,
+            self.cluster,
+            spec.micro_batch_size,
+        );
+        if !self.cluster.fits(part.max_params_per_rank()) {
+            return 0.0;
+        }
+        let sched = schedule::dapple(spec.strategy.pp, spec.micro_batches);
+        let us = analytical_batch_time_us(self.model, &part, &sched, self.cluster);
+        if us > 0.0 {
+            1e6 / us
+        } else {
+            0.0
+        }
+    }
+
+    /// Fully evaluate one spec (partition → profile → hierarchical model).
+    fn evaluate(&self, spec: &CandidateSpec) -> (SweepCandidate, ProfileReport) {
+        let mut cand = SweepCandidate {
+            strategy: spec.strategy,
+            micro_batch_size: spec.micro_batch_size,
+            micro_batches: spec.micro_batches,
+            throughput: 0.0,
+            reachable: false,
+            pruned: false,
+            bound_throughput: 0.0,
+        };
+        if !self.valid(spec) {
+            // match the legacy evaluate_candidate: invalid candidates
+            // report no micro-batching at all
+            cand.micro_batch_size = 0;
+            cand.micro_batches = 0;
+            return (cand, ProfileReport::default());
+        }
+        let part = partition(
+            self.model,
+            &spec.strategy,
+            self.cluster,
+            spec.micro_batch_size,
+        );
+        if !self.cluster.fits(part.max_params_per_rank()) {
+            return (cand, ProfileReport::default());
+        }
+        let sched = schedule::dapple(spec.strategy.pp, spec.micro_batches);
+        let mut db = EventDb::new();
+        crate::engine::build_programs(&part, &sched, self.cluster, &mut db);
+        let profile = if self.cfg.use_cache {
+            self.cache.profile_into(
+                &mut db,
+                self.cluster,
+                self.cost,
+                self.cfg.jitter_sigma,
+                self.cfg.profile_iters,
+                self.cfg.profile_seed,
+            );
+            // cost accounted once, in the shared cache
+            ProfileReport::default()
+        } else {
+            profile_events(
+                &mut db,
+                self.cluster,
+                self.cost,
+                self.cfg.jitter_sigma,
+                self.cfg.profile_iters,
+                self.cfg.profile_seed,
+            )
+        };
+        let ds = DistSim::new(&part, &sched, self.cluster);
+        let batch_us = ds.predict_batch_time_us(&mut db);
+        cand.reachable = true;
+        cand.throughput = 1e6 / batch_us;
+        (cand, profile)
+    }
+
+    fn resolve_threads(&self, work: usize) -> usize {
+        let n = if self.cfg.threads > 0 {
+            self.cfg.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        };
+        n.max(1).min(work.max(1))
+    }
+
+    /// Run the sweep.
+    ///
+    /// Phases: (1) build the candidate space; (2) if pruning, compute every
+    /// candidate's analytical bound, fully evaluate the analytically-best
+    /// candidate to fix a deterministic incumbent, and mark candidates
+    /// whose bound (with margin) cannot beat it; (3) evaluate the rest on
+    /// a shared atomic work queue; (4) assemble results by index.
+    pub fn sweep(&self) -> SweepReport {
+        let t0 = Instant::now();
+        let specs = self.specs();
+        let n = specs.len();
+        let mut candidates: Vec<Option<SweepCandidate>> = vec![None; n];
+        let mut per_ms = vec![0.0f64; n];
+        let mut reports: Vec<ProfileReport> = vec![ProfileReport::default(); n];
+        let mut bounds = vec![0.0f64; n];
+        let mut skip = vec![false; n];
+
+        if self.cfg.prune && n > 0 {
+            for (i, spec) in specs.iter().enumerate() {
+                bounds[i] = self.bound_throughput(spec);
+            }
+            // deterministic incumbent: the analytically-best candidate
+            // (ties break toward the lower index)
+            let incumbent = (0..n)
+                .max_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(b.cmp(&a)))
+                .filter(|&i| bounds[i] > 0.0);
+            if let Some(i) = incumbent {
+                let ti = Instant::now();
+                let (mut cand, rep) = self.evaluate(&specs[i]);
+                per_ms[i] = ti.elapsed().as_secs_f64() * 1e3;
+                cand.bound_throughput = bounds[i];
+                let incumbent_tp = cand.throughput;
+                candidates[i] = Some(cand);
+                reports[i] = rep;
+                skip[i] = true; // already evaluated
+                if incumbent_tp > 0.0 {
+                    for j in 0..n {
+                        if j != i
+                            && bounds[j] > 0.0
+                            && bounds[j] * (1.0 + self.cfg.prune_margin) < incumbent_tp
+                        {
+                            candidates[j] = Some(SweepCandidate {
+                                strategy: specs[j].strategy,
+                                micro_batch_size: specs[j].micro_batch_size,
+                                micro_batches: specs[j].micro_batches,
+                                throughput: 0.0,
+                                reachable: true,
+                                pruned: true,
+                                bound_throughput: bounds[j],
+                            });
+                            skip[j] = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        let worklist: Vec<usize> = (0..n).filter(|&i| !skip[i]).collect();
+        let threads = self.resolve_threads(worklist.len());
+        let queue = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<(SweepCandidate, ProfileReport, f64)>>> =
+            worklist.iter().map(|_| Mutex::new(None)).collect();
+        {
+            let specs = &specs;
+            let worklist = &worklist;
+            let queue = &queue;
+            let slots = &slots;
+            let bounds = &bounds;
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(move || loop {
+                        let k = queue.fetch_add(1, Ordering::Relaxed);
+                        if k >= worklist.len() {
+                            break;
+                        }
+                        let i = worklist[k];
+                        let ti = Instant::now();
+                        let (mut cand, rep) = self.evaluate(&specs[i]);
+                        cand.bound_throughput = bounds[i];
+                        let ms = ti.elapsed().as_secs_f64() * 1e3;
+                        *slots[k].lock().unwrap() = Some((cand, rep, ms));
+                    });
+                }
+            });
+        }
+        for (k, &i) in worklist.iter().enumerate() {
+            let (cand, rep, ms) = slots[k]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("worker left a slot empty");
+            candidates[i] = Some(cand);
+            reports[i] = rep;
+            per_ms[i] = ms;
+        }
+
+        // aggregate profiling cost deterministically (index order, or the
+        // cache's sorted-key totals); snapshot the cache stats once
+        let cache_stats = self.cache.stats(self.cfg.profile_iters);
+        let profile = if self.cfg.use_cache {
+            ProfileReport {
+                gpu_seconds: cache_stats.gpu_seconds,
+                events_profiled: cache_stats.unique_events,
+                extrapolated: cache_stats.extrapolated,
+                cache_hits: cache_stats.hits,
+            }
+        } else {
+            let mut total = ProfileReport::default();
+            for r in &reports {
+                total.gpu_seconds += r.gpu_seconds;
+                total.events_profiled += r.events_profiled;
+                total.extrapolated += r.extrapolated;
+            }
+            total
+        };
+
+        SweepReport {
+            candidates: candidates
+                .into_iter()
+                .map(|c| c.expect("every candidate resolved"))
+                .collect(),
+            profile,
+            cache: cache_stats,
+            timing: SweepTiming {
+                total_seconds: t0.elapsed().as_secs_f64(),
+                per_candidate_ms: per_ms,
+            },
+            threads_used: threads,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn engine_cfg(threads: usize, prune: bool, use_cache: bool) -> SweepConfig {
+        SweepConfig {
+            threads,
+            prune,
+            use_cache,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn default_spec_matches_seed_protocol() {
+        let s = CandidateSpec::default_for(Strategy::new(1, 4, 4), 16);
+        assert_eq!((s.micro_batch_size, s.micro_batches), (1, 4));
+        let s = CandidateSpec::default_for(Strategy::new(4, 1, 4), 16);
+        assert_eq!((s.micro_batch_size, s.micro_batches), (4, 1));
+        // dp does not divide the batch -> sentinel unreachable spec
+        let s = CandidateSpec::default_for(Strategy::new(1, 1, 3), 16);
+        assert_eq!(s.micro_batch_size, 0);
+    }
+
+    #[test]
+    fn sweep_matches_legacy_grid_search_values() {
+        let model = zoo::bert_ex_large();
+        let cluster = ClusterSpec::a10_cluster(4, 4);
+        let cost = CostModel::default();
+        let eng = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true));
+        let rep = eng.sweep();
+        assert_eq!(rep.candidates.len(), 15);
+        // cache off must give identical throughputs (same per-event seeds)
+        let eng2 = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, false));
+        let rep2 = eng2.sweep();
+        for (a, b) in rep.candidates.iter().zip(&rep2.candidates) {
+            assert_eq!(a, b, "cache must not change values");
+        }
+        assert!(rep.cache.hits > 0, "15 candidates must share events");
+        assert!(
+            rep.profile.gpu_seconds < rep2.profile.gpu_seconds,
+            "dedup must cut profiling cost"
+        );
+    }
+
+    #[test]
+    fn micro_batch_axis_adds_points_for_pipelined_strategies() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cfg = SweepConfig {
+            micro_batch_axis: true,
+            ..SweepConfig::default()
+        };
+        let eng = SearchEngine::new(&model, &cluster, &cost, cfg);
+        let specs = eng.specs();
+        let base = SearchEngine::new(&model, &cluster, &cost, SweepConfig::default())
+            .specs()
+            .len();
+        assert!(specs.len() > base);
+        // every extra point still covers the device count and divides the
+        // replica batch
+        for s in &specs {
+            assert_eq!(s.strategy.world_size(), 16);
+            if s.micro_batch_size > 0 {
+                assert_eq!(
+                    s.micro_batch_size * s.micro_batches * s.strategy.dp,
+                    16,
+                    "{s:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bound_is_above_simulated_throughput() {
+        // the pruning premise: analytical throughput >= DistSim throughput
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let eng = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true));
+        for spec in eng.specs() {
+            let bound = eng.bound_throughput(&spec);
+            let (cand, _) = eng.evaluate(&spec);
+            if cand.evaluated() {
+                assert!(
+                    bound > cand.throughput,
+                    "{}: bound {bound} <= simulated {}",
+                    spec.strategy,
+                    cand.throughput
+                );
+            }
+        }
+    }
+}

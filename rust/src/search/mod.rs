@@ -1,10 +1,44 @@
-//! Auto parallel-strategy search (paper §6): grid-search the hybrid
-//! strategy space with DistSim as the throughput oracle, at a fixed global
-//! batch size, and rank strategies by predicted iterations/second.
+//! Auto parallel-strategy search (paper §6): sweep the hybrid strategy
+//! space with DistSim as the throughput oracle, at a fixed global batch
+//! size, and rank strategies by predicted iterations/second.
 //!
-//! This is the paper's use-case: evaluating 15 candidate deployments of
+//! This is the paper's use-case: evaluating candidate deployments of
 //! BERT-exLarge on 16 GPUs *without* touching the full cluster — profiling
 //! happens on the 2-node slice, simulation is milliseconds per candidate.
+//! The subsystem is built for *sweeps*, not single lookups:
+//!
+//! * [`SearchEngine`] evaluates candidates in parallel over a
+//!   deterministic work queue (`std::thread::scope`; results are
+//!   bit-identical for any worker count).
+//! * [`ProfileCache`] shares profiled event costs across candidates.
+//!   **Cache key:** the interned event descriptor itself, which encodes
+//!   (model layer kind, tensor-MP shard shape, micro-batch size) for
+//!   computation events and (bytes, group, intra/inter link) for
+//!   communication events — so any two candidates that shard a layer the
+//!   same way pay for its profiling once per sweep. This is the
+//!   cross-candidate generalization of the paper's §3.2 event dedup, and
+//!   Table 3 reports the saving in GPU-seconds.
+//! * An optional pruning pass skips candidates that provably lose:
+//!   **pruning bound:** `baseline::analytical` prices compute at peak
+//!   FLOPs with ideal communication and zero overheads, so its batch time
+//!   is a lower bound on the simulated batch time and `1e6 /
+//!   analytical_us` an upper bound on throughput. A candidate whose bound
+//!   (inflated by a safety margin) is still below an already-simulated
+//!   incumbent can never be the argmax and is skipped.
+//! * [`SweepConfig::widened`] / [`SweepConfig::micro_batch_axis`] grow the
+//!   space beyond the paper's power-of-two grid: every (mp, pp, dp)
+//!   factoring [`Strategy::enumerate`] allows, and a micro-batch-size axis
+//!   for pipelined candidates.
+//!
+//! The legacy free functions ([`grid_search`], [`evaluate_candidate`])
+//! remain as thin wrappers over the engine so the fig12/table2/table3
+//! experiment drivers keep the paper's exact protocol.
+
+pub mod cache;
+pub mod engine;
+
+pub use cache::{CacheStats, ProfileCache};
+pub use engine::{CandidateSpec, SearchEngine, SweepCandidate, SweepConfig, SweepReport};
 
 use crate::cluster::ClusterSpec;
 use crate::config::RunConfig;
@@ -36,39 +70,42 @@ pub struct Candidate {
 pub struct SearchReport {
     pub candidates: Vec<Candidate>,
     pub profile: ProfileReport,
-    /// Wall-clock spent in simulation (not profiling), seconds.
+    /// Wall-clock spent by the sweep (profiling + simulation), seconds.
     pub simulate_seconds: f64,
 }
 
 impl SearchReport {
-    pub fn best(&self) -> &Candidate {
-        self.candidates
-            .iter()
-            .filter(|c| c.reachable)
-            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
-            .expect("no reachable candidate")
+    fn reachable(&self) -> impl Iterator<Item = &Candidate> {
+        self.candidates.iter().filter(|c| c.reachable)
     }
 
-    pub fn second_best(&self) -> &Candidate {
-        let best = self.best().strategy;
-        self.candidates
-            .iter()
-            .filter(|c| c.reachable && c.strategy != best)
-            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
-            .expect("fewer than two reachable candidates")
+    /// Highest-throughput reachable candidate; `None` when nothing is
+    /// deployable.
+    pub fn best(&self) -> Option<&Candidate> {
+        self.reachable()
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
     }
 
-    pub fn worst(&self) -> &Candidate {
-        self.candidates
-            .iter()
-            .filter(|c| c.reachable && c.throughput > 0.0)
-            .min_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
-            .expect("no reachable candidate")
+    /// Runner-up over distinct strategies; `None` on empty or singleton
+    /// reachable sets.
+    pub fn second_best(&self) -> Option<&Candidate> {
+        let best = self.best()?.strategy;
+        self.reachable()
+            .filter(|c| c.strategy != best)
+            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
     }
 
-    /// Best/worst speedup — the paper's 7.37x headline.
-    pub fn speedup(&self) -> f64 {
-        self.best().throughput / self.worst().throughput
+    /// Lowest-throughput reachable candidate with non-zero throughput.
+    pub fn worst(&self) -> Option<&Candidate> {
+        self.reachable()
+            .filter(|c| c.throughput > 0.0)
+            .min_by(|a, b| a.throughput.total_cmp(&b.throughput))
+    }
+
+    /// Best/worst speedup — the paper's 7.37x headline. `None` when fewer
+    /// than one reachable candidate exists.
+    pub fn speedup(&self) -> Option<f64> {
+        Some(self.best()?.throughput / self.worst()?.throughput)
     }
 }
 
@@ -92,8 +129,17 @@ pub fn grid(devices: usize) -> Vec<Strategy> {
     out
 }
 
+/// The widened space: every (mp, pp, dp) factoring of the device count,
+/// power of two or not (model-level validity — heads divisibility, pipeline
+/// depth — is applied per candidate at evaluation time, where
+/// `Strategy::is_valid_for` allows). Superset of [`grid`].
+pub fn widened_grid(devices: usize) -> Vec<Strategy> {
+    Strategy::enumerate(devices)
+}
+
 /// Evaluate one candidate with DistSim. Returns (throughput it/s,
 /// reachable, micro_batches).
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_candidate(
     model: &ModelSpec,
     strategy: &Strategy,
@@ -153,7 +199,11 @@ pub fn evaluate_candidate(
     }
 }
 
-/// Full grid search (paper §6 protocol).
+/// Full grid search (paper §6 protocol), now served by the parallel
+/// cache-aware [`SearchEngine`]: power-of-two grid, no pruning, profiled
+/// costs shared across candidates. Values are bit-identical to the
+/// historical serial per-candidate path (the cache returns the same
+/// measurement a fresh profile would).
 pub fn grid_search(
     model: &ModelSpec,
     cluster: &ClusterSpec,
@@ -162,33 +212,22 @@ pub fn grid_search(
     jitter_sigma: f64,
     profile_iters: usize,
 ) -> SearchReport {
-    let mut profile = ProfileReport::default();
-    let t0 = std::time::Instant::now();
-    let candidates: Vec<Candidate> = grid(cluster.total_devices())
-        .iter()
-        .map(|s| {
-            evaluate_candidate(
-                model,
-                s,
-                cluster,
-                cost,
-                global_batch,
-                jitter_sigma,
-                profile_iters,
-                &mut profile,
-            )
-        })
-        .collect();
-    let simulate_seconds = t0.elapsed().as_secs_f64();
-    SearchReport {
-        candidates,
-        profile,
-        simulate_seconds,
-    }
+    let cfg = SweepConfig {
+        global_batch,
+        jitter_sigma,
+        profile_iters,
+        ..SweepConfig::default()
+    };
+    SearchEngine::new(model, cluster, cost, cfg)
+        .sweep()
+        .to_search_report()
 }
 
 /// Measure a candidate on the "real cluster" (ground-truth engine) — used
-/// to verify the search result (Table 2).
+/// to verify the search result (Table 2). Legacy [`Candidate`]s carry no
+/// micro-batch size, so this re-derives the default (seed) micro-batching;
+/// for widened-sweep candidates use [`measure_actual_sweep`], which runs
+/// the exact configuration the sweep simulated.
 pub fn measure_actual(
     model_name: &str,
     cand: &Candidate,
@@ -202,8 +241,42 @@ pub fn measure_actual(
     } else {
         (per_replica, 1)
     };
-    let mut cfg = RunConfig::new(model_name, cand.strategy, cluster.clone());
-    cfg.micro_batch_size = mbs;
+    measure_config(model_name, cand.strategy, mbs, micro_batches, cluster, iters)
+}
+
+/// Ground-truth a [`SweepCandidate`] with its *own* micro-batching — the
+/// point the sweep actually simulated, not the default derivation.
+pub fn measure_actual_sweep(
+    model_name: &str,
+    cand: &SweepCandidate,
+    cluster: &ClusterSpec,
+    iters: usize,
+) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        cand.micro_batch_size >= 1,
+        "candidate {} was never deployable",
+        cand.strategy
+    );
+    measure_config(
+        model_name,
+        cand.strategy,
+        cand.micro_batch_size,
+        cand.micro_batches,
+        cluster,
+        iters,
+    )
+}
+
+fn measure_config(
+    model_name: &str,
+    strategy: Strategy,
+    micro_batch_size: usize,
+    micro_batches: usize,
+    cluster: &ClusterSpec,
+    iters: usize,
+) -> anyhow::Result<f64> {
+    let mut cfg = RunConfig::new(model_name, strategy, cluster.clone());
+    cfg.micro_batch_size = micro_batch_size;
     cfg.micro_batches = micro_batches;
     let gt = GroundTruth::prepare(&cfg)?;
     Ok(1e6 / gt.mean_batch_time_us(iters))
@@ -229,6 +302,19 @@ mod tests {
     }
 
     #[test]
+    fn widened_grid_is_superset_with_non_pow2_splits() {
+        // 16 devices factor only into powers of two, so the spaces agree
+        assert_eq!(widened_grid(16).len(), grid(16).len());
+        // 12 devices have non-power-of-two splits the pow2 grid misses
+        let wide = widened_grid(12);
+        assert!(wide.iter().any(|s| s.mp == 3));
+        assert!(wide.len() > grid(12).len());
+        for s in &wide {
+            assert_eq!(s.world_size(), 12);
+        }
+    }
+
+    #[test]
     fn search_finds_a_pipeline_heavy_winner_for_bert_exlarge() {
         // Fig. 12: the winner uses pipeline parallelism (2D8P in the
         // paper); pure 16-way MP is the worst by far.
@@ -236,11 +322,11 @@ mod tests {
         let cluster = ClusterSpec::a10_cluster(4, 4);
         let rep = grid_search(&model, &cluster, &CostModel::default(), 16, 0.0, 1);
         assert_eq!(rep.candidates.len(), 15);
-        let best = rep.best();
+        let best = rep.best().expect("reachable candidates exist");
         assert!(best.strategy.pp >= 2, "winner {} should pipeline", best.strategy);
-        let worst = rep.worst();
+        let worst = rep.worst().expect("reachable candidates exist");
         assert_eq!(worst.strategy.mp, 16, "worst should be 16-way MP, got {}", worst.strategy);
-        let speedup = rep.speedup();
+        let speedup = rep.speedup().expect("speedup defined");
         assert!(
             (3.0..15.0).contains(&speedup),
             "speedup {speedup} out of the paper's order of magnitude"
@@ -261,5 +347,91 @@ mod tests {
             .unwrap();
         assert!(!dp16.reachable);
         assert_eq!(dp16.throughput, 0.0);
+    }
+
+    #[test]
+    fn report_accessors_return_none_on_degenerate_sets() {
+        let empty = SearchReport {
+            candidates: vec![],
+            profile: ProfileReport::default(),
+            simulate_seconds: 0.0,
+        };
+        assert!(empty.best().is_none());
+        assert!(empty.second_best().is_none());
+        assert!(empty.worst().is_none());
+        assert!(empty.speedup().is_none());
+
+        let singleton = SearchReport {
+            candidates: vec![Candidate {
+                strategy: Strategy::new(1, 1, 1),
+                throughput: 2.0,
+                reachable: true,
+                micro_batches: 1,
+            }],
+            profile: ProfileReport::default(),
+            simulate_seconds: 0.0,
+        };
+        assert!(singleton.best().is_some());
+        assert!(singleton.second_best().is_none(), "no distinct runner-up");
+        assert_eq!(singleton.speedup(), Some(1.0));
+    }
+}
+
+#[cfg(test)]
+mod proptests {
+    use super::*;
+    use crate::testutil;
+
+    #[test]
+    fn prop_enumerations_cover_exactly_the_device_count() {
+        testutil::check("grid-covers-devices", 120, |rng| {
+            let devices = 1 + rng.below(96) as usize;
+            for s in grid(devices) {
+                assert_eq!(s.world_size(), devices, "pow2 grid @ {devices}");
+            }
+            let wide = widened_grid(devices);
+            assert!(!wide.is_empty());
+            for s in &wide {
+                assert_eq!(s.mp * s.pp * s.dp, devices, "widened grid @ {devices}");
+            }
+            // the widened space subsumes the paper grid
+            for s in grid(devices) {
+                assert!(wide.contains(&s), "{s} missing from widened({devices})");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_report_accessors_never_panic() {
+        // random candidate sets, including empty / all-unreachable /
+        // singleton: accessors must return Option, never panic, and with
+        // >= 2 reachable distinct strategies best+second_best+worst are all
+        // Some.
+        testutil::check("report-accessors-total", 300, |rng| {
+            let n = rng.below(6) as usize;
+            let mut candidates = Vec::new();
+            for i in 0..n {
+                let reachable = rng.below(2) == 0;
+                candidates.push(Candidate {
+                    strategy: Strategy::new(1 + i, 1, 1),
+                    throughput: if reachable { 0.1 + rng.f64() } else { 0.0 },
+                    reachable,
+                    micro_batches: 1,
+                });
+            }
+            let rep = SearchReport {
+                candidates,
+                profile: ProfileReport::default(),
+                simulate_seconds: 0.0,
+            };
+            let reachable = rep.candidates.iter().filter(|c| c.reachable).count();
+            assert_eq!(rep.best().is_some(), reachable >= 1);
+            assert_eq!(rep.worst().is_some(), reachable >= 1);
+            assert_eq!(rep.second_best().is_some(), reachable >= 2);
+            if reachable >= 2 {
+                let s = rep.speedup().unwrap();
+                assert!(s >= 1.0, "best/worst ratio {s} < 1");
+            }
+        });
     }
 }

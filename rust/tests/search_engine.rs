@@ -1,0 +1,181 @@
+//! Integration tests for the parallel strategy-sweep engine: the
+//! determinism contract, the profile cache's dedup accounting, pruning
+//! soundness against an exhaustive sweep, and seed-path equivalence.
+
+use distsim::cluster::ClusterSpec;
+use distsim::cost::CostModel;
+use distsim::model::zoo;
+use distsim::profile::ProfileReport;
+use distsim::search::{
+    evaluate_candidate, grid, grid_search, SearchEngine, SweepConfig, SweepReport,
+};
+
+fn run_sweep(cfg: SweepConfig) -> SweepReport {
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+    let cost = CostModel::default();
+    SearchEngine::new(&model, &cluster, &cost, cfg).sweep()
+}
+
+#[test]
+fn sweep_is_deterministic_across_thread_counts() {
+    // same seed + grid => identical deterministic payload on 1, 2 and 8
+    // worker threads (jitter on, to exercise the noisy profiling path)
+    let cfg = |threads| SweepConfig {
+        threads,
+        jitter_sigma: 0.02,
+        profile_iters: 2,
+        ..SweepConfig::default()
+    };
+    let one = run_sweep(cfg(1));
+    for threads in [2, 8] {
+        let many = run_sweep(cfg(threads));
+        assert_eq!(one.candidates, many.candidates, "{threads} threads");
+        assert_eq!(one.profile, many.profile, "{threads} threads");
+        assert_eq!(one.cache, many.cache, "{threads} threads");
+    }
+}
+
+#[test]
+fn sweep_is_deterministic_with_pruning_and_widened_space() {
+    let cfg = |threads| SweepConfig {
+        threads,
+        prune: true,
+        widened: true,
+        micro_batch_axis: true,
+        ..SweepConfig::default()
+    };
+    let one = run_sweep(cfg(1));
+    let many = run_sweep(cfg(8));
+    assert_eq!(one.candidates, many.candidates);
+    assert_eq!(one.profile, many.profile);
+    assert_eq!(
+        one.pruned_count(),
+        many.pruned_count(),
+        "pruning must not depend on thread count"
+    );
+}
+
+#[test]
+fn cache_dedups_profiling_across_candidates() {
+    let cached = run_sweep(SweepConfig::default());
+    let uncached = run_sweep(SweepConfig {
+        use_cache: false,
+        ..SweepConfig::default()
+    });
+
+    // identical values either way: a hit returns exactly what a fresh
+    // measurement would
+    assert_eq!(cached.candidates, uncached.candidates);
+
+    // but the cached sweep measures each unique event once
+    assert!(cached.cache.hits > 0, "15 candidates must share events");
+    assert_eq!(cached.cache.misses, cached.profile.events_profiled);
+    assert_eq!(cached.profile.cache_hits, cached.cache.hits);
+    assert!(
+        cached.profile.events_profiled < uncached.profile.events_profiled,
+        "dedup: {} unique vs {} per-candidate measurements",
+        cached.profile.events_profiled,
+        uncached.profile.events_profiled
+    );
+    assert!(cached.profile.gpu_seconds < uncached.profile.gpu_seconds);
+}
+
+#[test]
+fn pruned_candidates_are_never_the_argmax() {
+    // exhaustively evaluate a small grid, then re-run with pruning: the
+    // pruning pass must only ever discard non-winners, and the reported
+    // best must not change. BERT-exLarge's grid has a known 3-15x spread
+    // (see the search unit tests), so provably-losing candidates exist.
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+    let cost = CostModel::default();
+    let base = SweepConfig::default();
+
+    let exhaustive = SearchEngine::new(&model, &cluster, &cost, base.clone()).sweep();
+    let pruned = SearchEngine::new(
+        &model,
+        &cluster,
+        &cost,
+        SweepConfig {
+            prune: true,
+            ..base
+        },
+    )
+    .sweep();
+
+    let true_best = exhaustive.best().expect("exhaustive sweep has a winner");
+    assert!(
+        pruned.pruned_count() > 0,
+        "grid should contain provably-losing candidates"
+    );
+    for c in pruned.candidates.iter().filter(|c| c.pruned) {
+        assert_ne!(
+            c.strategy, true_best.strategy,
+            "pruning discarded the true argmax {}",
+            true_best.strategy
+        );
+    }
+    let pruned_best = pruned.best().expect("pruned sweep still has a winner");
+    assert_eq!(pruned_best.strategy, true_best.strategy);
+    assert_eq!(pruned_best.throughput, true_best.throughput);
+}
+
+#[test]
+fn engine_matches_the_legacy_serial_seed_path() {
+    // grid_search is now engine-backed; its values must equal a manual
+    // serial loop over the original evaluate_candidate free function.
+    let model = zoo::bert_ex_large();
+    let cluster = ClusterSpec::a10_cluster(4, 4);
+    let cost = CostModel::default();
+
+    let report = grid_search(&model, &cluster, &cost, 16, 0.02, 2);
+
+    let mut legacy_profile = ProfileReport::default();
+    let legacy: Vec<_> = grid(16)
+        .iter()
+        .map(|s| {
+            evaluate_candidate(&model, s, &cluster, &cost, 16, 0.02, 2, &mut legacy_profile)
+        })
+        .collect();
+
+    assert_eq!(report.candidates.len(), legacy.len());
+    for (a, b) in report.candidates.iter().zip(&legacy) {
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.reachable, b.reachable);
+        assert_eq!(a.micro_batches, b.micro_batches);
+        assert_eq!(
+            a.throughput, b.throughput,
+            "{}: engine and seed path disagree",
+            a.strategy
+        );
+    }
+    // the engine's deduped profiling must cost no more than the legacy sum
+    assert!(report.profile.gpu_seconds <= legacy_profile.gpu_seconds);
+}
+
+#[test]
+fn widened_sweep_handles_non_pow2_device_counts() {
+    // 3 nodes x 4 GPUs = 12 devices: the widened space includes 3-way
+    // splits the pow2 grid cannot express, and the sweep stays total.
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(3, 4);
+    let cost = CostModel::default();
+    let cfg = SweepConfig {
+        widened: true,
+        global_batch: 12,
+        ..SweepConfig::default()
+    };
+    let rep = SearchEngine::new(&model, &cluster, &cost, cfg).sweep();
+    assert!(rep
+        .candidates
+        .iter()
+        .any(|c| c.strategy.pp == 3 && c.evaluated()));
+    // mp=3 does not divide bert-large's 16 heads -> invalid, not a crash
+    assert!(rep
+        .candidates
+        .iter()
+        .filter(|c| c.strategy.mp == 3)
+        .all(|c| !c.reachable));
+    assert!(rep.best().is_some());
+}

@@ -6,6 +6,7 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release --offline
+cargo bench --no-run --offline
 cargo test -q --offline
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --check

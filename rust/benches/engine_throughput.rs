@@ -1,41 +1,177 @@
-//! Bench: ground-truth engine throughput (instructions/second).
+//! Bench: ground-truth engine throughput (instructions/second), plus the
+//! seed-path vs indexed+scratch comparison at paper scale.
 //!
 //! The DES engine is the other L3 hot path (§Perf target: >= 1 M
 //! events/s): every Fig.-8/9/10 "actual" data point is an engine run, and
 //! Table 3's direct-run costing executes the whole grid.
+//!
+//! The sweep scenarios reproduce ISSUE 2's claim at the paper's
+//! large-scale-from-two-node-profiles shape (§5.5): 16-, 64- and 256-rank
+//! GPT-style iterations, comparing
+//!
+//! * **seed path** — fresh engine state per iteration plus the seed's
+//!   naive rescan/clone/sort Timeline queries (`testutil::naive`), vs
+//! * **indexed path** — `ExecScratch` reuse plus the columnar Timeline's
+//!   O(1)/borrowed-slice queries,
+//!
+//! with asserted value equivalence (the two paths must sum to bit-equal
+//! metric totals). Results are printed and written machine-readably to
+//! `BENCH_engine.json` for CI trend tracking.
 
 use std::time::Instant;
 
 use distsim::cluster::ClusterSpec;
-use distsim::config::RunConfig;
-use distsim::engine::GroundTruth;
+use distsim::config::{Json, RunConfig};
+use distsim::engine::{ExecScratch, GroundTruth};
 use distsim::strategy::Strategy;
+use distsim::testutil::naive;
+
+fn cluster_for(world: usize) -> ClusterSpec {
+    if world > 16 {
+        ClusterSpec::a100_pod(world.div_ceil(8))
+    } else {
+        ClusterSpec::a40_cluster(4, 4)
+    }
+}
 
 fn bench_one(model: &str, s: &str, micro_batches: usize) {
     let strategy = Strategy::parse(s).unwrap();
-    let cluster = if strategy.world_size() > 16 {
-        ClusterSpec::a100_pod(strategy.world_size().div_ceil(8))
-    } else {
-        ClusterSpec::a40_cluster(4, 4)
-    };
-    let mut cfg = RunConfig::new(model, strategy, cluster);
+    let mut cfg = RunConfig::new(model, strategy, cluster_for(strategy.world_size()));
     cfg.micro_batches = micro_batches;
     let gt = GroundTruth::prepare(&cfg).unwrap();
     let instrs = gt.prog.total_instrs();
 
-    // warmup + measure
-    let _ = gt.run_iteration(0);
+    // warmup + measure (scratch path: the post-ISSUE-2 default)
+    let mut scratch = ExecScratch::new();
+    let warm = gt.run_iteration_with_scratch(0, &mut scratch);
+    scratch.recycle(warm);
     let reps = 20;
     let t0 = Instant::now();
     for i in 0..reps {
-        let _ = gt.run_iteration(i);
+        let tl = gt.run_iteration_with_scratch(i, &mut scratch);
+        scratch.recycle(tl);
     }
     let secs = t0.elapsed().as_secs_f64() / reps as f64;
     println!(
-        "{model:<12} {s:<8} m={micro_batches:<3} {instrs:>7} instrs  {:>9.1} us/iter  {:>8.2} M instr/s",
+        "{model:<12} {s:<8} m={micro_batches:<3} {instrs:>7} instrs  \
+         {:>9.1} us/iter  {:>8.2} M instr/s",
         secs * 1e6,
         instrs as f64 / secs / 1e6
     );
+}
+
+struct SweepScenario {
+    model: &'static str,
+    strategy: &'static str,
+    micro_batches: usize,
+    reps: u64,
+}
+
+struct SweepResult {
+    ranks: usize,
+    scenario: SweepScenario,
+    instrs: usize,
+    seed_iters_per_sec: f64,
+    indexed_iters_per_sec: f64,
+}
+
+impl SweepResult {
+    fn speedup(&self) -> f64 {
+        self.indexed_iters_per_sec / self.seed_iters_per_sec
+    }
+}
+
+/// The per-iteration metric reads a sweep performs: batch time plus every
+/// device's busy total. Summing them gives a single checksum the two
+/// paths must agree on bit-exactly.
+fn seed_metrics_checksum(tl: &distsim::timeline::Timeline) -> f64 {
+    let mut acc = naive::batch_time_us(tl);
+    for d in 0..tl.n_devices {
+        acc += naive::busy_us(tl, d);
+    }
+    acc
+}
+
+fn indexed_metrics_checksum(tl: &distsim::timeline::Timeline) -> f64 {
+    let mut acc = tl.batch_time_us();
+    for d in 0..tl.n_devices {
+        acc += tl.busy_us(d);
+    }
+    acc
+}
+
+fn bench_sweep_scenario(sc: SweepScenario) -> SweepResult {
+    let strategy = Strategy::parse(sc.strategy).unwrap();
+    let ranks = strategy.world_size();
+    let mut cfg = RunConfig::new(sc.model, strategy, cluster_for(ranks));
+    cfg.micro_batches = sc.micro_batches;
+    let gt = GroundTruth::prepare(&cfg).unwrap();
+    let instrs = gt.prog.total_instrs();
+
+    // warmup both paths and assert span-level equivalence up front
+    let mut scratch = ExecScratch::new();
+    let fresh = gt.run_iteration(0);
+    let reused = gt.run_iteration_with_scratch(0, &mut scratch);
+    assert_eq!(fresh.spans(), reused.spans(), "{}: paths diverge", sc.strategy);
+    scratch.recycle(reused);
+
+    // seed path: fresh engine allocations + naive rescan queries
+    let t0 = Instant::now();
+    let mut seed_sum = 0.0;
+    for i in 0..sc.reps {
+        let tl = gt.run_iteration(i);
+        seed_sum += seed_metrics_checksum(&tl);
+    }
+    let seed_secs = t0.elapsed().as_secs_f64();
+
+    // indexed path: scratch reuse + O(1)/borrowed-slice queries
+    let t1 = Instant::now();
+    let mut indexed_sum = 0.0;
+    for i in 0..sc.reps {
+        let tl = gt.run_iteration_with_scratch(i, &mut scratch);
+        indexed_sum += indexed_metrics_checksum(&tl);
+        scratch.recycle(tl);
+    }
+    let indexed_secs = t1.elapsed().as_secs_f64();
+
+    assert_eq!(
+        seed_sum, indexed_sum,
+        "{}: metric values must be bit-identical across paths",
+        sc.strategy
+    );
+
+    let reps = sc.reps as f64;
+    SweepResult {
+        ranks,
+        scenario: sc,
+        instrs,
+        seed_iters_per_sec: reps / seed_secs,
+        indexed_iters_per_sec: reps / indexed_secs,
+    }
+}
+
+fn write_bench_json(results: &[SweepResult]) -> std::io::Result<()> {
+    let scenarios: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("ranks", Json::num(r.ranks as f64)),
+                ("model", Json::str(r.scenario.model)),
+                ("strategy", Json::str(r.scenario.strategy)),
+                ("micro_batches", Json::num(r.scenario.micro_batches as f64)),
+                ("reps", Json::num(r.scenario.reps as f64)),
+                ("instrs_per_iter", Json::num(r.instrs as f64)),
+                ("seed_iters_per_sec", Json::num(r.seed_iters_per_sec)),
+                ("indexed_iters_per_sec", Json::num(r.indexed_iters_per_sec)),
+                ("speedup", Json::num(r.speedup())),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("engine_throughput")),
+        ("scenarios", Json::Arr(scenarios)),
+    ]);
+    std::fs::write("BENCH_engine.json", doc.to_string())
 }
 
 fn main() {
@@ -46,4 +182,45 @@ fn main() {
     bench_one("bert-large", "1M4P4D", 16);
     bench_one("t5", "2M4P2D", 16);
     bench_one("gpt-145b", "8M16P1D", 16);
+
+    println!("\n# bench engine: seed path vs indexed+scratch (GPT-style sweep scenarios)\n");
+    let results: Vec<SweepResult> = [
+        SweepScenario { model: "bert-large", strategy: "2M4P2D", micro_batches: 8, reps: 20 },
+        SweepScenario { model: "gpt-145b", strategy: "4M8P2D", micro_batches: 8, reps: 6 },
+        SweepScenario { model: "gpt-145b", strategy: "8M16P2D", micro_batches: 16, reps: 3 },
+    ]
+    .into_iter()
+    .map(bench_sweep_scenario)
+    .collect();
+
+    println!(
+        "{:<6} {:<12} {:<8} {:>10} {:>14} {:>14} {:>9}",
+        "ranks", "model", "strat", "instrs", "seed it/s", "indexed it/s", "speedup"
+    );
+    for r in &results {
+        println!(
+            "{:<6} {:<12} {:<8} {:>10} {:>14.2} {:>14.2} {:>8.2}x",
+            r.ranks,
+            r.scenario.model,
+            r.scenario.strategy,
+            r.instrs,
+            r.seed_iters_per_sec,
+            r.indexed_iters_per_sec,
+            r.speedup()
+        );
+    }
+
+    // write the artifact before asserting the win, so one noisy run
+    // still leaves its numbers behind for CI trend tracking
+    write_bench_json(&results).expect("write BENCH_engine.json");
+    println!("\nwrote BENCH_engine.json");
+
+    for r in &results {
+        assert!(
+            r.speedup() > 1.0,
+            "{} ranks: indexed+scratch path must beat the seed path ({}x)",
+            r.ranks,
+            r.speedup()
+        );
+    }
 }

@@ -77,6 +77,7 @@ pub fn daydream_predict(
         finish[rank] = cur;
     }
     let _ = finish;
+    timeline.finalize();
     timeline
 }
 

@@ -237,7 +237,6 @@ impl<'a> DistSim<'a> {
         }
 
         // -- data parallelism modeling: expansion + gradient all-reduce --
-        let mut timeline = Timeline::new(strategy.world_size());
         let grad_ar: Vec<Option<EventId>> = (0..pp)
             .map(|s| {
                 if strategy.dp > 1 {
@@ -255,6 +254,12 @@ impl<'a> DistSim<'a> {
             })
             .collect();
 
+        let per_lane: usize = stage_spans.iter().map(Vec::len).sum();
+        let grad_lanes = grad_ar.iter().filter(|g| g.is_some()).count();
+        let mut timeline = Timeline::with_capacity(
+            strategy.world_size(),
+            strategy.mp * strategy.dp * (per_lane + grad_lanes),
+        );
         for dp in 0..strategy.dp {
             for s in 0..pp {
                 for mp in 0..strategy.mp {
@@ -286,6 +291,7 @@ impl<'a> DistSim<'a> {
                 }
             }
         }
+        timeline.finalize();
         timeline
     }
 
@@ -349,7 +355,7 @@ mod tests {
         let a = t.device_spans(0);
         let b = t.device_spans(1);
         assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
+        for (x, y) in a.iter().zip(b) {
             assert_eq!(x.start, y.start);
             assert_eq!(x.tag, y.tag);
         }
@@ -361,7 +367,7 @@ mod tests {
         let a = t.device_spans(0); // (pp0, dp0)
         let b = t.device_spans(2); // (pp0, dp1)
         assert_eq!(a.len(), b.len());
-        for (x, y) in a.iter().zip(&b) {
+        for (x, y) in a.iter().zip(b) {
             assert_eq!(x.start, y.start);
         }
     }
@@ -391,12 +397,12 @@ mod tests {
     fn grad_allreduce_present_iff_dp() {
         let t1 = predict(1, 2, 1, 2);
         assert!(!t1
-            .spans
+            .spans()
             .iter()
             .any(|s| s.tag.kind == SpanKind::GradAllReduce));
         let t2 = predict(1, 2, 2, 2);
         assert!(t2
-            .spans
+            .spans()
             .iter()
             .any(|s| s.tag.kind == SpanKind::GradAllReduce));
     }

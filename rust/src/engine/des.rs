@@ -5,7 +5,8 @@
 //! clock skew — the exact phenomena the paper attributes its residual
 //! modeling errors to.
 
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::program::{Instr, Program};
 use crate::cluster::{ClusterSpec, LinkClass};
@@ -51,28 +52,63 @@ struct Channel {
     pending_sends: VecDeque<TimeUs>,
 }
 
+/// Transfer end-time ordered for the contention min-heaps. End times are
+/// rank-local clocks, always finite and non-negative, so `total_cmp` is a
+/// plain numeric order here.
+#[derive(PartialEq)]
+struct EndTime(TimeUs);
+
+impl Eq for EndTime {}
+
+impl PartialOrd for EndTime {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EndTime {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
 /// Tracks concurrently-active transfers per link class for contention.
+///
+/// Min-heaps of end times with lazy expiry: `active(now)` pops every
+/// transfer that ended at or before `now` (O(log k) amortized per
+/// transfer, each entry popped once) instead of the seed's O(k)
+/// retain-rescan on every call. The surviving set — entries with
+/// `end > now` — is identical to what `retain` kept, so counts (and
+/// therefore every contention factor and timeline) are bit-identical.
 #[derive(Default)]
 struct LinkLoad {
-    intra: Vec<TimeUs>, // end times of active transfers
-    inter: Vec<TimeUs>,
+    intra: BinaryHeap<Reverse<EndTime>>,
+    inter: BinaryHeap<Reverse<EndTime>>,
 }
 
 impl LinkLoad {
-    fn active(&mut self, class: LinkClass, now: TimeUs) -> usize {
-        let v = match class {
+    fn lane(&mut self, class: LinkClass) -> &mut BinaryHeap<Reverse<EndTime>> {
+        match class {
             LinkClass::Intra => &mut self.intra,
             LinkClass::Inter => &mut self.inter,
-        };
-        v.retain(|&end| end > now);
-        v.len()
+        }
+    }
+
+    fn active(&mut self, class: LinkClass, now: TimeUs) -> usize {
+        let heap = self.lane(class);
+        while matches!(heap.peek(), Some(Reverse(EndTime(end))) if *end <= now) {
+            heap.pop();
+        }
+        heap.len()
     }
 
     fn register(&mut self, class: LinkClass, end: TimeUs) {
-        match class {
-            LinkClass::Intra => self.intra.push(end),
-            LinkClass::Inter => self.inter.push(end),
-        }
+        self.lane(class).push(Reverse(EndTime(end)));
+    }
+
+    fn clear(&mut self) {
+        self.intra.clear();
+        self.inter.clear();
     }
 }
 
@@ -141,6 +177,70 @@ impl BaseCosts {
     }
 }
 
+/// Reusable engine state: every buffer [`execute_with_scratch`] needs,
+/// allocated once per (program shape) and reused across iterations and
+/// sweep candidates. After the first call with a given program, repeated
+/// executions perform zero per-iteration heap allocation of engine state
+/// (profiling loops run ~100 iterations per event, and a sweep runs
+/// thousands of engine iterations — allocator churn was pure overhead;
+/// see ISSUE 2 / §Perf).
+#[derive(Default)]
+pub struct ExecScratch {
+    states: Vec<RankState>,
+    skews: Vec<f64>,
+    channels: Vec<Channel>,
+    waiting_recv: Vec<Option<TimeUs>>,
+    arrivals: Vec<Vec<(usize, TimeUs)>>,
+    load: LinkLoad,
+    runnable: VecDeque<usize>,
+    blocked: Vec<bool>,
+    /// Recycled output timeline (callers hand finished timelines back via
+    /// [`ExecScratch::recycle`] so span buffers survive the iteration).
+    spare: Option<Timeline>,
+}
+
+impl ExecScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Hand a finished timeline back for reuse by the next execution.
+    pub fn recycle(&mut self, timeline: Timeline) {
+        self.spare = Some(timeline);
+    }
+
+    /// Size every buffer for an `n`-rank program with `n_groups`
+    /// collective groups. Only (re)allocates when the shape grows.
+    fn prepare(&mut self, n: usize, n_groups: usize) {
+        if self.states.len() > n {
+            self.states.truncate(n);
+        }
+        while self.states.len() < n {
+            // placeholder rng; re-seeded per execution below
+            self.states.push(RankState {
+                pc: 0,
+                clock: 0.0,
+                rng: Rng::new(0),
+            });
+        }
+        self.skews.clear();
+        self.channels.resize_with(n * n, Channel::default);
+        for c in &mut self.channels[..n * n] {
+            c.pending_sends.clear();
+        }
+        self.waiting_recv.clear();
+        self.waiting_recv.resize(n * n, None);
+        self.arrivals.resize_with(n_groups, Vec::new);
+        for a in &mut self.arrivals[..n_groups] {
+            a.clear();
+        }
+        self.load.clear();
+        self.runnable.clear();
+        self.blocked.clear();
+        self.blocked.resize(n, false);
+    }
+}
+
 /// Execute one iteration of `prog`, returning the per-device timeline.
 pub fn execute(
     prog: &Program,
@@ -153,8 +253,9 @@ pub fn execute(
     execute_with_base(prog, db, cluster, &base, params)
 }
 
-/// Execute with pre-priced instruction costs (hot path: callers that run
-/// many iterations compute [`BaseCosts`] once).
+/// Execute with pre-priced instruction costs (callers that run many
+/// iterations compute [`BaseCosts`] once). Allocates fresh engine state;
+/// the hot path is [`execute_with_scratch`].
 pub fn execute_with_base(
     prog: &Program,
     db: &EventDb,
@@ -162,49 +263,68 @@ pub fn execute_with_base(
     base: &BaseCosts,
     params: &EngineParams,
 ) -> Timeline {
+    let mut scratch = ExecScratch::new();
+    execute_with_scratch(prog, db, cluster, base, params, &mut scratch)
+}
+
+/// Execute reusing `scratch`'s buffers (zero per-iteration engine-state
+/// allocation once warm). Bit-identical output to [`execute_with_base`]
+/// for the same inputs — the scratch only recycles memory, never state.
+pub fn execute_with_scratch(
+    prog: &Program,
+    db: &EventDb,
+    cluster: &ClusterSpec,
+    base: &BaseCosts,
+    params: &EngineParams,
+    scratch: &mut ExecScratch,
+) -> Timeline {
     let n = prog.n_ranks();
+    scratch.prepare(n, prog.groups.len());
     let mut master_rng = Rng::new(params.seed);
-    let skews: Vec<f64> = {
+    {
         let mut r = master_rng.fork(0xC10C);
-        (0..n)
-            .map(|_| r.normal_ms(0.0, params.clock_skew_us))
-            .collect()
-    };
+        scratch
+            .skews
+            .extend((0..n).map(|_| r.normal_ms(0.0, params.clock_skew_us)));
+    }
+    let skews = &scratch.skews[..];
     let skew0 = skews[0];
 
-    let mut states: Vec<RankState> = (0..n)
-        .map(|r| RankState {
-            pc: 0,
-            clock: 0.0,
-            rng: master_rng.fork(r as u64 + 1),
-        })
-        .collect();
+    let states = &mut scratch.states;
+    for (r, st) in states.iter_mut().enumerate() {
+        st.pc = 0;
+        st.clock = 0.0;
+        st.rng = master_rng.fork(r as u64 + 1);
+    }
     let mut coll_rng = master_rng.fork(0xA11);
 
-    let mut timeline = Timeline::new(n);
-    timeline.spans.reserve(prog.total_instrs());
+    let mut timeline = scratch.spare.take().unwrap_or_default();
+    timeline.reset(n);
+    timeline.reserve(prog.total_instrs());
     // flat (src, dst) channel matrix — n is small (<= a few hundred ranks)
     // and flat indexing beats hashing in the hot loop (§Perf)
-    let mut channels: Vec<Channel> = (0..n * n).map(|_| Channel::default()).collect();
+    let channels = &mut scratch.channels;
     // waiting receivers: [src * n + dst] -> recv post time (dst blocked)
-    let mut waiting_recv: Vec<Option<TimeUs>> = vec![None; n * n];
+    let waiting_recv = &mut scratch.waiting_recv;
     // collective arrivals: members block until the round completes, so at
     // most one round per group is in flight — a per-group vec suffices
-    let mut arrivals: Vec<Vec<(usize, TimeUs)>> = vec![Vec::new(); prog.groups.len()];
-    let mut load = LinkLoad::default();
+    let arrivals = &mut scratch.arrivals;
+    let load = &mut scratch.load;
 
-    let mut runnable: VecDeque<usize> = (0..n).collect();
-    let mut blocked = vec![false; n];
+    let runnable = &mut scratch.runnable;
+    runnable.extend(0..n);
+    let blocked = &mut scratch.blocked;
     let mut done = 0usize;
 
-    let record = |timeline: &mut Timeline, device: usize, start: TimeUs, end: TimeUs, tag: Tag, skew: f64| {
-        timeline.push(Span {
-            device,
-            start: start + skew,
-            end: end + skew,
-            tag,
-        });
-    };
+    let record =
+        |timeline: &mut Timeline, device: usize, start: TimeUs, end: TimeUs, tag: Tag, skew: f64| {
+            timeline.push(Span {
+                device,
+                start: start + skew,
+                end: end + skew,
+                tag,
+            });
+        };
 
     while let Some(r) = runnable.pop_front() {
         if blocked[r] {
@@ -254,10 +374,13 @@ pub fn execute_with_base(
                         let dur = base.per_instr[peer][peer_pc]
                             * contention_factor(active)
                             * coll_rng.jitter(params.jitter_sigma);
-                        load.register(*link, start + dur);
+                        if params.contention {
+                            load.register(*link, start + dur);
+                        }
                         states[peer].clock = start + dur;
                         states[peer].pc += 1;
-                        record(&mut timeline, peer, start, start + dur, recv_tag, skews[peer] - skew0);
+                        let skew = skews[peer] - skew0;
+                        record(&mut timeline, peer, start, start + dur, recv_tag, skew);
                         blocked[peer] = false;
                         runnable.push_back(peer);
                     }
@@ -274,7 +397,9 @@ pub fn execute_with_base(
                         let dur = base.per_instr[r][pc]
                             * contention_factor(active)
                             * coll_rng.jitter(params.jitter_sigma);
-                        load.register(*link, start + dur);
+                        if params.contention {
+                            load.register(*link, start + dur);
+                        }
                         record(&mut timeline, r, start, start + dur, *tag, skews[r] - skew0);
                         states[r].clock = start + dur;
                         states[r].pc += 1;
@@ -288,11 +413,10 @@ pub fn execute_with_base(
                     let gid = *group as usize;
                     arrivals[gid].push((r, states[r].clock));
                     let members = &prog.groups[gid];
-                    let arr = &arrivals[gid];
-                    if arr.len() == members.len() {
+                    if arrivals[gid].len() == members.len() {
                         // barrier complete: price the ring
                         let _ = event;
-                        let start = arr
+                        let start = arrivals[gid]
                             .iter()
                             .map(|&(_, t)| t)
                             .fold(f64::NEG_INFINITY, f64::max);
@@ -303,8 +427,10 @@ pub fn execute_with_base(
                         // jitter. See DESIGN.md.
                         let dur =
                             base.per_instr[r][pc] * coll_rng.jitter(params.jitter_sigma);
-                        let arr = std::mem::take(&mut arrivals[gid]);
-                        for (m, _) in arr {
+                        // drain in place (not mem::take) so the arrival
+                        // buffer's allocation survives for the next round
+                        for k in 0..arrivals[gid].len() {
+                            let (m, _) = arrivals[gid][k];
                             states[m].clock = start + dur;
                             states[m].pc += 1;
                             record(&mut timeline, m, start, start + dur, *tag, skews[m] - skew0);
@@ -313,6 +439,7 @@ pub fn execute_with_base(
                                 runnable.push_back(m);
                             }
                         }
+                        arrivals[gid].clear();
                         // r continues in this loop
                     } else {
                         blocked[r] = true;
@@ -328,6 +455,7 @@ pub fn execute_with_base(
         "deadlock: {} of {} ranks finished (schedule/program bug)",
         done, n
     );
+    timeline.finalize();
     timeline
 }
 
@@ -389,10 +517,33 @@ mod tests {
     fn deterministic_given_seed() {
         let a = run(2, 2, 2, 4, "dapple", &EngineParams::default());
         let b = run(2, 2, 2, 4, "dapple", &EngineParams::default());
-        assert_eq!(a.spans.len(), b.spans.len());
-        for (x, y) in a.spans.iter().zip(&b.spans) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.spans().iter().zip(b.spans()) {
             assert_eq!(x.start, y.start);
             assert_eq!(x.end, y.end);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh_state() {
+        let model = zoo::bert_large();
+        let s = Strategy::new(2, 2, 2);
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let part = partition(&model, &s, &c, 4);
+        let sched = schedule::by_name("dapple", 2, 4).unwrap();
+        let mut db = EventDb::new();
+        let prog = build_programs(&part, &sched, &c, &mut db);
+        let base = BaseCosts::compute(&prog, &db, &c, &CostModel::default());
+        let mut scratch = ExecScratch::new();
+        for seed in [1u64, 2, 3] {
+            let params = EngineParams { seed, ..EngineParams::default() };
+            let fresh = execute_with_base(&prog, &db, &c, &base, &params);
+            let reused = execute_with_scratch(&prog, &db, &c, &base, &params, &mut scratch);
+            assert_eq!(fresh.len(), reused.len(), "seed {seed}");
+            for (x, y) in fresh.spans().iter().zip(reused.spans()) {
+                assert_eq!(x, y, "seed {seed}");
+            }
+            scratch.recycle(reused);
         }
     }
 
@@ -478,7 +629,7 @@ mod tests {
         );
         // rank 0 spans unshifted relative to each other; other devices
         // shift rigidly — span durations must be identical
-        for (a, b) in no_skew.spans.iter().zip(&skewed.spans) {
+        for (a, b) in no_skew.spans().iter().zip(skewed.spans()) {
             assert!((a.dur() - b.dur()).abs() < 1e-9);
         }
     }

@@ -10,7 +10,9 @@
 pub mod des;
 pub mod program;
 
-pub use des::{execute, execute_with_base, BaseCosts, EngineParams};
+pub use des::{
+    execute, execute_with_base, execute_with_scratch, BaseCosts, EngineParams, ExecScratch,
+};
 pub use program::{build_programs, Instr, Program};
 
 use crate::config::RunConfig;
@@ -101,11 +103,37 @@ impl GroundTruth {
         )
     }
 
+    /// One iteration reusing `scratch`'s engine buffers — bit-identical
+    /// to [`GroundTruth::run_iteration`], without the per-call
+    /// allocations. Hand the timeline back via [`ExecScratch::recycle`]
+    /// when done with it to also reuse the span storage.
+    pub fn run_iteration_with_scratch(
+        &self,
+        iter: u64,
+        scratch: &mut ExecScratch,
+    ) -> Timeline {
+        execute_with_scratch(
+            &self.prog,
+            &self.db,
+            &self.cfg.cluster,
+            &self.base,
+            &self.params(self.cfg.seed.wrapping_add(iter)),
+            scratch,
+        )
+    }
+
     /// Batch time averaged over `iters` iterations — what "profile the
-    /// real cluster for 100 iterations" yields in the paper.
+    /// real cluster for 100 iterations" yields in the paper. One scratch
+    /// serves all iterations (zero per-iteration engine allocation).
     pub fn mean_batch_time_us(&self, iters: usize) -> f64 {
+        let mut scratch = ExecScratch::new();
         let times: Vec<f64> = (0..iters)
-            .map(|i| self.run_iteration(i as u64).batch_time_us())
+            .map(|i| {
+                let tl = self.run_iteration_with_scratch(i as u64, &mut scratch);
+                let bt = tl.batch_time_us();
+                scratch.recycle(tl);
+                bt
+            })
             .collect();
         stats::mean(&times)
     }

@@ -4,7 +4,7 @@
 //! runs; the paper's largest median error is 1.71%, MP partner GPUs match,
 //! and the first stage's error is ~0 (it defines the time origin).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::cluster::ClusterSpec;
 use crate::config::RunConfig;
@@ -28,12 +28,17 @@ pub fn run(actual_runs: usize, profile_iters: usize) -> anyhow::Result<Vec<Fig10
     let run = super::eval_cfg(&cfg)?;
 
     // accumulate per-key errors over `actual_runs` independent real runs
-    let mut acc: HashMap<StageKey, Vec<f64>> = HashMap::new();
+    // (BTreeMap: per_stage_error_pct iterates in key order, so the cell
+    // list is identical across runs and usable in golden tests; one
+    // scratch serves every engine run)
+    let mut acc: BTreeMap<StageKey, Vec<f64>> = BTreeMap::new();
+    let mut scratch = crate::engine::ExecScratch::new();
     for i in 0..actual_runs {
-        let actual = run.gt.run_iteration(i as u64);
+        let actual = run.gt.run_iteration_with_scratch(i as u64, &mut scratch);
         for (key, err) in per_stage_error_pct(&run.predicted, &actual) {
             acc.entry(key).or_default().push(err);
         }
+        scratch.recycle(actual);
     }
     let mut cells: Vec<Fig10Cell> = acc
         .into_iter()
@@ -74,7 +79,7 @@ pub fn print(cells: &[Fig10Cell]) {
 
     // MP-partner similarity check (paper: "the error distribution for
     // every two GPUs is generally the same")
-    let mut by_pair: HashMap<(usize, u32, bool), Vec<f64>> = HashMap::new();
+    let mut by_pair: BTreeMap<(usize, u32, bool), Vec<f64>> = BTreeMap::new();
     for c in cells {
         by_pair
             .entry((c.key.device / 2, c.key.mb, c.key.phase_fwd))

@@ -9,10 +9,13 @@
 //!   GPU) start/finish timestamp differences — median over repeated actual
 //!   runs.
 //!
-//! Both timelines are normalized to their first span (the paper uses the
-//! first stage's start as the global standard time) before comparison.
+//! Both timelines are aligned to their first span (the paper uses the
+//! first stage's start as the global standard time) before comparison —
+//! done by subtracting each timeline's cached [`Timeline::start_us`]
+//! in place, never by cloning a shifted copy (§Perf: the sweep compares
+//! hundreds of timelines; whole-timeline clones dominated this path).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::schedule::Phase;
 use crate::timeline::Timeline;
@@ -30,13 +33,13 @@ pub fn batch_time_error_pct(pred: &Timeline, truth: &Timeline) -> f64 {
 /// actual batch time.
 pub fn per_gpu_activity_error_pct(pred: &Timeline, truth: &Timeline) -> Vec<f64> {
     assert_eq!(pred.n_devices, truth.n_devices, "device count mismatch");
-    let p = pred.normalized();
-    let t = truth.normalized();
-    let bt = t.batch_time_us();
-    (0..t.n_devices)
+    let p0 = pred.start_us();
+    let t0 = truth.start_us();
+    let bt = truth.batch_time_us();
+    (0..truth.n_devices)
         .map(|d| {
-            let ps = p.device_comp_spans(d);
-            let ts = t.device_comp_spans(d);
+            let ps = pred.device_comp_spans(d);
+            let ts = truth.device_comp_spans(d);
             assert_eq!(
                 ps.len(),
                 ts.len(),
@@ -49,8 +52,13 @@ pub fn per_gpu_activity_error_pct(pred: &Timeline, truth: &Timeline) -> Vec<f64>
             }
             let biases: Vec<f64> = ps
                 .iter()
-                .zip(&ts)
-                .flat_map(|(a, b)| [(a.start - b.start).abs(), (a.end - b.end).abs()])
+                .zip(ts)
+                .flat_map(|(a, b)| {
+                    [
+                        ((a.start - p0) - (b.start - t0)).abs(),
+                        ((a.end - p0) - (b.end - t0)).abs(),
+                    ]
+                })
                 .collect();
             stats::mean(&biases) / bt * 100.0
         })
@@ -66,10 +74,14 @@ pub struct StageKey {
 }
 
 /// Per-stage timestamps: for each (device, micro-batch, phase), the start
-/// of the first and end of the last computation span of that task.
-pub fn stage_timestamps(t: &Timeline) -> HashMap<StageKey, (f64, f64)> {
-    let t = t.normalized();
-    let mut out: HashMap<StageKey, (f64, f64)> = HashMap::new();
+/// of the first and end of the last computation span of that task, in the
+/// timeline's own aligned clock (first span = 0).
+///
+/// Returns a `BTreeMap` so iteration order is deterministic — fig10 and
+/// table output are stable across runs and usable in golden tests.
+pub fn stage_timestamps(t: &Timeline) -> BTreeMap<StageKey, (f64, f64)> {
+    let t0 = t.start_us();
+    let mut out: BTreeMap<StageKey, (f64, f64)> = BTreeMap::new();
     for d in 0..t.n_devices {
         for s in t.device_comp_spans(d) {
             let key = StageKey {
@@ -78,8 +90,8 @@ pub fn stage_timestamps(t: &Timeline) -> HashMap<StageKey, (f64, f64)> {
                 phase_fwd: s.tag.phase == Phase::Fwd,
             };
             let e = out.entry(key).or_insert((f64::INFINITY, f64::NEG_INFINITY));
-            e.0 = e.0.min(s.start);
-            e.1 = e.1.max(s.end);
+            e.0 = e.0.min(s.start - t0);
+            e.1 = e.1.max(s.end - t0);
         }
     }
     out
@@ -88,12 +100,12 @@ pub fn stage_timestamps(t: &Timeline) -> HashMap<StageKey, (f64, f64)> {
 /// Per-stage error (§5.4): for every (device, mb, phase), the mean of
 /// |Δstart| and |Δend| between prediction and one actual run, as percent
 /// of the actual batch time. Callers aggregate the per-run values into
-/// medians across repeated runs (Fig. 10).
-pub fn per_stage_error_pct(pred: &Timeline, truth: &Timeline) -> HashMap<StageKey, f64> {
+/// medians across repeated runs (Fig. 10). Deterministically ordered.
+pub fn per_stage_error_pct(pred: &Timeline, truth: &Timeline) -> BTreeMap<StageKey, f64> {
     let p = stage_timestamps(pred);
     let t = stage_timestamps(truth);
     let bt = truth.batch_time_us();
-    let mut out = HashMap::new();
+    let mut out = BTreeMap::new();
     for (key, (ts, te)) in &t {
         let Some((ps, pe)) = p.get(key) else { continue };
         let err = ((ps - ts).abs() + (pe - te).abs()) / 2.0 / bt * 100.0;
@@ -128,6 +140,7 @@ mod tests {
         for s in spans {
             t.push(s);
         }
+        t.finalize();
         t
     }
 
@@ -192,6 +205,23 @@ mod tests {
             (0.0, 20.0)
         );
         assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn stage_timestamps_iterate_in_key_order() {
+        let t = tl(
+            vec![
+                mk(1, 0.0, 10.0, 1, true),
+                mk(0, 0.0, 10.0, 0, false),
+                mk(0, 0.0, 10.0, 0, true),
+            ],
+            2,
+        );
+        let keys: Vec<StageKey> = stage_timestamps(&t).into_keys().collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "BTreeMap must iterate in key order");
+        assert_eq!(keys.len(), 3);
     }
 
     #[test]

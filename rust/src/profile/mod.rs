@@ -192,11 +192,15 @@ fn run_micro(
     device: usize,
     kind: SpanKind,
 ) -> f64 {
-    // price the micro-program once; only jitter varies across iterations
+    // price the micro-program once; only jitter varies across iterations,
+    // and one scratch serves all of them (the paper's protocol runs ~100
+    // iterations per event — per-iteration engine allocation was pure
+    // allocator churn across a sweep)
     let base = crate::engine::BaseCosts::compute(prog, db, slice, cost);
+    let mut scratch = crate::engine::ExecScratch::new();
     let samples: Vec<f64> = (0..iters)
         .map(|i| {
-            let tl = crate::engine::execute_with_base(
+            let tl = crate::engine::execute_with_scratch(
                 prog,
                 db,
                 slice,
@@ -207,12 +211,16 @@ fn run_micro(
                     contention: false,
                     seed: seed ^ (0x9E37 + i as u64),
                 },
+                &mut scratch,
             );
-            tl.spans
+            let dur = tl
+                .device_spans(device)
                 .iter()
-                .find(|s| s.device == device && s.tag.kind == kind)
+                .find(|s| s.tag.kind == kind)
                 .map(|s| s.dur())
-                .expect("profiling program produced no span")
+                .expect("profiling program produced no span");
+            scratch.recycle(tl);
+            dur
         })
         .collect();
     stats::mean(&samples)

@@ -12,7 +12,12 @@
 //! are indexed up front and results land by index; every profiled cost
 //! depends only on the event descriptor + profiling protocol; cache
 //! totals are summed in sorted-key order. Only `timing` carries wall-clock
-//! (inherently non-deterministic) data.
+//! (inherently non-deterministic) data. The indexed columnar [`Timeline`]
+//! and the engine's `ExecScratch` reuse (ISSUE 2) change only where bytes
+//! live, never a float operation or an RNG draw, so this contract holds
+//! unchanged — `tests/search_engine.rs` pins it.
+//!
+//! [`Timeline`]: crate::timeline::Timeline
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

@@ -2,6 +2,8 @@
 //! set): generate seeded random cases, shrink is traded for printing the
 //! failing seed so cases replay deterministically.
 
+pub mod naive;
+
 use crate::util::Rng;
 
 /// Run `f` on `cases` seeded RNG streams; panics with the failing seed.

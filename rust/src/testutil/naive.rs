@@ -1,0 +1,191 @@
+//! Naive reference implementations of the [`Timeline`] queries and the
+//! metrics built on them — the seed's filter/clone/sort semantics, kept
+//! as an executable specification.
+//!
+//! The indexed columnar [`Timeline`] must yield **byte-identical** values
+//! to these (same float operations in the same order), which the golden
+//! suite in `tests/timeline_golden.rs` and the engine bench assert. Never
+//! call these on a hot path; that is the point of them.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::StageKey;
+use crate::schedule::Phase;
+use crate::timeline::{Span, SpanKind, Timeline};
+use crate::util::{stats, TimeUs};
+
+/// Earliest span start by full rescan.
+pub fn start_us(t: &Timeline) -> TimeUs {
+    if t.is_empty() {
+        return 0.0;
+    }
+    t.spans()
+        .iter()
+        .map(|s| s.start)
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Batch time by full rescan: last end minus first start.
+pub fn batch_time_us(t: &Timeline) -> TimeUs {
+    if t.is_empty() {
+        return 0.0;
+    }
+    let end = t
+        .spans()
+        .iter()
+        .map(|s| s.end)
+        .fold(f64::NEG_INFINITY, f64::max);
+    end - start_us(t)
+}
+
+/// One device's spans by filter + stable sort (the seed's query).
+pub fn device_spans(t: &Timeline, device: usize) -> Vec<Span> {
+    let mut v: Vec<Span> = t
+        .spans()
+        .iter()
+        .copied()
+        .filter(|s| s.device == device)
+        .collect();
+    v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+    v
+}
+
+/// One device's computation spans, via [`device_spans`].
+pub fn device_comp_spans(t: &Timeline, device: usize) -> Vec<Span> {
+    device_spans(t, device)
+        .into_iter()
+        .filter(|s| s.tag.kind == SpanKind::Comp)
+        .collect()
+}
+
+/// Busy time by rescan, summed in start order.
+pub fn busy_us(t: &Timeline, device: usize) -> TimeUs {
+    device_spans(t, device).iter().map(Span::dur).sum()
+}
+
+/// A whole-timeline shifted copy (the seed's `normalized()`), as bare
+/// span lists per device.
+fn normalized_comp_spans(t: &Timeline) -> Vec<Vec<Span>> {
+    let t0 = start_us(t);
+    (0..t.n_devices)
+        .map(|d| {
+            device_comp_spans(t, d)
+                .into_iter()
+                .map(|s| Span {
+                    start: s.start - t0,
+                    end: s.end - t0,
+                    ..s
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The seed's per-GPU activity error: normalize both timelines (clone +
+/// shift), align compute spans by order, average |Δstart| and |Δend|.
+pub fn per_gpu_activity_error_pct(pred: &Timeline, truth: &Timeline) -> Vec<f64> {
+    assert_eq!(pred.n_devices, truth.n_devices, "device count mismatch");
+    let p = normalized_comp_spans(pred);
+    let t = normalized_comp_spans(truth);
+    let bt = batch_time_us(truth);
+    (0..truth.n_devices)
+        .map(|d| {
+            let (ps, ts) = (&p[d], &t[d]);
+            assert_eq!(ps.len(), ts.len(), "device {d}: span count mismatch");
+            if ts.is_empty() || bt == 0.0 {
+                return 0.0;
+            }
+            let biases: Vec<f64> = ps
+                .iter()
+                .zip(ts)
+                .flat_map(|(a, b)| [(a.start - b.start).abs(), (a.end - b.end).abs()])
+                .collect();
+            stats::mean(&biases) / bt * 100.0
+        })
+        .collect()
+}
+
+/// The seed's stage timestamps: normalized clone, then min-start /
+/// max-end per (device, micro-batch, phase) over compute spans.
+pub fn stage_timestamps(t: &Timeline) -> BTreeMap<StageKey, (f64, f64)> {
+    let mut out: BTreeMap<StageKey, (f64, f64)> = BTreeMap::new();
+    for (d, lane) in normalized_comp_spans(t).iter().enumerate() {
+        for s in lane {
+            let key = StageKey {
+                device: d,
+                mb: s.tag.mb,
+                phase_fwd: s.tag.phase == Phase::Fwd,
+            };
+            let e = out.entry(key).or_insert((f64::INFINITY, f64::NEG_INFINITY));
+            e.0 = e.0.min(s.start);
+            e.1 = e.1.max(s.end);
+        }
+    }
+    out
+}
+
+/// The seed's bubble ratio: idle gaps by rescan, over devices x batch time.
+pub fn bubble_ratio(t: &Timeline) -> f64 {
+    let bt = batch_time_us(t);
+    if bt == 0.0 || t.n_devices == 0 {
+        return 0.0;
+    }
+    let t0 = start_us(t);
+    // exact max end by rescan — NOT t0 + bt, which round-trips through
+    // two subtract/add roundings and can miss the true end by an ulp
+    let t1 = t
+        .spans()
+        .iter()
+        .map(|s| s.end)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut idle: TimeUs = 0.0;
+    for d in 0..t.n_devices {
+        let mut cursor = t0;
+        for s in device_spans(t, d) {
+            if s.start - cursor > 0.0 {
+                idle += s.start - cursor;
+            }
+            cursor = cursor.max(s.end);
+        }
+        if t1 - cursor > 0.0 {
+            idle += t1 - cursor;
+        }
+    }
+    idle / (bt * t.n_devices as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timeline::Tag;
+
+    fn tl() -> Timeline {
+        let mut t = Timeline::new(2);
+        let tag = Tag {
+            stage: 0,
+            mb: 0,
+            phase: Phase::Fwd,
+            layer: 0,
+            kind: SpanKind::Comp,
+            idx: 0,
+        };
+        t.push(Span { device: 1, start: 20.0, end: 30.0, tag });
+        t.push(Span { device: 0, start: 5.0, end: 10.0, tag });
+        t.push(Span { device: 1, start: 10.0, end: 20.0, tag });
+        t.finalize();
+        t
+    }
+
+    #[test]
+    fn naive_matches_indexed_on_a_hand_case() {
+        let t = tl();
+        assert_eq!(batch_time_us(&t), t.batch_time_us());
+        assert_eq!(start_us(&t), t.start_us());
+        for d in 0..t.n_devices {
+            assert_eq!(device_spans(&t, d), t.device_spans(d).to_vec());
+            assert_eq!(busy_us(&t, d), t.busy_us(d));
+        }
+        assert_eq!(stage_timestamps(&t), crate::metrics::stage_timestamps(&t));
+        assert_eq!(bubble_ratio(&t), crate::timeline::analysis::bubble_ratio(&t));
+    }
+}

@@ -24,19 +24,15 @@ impl Bubble {
 /// the whole step (leading/trailing idle included).
 pub fn bubbles(t: &Timeline, min_us: TimeUs) -> Vec<Bubble> {
     let mut out = Vec::new();
-    if t.spans.is_empty() {
+    if t.is_empty() {
         return out;
     }
-    let t0 = t.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
-    let t1 = t
-        .spans
-        .iter()
-        .map(|s| s.end)
-        .fold(f64::NEG_INFINITY, f64::max);
+    let t0 = t.start_us();
+    let t1 = t.end_us();
     for d in 0..t.n_devices {
         let spans = t.device_spans(d);
         let mut cursor = t0;
-        for s in &spans {
+        for s in spans {
             if s.start - cursor > min_us {
                 out.push(Bubble {
                     device: d,
@@ -100,6 +96,7 @@ mod tests {
         t.push(Span { device: 0, start: 0.0, end: 10.0, tag });
         t.push(Span { device: 0, start: 20.0, end: 30.0, tag });
         t.push(Span { device: 1, start: 0.0, end: 30.0, tag });
+        t.finalize();
         t
     }
 

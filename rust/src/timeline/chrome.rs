@@ -9,7 +9,7 @@ use crate::config::Json;
 
 /// Render a timeline as a Chrome-trace JSON string.
 pub fn to_chrome_trace(t: &Timeline) -> String {
-    let mut events = Vec::with_capacity(t.spans.len() + t.n_devices);
+    let mut events = Vec::with_capacity(t.len() + t.n_devices);
     for d in 0..t.n_devices {
         events.push(Json::obj(vec![
             ("name", Json::str("thread_name")),
@@ -22,7 +22,7 @@ pub fn to_chrome_trace(t: &Timeline) -> String {
             ),
         ]));
     }
-    for s in &t.spans {
+    for s in t.spans() {
         events.push(Json::obj(vec![
             ("name", Json::str(s.tag.label())),
             ("cat", Json::str(kind_category(s.tag.kind))),

@@ -6,6 +6,22 @@
 //! this same structure, so the metrics layer can align spans one-to-one
 //! and compute the paper's three error families (batch time, per-GPU
 //! activity, per-stage timestamps).
+//!
+//! The store is **build-then-finalize columnar**: producers [`push`]
+//! spans in any order, then call [`Timeline::finalize`], which lays the
+//! spans out device-major (a stable counting sort into a per-device
+//! offset index) and caches the global start/end extremes and per-device
+//! busy totals. After finalize, [`device_spans`]/[`device_comp_spans`]
+//! are borrowed slices and [`batch_time_us`]/[`busy_us`]/[`utilization`]
+//! are O(1) — a sweep compares hundreds of candidate timelines, so these
+//! queries are the metric-side hot path (§Perf).
+//!
+//! [`push`]: Timeline::push
+//! [`device_spans`]: Timeline::device_spans
+//! [`device_comp_spans`]: Timeline::device_comp_spans
+//! [`batch_time_us`]: Timeline::batch_time_us
+//! [`busy_us`]: Timeline::busy_us
+//! [`utilization`]: Timeline::utilization
 
 pub mod analysis;
 pub mod chrome;
@@ -86,10 +102,36 @@ impl Span {
 }
 
 /// A complete step timeline over all devices.
-#[derive(Debug, Clone, Default)]
+///
+/// Lifecycle: [`Timeline::new`] → [`Timeline::push`]* →
+/// [`Timeline::finalize`] → queries. An empty timeline counts as
+/// finalized; pushing marks it un-finalized again. Queries on an
+/// un-finalized timeline panic rather than silently rescanning.
+#[derive(Debug, Clone)]
 pub struct Timeline {
     pub n_devices: usize,
-    pub spans: Vec<Span>,
+    /// Device-major after finalize; insertion order before.
+    spans: Vec<Span>,
+    finalized: bool,
+    /// `offsets[d]..offsets[d+1]` is device d's slice of `spans`.
+    offsets: Vec<usize>,
+    /// Computation spans only, device-major (the per-GPU activity metric
+    /// aligns these; kept contiguous so the accessor is a borrowed slice).
+    comp: Vec<Span>,
+    comp_offsets: Vec<usize>,
+    /// Per-device busy totals (sum of span durations).
+    busy: Vec<TimeUs>,
+    /// Global earliest start / latest end.
+    t0: TimeUs,
+    t1: TimeUs,
+    /// Counting-sort staging buffer, recycled across finalizes.
+    sort_buf: Vec<Span>,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Timeline::new(0)
+    }
 }
 
 impl Timeline {
@@ -97,60 +139,200 @@ impl Timeline {
         Timeline {
             n_devices,
             spans: Vec::new(),
+            finalized: true, // empty is trivially indexed
+            offsets: Vec::new(),
+            comp: Vec::new(),
+            comp_offsets: Vec::new(),
+            busy: Vec::new(),
+            t0: 0.0,
+            t1: 0.0,
+            sort_buf: Vec::new(),
         }
+    }
+
+    /// A builder pre-sized for `cap` spans (producers know their
+    /// instruction counts up front).
+    pub fn with_capacity(n_devices: usize, cap: usize) -> Self {
+        let mut t = Timeline::new(n_devices);
+        t.spans.reserve(cap);
+        t
+    }
+
+    /// Clear all contents for reuse, keeping every allocation (the
+    /// engine's scratch path recycles timelines across iterations).
+    pub fn reset(&mut self, n_devices: usize) {
+        self.n_devices = n_devices;
+        self.spans.clear();
+        self.finalized = true;
+        self.offsets.clear();
+        self.comp.clear();
+        self.comp_offsets.clear();
+        self.busy.clear();
+        self.t0 = 0.0;
+        self.t1 = 0.0;
+    }
+
+    /// Reserve room for `additional` more spans.
+    pub fn reserve(&mut self, additional: usize) {
+        self.spans.reserve(additional);
     }
 
     pub fn push(&mut self, span: Span) {
         debug_assert!(span.end >= span.start, "negative span {span:?}");
         debug_assert!(span.device < self.n_devices);
+        self.finalized = false;
         self.spans.push(span);
     }
 
-    /// Iteration (batch) time: last end minus first start.
+    /// Index the spans: device-major layout, per-device start order,
+    /// cached extremes and busy totals. Idempotent; O(S) when producers
+    /// already emit per-device start-sorted spans (all of ours do —
+    /// per-rank clocks are monotone), O(S log S) worst case.
+    pub fn finalize(&mut self) {
+        if self.finalized {
+            return;
+        }
+        if self.spans.is_empty() {
+            self.finalized = true;
+            return;
+        }
+        let n = self.n_devices;
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        for s in &self.spans {
+            self.offsets[s.device + 1] += 1;
+        }
+        for d in 0..n {
+            self.offsets[d + 1] += self.offsets[d];
+        }
+        // stable counting sort by device into the staging buffer
+        // (preserves insertion order within a device, like the old
+        // filter-then-stable-sort query path)
+        self.comp_offsets.clear(); // reused as per-device write cursors
+        self.comp_offsets.extend_from_slice(&self.offsets[..n]);
+        self.sort_buf.clear();
+        self.sort_buf.resize(self.spans.len(), self.spans[0]);
+        for &s in &self.spans {
+            let cursor = &mut self.comp_offsets[s.device];
+            self.sort_buf[*cursor] = s;
+            *cursor += 1;
+        }
+        std::mem::swap(&mut self.spans, &mut self.sort_buf);
+        self.sort_buf.clear();
+
+        // per-device: ensure start order, then one pass for the caches
+        self.busy.clear();
+        self.busy.resize(n, 0.0);
+        self.comp.clear();
+        self.comp_offsets.clear();
+        self.comp_offsets.push(0);
+        let mut t0 = f64::INFINITY;
+        let mut t1 = f64::NEG_INFINITY;
+        for d in 0..n {
+            let (lo, hi) = (self.offsets[d], self.offsets[d + 1]);
+            let lane = &mut self.spans[lo..hi];
+            if lane.windows(2).any(|w| w[1].start < w[0].start) {
+                lane.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
+            }
+            for s in &self.spans[lo..hi] {
+                self.busy[d] += s.dur();
+                t0 = t0.min(s.start);
+                t1 = t1.max(s.end);
+                if s.tag.kind == SpanKind::Comp {
+                    self.comp.push(*s);
+                }
+            }
+            self.comp_offsets.push(self.comp.len());
+        }
+        self.t0 = t0;
+        self.t1 = t1;
+        self.finalized = true;
+    }
+
+    #[inline]
+    fn assert_finalized(&self) {
+        assert!(
+            self.finalized,
+            "Timeline queried before finalize(); call finalize() after the last push"
+        );
+    }
+
+    /// All spans, as raw storage: device-major after finalize, insertion
+    /// order before. Deliberately exempt from the finalize contract —
+    /// exporters (chrome traces) and the naive reference semantics read
+    /// the bag of spans without needing the index.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Earliest span start (the paper's global standard time origin).
+    /// O(1) after finalize.
+    pub fn start_us(&self) -> TimeUs {
+        self.assert_finalized();
+        if self.spans.is_empty() {
+            0.0
+        } else {
+            self.t0
+        }
+    }
+
+    /// Latest span end. O(1) after finalize.
+    pub fn end_us(&self) -> TimeUs {
+        self.assert_finalized();
+        if self.spans.is_empty() {
+            0.0
+        } else {
+            self.t1
+        }
+    }
+
+    /// Iteration (batch) time: last end minus first start. O(1).
     pub fn batch_time_us(&self) -> TimeUs {
+        self.assert_finalized();
         if self.spans.is_empty() {
             return 0.0;
         }
-        let start = self.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
-        let end = self
-            .spans
-            .iter()
-            .map(|s| s.end)
-            .fold(f64::NEG_INFINITY, f64::max);
-        end - start
+        self.t1 - self.t0
     }
 
-    /// All spans of one device, in start order.
-    pub fn device_spans(&self, device: usize) -> Vec<Span> {
-        let mut v: Vec<Span> = self
-            .spans
-            .iter()
-            .copied()
-            .filter(|s| s.device == device)
-            .collect();
-        v.sort_by(|a, b| a.start.partial_cmp(&b.start).unwrap());
-        v
+    /// All spans of one device, in start order — a borrowed slice into
+    /// the columnar store (no clone, no re-sort).
+    pub fn device_spans(&self, device: usize) -> &[Span] {
+        self.assert_finalized();
+        if self.spans.is_empty() {
+            return &[];
+        }
+        &self.spans[self.offsets[device]..self.offsets[device + 1]]
     }
 
     /// Compute spans of one device, in start order (the paper's per-GPU
-    /// activity metric aligns these).
-    pub fn device_comp_spans(&self, device: usize) -> Vec<Span> {
-        self.device_spans(device)
-            .into_iter()
-            .filter(|s| s.tag.kind == SpanKind::Comp)
-            .collect()
+    /// activity metric aligns these) — a borrowed slice.
+    pub fn device_comp_spans(&self, device: usize) -> &[Span] {
+        self.assert_finalized();
+        if self.spans.is_empty() {
+            return &[];
+        }
+        &self.comp[self.comp_offsets[device]..self.comp_offsets[device + 1]]
     }
 
-    /// Busy time (sum of span durations) of a device.
+    /// Busy time (sum of span durations) of a device. O(1).
     pub fn busy_us(&self, device: usize) -> TimeUs {
-        self.spans
-            .iter()
-            .filter(|s| s.device == device)
-            .map(Span::dur)
-            .sum()
+        self.assert_finalized();
+        if self.spans.is_empty() {
+            return 0.0;
+        }
+        self.busy[device]
     }
 
-    /// Device utilization = busy / batch time.
+    /// Device utilization = busy / batch time. O(1).
     pub fn utilization(&self, device: usize) -> f64 {
         let bt = self.batch_time_us();
         if bt == 0.0 {
@@ -160,24 +342,36 @@ impl Timeline {
     }
 
     /// Shift all spans so the earliest start is 0 (the paper aligns both
-    /// timelines to the first stage's start before comparing).
+    /// timelines to the first stage's start before comparing). The
+    /// metrics layer no longer needs this — it subtracts [`start_us`]
+    /// in place — but exporters still align traces with it.
+    ///
+    /// [`start_us`]: Timeline::start_us
     pub fn normalized(&self) -> Timeline {
-        if self.spans.is_empty() {
-            return self.clone();
+        self.assert_finalized();
+        let mut t = self.clone();
+        if t.spans.is_empty() {
+            return t;
         }
-        let t0 = self.spans.iter().map(|s| s.start).fold(f64::INFINITY, f64::min);
-        Timeline {
-            n_devices: self.n_devices,
-            spans: self
-                .spans
-                .iter()
-                .map(|s| Span {
-                    start: s.start - t0,
-                    end: s.end - t0,
-                    ..*s
-                })
-                .collect(),
+        let t0 = t.t0;
+        for s in &mut t.spans {
+            s.start -= t0;
+            s.end -= t0;
         }
+        for s in &mut t.comp {
+            s.start -= t0;
+            s.end -= t0;
+        }
+        t.t1 -= t0;
+        t.t0 = 0.0;
+        // re-derive busy from the shifted spans: (end - t0) - (start - t0)
+        // can differ from (end - start) at ulp level, and the cache must
+        // stay coherent with what a rescan of the spans would yield
+        for d in 0..t.n_devices {
+            let (lo, hi) = (t.offsets[d], t.offsets[d + 1]);
+            t.busy[d] = t.spans[lo..hi].iter().map(Span::dur).sum();
+        }
+        t
     }
 }
 
@@ -207,7 +401,10 @@ mod tests {
         t.push(span(0, 10.0, 20.0, SpanKind::Comp));
         t.push(span(1, 5.0, 12.0, SpanKind::Comp));
         t.push(span(1, 30.0, 45.0, SpanKind::P2p));
+        t.finalize();
         assert_eq!(t.batch_time_us(), 40.0);
+        assert_eq!(t.start_us(), 5.0);
+        assert_eq!(t.end_us(), 45.0);
     }
 
     #[test]
@@ -217,6 +414,7 @@ mod tests {
         t.push(span(0, 0.0, 5.0, SpanKind::Comp));
         t.push(span(0, 10.0, 15.0, SpanKind::P2p));
         t.push(span(1, 0.0, 1.0, SpanKind::Comp));
+        t.finalize();
         let d0 = t.device_spans(0);
         assert_eq!(d0.len(), 3);
         assert!(d0.windows(2).all(|w| w[0].start <= w[1].start));
@@ -224,10 +422,26 @@ mod tests {
     }
 
     #[test]
+    fn device_ranges_partition_the_span_set() {
+        let mut t = Timeline::new(3);
+        t.push(span(2, 0.0, 1.0, SpanKind::Comp));
+        t.push(span(0, 3.0, 4.0, SpanKind::P2p));
+        t.push(span(2, 1.0, 2.0, SpanKind::Comp));
+        t.finalize();
+        let total: usize = (0..3).map(|d| t.device_spans(d).len()).sum();
+        assert_eq!(total, t.len());
+        for d in 0..3 {
+            assert!(t.device_spans(d).iter().all(|s| s.device == d));
+        }
+        assert!(t.device_spans(1).is_empty());
+    }
+
+    #[test]
     fn utilization_bounded() {
         let mut t = Timeline::new(2);
         t.push(span(0, 0.0, 100.0, SpanKind::Comp));
         t.push(span(1, 0.0, 25.0, SpanKind::Comp));
+        t.finalize();
         assert!((t.utilization(0) - 1.0).abs() < 1e-12);
         assert!((t.utilization(1) - 0.25).abs() < 1e-12);
     }
@@ -236,9 +450,11 @@ mod tests {
     fn normalized_starts_at_zero() {
         let mut t = Timeline::new(1);
         t.push(span(0, 100.0, 110.0, SpanKind::Comp));
+        t.finalize();
         let n = t.normalized();
-        assert_eq!(n.spans[0].start, 0.0);
+        assert_eq!(n.spans()[0].start, 0.0);
         assert_eq!(n.batch_time_us(), t.batch_time_us());
+        assert_eq!(n.device_comp_spans(0)[0].start, 0.0);
     }
 
     #[test]
@@ -246,5 +462,39 @@ mod tests {
         let t = Timeline::new(4);
         assert_eq!(t.batch_time_us(), 0.0);
         assert_eq!(t.utilization(0), 0.0);
+        assert!(t.device_spans(2).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "before finalize")]
+    fn querying_unfinalized_timeline_panics() {
+        let mut t = Timeline::new(1);
+        t.push(span(0, 0.0, 1.0, SpanKind::Comp));
+        let _ = t.batch_time_us();
+    }
+
+    #[test]
+    fn push_after_finalize_definalizes() {
+        let mut t = Timeline::new(1);
+        t.push(span(0, 0.0, 1.0, SpanKind::Comp));
+        t.finalize();
+        t.push(span(0, 1.0, 3.0, SpanKind::Comp));
+        t.finalize();
+        assert_eq!(t.batch_time_us(), 3.0);
+        assert_eq!(t.busy_us(0), 3.0);
+    }
+
+    #[test]
+    fn reset_reuses_allocations() {
+        let mut t = Timeline::new(2);
+        t.push(span(0, 0.0, 1.0, SpanKind::Comp));
+        t.finalize();
+        t.reset(3);
+        assert!(t.is_empty());
+        assert_eq!(t.n_devices, 3);
+        t.push(span(2, 5.0, 6.0, SpanKind::Comp));
+        t.finalize();
+        assert_eq!(t.batch_time_us(), 1.0);
+        assert_eq!(t.device_spans(2).len(), 1);
     }
 }

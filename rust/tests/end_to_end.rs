@@ -86,7 +86,7 @@ fn span_counts_match_between_model_and_engine() {
         let p = run.predicted.device_comp_spans(d);
         let t = actual.device_comp_spans(d);
         assert_eq!(p.len(), t.len(), "device {d}");
-        for (x, y) in p.iter().zip(&t) {
+        for (x, y) in p.iter().zip(t) {
             assert_eq!(x.tag, y.tag, "device {d}");
         }
     }

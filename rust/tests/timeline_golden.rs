@@ -1,0 +1,168 @@
+//! Golden equivalence suite for the columnar indexed Timeline and the
+//! scratch-reuse engine path (ISSUE 2).
+//!
+//! The indexed store must yield **byte-identical** metric values (batch
+//! time, per-GPU activity error, stage timestamps, bubble ratio) to the
+//! seed's naive filter/clone/sort reference (`testutil::naive`) on
+//! randomized hybrid configs, and the per-device ranges must exactly
+//! partition the span set. Equality below is `==` on f64, deliberately:
+//! the refactor reorders storage, not arithmetic.
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::engine::{ExecScratch, GroundTruth};
+use distsim::exp::eval_cfg;
+use distsim::metrics;
+use distsim::schedule::Phase;
+use distsim::strategy::Strategy;
+use distsim::testutil::{self, naive};
+use distsim::timeline::{analysis, Span, SpanKind, Tag, Timeline};
+
+/// Assert every indexed query equals its naive reference on `t`.
+fn assert_indexed_matches_naive(t: &Timeline, ctx: &str) {
+    assert_eq!(t.batch_time_us(), naive::batch_time_us(t), "{ctx}: batch time");
+    assert_eq!(t.start_us(), naive::start_us(t), "{ctx}: start");
+    for d in 0..t.n_devices {
+        assert_eq!(
+            t.device_spans(d),
+            naive::device_spans(t, d).as_slice(),
+            "{ctx}: device {d} spans"
+        );
+        assert_eq!(
+            t.device_comp_spans(d),
+            naive::device_comp_spans(t, d).as_slice(),
+            "{ctx}: device {d} comp spans"
+        );
+        assert_eq!(t.busy_us(d), naive::busy_us(t, d), "{ctx}: device {d} busy");
+    }
+    assert_eq!(
+        metrics::stage_timestamps(t),
+        naive::stage_timestamps(t),
+        "{ctx}: stage timestamps"
+    );
+    assert_eq!(
+        analysis::bubble_ratio(t),
+        naive::bubble_ratio(t),
+        "{ctx}: bubble ratio"
+    );
+}
+
+#[test]
+fn golden_metrics_match_naive_reference_on_random_hybrids() {
+    testutil::check("timeline-golden", 8, |rng| {
+        let mp = 1 << rng.below(2); // 1,2
+        let pp = 1 << rng.below(3); // 1,2,4
+        let dp = 1 << rng.below(2); // 1,2
+        let sched = *testutil::pick(rng, &["gpipe", "dapple"]);
+        let mut cfg = RunConfig::new(
+            "bert-large",
+            Strategy::new(mp, pp, dp),
+            ClusterSpec::a40_cluster(4, 4),
+        );
+        cfg.schedule = sched.to_string();
+        cfg.micro_batches = 1 + rng.below(4) as usize;
+        cfg.profile_iters = 3;
+        cfg.seed = rng.next_u64();
+        let run = eval_cfg(&cfg).unwrap();
+        let actual = run.gt.run_iteration(0);
+        let ctx = format!("{mp}M{pp}P{dp}D {sched}");
+
+        assert_indexed_matches_naive(&actual, &format!("{ctx} actual"));
+        assert_indexed_matches_naive(&run.predicted, &format!("{ctx} predicted"));
+
+        // the cross-timeline metrics, indexed vs seed-semantics reference
+        assert_eq!(
+            metrics::per_gpu_activity_error_pct(&run.predicted, &actual),
+            naive::per_gpu_activity_error_pct(&run.predicted, &actual),
+            "{ctx}: per-GPU activity error"
+        );
+    });
+}
+
+#[test]
+fn per_device_ranges_exactly_partition_randomized_span_sets() {
+    testutil::check("range-partition", 50, |rng| {
+        let n = 1 + rng.below(6) as usize;
+        let count = rng.below(64) as usize;
+        let mut pushed = Vec::with_capacity(count);
+        let mut t = Timeline::new(n);
+        for i in 0..count {
+            let device = rng.below(n as u64) as usize;
+            let start = rng.f64() * 1000.0;
+            let span = Span {
+                device,
+                start,
+                end: start + rng.f64() * 50.0,
+                tag: Tag {
+                    stage: 0,
+                    mb: i as u32, // unique id so the multiset check is exact
+                    phase: Phase::Fwd,
+                    layer: 0,
+                    kind: if rng.f64() < 0.5 { SpanKind::Comp } else { SpanKind::P2p },
+                    idx: 0,
+                },
+            };
+            pushed.push(span);
+            t.push(span);
+        }
+        t.finalize();
+
+        // the ranges cover every span exactly once...
+        let total: usize = (0..n).map(|d| t.device_spans(d).len()).sum();
+        assert_eq!(total, t.len());
+        assert_eq!(t.len(), pushed.len());
+        // ...each range holds only its own device, in start order...
+        for d in 0..n {
+            let lane = t.device_spans(d);
+            assert!(lane.iter().all(|s| s.device == d), "foreign span in lane {d}");
+            assert!(
+                lane.windows(2).all(|w| w[0].start <= w[1].start),
+                "lane {d} unsorted"
+            );
+        }
+        // ...and their union is the pushed multiset (mb is unique per span)
+        let mut got: Vec<Span> = (0..n).flat_map(|d| t.device_spans(d).to_vec()).collect();
+        got.sort_by_key(|s| s.tag.mb);
+        let mut want = pushed.clone();
+        want.sort_by_key(|s| s.tag.mb);
+        assert_eq!(got, want);
+    });
+}
+
+#[test]
+fn scratch_path_is_bit_identical_to_fresh_path_over_iterations() {
+    let cfg = RunConfig::new(
+        "bert-large",
+        Strategy::new(2, 2, 2),
+        ClusterSpec::a40_cluster(4, 4),
+    );
+    let gt = GroundTruth::prepare(&cfg).unwrap();
+    let mut scratch = ExecScratch::new();
+    for iter in 0..5u64 {
+        let fresh = gt.run_iteration(iter);
+        let reused = gt.run_iteration_with_scratch(iter, &mut scratch);
+        assert_eq!(fresh.len(), reused.len(), "iter {iter}");
+        assert_eq!(fresh.spans(), reused.spans(), "iter {iter}");
+        assert_eq!(fresh.batch_time_us(), reused.batch_time_us(), "iter {iter}");
+        scratch.recycle(reused);
+    }
+}
+
+#[test]
+fn scratch_survives_program_shape_changes() {
+    // one scratch reused across different (mp, pp, dp) programs — the
+    // sweep's usage pattern — must still match the fresh path exactly
+    let mut scratch = ExecScratch::new();
+    for (mp, pp, dp) in [(2, 2, 2), (1, 4, 2), (4, 1, 1), (1, 1, 4), (2, 4, 2)] {
+        let cfg = RunConfig::new(
+            "bert-large",
+            Strategy::new(mp, pp, dp),
+            ClusterSpec::a40_cluster(4, 4),
+        );
+        let gt = GroundTruth::prepare(&cfg).unwrap();
+        let fresh = gt.run_iteration(0);
+        let reused = gt.run_iteration_with_scratch(0, &mut scratch);
+        assert_eq!(fresh.spans(), reused.spans(), "{mp}M{pp}P{dp}D");
+        scratch.recycle(reused);
+    }
+}

@@ -13,3 +13,16 @@ if cargo fmt --version >/dev/null 2>&1; then
 else
     echo "cargo fmt unavailable; skipping format check"
 fi
+
+# smoke: one what-if request piped through the service daemon must come
+# back as a well-formed ok-response line
+SMOKE_REQ='{"id":"smoke","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1}}'
+SMOKE_OUT=$(printf '%s\n' "$SMOKE_REQ" | ./target/release/distsim serve --stdio --workers 2)
+printf '%s' "$SMOKE_OUT" | grep -q '"ok":true' || {
+    echo "service smoke test failed: $SMOKE_OUT" >&2
+    exit 1
+}
+if command -v python3 >/dev/null 2>&1; then
+    printf '%s' "$SMOKE_OUT" | python3 -c 'import json,sys; json.loads(sys.stdin.read())'
+fi
+echo "service smoke test passed"

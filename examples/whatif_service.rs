@@ -1,0 +1,96 @@
+//! The what-if sweep service, end to end and in-process:
+//!
+//! ```bash
+//! cargo run --release --offline --example whatif_service
+//! ```
+//!
+//! Simulates two daemon "sessions" against one snapshot directory. The
+//! first session answers three what-if queries cold (profiling as it
+//! goes, sharing measurements across requests through the fingerprint
+//! cache registry) and persists its profile cache on shutdown; the second
+//! session — a restarted daemon — answers the same headline query with a
+//! 100% cache hit rate and zero GPU-seconds of profiling, returning the
+//! byte-identical candidate ranking.
+
+use std::io::Cursor;
+
+use distsim::config::Json;
+use distsim::service::{serve_ndjson, ServeOpts};
+
+fn sweep_line(id: &str, model: &str, batch: usize) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"{model}","cluster":{{"preset":"a10","nodes":4,"gpus_per_node":4}},"sweep":{{"global_batch":{batch},"profile_iters":5}}}}"#
+    )
+}
+
+fn show(tag: &str, line: &str) {
+    let j = Json::parse(line).expect("service responses parse");
+    let result = j.get("result").expect("ok response");
+    let best = result.get("best").expect("a deployable candidate");
+    let cache = result.get("cache").unwrap();
+    println!(
+        "  [{tag}] {}: best {} @ {:.3} it/s | speedup {:.2}x | cache {} hits / {} misses ({:.0}% hit rate, {:.2} gpu-s)",
+        j.get("id").and_then(Json::as_str).unwrap_or("?"),
+        best.get("strategy").and_then(Json::as_str).unwrap_or("?"),
+        best.get("throughput").and_then(Json::as_f64).unwrap_or(0.0),
+        result.get("speedup").and_then(Json::as_f64).unwrap_or(1.0),
+        cache.get("hits").and_then(Json::as_usize).unwrap_or(0),
+        cache.get("misses").and_then(Json::as_usize).unwrap_or(0),
+        cache.get("hit_rate").and_then(Json::as_f64).unwrap_or(0.0) * 100.0,
+        cache.get("gpu_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("distsim_whatif_demo_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = ServeOpts {
+        workers: 0, // all cores
+        cache_dir: Some(dir.clone()),
+    };
+
+    println!("== session 1: cold daemon, three what-if queries ==");
+    let session1 = [
+        sweep_line("q1-grid", "bert-exlarge", 16),
+        sweep_line("q2-bigger-batch", "bert-exlarge", 32),
+        sweep_line("q3-repeat", "bert-exlarge", 16),
+        r#"{"op":"shutdown"}"#.to_string(),
+    ]
+    .join("\n");
+    let mut out = Vec::new();
+    let summary = serve_ndjson(Cursor::new(session1), &mut out, &opts);
+    let text = String::from_utf8(out)?;
+    for line in text.lines().take(3) {
+        show("cold", line);
+    }
+    println!(
+        "  served {} requests on shared caches; {} snapshot(s) persisted to {}",
+        summary.requests,
+        summary.snapshots_saved,
+        dir.display()
+    );
+
+    println!("\n== session 2: restarted daemon, same headline query ==");
+    let mut out2 = Vec::new();
+    serve_ndjson(
+        Cursor::new(sweep_line("q1-grid", "bert-exlarge", 16)),
+        &mut out2,
+        &opts,
+    );
+    let text2 = String::from_utf8(out2)?;
+    show("warm", text2.lines().next().expect("one response"));
+
+    // the restarted daemon must reproduce session 1's answer exactly
+    let cold = Json::parse(text.lines().next().unwrap()).unwrap();
+    let warm = Json::parse(text2.lines().next().unwrap()).unwrap();
+    let candidates = |j: &Json| j.get("result").unwrap().get("candidates").unwrap().to_string();
+    assert_eq!(
+        candidates(&cold),
+        candidates(&warm),
+        "restart changed the ranking"
+    );
+    println!("\nrestart check: candidate rankings byte-identical across sessions");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

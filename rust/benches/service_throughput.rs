@@ -1,0 +1,103 @@
+//! Bench: what-if service throughput — concurrent requests over one shared
+//! profile cache vs the same request stream served serially.
+//!
+//! Feeds a mixed NDJSON session (distinct sweeps + repeats) through the
+//! in-process service core at worker counts 1 / N, asserts the response
+//! streams are byte-identical (the service determinism contract), and
+//! reports requests/second plus the cache's cross-request dedup. Emits a
+//! machine-readable BENCH_service.json line like the engine bench.
+
+use std::io::Cursor;
+use std::time::Instant;
+
+use distsim::config::Json;
+use distsim::service::{serve_ndjson, ServeOpts};
+
+fn request(id: usize, model: &str, batch: usize) -> String {
+    format!(
+        r#"{{"id":"r{id}","op":"sweep","model":"{model}","cluster":{{"preset":"a10","nodes":4,"gpus_per_node":4}},"sweep":{{"global_batch":{batch},"profile_iters":1}}}}"#
+    )
+}
+
+fn session() -> String {
+    // 12 requests: 3 distinct shapes x 4 repeats each, interleaved — the
+    // shape of a real what-if dialogue (ask, tweak, re-ask)
+    let shapes = [("bert-large", 16), ("bert-exlarge", 16), ("bert-large", 32)];
+    (0..12)
+        .map(|i| {
+            let (m, b) = shapes[i % shapes.len()];
+            request(i, m, b)
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn run(workers: usize, input: &str) -> (String, f64) {
+    let mut out = Vec::new();
+    let opts = ServeOpts {
+        workers,
+        cache_dir: None,
+    };
+    let t0 = Instant::now();
+    serve_ndjson(Cursor::new(input.to_string()), &mut out, &opts);
+    (String::from_utf8(out).unwrap(), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let input = session();
+    let n_requests = input.lines().count();
+    let parallel_workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8);
+
+    println!("# bench service: {n_requests} what-if requests, 3 distinct shapes\n");
+    let (serial_out, serial_wall) = run(1, &input);
+    let (parallel_out, parallel_wall) = run(parallel_workers, &input);
+
+    assert_eq!(
+        serial_out, parallel_out,
+        "service responses must be bit-identical for any worker count"
+    );
+
+    // pull cache accounting from the first and last responses
+    let first = Json::parse(serial_out.lines().next().unwrap()).unwrap();
+    let last = Json::parse(serial_out.lines().last().unwrap()).unwrap();
+    let misses = |j: &Json| {
+        j.get("result")
+            .and_then(|r| r.get("cache"))
+            .and_then(|c| c.get("misses"))
+            .and_then(Json::as_usize)
+            .unwrap_or(0)
+    };
+    println!("1 worker:          {serial_wall:.3} s  ({:.1} req/s)", n_requests as f64 / serial_wall);
+    println!(
+        "{parallel_workers} workers:         {parallel_wall:.3} s  ({:.1} req/s)",
+        n_requests as f64 / parallel_wall
+    );
+    println!(
+        "wall-clock improvement: {:.2}x   responses identical: true",
+        serial_wall / parallel_wall
+    );
+    println!(
+        "cross-request dedup: first request {} misses, last request {} misses",
+        misses(&first),
+        misses(&last)
+    );
+    assert_eq!(misses(&last), 0, "repeats must be full cache hits");
+
+    println!(
+        "BENCH_service.json {}",
+        Json::obj(vec![
+            ("requests", Json::num(n_requests as f64)),
+            ("serial_seconds", Json::num(serial_wall)),
+            ("parallel_seconds", Json::num(parallel_wall)),
+            ("workers", Json::num(parallel_workers as f64)),
+            (
+                "speedup",
+                Json::num(serial_wall / parallel_wall)
+            ),
+            ("identical", Json::Bool(true)),
+        ])
+    );
+}

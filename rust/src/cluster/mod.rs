@@ -92,6 +92,24 @@ pub enum LinkClass {
     Inter,
 }
 
+impl LinkClass {
+    /// Canonical serialization name (profile-cache snapshots).
+    pub fn name(&self) -> &'static str {
+        match self {
+            LinkClass::Intra => "intra",
+            LinkClass::Inter => "inter",
+        }
+    }
+
+    pub fn parse(name: &str) -> anyhow::Result<LinkClass> {
+        match name {
+            "intra" => Ok(LinkClass::Intra),
+            "inter" => Ok(LinkClass::Inter),
+            other => anyhow::bail!("unknown link class '{other}'"),
+        }
+    }
+}
+
 /// Cluster: homogeneous devices, flat two-level network (the paper's
 /// setting: "clusters with homogeneous devices and no network hierarchy"
 /// beyond the intra/inter-node distinction its comm events carry).

@@ -116,6 +116,27 @@ impl Json {
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+
+    // -- files -------------------------------------------------------------
+
+    /// Read and parse a JSON file (cache snapshots, configs), wrapping
+    /// both I/O and parse failures with the path for one-line CLI errors.
+    pub fn read_file(path: &std::path::Path) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("malformed JSON in {}: {e}", path.display()))
+    }
+
+    /// Write this document to a file with a trailing newline, atomically
+    /// (temp file + rename): a crash mid-save must never leave a
+    /// truncated document where a valid one stood.
+    pub fn write_file(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, format!("{self}\n"))
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("cannot write {}: {e}", path.display()))
+    }
 }
 
 impl fmt::Display for Json {
@@ -412,6 +433,22 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip_and_errors_name_the_path() {
+        let path = std::env::temp_dir().join(format!("distsim_json_{}.json", std::process::id()));
+        let doc = Json::parse(r#"{"a":[1,2],"b":"x"}"#).unwrap();
+        doc.write_file(&path).unwrap();
+        assert_eq!(Json::read_file(&path).unwrap(), doc);
+        std::fs::write(&path, "{nope").unwrap();
+        let err = Json::read_file(&path).unwrap_err().to_string();
+        assert!(err.contains("malformed"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+        assert!(Json::read_file(&path)
+            .unwrap_err()
+            .to_string()
+            .contains("cannot read"));
     }
 
     #[test]

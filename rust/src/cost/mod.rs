@@ -28,6 +28,26 @@ pub enum OpClass {
     Gather,
 }
 
+impl OpClass {
+    /// Canonical serialization name (profile-cache snapshots).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Matmul => "matmul",
+            OpClass::Memory => "memory",
+            OpClass::Gather => "gather",
+        }
+    }
+
+    pub fn parse(name: &str) -> anyhow::Result<OpClass> {
+        match name {
+            "matmul" => Ok(OpClass::Matmul),
+            "memory" => Ok(OpClass::Memory),
+            "gather" => Ok(OpClass::Gather),
+            other => anyhow::bail!("unknown op class '{other}'"),
+        }
+    }
+}
+
 /// Tunable efficiency-curve parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CostModel {

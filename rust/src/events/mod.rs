@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 
 use crate::cluster::LinkClass;
+use crate::config::Json;
 use crate::cost::OpClass;
 
 /// Dense handle for an interned event.
@@ -67,6 +68,72 @@ impl Event {
 
     pub fn is_comm(&self) -> bool {
         matches!(self, Event::Comm(_))
+    }
+
+    /// Canonical JSON form of the descriptor, used as the profile-cache
+    /// snapshot key. `u64` fields travel as strings so values above 2^53
+    /// survive the `f64`-backed JSON number type; objects serialize with
+    /// sorted keys, so the string form is a stable identity.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::Comp(c) => Json::obj(vec![
+                ("type", Json::str("comp")),
+                ("name", Json::str(&c.name)),
+                ("class", Json::str(c.class.name())),
+                ("flops", Json::str(c.flops.to_string())),
+                ("bytes", Json::str(c.bytes.to_string())),
+            ]),
+            Event::Comm(CommEvent::P2p { bytes, link }) => Json::obj(vec![
+                ("type", Json::str("p2p")),
+                ("bytes", Json::str(bytes.to_string())),
+                ("link", Json::str(link.name())),
+            ]),
+            Event::Comm(CommEvent::AllReduce { bytes, group, link }) => Json::obj(vec![
+                ("type", Json::str("allreduce")),
+                ("bytes", Json::str(bytes.to_string())),
+                ("group", Json::num(*group as f64)),
+                ("link", Json::str(link.name())),
+            ]),
+        }
+    }
+
+    /// The canonical string identity of this descriptor (sorted-key JSON).
+    pub fn key(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Event> {
+        fn str_field<'a>(j: &'a Json, k: &str) -> anyhow::Result<&'a str> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("event missing string field '{k}'"))
+        }
+        fn u64_field(j: &Json, k: &str) -> anyhow::Result<u64> {
+            str_field(j, k)?
+                .parse()
+                .map_err(|_| anyhow::anyhow!("event field '{k}' is not a u64"))
+        }
+        match str_field(j, "type")? {
+            "comp" => Ok(Event::Comp(CompEvent {
+                name: str_field(j, "name")?.to_string(),
+                class: OpClass::parse(str_field(j, "class")?)?,
+                flops: u64_field(j, "flops")?,
+                bytes: u64_field(j, "bytes")?,
+            })),
+            "p2p" => Ok(Event::Comm(CommEvent::P2p {
+                bytes: u64_field(j, "bytes")?,
+                link: LinkClass::parse(str_field(j, "link")?)?,
+            })),
+            "allreduce" => Ok(Event::Comm(CommEvent::AllReduce {
+                bytes: u64_field(j, "bytes")?,
+                group: j
+                    .get("group")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow::anyhow!("allreduce event missing group"))?,
+                link: LinkClass::parse(str_field(j, "link")?)?,
+            })),
+            other => anyhow::bail!("unknown event type '{other}'"),
+        }
     }
 }
 
@@ -202,5 +269,48 @@ mod tests {
         let mut db = EventDb::new();
         let a = db.intern(comp("x", 1));
         let _ = db.elapsed(a);
+    }
+
+    #[test]
+    fn event_json_roundtrips_every_family() {
+        let events = [
+            comp("xfmr_fwd/h1024/mp2/b4s128", (1u64 << 60) + 3),
+            Event::Comm(CommEvent::P2p {
+                bytes: u64::MAX,
+                link: LinkClass::Intra,
+            }),
+            Event::Comm(CommEvent::AllReduce {
+                bytes: 1 << 26,
+                group: 16,
+                link: LinkClass::Inter,
+            }),
+        ];
+        for e in events {
+            let j = Json::parse(&e.to_json().to_string()).unwrap();
+            assert_eq!(Event::from_json(&j).unwrap(), e);
+        }
+    }
+
+    #[test]
+    fn event_key_distinguishes_descriptors() {
+        let a = comp("x", 1).key();
+        let b = comp("x", 2).key();
+        let c = comp("y", 1).key();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, comp("x", 1).key());
+    }
+
+    #[test]
+    fn event_from_json_rejects_garbage() {
+        for src in [
+            r#"{"type":"warp"}"#,
+            r#"{"type":"comp","name":"x"}"#,
+            r#"{"type":"p2p","bytes":"xyz","link":"intra"}"#,
+            r#"{"type":"allreduce","bytes":"4","link":"orbital","group":2}"#,
+        ] {
+            let j = Json::parse(src).unwrap();
+            assert!(Event::from_json(&j).is_err(), "{src}");
+        }
     }
 }

@@ -12,7 +12,9 @@
 //!   ([`comm`]), a calibrated device cost model ([`cost`]), a ground-truth
 //!   discrete-event cluster engine ([`engine`]) standing in for the paper's
 //!   16-GPU testbed, analytical & Daydream-style baselines ([`baseline`]),
-//!   and the auto-parallel strategy search ([`search`]).
+//!   the auto-parallel strategy search ([`search`]), and a long-lived
+//!   what-if sweep service ([`service`]) answering concurrent strategy
+//!   queries over a disk-persistent shared profile cache.
 //! * **Layer 2 (python/compile/model.py)** — JAX transformer-layer event
 //!   graphs, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas matmul/attention/
@@ -38,6 +40,7 @@ pub mod profile;
 pub mod runtime;
 pub mod schedule;
 pub mod search;
+pub mod service;
 pub mod strategy;
 pub mod timeline;
 pub mod util;

@@ -5,13 +5,19 @@
 //! ```text
 //! distsim simulate  --model bert-large --strategy 2M2P2D [--schedule dapple]
 //!                   [--micro-batches 4] [--micro-batch-size 4] [--trace out.json]
-//! distsim search    [--model bert-exlarge] [--global-batch 16]
+//! distsim search    [--model bert-exlarge] [--global-batch 16] [--cache-file F]
+//! distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
+//! distsim ask       [--model M ...] | --file req.ndjson  [--connect HOST:PORT]
 //! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
 //! distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
 //!                   ablate-allreduce|ablate-noise|ablate-hierarchy|all
 //!                   [--fast]
 //! distsim models    # list the model zoo
 //! ```
+//!
+//! Failures print a one-line JSON error object on stderr (shared with the
+//! what-if service's error path) and exit non-zero — no panics or
+//! backtraces for malformed configs or request files.
 
 use std::collections::HashMap;
 
@@ -62,6 +68,8 @@ fn main() {
     let result = match cmd.as_str() {
         "simulate" => cmd_simulate(&flags),
         "search" => cmd_search(&flags),
+        "serve" => cmd_serve(&flags),
+        "ask" => cmd_ask(&flags),
         "calibrate" => cmd_calibrate(&flags),
         "exp" => cmd_exp(&pos, &flags),
         "models" => {
@@ -83,7 +91,8 @@ fn main() {
         other => Err(anyhow::anyhow!("unknown command '{other}' (try 'distsim help')")),
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        // one parseable line, same shape as a service error response
+        eprintln!("{}", distsim::service::cli_error_line(&e));
         std::process::exit(1);
     }
 }
@@ -98,7 +107,16 @@ USAGE:
                     [--gt] [--trace out.json] [--trace-actual out.json]
   distsim search    [--model bert-exlarge] [--global-batch 16] [--nodes 4]
                     [--gpus-per-node 4] [--device a10|a40|a100] [--threads N]
-                    [--wide] [--mbs-axis] [--prune] [--no-cache]
+                    [--wide] [--mbs-axis] [--schedule-axis] [--prune]
+                    [--no-cache] [--max-candidates N] [--cache-file F]
+  distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
+                    # long-lived what-if daemon: one NDJSON request per
+                    # line in, one deterministic response line out
+  distsim ask       [--model M --global-batch B ...] | --file req.ndjson
+                    [--connect HOST:PORT] [--timing] [--workers W]
+                    [--cache-dir DIR]
+                    # self-test client: runs the request in-process, or
+                    # sends it to a running daemon with --connect
   distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
   distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
                     ablate-allreduce|ablate-noise|ablate-hierarchy|ablate-schedule|all [--fast]
@@ -183,12 +201,55 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         threads: usize_flag(flags, "threads", 0),
         widened: flags.contains_key("wide"),
         micro_batch_axis: flags.contains_key("mbs-axis"),
+        schedule_axis: flags.contains_key("schedule-axis"),
+        max_candidates: usize_flag(flags, "max-candidates", 0),
         prune: flags.contains_key("prune"),
         use_cache: !flags.contains_key("no-cache"),
         ..distsim::search::SweepConfig::default()
     };
     let cost = distsim::cost::CostModel::default();
-    let engine = distsim::search::SearchEngine::new(&model, &cluster, &cost, cfg);
+
+    // --cache-file: warm the sweep from a persisted snapshot when its
+    // (cluster, cost, protocol) fingerprint matches, and save back after
+    let cache_file = flags.get("cache-file").map(std::path::PathBuf::from);
+    let fp = distsim::search::fingerprint(
+        &cluster,
+        &cost,
+        cfg.jitter_sigma,
+        cfg.profile_iters,
+        cfg.profile_seed,
+    );
+    let mut engine = distsim::search::SearchEngine::new(&model, &cluster, &cost, cfg.clone());
+    // a snapshot for a *different* fingerprint still belongs to someone:
+    // never overwrite it with this sweep's data
+    let mut save_cache_file = true;
+    if let Some(path) = cache_file.as_deref().filter(|p| p.exists()) {
+        let json = distsim::config::Json::read_file(path)?;
+        let snap = distsim::search::ProfileCache::load_json(&json)?;
+        if snap.fingerprint == fp {
+            println!(
+                "cache file {}: loaded {} profiled events (fingerprint {fp})",
+                path.display(),
+                snap.keys.len()
+            );
+            engine = distsim::search::SearchEngine::with_cache(
+                &model,
+                &cluster,
+                &cost,
+                cfg.clone(),
+                std::sync::Arc::new(snap.cache),
+            )
+            .with_prior(snap.keys);
+        } else {
+            save_cache_file = false;
+            eprintln!(
+                "warning: cache file {} has fingerprint {} (this sweep: {fp}); \
+                 starting cold and leaving the file untouched",
+                path.display(),
+                snap.fingerprint
+            );
+        }
+    }
     let report = engine.sweep();
 
     for (c, ms) in report.candidates.iter().zip(&report.timing.per_candidate_ms) {
@@ -200,8 +261,9 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             format!("{:.3} it/s", c.throughput)
         };
         println!(
-            "{:10} mbs {:>2} x{:<3} {:>26}   [{:7.1} ms]",
+            "{:10} {:7} mbs {:>2} x{:<3} {:>26}   [{:7.1} ms]",
             c.strategy.notation(),
+            c.schedule.name(),
             c.micro_batch_size,
             c.micro_batches,
             status,
@@ -236,6 +298,138 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.cache.misses,
         report.cache.hit_rate() * 100.0
     );
+    if let Some(a) = report.schedule_attribution().filter(|_| cfg.schedule_axis) {
+        println!(
+            "schedule axis: winner runs {} ({:.2}x over best dapple); strategy alone spans {:.2}x",
+            a.winning_schedule, a.schedule_speedup, a.strategy_speedup
+        );
+    }
+    if let Some(path) = cache_file.as_deref().filter(|_| save_cache_file) {
+        engine
+            .cache()
+            .save_json(
+                &cluster,
+                &cost,
+                cfg.jitter_sigma,
+                cfg.profile_iters,
+                cfg.profile_seed,
+            )
+            .write_file(path)?;
+        println!(
+            "cache file {}: saved {} profiled events",
+            path.display(),
+            engine.cache().measured_len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let opts = distsim::service::ServeOpts {
+        workers: usize_flag(flags, "workers", 0),
+        cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
+    };
+    if flags.contains_key("stdio") {
+        let stdin = std::io::stdin();
+        // Stdout (not its lock) crosses into the writer thread: locks are
+        // per-write, and Stdout is Send where StdoutLock is not
+        let summary = distsim::service::serve_ndjson(stdin.lock(), std::io::stdout(), &opts);
+        eprintln!(
+            "served {} requests ({} sweeps, {} errors); {} snapshots saved",
+            summary.requests, summary.sweeps, summary.errors, summary.snapshots_saved
+        );
+        return Ok(());
+    }
+    if let Some(port) = flags.get("port") {
+        let port: u16 = port
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --port '{port}'"))?;
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+        // with --port 0 the OS picks; always announce the bound address
+        eprintln!("distsim serve: listening on {}", listener.local_addr()?);
+        let summary = distsim::service::serve_tcp(listener, &opts)?;
+        eprintln!(
+            "served {} requests ({} sweeps, {} errors); {} snapshots saved",
+            summary.requests, summary.sweeps, summary.errors, summary.snapshots_saved
+        );
+        return Ok(());
+    }
+    anyhow::bail!("serve needs a transport: --stdio or --port N")
+}
+
+fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    // assemble the request line: from a file ('-' = stdin), or from flags
+    let request = if let Some(path) = flags.get("file") {
+        if path == "-" {
+            let mut s = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+            s
+        } else {
+            std::fs::read_to_string(path)
+                .map_err(|e| anyhow::anyhow!("cannot read request file '{path}': {e}"))?
+        }
+    } else {
+        let mut dflags = flags.clone();
+        dflags.entry("device".to_string()).or_insert("a10".to_string());
+        let cluster = cluster_from_flags(&dflags)?;
+        use distsim::config::Json;
+        let mut sweep = vec![
+            (
+                "global_batch",
+                Json::num(usize_flag(flags, "global-batch", 16) as f64),
+            ),
+            (
+                "profile_iters",
+                Json::num(usize_flag(flags, "profile-iters", 1) as f64),
+            ),
+            ("threads", Json::num(usize_flag(flags, "threads", 1) as f64)),
+        ];
+        for (name, key) in [
+            ("wide", "widened"),
+            ("mbs-axis", "micro_batch_axis"),
+            ("schedule-axis", "schedule_axis"),
+            ("prune", "prune"),
+        ] {
+            if flags.contains_key(name) {
+                sweep.push((key, Json::Bool(true)));
+            }
+        }
+        distsim::service::protocol::build_request_line(
+            flag(flags, "id", "ask"),
+            flag(flags, "model", "bert-exlarge"),
+            &cluster,
+            sweep,
+            usize_flag(flags, "max-candidates", 0),
+            flags.contains_key("timing"),
+        )
+    };
+
+    if let Some(addr) = flags.get("connect") {
+        // remote: one request line out, responses echoed until EOF
+        use std::io::{BufRead, Write};
+        let mut stream = std::net::TcpStream::connect(addr)
+            .map_err(|e| anyhow::anyhow!("cannot connect to {addr}: {e}"))?;
+        let n_requests = request.lines().filter(|l| !l.trim().is_empty()).count();
+        for line in request.lines().filter(|l| !l.trim().is_empty()) {
+            writeln!(stream, "{line}")?;
+        }
+        stream.flush()?;
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        for (i, line) in reader.lines().enumerate() {
+            println!("{}", line?);
+            if i + 1 >= n_requests {
+                break;
+            }
+        }
+        return Ok(());
+    }
+
+    // local: run the request(s) through the in-process service core
+    let opts = distsim::service::ServeOpts {
+        workers: usize_flag(flags, "workers", 0),
+        cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
+    };
+    distsim::service::serve_ndjson(std::io::Cursor::new(request), std::io::stdout(), &opts);
     Ok(())
 }
 

@@ -101,14 +101,59 @@ pub fn naive(pp: usize) -> PipelineSchedule {
     s
 }
 
+/// The implemented schedule algorithms, as a value the strategy sweep can
+/// enumerate as a search axis (paper §2.1.3; the sweep's third dimension
+/// next to strategy and micro-batch size).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SchedKind {
+    Dapple,
+    GPipe,
+    Naive,
+}
+
+impl SchedKind {
+    /// Every implemented schedule, in deterministic sweep order (the seed
+    /// protocol's Dapple first).
+    pub const ALL: [SchedKind; 3] = [SchedKind::Dapple, SchedKind::GPipe, SchedKind::Naive];
+
+    /// Canonical CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedKind::Dapple => "dapple",
+            SchedKind::GPipe => "gpipe",
+            SchedKind::Naive => "naive",
+        }
+    }
+
+    pub fn parse(name: &str) -> anyhow::Result<SchedKind> {
+        match name.to_ascii_lowercase().as_str() {
+            "gpipe" => Ok(SchedKind::GPipe),
+            "dapple" | "1f1b" => Ok(SchedKind::Dapple),
+            "naive" => Ok(SchedKind::Naive),
+            other => anyhow::bail!("unknown schedule '{other}' (gpipe|dapple|naive)"),
+        }
+    }
+
+    /// Build the schedule for a pipeline of depth `pp`. `micro_batches` is
+    /// ignored by [`SchedKind::Naive`], which always runs one micro-batch.
+    pub fn build(&self, pp: usize, micro_batches: usize) -> PipelineSchedule {
+        match self {
+            SchedKind::Dapple => dapple(pp, micro_batches),
+            SchedKind::GPipe => gpipe(pp, micro_batches),
+            SchedKind::Naive => naive(pp),
+        }
+    }
+}
+
+impl fmt::Display for SchedKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
 /// Look up a schedule builder by CLI name.
 pub fn by_name(name: &str, pp: usize, micro_batches: usize) -> anyhow::Result<PipelineSchedule> {
-    match name.to_ascii_lowercase().as_str() {
-        "gpipe" => Ok(gpipe(pp, micro_batches)),
-        "dapple" | "1f1b" => Ok(dapple(pp, micro_batches)),
-        "naive" => Ok(naive(pp)),
-        other => anyhow::bail!("unknown schedule '{other}' (gpipe|dapple|naive)"),
-    }
+    Ok(SchedKind::parse(name)?.build(pp, micro_batches))
 }
 
 impl PipelineSchedule {
@@ -239,6 +284,18 @@ mod tests {
         assert_eq!(by_name("gpipe", 2, 4).unwrap().name, "gpipe");
         assert_eq!(by_name("1F1B", 2, 4).unwrap().name, "dapple");
         assert!(by_name("chimera", 2, 4).is_err());
+    }
+
+    #[test]
+    fn sched_kind_roundtrips_and_builds() {
+        for k in SchedKind::ALL {
+            assert_eq!(SchedKind::parse(k.name()).unwrap(), k);
+            let s = k.build(4, 8);
+            s.validate().unwrap();
+            assert_eq!(s.name, k.name());
+        }
+        assert_eq!(SchedKind::Naive.build(4, 8).micro_batches, 1);
+        assert!(SchedKind::parse("chimera").is_err());
     }
 }
 

@@ -19,11 +19,12 @@
 //! cell, which keeps the *unique-event* GPU-second accounting exact (no
 //! double-billing) regardless of thread count.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::cluster::ClusterSpec;
+use crate::config::Json;
 use crate::cost::CostModel;
 use crate::events::{Event, EventDb};
 use crate::profile::{profile_single, ProfileReport, ProfiledEvent};
@@ -76,9 +77,307 @@ impl CacheStats {
     }
 }
 
+/// One event's traffic within a single sweep, in canonical-key form.
+///
+/// `gpu_seconds`/`extrapolated` are the deterministic cost of measuring the
+/// event once under the sweep's protocol; `lookups` is how many of the
+/// sweep's candidates touched it. All three depend only on the sweep's own
+/// candidate set, never on what other sweeps share the cache.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventUse {
+    /// Canonical descriptor identity ([`Event::key`]).
+    pub key: String,
+    /// GPU-seconds one measurement of this event costs.
+    pub gpu_seconds: f64,
+    /// Whether the measurement needed ring-law extrapolation.
+    pub extrapolated: bool,
+    /// Cache lookups this sweep issued for the event.
+    pub lookups: usize,
+}
+
+/// Per-sweep record of profile-cache traffic.
+///
+/// Workers on any thread record into it; [`LookupLog::into_uses`] drains to
+/// a key-sorted vector, so the result is bit-identical for any evaluation
+/// order — the sweep-level analogue of the cache's sorted-key stats.
+///
+/// The per-lookup cost is one hash of the already-interned [`Event`] plus
+/// a counter bump under a short lock; canonical-JSON key serialization is
+/// deferred to the one-time drain, keeping the hot (warm-cache) sweep
+/// path allocation-free.
+#[derive(Debug, Default)]
+pub struct LookupLog {
+    entries: Mutex<HashMap<Event, (ProfiledEvent, usize)>>,
+}
+
+impl LookupLog {
+    pub fn record(&self, event: &Event, p: &ProfiledEvent) {
+        let mut map = self.entries.lock().unwrap();
+        if let Some(e) = map.get_mut(event) {
+            e.1 += 1;
+        } else {
+            map.insert(event.clone(), (*p, 1));
+        }
+    }
+
+    /// Drain into deterministic (key-sorted) order. `iters` is the
+    /// sweep's profiling protocol (GPU-second scaling).
+    pub fn into_uses(self, iters: usize) -> Vec<EventUse> {
+        let mut v: Vec<EventUse> = self
+            .entries
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|(ev, (p, lookups))| EventUse {
+                key: ev.key(),
+                gpu_seconds: p.gpu_seconds(iters),
+                extrapolated: p.extrapolated,
+                lookups,
+            })
+            .collect();
+        v.sort_by(|a, b| a.key.cmp(&b.key));
+        v
+    }
+}
+
+/// Deterministic "as-if-serial" cache accounting: charge a sweep only for
+/// events absent from `prior` (descriptors already measured — by a loaded
+/// snapshot or by earlier requests in a service's admission order); every
+/// other lookup is a hit. Unlike raw `OnceLock` winner-counting, this is a
+/// pure function of `(uses, prior)`, so concurrent sweeps sharing one cache
+/// still report bit-identical stats.
+pub fn stats_against(uses: &[EventUse], prior: &HashSet<String>) -> CacheStats {
+    let mut stats = CacheStats::default();
+    let mut lookups = 0usize;
+    for u in uses {
+        lookups += u.lookups;
+        if !prior.contains(&u.key) {
+            stats.misses += 1;
+            stats.unique_events += 1;
+            stats.gpu_seconds += u.gpu_seconds;
+            stats.extrapolated += usize::from(u.extrapolated);
+        }
+    }
+    stats.hits = lookups - stats.misses;
+    stats
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn protocol_json(jitter_sigma: f64, iters: usize, seed: u64) -> Json {
+    Json::obj(vec![
+        ("jitter_sigma", Json::num(jitter_sigma)),
+        ("iters", Json::num(iters as f64)),
+        // seeds travel as strings: u64 values above 2^53 would not survive
+        // the f64-backed JSON number type
+        ("seed", Json::str(seed.to_string())),
+    ])
+}
+
+fn protocol_from_json(j: &Json) -> anyhow::Result<(f64, usize, u64)> {
+    let jitter = j
+        .get("jitter_sigma")
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("snapshot protocol missing jitter_sigma"))?;
+    let iters = j
+        .get("iters")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("snapshot protocol missing iters"))?;
+    let seed = j
+        .get("seed")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("snapshot protocol missing seed"))?;
+    Ok((jitter, iters, seed))
+}
+
+/// Identity of a profile cache: hash of the canonical JSON of (cluster,
+/// cost model, profiling protocol). Two sweeps may share measurements iff
+/// their fingerprints agree — the same condition under which
+/// [`profile_single`] is guaranteed to return identical values.
+pub fn fingerprint(
+    cluster: &ClusterSpec,
+    cost: &CostModel,
+    jitter_sigma: f64,
+    iters: usize,
+    seed: u64,
+) -> String {
+    let desc = Json::obj(vec![
+        ("cluster", cluster.to_json()),
+        ("cost", cost.to_json()),
+        ("protocol", protocol_json(jitter_sigma, iters, seed)),
+    ])
+    .to_string();
+    format!("{:016x}", fnv1a64(desc.as_bytes()))
+}
+
+/// A cache restored from a JSON snapshot, plus what the snapshot claimed.
+#[derive(Debug)]
+pub struct CacheSnapshot {
+    /// Fingerprint recomputed from the stored cluster/cost/protocol.
+    pub fingerprint: String,
+    pub cluster: ClusterSpec,
+    pub cost: CostModel,
+    /// (jitter_sigma, iters, seed) the entries were measured under.
+    pub protocol: (f64, usize, u64),
+    pub cache: ProfileCache,
+    /// Canonical keys of every restored entry — the "already measured"
+    /// prior for as-if-serial accounting.
+    pub keys: HashSet<String>,
+}
+
 impl ProfileCache {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Number of descriptors with a measured (or restored) value.
+    pub fn measured_len(&self) -> usize {
+        let map = self.entries.lock().unwrap();
+        map.values().filter(|c| c.get().is_some()).count()
+    }
+
+    /// Serialize every measured entry to a versioned JSON snapshot keyed by
+    /// the (cluster, cost, protocol) fingerprint. Entries sort by canonical
+    /// event key, so equal caches produce byte-identical snapshots.
+    ///
+    /// Panics if the cache was filled under a *different* protocol than the
+    /// one passed — persisting measurements under the wrong identity would
+    /// poison every future run that trusts the fingerprint.
+    pub fn save_json(
+        &self,
+        cluster: &ClusterSpec,
+        cost: &CostModel,
+        jitter_sigma: f64,
+        iters: usize,
+        seed: u64,
+    ) -> Json {
+        if let Some(&pinned) = self.protocol.get() {
+            assert_eq!(
+                pinned,
+                (jitter_sigma.to_bits(), iters, seed),
+                "ProfileCache snapshot requested under a different profiling protocol"
+            );
+        }
+        let map = self.entries.lock().unwrap();
+        let mut entries: Vec<(String, Json)> = map
+            .iter()
+            .filter_map(|(ev, cell)| {
+                cell.get().map(|p| {
+                    let j = Json::obj(vec![
+                        ("event", ev.to_json()),
+                        ("mean_us", Json::num(p.mean_us)),
+                        ("devices", Json::num(p.devices as f64)),
+                        ("extrapolated", Json::Bool(p.extrapolated)),
+                    ]);
+                    (ev.key(), j)
+                })
+            })
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Json::obj(vec![
+            ("kind", Json::str("distsim-profile-cache")),
+            ("version", Json::num(1.0)),
+            (
+                "fingerprint",
+                Json::str(fingerprint(cluster, cost, jitter_sigma, iters, seed)),
+            ),
+            ("cluster", cluster.to_json()),
+            ("cost", cost.to_json()),
+            ("protocol", protocol_json(jitter_sigma, iters, seed)),
+            (
+                "entries",
+                Json::Arr(entries.into_iter().map(|(_, j)| j).collect()),
+            ),
+        ])
+    }
+
+    /// Restore a cache from a [`ProfileCache::save_json`] snapshot.
+    ///
+    /// The fingerprint is recomputed from the stored cluster/cost/protocol
+    /// and must match the stored one (a mismatch means a corrupted or
+    /// hand-edited file). Whether the snapshot applies to a *given* sweep
+    /// is the caller's check: compare [`CacheSnapshot::fingerprint`] with
+    /// [`fingerprint`] of the sweep's own parameters.
+    pub fn load_json(j: &Json) -> anyhow::Result<CacheSnapshot> {
+        anyhow::ensure!(
+            j.get("kind").and_then(Json::as_str) == Some("distsim-profile-cache"),
+            "not a profile-cache snapshot"
+        );
+        anyhow::ensure!(
+            j.get("version").and_then(Json::as_usize) == Some(1),
+            "unsupported snapshot version"
+        );
+        let cluster = ClusterSpec::from_json(
+            j.get("cluster")
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing cluster"))?,
+        )?;
+        let cost = CostModel::from_json(
+            j.get("cost")
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing cost"))?,
+        );
+        let (jitter, iters, seed) = protocol_from_json(
+            j.get("protocol")
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing protocol"))?,
+        )?;
+        let fp = fingerprint(&cluster, &cost, jitter, iters, seed);
+        let stored = j
+            .get("fingerprint")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow::anyhow!("snapshot missing fingerprint"))?;
+        anyhow::ensure!(
+            fp == stored,
+            "snapshot fingerprint {stored} does not match its own contents ({fp})"
+        );
+        let cache = ProfileCache::new();
+        cache
+            .protocol
+            .set((jitter.to_bits(), iters, seed))
+            .expect("fresh cache");
+        let mut keys = HashSet::new();
+        {
+            let mut map = cache.entries.lock().unwrap();
+            for e in j
+                .get("entries")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("snapshot missing entries"))?
+            {
+                let ev = Event::from_json(
+                    e.get("event")
+                        .ok_or_else(|| anyhow::anyhow!("snapshot entry missing event"))?,
+                )?;
+                let p = ProfiledEvent {
+                    mean_us: e
+                        .get("mean_us")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("snapshot entry missing mean_us"))?,
+                    devices: e.get("devices").and_then(Json::as_usize).unwrap_or(1),
+                    extrapolated: e
+                        .get("extrapolated")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                };
+                keys.insert(ev.key());
+                let cell: Arc<OnceLock<ProfiledEvent>> = Arc::default();
+                cell.set(p).expect("fresh cell");
+                map.insert(ev, cell);
+            }
+        }
+        Ok(CacheSnapshot {
+            fingerprint: fp,
+            cluster,
+            cost,
+            protocol: (jitter, iters, seed),
+            cache,
+            keys,
+        })
     }
 
     /// Look up the cost of `db`'s event `id`, measuring it on a miss.
@@ -133,11 +432,30 @@ impl ProfileCache {
         iters: usize,
         seed: u64,
     ) -> usize {
+        self.profile_into_logged(db, cluster, cost, jitter_sigma, iters, seed, None)
+    }
+
+    /// [`ProfileCache::profile_into`], additionally recording each lookup
+    /// into a per-sweep [`LookupLog`] for deterministic accounting.
+    #[allow(clippy::too_many_arguments)]
+    pub fn profile_into_logged(
+        &self,
+        db: &mut EventDb,
+        cluster: &ClusterSpec,
+        cost: &CostModel,
+        jitter_sigma: f64,
+        iters: usize,
+        seed: u64,
+        log: Option<&LookupLog>,
+    ) -> usize {
         let ids = db.unprofiled();
         let n = ids.len();
         for id in ids {
             let p = self.get_or_profile(db, id, cluster, cost, jitter_sigma, iters, seed);
             db.set_elapsed(id, p.mean_us);
+            if let Some(log) = log {
+                log.record(db.get(id), &p);
+            }
         }
         n
     }
@@ -255,6 +573,101 @@ mod tests {
         let a = db.intern(comp("a", 1 << 28));
         cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
         cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 2, 7); // different iters
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_bit_identical_measurements() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 30));
+        let b = db.intern(Event::Comm(crate::events::CommEvent::AllReduce {
+            bytes: 1 << 26,
+            group: 16,
+            link: crate::cluster::LinkClass::Inter,
+        }));
+        let pa = cache.get_or_profile(&db, a, &cluster, &cost, 0.02, 3, 7);
+        let pb = cache.get_or_profile(&db, b, &cluster, &cost, 0.02, 3, 7);
+
+        let text = cache.save_json(&cluster, &cost, 0.02, 3, 7).to_string();
+        let snap = ProfileCache::load_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(snap.fingerprint, fingerprint(&cluster, &cost, 0.02, 3, 7));
+        assert_eq!(snap.keys.len(), 2);
+        assert!(snap.keys.contains(&db.get(a).key()));
+
+        // restored lookups are hits and bit-identical to the originals
+        let ra = snap.cache.get_or_profile(&db, a, &cluster, &cost, 0.02, 3, 7);
+        let rb = snap.cache.get_or_profile(&db, b, &cluster, &cost, 0.02, 3, 7);
+        assert_eq!(ra, pa);
+        assert_eq!(rb, pb);
+        let s = snap.cache.stats(3);
+        assert_eq!((s.hits, s.misses), (2, 0), "restored entries must hit");
+
+        // saving the restored cache reproduces the file byte-for-byte
+        let again = snap.cache.save_json(&cluster, &cost, 0.02, 3, 7).to_string();
+        assert_eq!(again, text);
+    }
+
+    #[test]
+    fn fingerprint_separates_cluster_cost_and_protocol() {
+        let c1 = ClusterSpec::a40_cluster(4, 4);
+        let c2 = ClusterSpec::a10_cluster(4, 4);
+        let cost = CostModel::default();
+        let base = fingerprint(&c1, &cost, 0.0, 1, 7);
+        assert_eq!(base, fingerprint(&c1, &cost, 0.0, 1, 7));
+        assert_ne!(base, fingerprint(&c2, &cost, 0.0, 1, 7));
+        assert_ne!(base, fingerprint(&c1, &cost, 0.01, 1, 7));
+        assert_ne!(base, fingerprint(&c1, &cost, 0.0, 2, 7));
+        assert_ne!(base, fingerprint(&c1, &cost, 0.0, 1, 8));
+        let mut tweaked = cost.clone();
+        tweaked.scale = 1.01;
+        assert_ne!(base, fingerprint(&c1, &tweaked, 0.0, 1, 7));
+    }
+
+    #[test]
+    fn load_rejects_tampered_snapshots() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("a", 1 << 28));
+        cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        let good = cache.save_json(&cluster, &cost, 0.0, 1, 7).to_string();
+
+        // flip the iters inside the protocol: fingerprint no longer matches
+        let bad = good.replace("\"iters\":1", "\"iters\":2");
+        assert!(ProfileCache::load_json(&Json::parse(&bad).unwrap()).is_err());
+        // and plain non-snapshot JSON is refused up front
+        assert!(ProfileCache::load_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn lookup_log_stats_are_prior_relative() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cache = ProfileCache::new();
+        let log = LookupLog::default();
+        // two "candidates" sharing one event
+        for _ in 0..2 {
+            let mut db = EventDb::new();
+            db.intern(comp("shared", 1 << 28));
+            db.intern(comp("shared", 1 << 28)); // interning dedups
+            cache.profile_into_logged(&mut db, &cluster, &cost, 0.0, 2, 7, Some(&log));
+        }
+        let uses = log.into_uses(2);
+        assert_eq!(uses.len(), 1);
+        assert_eq!(uses[0].lookups, 2);
+
+        let empty = stats_against(&uses, &HashSet::new());
+        assert_eq!((empty.hits, empty.misses, empty.unique_events), (1, 1, 1));
+        assert!(empty.gpu_seconds > 0.0);
+
+        let prior: HashSet<String> = uses.iter().map(|u| u.key.clone()).collect();
+        let warm = stats_against(&uses, &prior);
+        assert_eq!((warm.hits, warm.misses), (2, 0));
+        assert_eq!(warm.gpu_seconds, 0.0);
+        assert_eq!(warm.hit_rate(), 1.0);
     }
 
     #[test]

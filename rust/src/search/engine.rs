@@ -19,8 +19,9 @@
 //!
 //! [`Timeline`]: crate::timeline::Timeline
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::baseline::analytical::analytical_batch_time_us;
@@ -31,10 +32,10 @@ use crate::events::EventDb;
 use crate::model::ModelSpec;
 use crate::partition::partition;
 use crate::profile::{profile_events, ProfileReport};
-use crate::schedule;
+use crate::schedule::SchedKind;
 use crate::strategy::Strategy;
 
-use super::cache::{CacheStats, ProfileCache};
+use super::cache::{stats_against, CacheStats, EventUse, LookupLog, ProfileCache};
 use super::{grid, widened_grid};
 
 /// Sweep parameters. `Default` mirrors the seed's protocol (power-of-two
@@ -58,6 +59,13 @@ pub struct SweepConfig {
     /// Explore the micro-batch-size axis for pipelined candidates instead
     /// of fixing one sequence per micro-batch.
     pub micro_batch_axis: bool,
+    /// Enumerate every pipeline schedule ([`SchedKind::ALL`]) for pipelined
+    /// candidates instead of fixing the seed protocol's Dapple.
+    pub schedule_axis: bool,
+    /// Evaluate at most this many sweep points (0 = unlimited). Truncation
+    /// happens on the deterministic spec order, so a budgeted sweep is a
+    /// prefix of the unbudgeted one.
+    pub max_candidates: usize,
     /// Skip candidates whose analytical throughput upper bound cannot beat
     /// the incumbent (see [`SearchEngine::sweep`] for the bound).
     pub prune: bool,
@@ -81,6 +89,8 @@ impl Default for SweepConfig {
             threads: 0,
             widened: false,
             micro_batch_axis: false,
+            schedule_axis: false,
+            max_candidates: 0,
             prune: false,
             prune_margin: 0.10,
             use_cache: true,
@@ -88,7 +98,8 @@ impl Default for SweepConfig {
     }
 }
 
-/// One point of the sweep space: a strategy plus its micro-batching.
+/// One point of the sweep space: a strategy plus its micro-batching and
+/// pipeline schedule.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CandidateSpec {
     pub strategy: Strategy,
@@ -97,17 +108,21 @@ pub struct CandidateSpec {
     pub micro_batch_size: usize,
     /// Micro-batches per replica per iteration.
     pub micro_batches: usize,
+    /// Pipeline schedule this point runs (the seed protocol fixes Dapple).
+    pub schedule: SchedKind,
 }
 
 impl CandidateSpec {
     /// The seed protocol's micro-batching for a strategy: one sequence per
-    /// micro-batch when pipelining, the whole replica batch otherwise.
+    /// micro-batch when pipelining, the whole replica batch otherwise,
+    /// always on the Dapple schedule.
     pub fn default_for(strategy: Strategy, global_batch: usize) -> CandidateSpec {
         if global_batch % strategy.dp != 0 {
             return CandidateSpec {
                 strategy,
                 micro_batch_size: 0,
                 micro_batches: 0,
+                schedule: SchedKind::Dapple,
             };
         }
         let per_replica = global_batch / strategy.dp;
@@ -120,6 +135,7 @@ impl CandidateSpec {
             strategy,
             micro_batch_size: mbs,
             micro_batches: m,
+            schedule: SchedKind::Dapple,
         }
     }
 }
@@ -130,6 +146,8 @@ pub struct SweepCandidate {
     pub strategy: Strategy,
     pub micro_batch_size: usize,
     pub micro_batches: usize,
+    /// Pipeline schedule the point was simulated under.
+    pub schedule: SchedKind,
     /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
     pub throughput: f64,
     /// Deployable: valid strategy and the shard fits device memory.
@@ -177,9 +195,45 @@ pub struct SweepReport {
     /// unique event once — the Table-3 dedup; without it, the sum over
     /// candidates.
     pub profile: ProfileReport,
+    /// Cache accounting relative to the engine's prior (empty prior for a
+    /// fresh cache: every unique event is this sweep's own miss).
     pub cache: CacheStats,
+    /// This sweep's cache traffic in canonical key order — the raw
+    /// material a what-if service re-accounts against *its* admission
+    /// order (see `service`). Empty when the cache is off.
+    pub event_uses: Vec<EventUse>,
     pub timing: SweepTiming,
     pub threads_used: usize,
+}
+
+/// Where a sweep's win came from (requires [`SweepConfig::schedule_axis`]
+/// to be informative): the schedule axis's contribution on top of the best
+/// default-schedule candidate, vs the spread the strategy axis alone
+/// explains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduleAttribution {
+    /// Schedule of the overall winner.
+    pub winning_schedule: SchedKind,
+    /// Best overall / best Dapple candidate: >1 exactly when switching
+    /// schedule beats every default-schedule deployment.
+    pub schedule_speedup: f64,
+    /// Best Dapple / worst Dapple: the spread strategy choice alone
+    /// explains under the fixed default schedule.
+    pub strategy_speedup: f64,
+}
+
+/// First maximal-throughput candidate. Unlike `max_by` (which keeps the
+/// *last* of equal maxima), ties resolve toward the earlier sweep point —
+/// so a schedule-axis point that merely equals the default-schedule
+/// candidate (degenerate micro-batchings produce bit-identical
+/// simulations) never steals the win from it.
+fn first_max<'r>(
+    iter: impl Iterator<Item = &'r SweepCandidate>,
+) -> Option<&'r SweepCandidate> {
+    iter.fold(None, |best, c| match best {
+        Some(b) if b.throughput.total_cmp(&c.throughput).is_ge() => Some(b),
+        _ => Some(c),
+    })
 }
 
 impl SweepReport {
@@ -187,18 +241,16 @@ impl SweepReport {
         self.candidates.iter().filter(|c| c.evaluated())
     }
 
-    /// Highest-throughput evaluated candidate, if any.
+    /// Highest-throughput evaluated candidate, if any (ties break toward
+    /// the earlier sweep point).
     pub fn best(&self) -> Option<&SweepCandidate> {
-        self.ranked()
-            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        first_max(self.ranked())
     }
 
     /// Runner-up over distinct strategies, if at least two were evaluated.
     pub fn second_best(&self) -> Option<&SweepCandidate> {
         let best = self.best()?.strategy;
-        self.ranked()
-            .filter(|c| c.strategy != best)
-            .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        first_max(self.ranked().filter(|c| c.strategy != best))
     }
 
     /// Lowest-throughput evaluated candidate, if any.
@@ -210,6 +262,29 @@ impl SweepReport {
     /// Best/worst ratio — the paper's 7.37x headline shape.
     pub fn speedup(&self) -> Option<f64> {
         Some(self.best()?.throughput / self.worst()?.throughput)
+    }
+
+    /// Highest-throughput evaluated candidate on one schedule, if any.
+    pub fn best_for_schedule(&self, k: SchedKind) -> Option<&SweepCandidate> {
+        first_max(self.ranked().filter(|c| c.schedule == k))
+    }
+
+    /// Attribute the sweep's win to the schedule axis vs the strategy
+    /// axis. `None` when no Dapple candidate was evaluated (every sweep
+    /// space includes the default schedule, so this only happens on empty
+    /// or fully-unreachable spaces).
+    pub fn schedule_attribution(&self) -> Option<ScheduleAttribution> {
+        let best = self.best()?;
+        let dapple_best = self.best_for_schedule(SchedKind::Dapple)?;
+        let dapple_worst = self
+            .ranked()
+            .filter(|c| c.schedule == SchedKind::Dapple)
+            .min_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
+        Some(ScheduleAttribution {
+            winning_schedule: best.schedule,
+            schedule_speedup: best.throughput / dapple_best.throughput,
+            strategy_speedup: dapple_best.throughput / dapple_worst.throughput,
+        })
     }
 
     pub fn pruned_count(&self) -> usize {
@@ -231,12 +306,21 @@ impl SweepReport {
 }
 
 /// The sweep engine itself; see the module docs for the contract.
+///
+/// This is the single execution core behind every sweep surface: the
+/// one-shot CLI (`distsim search`), the fig12/table2/table3 experiment
+/// drivers, and the what-if service (`distsim serve`). The cache is
+/// injectable ([`SearchEngine::with_cache`]) so long-lived callers can
+/// share measurements across sweeps; `prior` names descriptors the caller
+/// already paid for (a loaded snapshot), so the report charges this sweep
+/// only for genuinely new measurements.
 pub struct SearchEngine<'a> {
     model: &'a ModelSpec,
     cluster: &'a ClusterSpec,
     cost: &'a CostModel,
     cfg: SweepConfig,
-    cache: ProfileCache,
+    cache: Arc<ProfileCache>,
+    prior: HashSet<String>,
 }
 
 impl<'a> SearchEngine<'a> {
@@ -246,13 +330,40 @@ impl<'a> SearchEngine<'a> {
         cost: &'a CostModel,
         cfg: SweepConfig,
     ) -> Self {
+        Self::with_cache(model, cluster, cost, cfg, Arc::new(ProfileCache::new()))
+    }
+
+    /// Build an engine over a shared (possibly pre-warmed) cache. The
+    /// cache's profiling protocol must match `cfg` — callers key shared
+    /// caches by [`super::cache::fingerprint`] to guarantee it.
+    pub fn with_cache(
+        model: &'a ModelSpec,
+        cluster: &'a ClusterSpec,
+        cost: &'a CostModel,
+        cfg: SweepConfig,
+        cache: Arc<ProfileCache>,
+    ) -> Self {
         SearchEngine {
             model,
             cluster,
             cost,
             cfg,
-            cache: ProfileCache::new(),
+            cache,
+            prior: HashSet::new(),
         }
+    }
+
+    /// Declare descriptors as already measured (e.g. a loaded snapshot's
+    /// keys): the report's cache stats count their lookups as hits and
+    /// charge them no GPU-seconds.
+    pub fn with_prior(mut self, prior: HashSet<String>) -> Self {
+        self.prior = prior;
+        self
+    }
+
+    /// The shared profile cache (for persistence after the sweep).
+    pub fn cache(&self) -> &Arc<ProfileCache> {
+        &self.cache
     }
 
     pub fn config(&self) -> &SweepConfig {
@@ -260,8 +371,13 @@ impl<'a> SearchEngine<'a> {
     }
 
     /// The candidate space, in deterministic order: strategies in
-    /// enumeration order, each followed by its extra micro-batch-size
-    /// points (ascending) when the axis is enabled.
+    /// enumeration order; for each, the Dapple points (base micro-batching
+    /// first, then extra micro-batch sizes ascending when that axis is
+    /// enabled), then — when the schedule axis is enabled and the strategy
+    /// pipelines — the same micro-batch grid under GPipe and finally the
+    /// single no-micro-batching Naive point. A `max_candidates` budget
+    /// truncates this order, so a budgeted sweep is a prefix of the full
+    /// one.
     pub fn specs(&self) -> Vec<CandidateSpec> {
         let devices = self.cluster.total_devices();
         let strategies = if self.cfg.widened {
@@ -273,19 +389,54 @@ impl<'a> SearchEngine<'a> {
         for s in strategies {
             let base = CandidateSpec::default_for(s, self.cfg.global_batch);
             specs.push(base);
-            if !self.cfg.micro_batch_axis || s.pp <= 1 || base.micro_batch_size == 0 {
+            if s.pp <= 1 || base.micro_batch_size == 0 {
                 continue;
             }
             let per_replica = self.cfg.global_batch / s.dp;
-            for mbs in 2..=per_replica {
-                if per_replica % mbs == 0 {
-                    specs.push(CandidateSpec {
-                        strategy: s,
-                        micro_batch_size: mbs,
-                        micro_batches: per_replica / mbs,
-                    });
+            let push_mb_grid = |specs: &mut Vec<CandidateSpec>, schedule: SchedKind| {
+                if !self.cfg.micro_batch_axis {
+                    return;
                 }
+                for mbs in 2..=per_replica {
+                    // with the schedule axis on, the single-micro-batch
+                    // point of EVERY grid is the Naive schedule (one
+                    // micro-batch degenerates them all to the same
+                    // sequential F/B); keep only the Naive-labeled copy
+                    if per_replica % mbs == 0
+                        && !(self.cfg.schedule_axis && mbs == per_replica)
+                    {
+                        specs.push(CandidateSpec {
+                            strategy: s,
+                            micro_batch_size: mbs,
+                            micro_batches: per_replica / mbs,
+                            schedule,
+                        });
+                    }
+                }
+            };
+            push_mb_grid(&mut specs, SchedKind::Dapple);
+            // with one micro-batch per replica every schedule degenerates
+            // to the same sequential F/B — the Dapple base already covers
+            // it, so the schedule axis only applies when per_replica > 1
+            if self.cfg.schedule_axis && per_replica > 1 {
+                specs.push(CandidateSpec {
+                    strategy: s,
+                    micro_batch_size: 1,
+                    micro_batches: per_replica,
+                    schedule: SchedKind::GPipe,
+                });
+                push_mb_grid(&mut specs, SchedKind::GPipe);
+                // naive: the whole replica batch as one micro-batch
+                specs.push(CandidateSpec {
+                    strategy: s,
+                    micro_batch_size: per_replica,
+                    micro_batches: 1,
+                    schedule: SchedKind::Naive,
+                });
             }
+        }
+        if self.cfg.max_candidates > 0 {
+            specs.truncate(self.cfg.max_candidates);
         }
         specs
     }
@@ -320,7 +471,7 @@ impl<'a> SearchEngine<'a> {
         if !self.cluster.fits(part.max_params_per_rank()) {
             return 0.0;
         }
-        let sched = schedule::dapple(spec.strategy.pp, spec.micro_batches);
+        let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
         let us = analytical_batch_time_us(self.model, &part, &sched, self.cluster);
         if us > 0.0 {
             1e6 / us
@@ -330,11 +481,16 @@ impl<'a> SearchEngine<'a> {
     }
 
     /// Fully evaluate one spec (partition → profile → hierarchical model).
-    fn evaluate(&self, spec: &CandidateSpec) -> (SweepCandidate, ProfileReport) {
+    fn evaluate(
+        &self,
+        spec: &CandidateSpec,
+        log: Option<&LookupLog>,
+    ) -> (SweepCandidate, ProfileReport) {
         let mut cand = SweepCandidate {
             strategy: spec.strategy,
             micro_batch_size: spec.micro_batch_size,
             micro_batches: spec.micro_batches,
+            schedule: spec.schedule,
             throughput: 0.0,
             reachable: false,
             pruned: false,
@@ -356,19 +512,20 @@ impl<'a> SearchEngine<'a> {
         if !self.cluster.fits(part.max_params_per_rank()) {
             return (cand, ProfileReport::default());
         }
-        let sched = schedule::dapple(spec.strategy.pp, spec.micro_batches);
+        let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
         let mut db = EventDb::new();
         crate::engine::build_programs(&part, &sched, self.cluster, &mut db);
         let profile = if self.cfg.use_cache {
-            self.cache.profile_into(
+            self.cache.profile_into_logged(
                 &mut db,
                 self.cluster,
                 self.cost,
                 self.cfg.jitter_sigma,
                 self.cfg.profile_iters,
                 self.cfg.profile_seed,
+                log,
             );
-            // cost accounted once, in the shared cache
+            // cost accounted once, deterministically, via the lookup log
             ProfileReport::default()
         } else {
             profile_events(
@@ -414,6 +571,7 @@ impl<'a> SearchEngine<'a> {
         let mut reports: Vec<ProfileReport> = vec![ProfileReport::default(); n];
         let mut bounds = vec![0.0f64; n];
         let mut skip = vec![false; n];
+        let log = LookupLog::default();
 
         if self.cfg.prune && n > 0 {
             for (i, spec) in specs.iter().enumerate() {
@@ -426,7 +584,7 @@ impl<'a> SearchEngine<'a> {
                 .filter(|&i| bounds[i] > 0.0);
             if let Some(i) = incumbent {
                 let ti = Instant::now();
-                let (mut cand, rep) = self.evaluate(&specs[i]);
+                let (mut cand, rep) = self.evaluate(&specs[i], Some(&log));
                 per_ms[i] = ti.elapsed().as_secs_f64() * 1e3;
                 cand.bound_throughput = bounds[i];
                 let incumbent_tp = cand.throughput;
@@ -443,6 +601,7 @@ impl<'a> SearchEngine<'a> {
                                 strategy: specs[j].strategy,
                                 micro_batch_size: specs[j].micro_batch_size,
                                 micro_batches: specs[j].micro_batches,
+                                schedule: specs[j].schedule,
                                 throughput: 0.0,
                                 reachable: true,
                                 pruned: true,
@@ -466,6 +625,7 @@ impl<'a> SearchEngine<'a> {
             let queue = &queue;
             let slots = &slots;
             let bounds = &bounds;
+            let log = &log;
             std::thread::scope(|scope| {
                 for _ in 0..threads {
                     scope.spawn(move || loop {
@@ -475,7 +635,7 @@ impl<'a> SearchEngine<'a> {
                         }
                         let i = worklist[k];
                         let ti = Instant::now();
-                        let (mut cand, rep) = self.evaluate(&specs[i]);
+                        let (mut cand, rep) = self.evaluate(&specs[i], Some(log));
                         cand.bound_throughput = bounds[i];
                         let ms = ti.elapsed().as_secs_f64() * 1e3;
                         *slots[k].lock().unwrap() = Some((cand, rep, ms));
@@ -494,9 +654,12 @@ impl<'a> SearchEngine<'a> {
             per_ms[i] = ms;
         }
 
-        // aggregate profiling cost deterministically (index order, or the
-        // cache's sorted-key totals); snapshot the cache stats once
-        let cache_stats = self.cache.stats(self.cfg.profile_iters);
+        // aggregate profiling cost deterministically: the sweep's own
+        // lookup log in sorted-key order, accounted against the prior —
+        // a pure function of the candidate set, independent of thread
+        // interleaving and of other sweeps sharing the cache
+        let event_uses = log.into_uses(self.cfg.profile_iters);
+        let cache_stats = stats_against(&event_uses, &self.prior);
         let profile = if self.cfg.use_cache {
             ProfileReport {
                 gpu_seconds: cache_stats.gpu_seconds,
@@ -521,6 +684,7 @@ impl<'a> SearchEngine<'a> {
                 .collect(),
             profile,
             cache: cache_stats,
+            event_uses,
             timing: SweepTiming {
                 total_seconds: t0.elapsed().as_secs_f64(),
                 per_candidate_ms: per_ms,
@@ -606,6 +770,50 @@ mod tests {
     }
 
     #[test]
+    fn schedule_axis_enumerates_gpipe_and_naive_points() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let cfg = SweepConfig {
+            schedule_axis: true,
+            ..SweepConfig::default()
+        };
+        let eng = SearchEngine::new(&model, &cluster, &cost, cfg);
+        let specs = eng.specs();
+        let base = SearchEngine::new(&model, &cluster, &cost, SweepConfig::default())
+            .specs()
+            .len();
+        assert!(specs.len() > base);
+        // every pipelined strategy grows gpipe + naive points; pp=1 ones
+        // stay dapple-only (all schedules degenerate to the same thing)
+        for s in &specs {
+            if s.strategy.pp <= 1 {
+                assert_eq!(s.schedule, SchedKind::Dapple, "{s:?}");
+            }
+            if s.schedule == SchedKind::Naive {
+                assert_eq!(s.micro_batches, 1, "{s:?}");
+            }
+        }
+        assert!(specs.iter().any(|s| s.schedule == SchedKind::GPipe));
+        assert!(specs.iter().any(|s| s.schedule == SchedKind::Naive));
+    }
+
+    #[test]
+    fn max_candidates_takes_a_prefix() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostModel::default();
+        let full = SearchEngine::new(&model, &cluster, &cost, SweepConfig::default()).specs();
+        let cfg = SweepConfig {
+            max_candidates: 3,
+            ..SweepConfig::default()
+        };
+        let capped = SearchEngine::new(&model, &cluster, &cost, cfg).specs();
+        assert_eq!(capped.len(), 3);
+        assert_eq!(capped[..], full[..3]);
+    }
+
+    #[test]
     fn bound_is_above_simulated_throughput() {
         // the pruning premise: analytical throughput >= DistSim throughput
         let model = zoo::bert_large();
@@ -614,7 +822,7 @@ mod tests {
         let eng = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true));
         for spec in eng.specs() {
             let bound = eng.bound_throughput(&spec);
-            let (cand, _) = eng.evaluate(&spec);
+            let (cand, _) = eng.evaluate(&spec, None);
             if cand.evaluated() {
                 assert!(
                     bound > cand.throughput,

@@ -37,8 +37,12 @@
 pub mod cache;
 pub mod engine;
 
-pub use cache::{CacheStats, ProfileCache};
-pub use engine::{CandidateSpec, SearchEngine, SweepCandidate, SweepConfig, SweepReport};
+pub use cache::{
+    fingerprint, stats_against, CacheSnapshot, CacheStats, EventUse, LookupLog, ProfileCache,
+};
+pub use engine::{
+    CandidateSpec, ScheduleAttribution, SearchEngine, SweepCandidate, SweepConfig, SweepReport,
+};
 
 use crate::cluster::ClusterSpec;
 use crate::config::RunConfig;
@@ -244,8 +248,9 @@ pub fn measure_actual(
     measure_config(model_name, cand.strategy, mbs, micro_batches, cluster, iters)
 }
 
-/// Ground-truth a [`SweepCandidate`] with its *own* micro-batching — the
-/// point the sweep actually simulated, not the default derivation.
+/// Ground-truth a [`SweepCandidate`] with its *own* micro-batching and
+/// pipeline schedule — the point the sweep actually simulated, not the
+/// default derivation.
 pub fn measure_actual_sweep(
     model_name: &str,
     cand: &SweepCandidate,
@@ -257,11 +262,12 @@ pub fn measure_actual_sweep(
         "candidate {} was never deployable",
         cand.strategy
     );
-    measure_config(
+    measure_schedule_config(
         model_name,
         cand.strategy,
         cand.micro_batch_size,
         cand.micro_batches,
+        cand.schedule,
         cluster,
         iters,
     )
@@ -275,9 +281,30 @@ fn measure_config(
     cluster: &ClusterSpec,
     iters: usize,
 ) -> anyhow::Result<f64> {
+    measure_schedule_config(
+        model_name,
+        strategy,
+        micro_batch_size,
+        micro_batches,
+        schedule::SchedKind::Dapple,
+        cluster,
+        iters,
+    )
+}
+
+fn measure_schedule_config(
+    model_name: &str,
+    strategy: Strategy,
+    micro_batch_size: usize,
+    micro_batches: usize,
+    sched: schedule::SchedKind,
+    cluster: &ClusterSpec,
+    iters: usize,
+) -> anyhow::Result<f64> {
     let mut cfg = RunConfig::new(model_name, strategy, cluster.clone());
     cfg.micro_batch_size = micro_batch_size;
     cfg.micro_batches = micro_batches;
+    cfg.schedule = sched.name().to_string();
     let gt = GroundTruth::prepare(&cfg)?;
     Ok(1e6 / gt.mean_batch_time_us(iters))
 }

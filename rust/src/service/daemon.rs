@@ -1,0 +1,731 @@
+//! The long-lived what-if daemon: transports, worker pool, cache registry
+//! and the in-order response writer.
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  stdin / TCP conns --> reader(s) --parse--> job queue --> worker pool
+//!                                     |  (seq-stamped)        |  sweeps share
+//!                                     |                       |  per-fingerprint
+//!                                     v                       v  ProfileCaches
+//!                                 done map (seq -> outcome) <-+
+//!                                     |
+//!                                     v
+//!                              writer: emits responses in admission
+//!                              order, re-accounting cache stats
+//!                              "as-if-serial"
+//! ```
+//!
+//! **Determinism.** Each request's deterministic payload (candidates,
+//! throughputs) depends only on the request itself — profiled costs are
+//! functions of (descriptor, cluster, cost, protocol), never of which
+//! request measured them first. Cache hit/miss accounting *would* be racy
+//! under sharing, so the writer recomputes it deterministically: request
+//! k's misses are the unique events of k not in the union of the loaded
+//! snapshot and requests 0..k-1's events — exactly what serial execution
+//! in admission order would report. Responses are therefore bit-identical
+//! for any worker count and any execution interleaving ( `tests/service.rs`
+//! pins 1-vs-4 workers byte-for-byte). Two deliberate exceptions opt out
+//! of the contract: the `stats` op is a *diagnostic* — it reports live
+//! cache occupancy at write time — and a request that sets
+//! `budget.deadline_ms` trades determinism for a bounded queue wait
+//! (whether it expired depends on wall-clock). Requests without a
+//! deadline are never affected by either.
+//!
+//! **Fairness.** Jobs start in admission order (FIFO queue) and responses
+//! are *delivered* in admission order; a slow early request delays later
+//! responses (head-of-line) but never changes them. Deadlines
+//! (`budget.deadline_ms`) bound queue wait only: an expired request is
+//! answered with a structured `deadline` error before it starts, and a
+//! request that did start always runs to completion — wall-clock never
+//! truncates a payload.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown as NetShutdown, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cluster::ClusterSpec;
+use crate::config::Json;
+use crate::cost::CostModel;
+use crate::search::{
+    fingerprint, stats_against, ProfileCache, SearchEngine, SweepReport,
+};
+
+use super::protocol::{self, ErrorKind, Request, ServiceError, SweepRequest};
+
+/// Daemon configuration (transport-independent).
+#[derive(Debug, Clone, Default)]
+pub struct ServeOpts {
+    /// Concurrent sweep workers; 0 = `available_parallelism`.
+    pub workers: usize,
+    /// Directory for profile-cache snapshots (`cache-<fingerprint>.json`),
+    /// loaded lazily per fingerprint and saved back on shutdown/EOF.
+    pub cache_dir: Option<PathBuf>,
+}
+
+/// What a daemon run did, for callers that want to report it.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeSummary {
+    pub requests: usize,
+    pub sweeps: usize,
+    pub errors: usize,
+    /// Snapshots written on exit (0 without a cache dir).
+    pub snapshots_saved: usize,
+}
+
+// ---------------------------------------------------------------------------
+// cache registry
+
+struct RegistryEntry {
+    cache: Arc<ProfileCache>,
+    /// Keys restored from the on-disk snapshot (the accounting prior).
+    preloaded: Arc<HashSet<String>>,
+    // identity needed to save the snapshot back
+    cluster: ClusterSpec,
+    cost: CostModel,
+    protocol: (f64, usize, u64),
+}
+
+/// Shared profile caches, one per (cluster, cost, protocol) fingerprint —
+/// the daemon-lifetime generalization of a sweep's single cache.
+#[derive(Default)]
+pub struct CacheRegistry {
+    dir: Option<PathBuf>,
+    map: Mutex<HashMap<String, RegistryEntry>>,
+}
+
+impl CacheRegistry {
+    pub fn new(dir: Option<PathBuf>) -> Self {
+        CacheRegistry {
+            dir,
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn snapshot_path(dir: &std::path::Path, fp: &str) -> PathBuf {
+        dir.join(format!("cache-{fp}.json"))
+    }
+
+    /// The cache for a request's fingerprint, loading a matching snapshot
+    /// from disk the first time the fingerprint is seen.
+    ///
+    /// Snapshot I/O happens *outside* the registry lock so a large load
+    /// for one fingerprint never stalls workers resolving other (or
+    /// already-resident) caches; if two workers race on a cold
+    /// fingerprint, both load and the entry API keeps the first — the
+    /// duplicate work is idempotent (same file, same values).
+    fn resolve(
+        &self,
+        cluster: &ClusterSpec,
+        cost: &CostModel,
+        jitter: f64,
+        iters: usize,
+        seed: u64,
+    ) -> (String, Arc<ProfileCache>, Arc<HashSet<String>>) {
+        let fp = fingerprint(cluster, cost, jitter, iters, seed);
+        if let Some(e) = self.map.lock().unwrap().get(&fp) {
+            return (fp, e.cache.clone(), e.preloaded.clone());
+        }
+        let loaded = self.dir.as_deref().and_then(|d| {
+            let path = Self::snapshot_path(d, &fp);
+            let text = std::fs::read_to_string(&path).ok()?;
+            match Json::parse(&text)
+                .map_err(anyhow::Error::from)
+                .and_then(|j| ProfileCache::load_json(&j))
+            {
+                Ok(snap) if snap.fingerprint == fp => Some(snap),
+                Ok(snap) => {
+                    eprintln!(
+                        "warning: ignoring snapshot {} (fingerprint {} != {})",
+                        path.display(),
+                        snap.fingerprint,
+                        fp
+                    );
+                    None
+                }
+                Err(e) => {
+                    eprintln!("warning: ignoring snapshot {}: {e}", path.display());
+                    None
+                }
+            }
+        });
+        let fresh = match loaded {
+            Some(snap) => RegistryEntry {
+                cache: Arc::new(snap.cache),
+                preloaded: Arc::new(snap.keys),
+                cluster: snap.cluster,
+                cost: snap.cost,
+                protocol: snap.protocol,
+            },
+            None => RegistryEntry {
+                cache: Arc::new(ProfileCache::new()),
+                preloaded: Arc::new(HashSet::new()),
+                cluster: cluster.clone(),
+                cost: cost.clone(),
+                protocol: (jitter, iters, seed),
+            },
+        };
+        let mut map = self.map.lock().unwrap();
+        let entry = map.entry(fp.clone()).or_insert(fresh);
+        let out = (entry.cache.clone(), entry.preloaded.clone());
+        (fp, out.0, out.1)
+    }
+
+    /// (fingerprint, measured entries) per cache, sorted by fingerprint.
+    pub fn summary(&self) -> Vec<(String, usize)> {
+        let map = self.map.lock().unwrap();
+        let mut v: Vec<(String, usize)> = map
+            .iter()
+            .map(|(fp, e)| (fp.clone(), e.cache.measured_len()))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Persist every cache with at least one measurement. Returns how many
+    /// snapshot files were written.
+    pub fn save_all(&self) -> usize {
+        let Some(dir) = self.dir.as_deref() else {
+            return 0;
+        };
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("warning: cannot create cache dir {}: {e}", dir.display());
+            return 0;
+        }
+        let map = self.map.lock().unwrap();
+        let mut saved = 0;
+        for (fp, e) in map.iter() {
+            if e.cache.measured_len() == 0 {
+                continue;
+            }
+            let (jitter, iters, seed) = e.protocol;
+            let json = e.cache.save_json(&e.cluster, &e.cost, jitter, iters, seed);
+            match json.write_file(&Self::snapshot_path(dir, fp)) {
+                Ok(()) => saved += 1,
+                Err(err) => eprintln!("warning: {err}"),
+            }
+        }
+        saved
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared daemon state
+
+enum Outcome {
+    Sweep {
+        report: Box<SweepReport>,
+        fp: String,
+        preloaded: Arc<HashSet<String>>,
+        include_timing: bool,
+    },
+    Error(ServiceError),
+    Pong,
+    Stats,
+    Shutdown,
+}
+
+struct Completed {
+    id: Option<String>,
+    conn: usize,
+    outcome: Outcome,
+}
+
+struct Job {
+    seq: u64,
+    conn: usize,
+    req: Box<SweepRequest>,
+    admitted_at: Instant,
+}
+
+#[derive(Default)]
+struct DoneState {
+    map: BTreeMap<u64, Completed>,
+    /// Total requests admitted (sequence numbers 0..admitted are spoken
+    /// for); the writer exits once it has emitted all of them after close.
+    admitted: u64,
+    closed: bool,
+}
+
+#[derive(Default)]
+struct QueueState {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+/// Per-connection liveness: undelivered responses + whether the reader
+/// has exited. Lets the TCP transport reclaim a finished connection's
+/// socket as soon as its last response goes out — without dropping queued
+/// responses for half-close clients (write shut, still reading).
+#[derive(Default)]
+struct ConnLive {
+    outstanding: usize,
+    reader_done: bool,
+}
+
+#[derive(Default)]
+struct Shared {
+    queue: Mutex<QueueState>,
+    queue_cv: Condvar,
+    done: Mutex<DoneState>,
+    done_cv: Condvar,
+    conns_live: Mutex<HashMap<usize, ConnLive>>,
+    /// Set when a shutdown op is admitted: transports stop reading.
+    stopping: AtomicBool,
+}
+
+impl Shared {
+    /// Admit one request from `conn`, assigning its global sequence number.
+    fn admit(&self, conn: usize) -> u64 {
+        let seq = {
+            let mut done = self.done.lock().unwrap();
+            let seq = done.admitted;
+            done.admitted += 1;
+            seq
+        };
+        self.conns_live
+            .lock()
+            .unwrap()
+            .entry(conn)
+            .or_default()
+            .outstanding += 1;
+        seq
+    }
+
+    /// One response delivered for `conn`; true when the connection is
+    /// finished (reader gone, nothing left to deliver) and can be closed.
+    fn response_delivered(&self, conn: usize) -> bool {
+        let mut map = self.conns_live.lock().unwrap();
+        if let Some(c) = map.get_mut(&conn) {
+            c.outstanding = c.outstanding.saturating_sub(1);
+            if c.reader_done && c.outstanding == 0 {
+                map.remove(&conn);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `conn`'s reader exited; true when nothing is pending and the
+    /// connection can be closed right away.
+    fn reader_finished(&self, conn: usize) -> bool {
+        let mut map = self.conns_live.lock().unwrap();
+        let c = map.entry(conn).or_default();
+        c.reader_done = true;
+        if c.outstanding == 0 {
+            map.remove(&conn);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn complete(&self, seq: u64, c: Completed) {
+        let mut done = self.done.lock().unwrap();
+        done.map.insert(seq, c);
+        self.done_cv.notify_all();
+    }
+
+    fn enqueue(&self, job: Job) {
+        let mut q = self.queue.lock().unwrap();
+        if q.closed {
+            // raced with shutdown: answer rather than silently dropping
+            let seq = job.seq;
+            let c = Completed {
+                id: job.req.id.clone(),
+                conn: job.conn,
+                outcome: Outcome::Error(ServiceError::new(
+                    ErrorKind::BadRequest,
+                    "daemon is shutting down",
+                )),
+            };
+            drop(q);
+            self.complete(seq, c);
+            return;
+        }
+        q.jobs.push_back(job);
+        self.queue_cv.notify_one();
+    }
+
+    /// No more requests will be admitted: wake everyone so they can drain.
+    fn close(&self) {
+        self.queue.lock().unwrap().closed = true;
+        self.queue_cv.notify_all();
+        self.done.lock().unwrap().closed = true;
+        self.done_cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// roles: reader, worker, writer
+
+/// Read NDJSON requests from one transport until EOF or a shutdown op.
+/// Returns true when this reader saw the shutdown op.
+///
+/// A reader never *drops* a line it managed to read: during shutdown
+/// (another connection's op), lines already in flight are still admitted
+/// and answered — either normally (admitted before the queue closed) or
+/// with a structured shutting-down error ([`Shared::enqueue`]'s backstop).
+/// Termination comes from the transport: the TCP accept loop shuts down
+/// every connection's read half, which EOFs this loop.
+fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
+    for line in input.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // transport error == EOF
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match protocol::parse_line(&line) {
+            Err((id, err)) => {
+                let seq = shared.admit(conn);
+                shared.complete(
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Error(err),
+                    },
+                );
+            }
+            Ok(Request::Ping { id }) => {
+                let seq = shared.admit(conn);
+                shared.complete(
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Pong,
+                    },
+                );
+            }
+            Ok(Request::Stats { id }) => {
+                let seq = shared.admit(conn);
+                shared.complete(
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Stats,
+                    },
+                );
+            }
+            Ok(Request::Shutdown { id }) => {
+                shared.stopping.store(true, Ordering::SeqCst);
+                let seq = shared.admit(conn);
+                shared.complete(
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Shutdown,
+                    },
+                );
+                return true;
+            }
+            Ok(Request::Sweep(req)) => {
+                let seq = shared.admit(conn);
+                shared.enqueue(Job {
+                    seq,
+                    conn,
+                    req,
+                    admitted_at: Instant::now(),
+                });
+            }
+        }
+    }
+    false
+}
+
+/// Execute one admitted sweep job end to end.
+fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
+    let req = &job.req;
+    if let Some(deadline) = job.req.deadline_ms {
+        if job.admitted_at.elapsed() > Duration::from_millis(deadline) {
+            return (
+                job.seq,
+                Completed {
+                    id: req.id.clone(),
+                    conn: job.conn,
+                    outcome: Outcome::Error(ServiceError::new(
+                        ErrorKind::Deadline,
+                        format!("deadline of {deadline} ms expired before the sweep started"),
+                    )),
+                },
+            );
+        }
+    }
+    let (fp, cache, preloaded) = registry.resolve(
+        &req.cluster,
+        &req.cost,
+        req.sweep.jitter_sigma,
+        req.sweep.profile_iters,
+        req.sweep.profile_seed,
+    );
+    let outcome = match catch_unwind(AssertUnwindSafe(|| {
+        SearchEngine::with_cache(&req.model, &req.cluster, &req.cost, req.sweep.clone(), cache)
+            .sweep()
+    })) {
+        Ok(report) => Outcome::Sweep {
+            report: Box::new(report),
+            fp,
+            preloaded,
+            include_timing: req.include_timing,
+        },
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "sweep panicked".to_string());
+            Outcome::Error(ServiceError::new(ErrorKind::Internal, msg))
+        }
+    };
+    (
+        job.seq,
+        Completed {
+            id: req.id.clone(),
+            conn: job.conn,
+            outcome,
+        },
+    )
+}
+
+fn worker_loop(shared: &Shared, registry: &CacheRegistry) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.queue_cv.wait(q).unwrap();
+            }
+        };
+        let (seq, completed) = run_job(registry, job);
+        shared.complete(seq, completed);
+    }
+}
+
+/// Emit responses in admission order, recomputing per-request cache stats
+/// against the as-if-serial prior. `emit` receives (conn, line);
+/// `on_conn_idle` fires when a connection whose reader already exited has
+/// received its last pending response (transport closes it there).
+fn writer_loop(
+    shared: &Shared,
+    registry: &CacheRegistry,
+    mut emit: impl FnMut(usize, &str),
+    mut on_conn_idle: impl FnMut(usize),
+) -> ServeSummary {
+    let mut summary = ServeSummary::default();
+    let mut seen: HashMap<String, HashSet<String>> = HashMap::new();
+    let mut next = 0u64;
+    loop {
+        let completed = {
+            let mut done = shared.done.lock().unwrap();
+            loop {
+                if let Some(c) = done.map.remove(&next) {
+                    break c;
+                }
+                if done.closed && next >= done.admitted {
+                    return summary;
+                }
+                done = shared.done_cv.wait(done).unwrap();
+            }
+        };
+        summary.requests += 1;
+        let id = completed.id.as_deref();
+        let line = match completed.outcome {
+            Outcome::Sweep {
+                report,
+                fp,
+                preloaded,
+                include_timing,
+            } => {
+                summary.sweeps += 1;
+                let prior = seen
+                    .entry(fp.clone())
+                    .or_insert_with(|| (*preloaded).clone());
+                let stats = stats_against(&report.event_uses, prior);
+                for u in &report.event_uses {
+                    prior.insert(u.key.clone());
+                }
+                protocol::sweep_response(id, &fp, &report, &stats, include_timing).to_string()
+            }
+            Outcome::Error(err) => {
+                summary.errors += 1;
+                protocol::error_response(id, &err).to_string()
+            }
+            Outcome::Pong => protocol::pong_response(id).to_string(),
+            Outcome::Stats => protocol::stats_response(id, &registry.summary()).to_string(),
+            Outcome::Shutdown => protocol::shutdown_response(id).to_string(),
+        };
+        emit(completed.conn, &line);
+        if shared.response_delivered(completed.conn) {
+            on_conn_idle(completed.conn);
+        }
+        next += 1;
+    }
+}
+
+fn resolve_workers(n: usize) -> usize {
+    if n > 0 {
+        n
+    } else {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// transports
+
+/// Serve one NDJSON stream (stdin/stdout, or any reader/writer pair — the
+/// in-process entry point tests and `distsim ask` use). Returns after EOF
+/// or a `shutdown` op, once every admitted request has been answered and
+/// snapshots are saved.
+pub fn serve_ndjson<R: BufRead, W: Write + Send>(
+    input: R,
+    output: W,
+    opts: &ServeOpts,
+) -> ServeSummary {
+    let registry = CacheRegistry::new(opts.cache_dir.clone());
+    let shared = Shared::default();
+    let workers = resolve_workers(opts.workers);
+    let mut summary = ServeSummary::default();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&shared, &registry));
+        }
+        let writer = scope.spawn({
+            let shared = &shared;
+            let registry = &registry;
+            let mut output = output;
+            move || {
+                writer_loop(
+                    shared,
+                    registry,
+                    |_conn, line| {
+                        // a broken pipe must not kill the drain: log and move on
+                        if writeln!(output, "{line}").and_then(|()| output.flush()).is_err() {
+                            eprintln!("warning: response dropped (output closed)");
+                        }
+                    },
+                    |_conn| {}, // single stream: nothing to close per-conn
+                )
+            }
+        });
+        read_requests(&shared, input, 0);
+        shared.close();
+        summary = writer.join().expect("writer panicked");
+    });
+    summary.snapshots_saved = registry.save_all();
+    summary
+}
+
+/// Serve TCP connections on `listener`. Each connection is an independent
+/// NDJSON stream multiplexed onto the shared queue, worker pool and cache
+/// registry; responses are delivered in global admission order. Returns
+/// when any connection sends a `shutdown` op.
+pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<ServeSummary> {
+    let registry = CacheRegistry::new(opts.cache_dir.clone());
+    let shared = Shared::default();
+    let workers = resolve_workers(opts.workers);
+    listener.set_nonblocking(true)?;
+    let conns: Mutex<HashMap<usize, TcpStream>> = Mutex::new(HashMap::new());
+    let active_readers = AtomicUsize::new(0);
+    let mut summary = ServeSummary::default();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| worker_loop(&shared, &registry));
+        }
+        let writer = scope.spawn({
+            let shared = &shared;
+            let registry = &registry;
+            let conns = &conns;
+            move || {
+                writer_loop(
+                    shared,
+                    registry,
+                    |conn, line| {
+                        let stream =
+                            conns.lock().unwrap().get(&conn).and_then(|s| s.try_clone().ok());
+                        match stream {
+                            Some(mut s) => {
+                                if writeln!(s, "{line}").is_err() {
+                                    eprintln!(
+                                        "warning: response dropped (connection {conn} closed)"
+                                    );
+                                }
+                            }
+                            None => {
+                                eprintln!("warning: response dropped (connection {conn} gone)")
+                            }
+                        }
+                    },
+                    // last pending response delivered after the reader left:
+                    // drop the socket so finished clients don't leak fds
+                    |conn| {
+                        conns.lock().unwrap().remove(&conn);
+                    },
+                )
+            }
+        });
+        let mut conn_id = 0usize;
+        while !shared.stopping.load(Ordering::SeqCst) {
+            match listener.accept() {
+                Ok((stream, _addr)) => {
+                    stream.set_nonblocking(false).ok();
+                    let read_half = stream.try_clone();
+                    conns.lock().unwrap().insert(conn_id, stream);
+                    if let Ok(read_half) = read_half {
+                        let id = conn_id;
+                        active_readers.fetch_add(1, Ordering::SeqCst);
+                        let shared = &shared;
+                        let active = &active_readers;
+                        let conns = &conns;
+                        scope.spawn(move || {
+                            read_requests(shared, BufReader::new(read_half), id);
+                            // nothing pending? close the socket now; else the
+                            // writer closes it after the last response
+                            if shared.reader_finished(id) {
+                                conns.lock().unwrap().remove(&id);
+                            }
+                            active.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                    conn_id += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                Err(e) => {
+                    eprintln!("warning: accept failed: {e}");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        // unblock readers stuck in read_line, then wait for them to exit
+        // before closing the queue (they may still be admitting requests)
+        for (_, s) in conns.lock().unwrap().iter() {
+            s.shutdown(NetShutdown::Read).ok();
+        }
+        while active_readers.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        shared.close();
+        summary = writer.join().expect("writer panicked");
+    });
+    summary.snapshots_saved = registry.save_all();
+    Ok(summary)
+}

@@ -1,0 +1,34 @@
+//! The what-if sweep service (ROADMAP: "Async sweep service").
+//!
+//! The paper's headline use-case treats DistSim as a cheap throughput
+//! oracle: ask it many "what if I deployed this model, on this cluster,
+//! with that strategy space?" questions instead of renting the cluster
+//! (§6's 7.37× result; Proteus and DistIR frame the same capability as a
+//! query-serving *system*). This module turns the one-shot
+//! [`SearchEngine`](crate::search::SearchEngine) sweep into exactly that: a
+//! long-lived daemon answering concurrent sweep requests over
+//! newline-delimited JSON, with every request sharing the profile-cache
+//! measurements of everything the daemon — in this run or any previous one
+//! — has already priced.
+//!
+//! Three pieces:
+//!
+//! * [`protocol`] — the NDJSON request/response schema, parsed with the
+//!   crate's own [`Json`](crate::config::Json); malformed input maps to
+//!   structured error responses, shared with the CLI's error path.
+//! * [`daemon`] — transports (stdio, TCP), the worker pool, the
+//!   per-fingerprint [`CacheRegistry`] with disk-persistent snapshots, and
+//!   the in-order writer that keeps responses deterministic (see the
+//!   module docs for the determinism and fairness contracts).
+//! * `distsim serve` / `distsim ask` — the CLI entry points (`main.rs`);
+//!   `ask` doubles as an in-process self-test client.
+//!
+//! The engine stays the single execution core: the daemon builds the same
+//! [`SearchEngine`](crate::search::SearchEngine) the CLI does, injecting a
+//! shared cache via `with_cache` — there is no service-only sweep fork.
+
+pub mod daemon;
+pub mod protocol;
+
+pub use daemon::{serve_ndjson, serve_tcp, CacheRegistry, ServeOpts, ServeSummary};
+pub use protocol::{cli_error_line, ErrorKind, Request, ServiceError, SweepRequest};

@@ -1,0 +1,682 @@
+//! The what-if wire protocol: newline-delimited JSON requests and
+//! responses, parsed with the crate's own [`Json`] substrate (no serde in
+//! the offline vendor set).
+//!
+//! One request per line; one response line per request, delivered in
+//! admission order. Malformed input produces a structured error *response*
+//! — the daemon never hangs or dies on bad bytes (`tests/service.rs` pins
+//! this).
+//!
+//! ## Request schema
+//!
+//! ```json
+//! {"id": "r1", "op": "sweep",
+//!  "model": "bert-exlarge",
+//!  "cluster": {"preset": "a10", "nodes": 4, "gpus_per_node": 4},
+//!  "cost": {"scale": 1.0},
+//!  "sweep": {"global_batch": 16, "profile_iters": 1, "threads": 1,
+//!            "widened": false, "micro_batch_axis": false,
+//!            "schedule_axis": false, "prune": false},
+//!  "budget": {"max_candidates": 100, "deadline_ms": 60000},
+//!  "timing": false}
+//! ```
+//!
+//! `op` is one of `sweep` (default), `ping`, `stats`, `shutdown`.
+//! `cluster` is either a full [`ClusterSpec`] object or a preset shorthand
+//! (`a40`/`a10`/`a100`). Omitted `sweep` fields take [`SweepConfig`]
+//! defaults, except `threads`, which defaults to 1 inside the service
+//! (request-level parallelism comes from the daemon's worker pool).
+//! `timing: true` opts into wall-clock fields — by default responses carry
+//! only deterministic data, so equal requests produce byte-equal response
+//! lines.
+
+use crate::cluster::ClusterSpec;
+use crate::config::Json;
+use crate::cost::CostModel;
+use crate::model::ModelSpec;
+use crate::search::{CacheStats, SweepConfig, SweepReport};
+
+/// What went wrong, coarsely — the machine-readable half of an error
+/// response.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The line was not valid JSON.
+    BadJson,
+    /// Valid JSON, but not a valid request (unknown op/model/cluster...).
+    BadRequest,
+    /// The request's deadline expired before a worker could start it.
+    Deadline,
+    /// The sweep itself failed (engine panic) — a daemon bug, not yours.
+    Internal,
+    /// CLI-level failure (config file, flags); shares the same error shape.
+    Cli,
+}
+
+impl ErrorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ErrorKind::BadJson => "bad_json",
+            ErrorKind::BadRequest => "bad_request",
+            ErrorKind::Deadline => "deadline",
+            ErrorKind::Internal => "internal",
+            ErrorKind::Cli => "cli",
+        }
+    }
+}
+
+/// A structured service error; renders as one response line.
+#[derive(Debug, Clone)]
+pub struct ServiceError {
+    pub kind: ErrorKind,
+    pub message: String,
+}
+
+impl ServiceError {
+    pub fn new(kind: ErrorKind, message: impl Into<String>) -> Self {
+        ServiceError {
+            kind,
+            message: message.into(),
+        }
+    }
+}
+
+/// A fully validated sweep request, ready for a worker.
+#[derive(Debug, Clone)]
+pub struct SweepRequest {
+    pub id: Option<String>,
+    pub model_name: String,
+    pub model: ModelSpec,
+    pub cluster: ClusterSpec,
+    pub cost: CostModel,
+    pub sweep: SweepConfig,
+    /// Reject the request if it cannot *start* within this budget. Never
+    /// truncates a running sweep — payloads stay deterministic.
+    pub deadline_ms: Option<u64>,
+    /// Include wall-clock fields in the response.
+    pub include_timing: bool,
+}
+
+/// One parsed request line.
+#[derive(Debug, Clone)]
+pub enum Request {
+    Sweep(Box<SweepRequest>),
+    Ping { id: Option<String> },
+    Stats { id: Option<String> },
+    Shutdown { id: Option<String> },
+}
+
+fn req_id(j: &Json) -> Option<String> {
+    j.get("id").and_then(Json::as_str).map(str::to_string)
+}
+
+/// Build a cluster from either a preset shorthand or a full spec object.
+pub fn cluster_from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
+    if let Some(preset) = j.get("preset").and_then(Json::as_str) {
+        for k in ["nodes", "gpus_per_node"] {
+            anyhow::ensure!(
+                j.get(k).map(|v| v.as_f64().is_some()).unwrap_or(true),
+                "cluster preset field '{k}' must be a number"
+            );
+        }
+        let nodes = j.get("nodes").and_then(Json::as_usize).unwrap_or(4);
+        let gpn = j.get("gpus_per_node").and_then(Json::as_usize);
+        return match preset {
+            "a40" => Ok(ClusterSpec::a40_cluster(nodes, gpn.unwrap_or(4))),
+            "a10" => Ok(ClusterSpec::a10_cluster(nodes, gpn.unwrap_or(4))),
+            "a100" => {
+                // the a100 pod preset is 8 GPUs/node by definition; a
+                // different request must be rejected, not silently resized
+                anyhow::ensure!(
+                    gpn.is_none() || gpn == Some(8),
+                    "a100 preset has 8 gpus_per_node (got {})",
+                    gpn.unwrap_or(0)
+                );
+                Ok(ClusterSpec::a100_pod(nodes))
+            }
+            other => anyhow::bail!("unknown cluster preset '{other}' (a40|a10|a100)"),
+        };
+    }
+    ClusterSpec::from_json(j)
+}
+
+/// Strict cost-model overrides: unlike [`CostModel::from_json`] (which is
+/// lenient for hand-written calibration files), a *request's* `cost`
+/// object must contain only known keys with numeric values — a typo'd or
+/// mistyped override is a `bad_request`, never a silent fallback to the
+/// default cost model.
+fn cost_from_json_strict(j: &Json) -> anyhow::Result<CostModel> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("'cost' must be an object"))?;
+    const KNOWN: [&str; 5] = [
+        "eff_max",
+        "eff_min",
+        "eff_knee_flops",
+        "membw_frac",
+        "scale",
+    ];
+    for (k, v) in obj {
+        anyhow::ensure!(
+            KNOWN.contains(&k.as_str()),
+            "unknown cost field '{k}' (eff_max|eff_min|eff_knee_flops|membw_frac|scale)"
+        );
+        anyhow::ensure!(v.as_f64().is_some(), "cost field '{k}' must be a number");
+    }
+    Ok(CostModel::from_json(j))
+}
+
+fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
+    // service default: one engine thread per request — parallelism across
+    // requests comes from the daemon's worker pool
+    let mut cfg = SweepConfig {
+        threads: 1,
+        ..SweepConfig::default()
+    };
+    let Some(j) = j else { return Ok(cfg) };
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("'sweep' must be an object"))?;
+    // strict keys AND value types: a typo'd axis name or a string-wrapped
+    // number must be a bad_request, never a silently-default sweep (same
+    // policy as the cost overrides)
+    for (k, v) in obj {
+        let ok = match k.as_str() {
+            "global_batch" | "jitter_sigma" | "profile_iters" | "threads" | "prune_margin"
+            | "max_candidates" => v.as_f64().is_some(),
+            "widened" | "micro_batch_axis" | "schedule_axis" | "prune" | "use_cache" => {
+                v.as_bool().is_some()
+            }
+            // seeds travel as numbers or string-wrapped u64s
+            "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
+            other => anyhow::bail!(
+                "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
+                 profile_seed|threads|widened|micro_batch_axis|schedule_axis|prune|\
+                 prune_margin|use_cache|max_candidates)"
+            ),
+        };
+        anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
+    }
+    if let Some(v) = j.get("global_batch").and_then(Json::as_usize) {
+        anyhow::ensure!(v >= 1, "global_batch must be >= 1");
+        cfg.global_batch = v;
+    }
+    if let Some(v) = j.get("jitter_sigma").and_then(Json::as_f64) {
+        cfg.jitter_sigma = v;
+    }
+    if let Some(v) = j.get("profile_iters").and_then(Json::as_usize) {
+        anyhow::ensure!(v >= 1, "profile_iters must be >= 1");
+        cfg.profile_iters = v;
+    }
+    if let Some(v) = j.get("profile_seed") {
+        // accept both a JSON number and a string-wrapped u64
+        cfg.profile_seed = match v {
+            Json::Str(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("profile_seed is not a u64"))?,
+            _ => v
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("profile_seed is not a u64"))?,
+        };
+    }
+    if let Some(v) = j.get("threads").and_then(Json::as_usize) {
+        cfg.threads = v;
+    }
+    if let Some(v) = j.get("widened").and_then(Json::as_bool) {
+        cfg.widened = v;
+    }
+    if let Some(v) = j.get("micro_batch_axis").and_then(Json::as_bool) {
+        cfg.micro_batch_axis = v;
+    }
+    if let Some(v) = j.get("schedule_axis").and_then(Json::as_bool) {
+        cfg.schedule_axis = v;
+    }
+    if let Some(v) = j.get("prune").and_then(Json::as_bool) {
+        cfg.prune = v;
+    }
+    if let Some(v) = j.get("prune_margin").and_then(Json::as_f64) {
+        cfg.prune_margin = v;
+    }
+    if let Some(v) = j.get("use_cache").and_then(Json::as_bool) {
+        cfg.use_cache = v;
+    }
+    if let Some(v) = j.get("max_candidates").and_then(Json::as_usize) {
+        cfg.max_candidates = v;
+    }
+    Ok(cfg)
+}
+
+/// Parse one request line. On failure, returns the request id when the
+/// line at least parsed as JSON, so the error response can still be
+/// correlated.
+pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)> {
+    let j = Json::parse(line)
+        .map_err(|e| (None, ServiceError::new(ErrorKind::BadJson, e.to_string())))?;
+    let id = req_id(&j);
+    let err_id = id.clone();
+    let bad = move |msg: String| (err_id.clone(), ServiceError::new(ErrorKind::BadRequest, msg));
+    let Some(obj) = j.as_obj() else {
+        return Err(bad("request must be a JSON object".into()));
+    };
+    for k in obj.keys() {
+        if !["id", "op", "model", "cluster", "cost", "sweep", "budget", "timing"]
+            .contains(&k.as_str())
+        {
+            return Err(bad(format!(
+                "unknown request field '{k}' (id|op|model|cluster|cost|sweep|budget|timing)"
+            )));
+        }
+    }
+    if let Some(v) = j.get("id") {
+        if v.as_str().is_none() {
+            return Err(bad("'id' must be a string".into()));
+        }
+    }
+    if let Some(v) = j.get("timing") {
+        if v.as_bool().is_none() {
+            return Err(bad("'timing' must be a boolean".into()));
+        }
+    }
+    match j.get("op").and_then(Json::as_str).unwrap_or("sweep") {
+        "ping" => Ok(Request::Ping { id }),
+        "stats" => Ok(Request::Stats { id }),
+        "shutdown" => Ok(Request::Shutdown { id }),
+        "sweep" => {
+            let model_name = j
+                .get("model")
+                .and_then(Json::as_str)
+                .ok_or_else(|| bad("sweep request missing 'model'".into()))?
+                .to_string();
+            let model = crate::model::by_name(&model_name)
+                .ok_or_else(|| bad(format!("unknown model '{model_name}'")))?;
+            let cluster = cluster_from_json(
+                j.get("cluster")
+                    .ok_or_else(|| bad("sweep request missing 'cluster'".into()))?,
+            )
+            .map_err(|e| bad(e.to_string()))?;
+            let cost = match j.get("cost") {
+                Some(c) => cost_from_json_strict(c).map_err(|e| bad(e.to_string()))?,
+                None => CostModel::default(),
+            };
+            let mut sweep =
+                sweep_config_from_json(j.get("sweep")).map_err(|e| bad(e.to_string()))?;
+            let mut deadline_ms = None;
+            if let Some(b) = j.get("budget") {
+                let obj = b
+                    .as_obj()
+                    .ok_or_else(|| bad("'budget' must be an object".into()))?;
+                for (k, v) in obj {
+                    if !["max_candidates", "deadline_ms"].contains(&k.as_str()) {
+                        return Err(bad(format!(
+                            "unknown budget field '{k}' (max_candidates|deadline_ms)"
+                        )));
+                    }
+                    if v.as_f64().is_none() {
+                        return Err(bad(format!("budget field '{k}' must be a number")));
+                    }
+                }
+                if let Some(v) = b.get("max_candidates").and_then(Json::as_usize) {
+                    sweep.max_candidates = v;
+                }
+                deadline_ms = b.get("deadline_ms").and_then(Json::as_u64);
+            }
+            Ok(Request::Sweep(Box::new(SweepRequest {
+                id,
+                model_name,
+                model,
+                cluster,
+                cost,
+                sweep,
+                deadline_ms,
+                include_timing: j.get("timing").and_then(Json::as_bool).unwrap_or(false),
+            })))
+        }
+        other => Err(bad(format!(
+            "unknown op '{other}' (sweep|ping|stats|shutdown)"
+        ))),
+    }
+}
+
+fn id_json(id: Option<&str>) -> Json {
+    match id {
+        Some(s) => Json::str(s),
+        None => Json::Null,
+    }
+}
+
+/// One-line error response.
+pub fn error_response(id: Option<&str>, err: &ServiceError) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::obj(vec![
+                ("kind", Json::str(err.kind.name())),
+                ("message", Json::str(&err.message)),
+            ]),
+        ),
+    ])
+}
+
+/// The one-line JSON form of a CLI failure, shared with the service's
+/// error path so scripts can parse `distsim` stderr uniformly.
+pub fn cli_error_line(err: &anyhow::Error) -> String {
+    error_response(
+        None,
+        &ServiceError::new(ErrorKind::Cli, format!("{err:#}")),
+    )
+    .to_string()
+}
+
+pub fn pong_response(id: Option<&str>) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        ("result", Json::obj(vec![("op", Json::str("ping"))])),
+    ])
+}
+
+pub fn shutdown_response(id: Option<&str>) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        ("result", Json::obj(vec![("op", Json::str("shutdown"))])),
+    ])
+}
+
+/// Per-fingerprint cache occupancy for the `stats` op.
+pub fn stats_response(id: Option<&str>, caches: &[(String, usize)]) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("op", Json::str("stats")),
+                (
+                    "caches",
+                    Json::Arr(
+                        caches
+                            .iter()
+                            .map(|(fp, n)| {
+                                Json::obj(vec![
+                                    ("fingerprint", Json::str(fp)),
+                                    ("events", Json::num(*n as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+    ])
+}
+
+fn cache_stats_json(s: &CacheStats) -> Json {
+    Json::obj(vec![
+        ("hits", Json::num(s.hits as f64)),
+        ("misses", Json::num(s.misses as f64)),
+        ("unique_events", Json::num(s.unique_events as f64)),
+        ("gpu_seconds", Json::num(s.gpu_seconds)),
+        ("extrapolated", Json::num(s.extrapolated as f64)),
+        ("hit_rate", Json::num(s.hit_rate())),
+    ])
+}
+
+/// Serialize a sweep's outcome. `cache` is the accounting to report —
+/// the daemon substitutes its admission-order stats for the engine's
+/// prior-relative ones; one-shot callers pass `report.cache`.
+pub fn sweep_response(
+    id: Option<&str>,
+    fingerprint: &str,
+    report: &SweepReport,
+    cache: &CacheStats,
+    include_timing: bool,
+) -> Json {
+    let candidates: Vec<Json> = report
+        .candidates
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("strategy", Json::str(c.strategy.notation())),
+                ("schedule", Json::str(c.schedule.name())),
+                ("micro_batch_size", Json::num(c.micro_batch_size as f64)),
+                ("micro_batches", Json::num(c.micro_batches as f64)),
+                ("throughput", Json::num(c.throughput)),
+                ("reachable", Json::Bool(c.reachable)),
+                ("pruned", Json::Bool(c.pruned)),
+                ("bound_throughput", Json::num(c.bound_throughput)),
+            ])
+        })
+        .collect();
+    let mut result = vec![
+        ("op", Json::str("sweep")),
+        ("fingerprint", Json::str(fingerprint)),
+        ("candidates", Json::Arr(candidates)),
+        (
+            "evaluated",
+            Json::num(report.evaluated_count() as f64),
+        ),
+        ("pruned", Json::num(report.pruned_count() as f64)),
+        ("cache", cache_stats_json(cache)),
+    ];
+    if let Some(b) = report.best() {
+        result.push((
+            "best",
+            Json::obj(vec![
+                ("strategy", Json::str(b.strategy.notation())),
+                ("schedule", Json::str(b.schedule.name())),
+                ("throughput", Json::num(b.throughput)),
+            ]),
+        ));
+    }
+    if let Some(w) = report.worst() {
+        result.push((
+            "worst",
+            Json::obj(vec![
+                ("strategy", Json::str(w.strategy.notation())),
+                ("schedule", Json::str(w.schedule.name())),
+                ("throughput", Json::num(w.throughput)),
+            ]),
+        ));
+    }
+    if let Some(s) = report.speedup() {
+        result.push(("speedup", Json::num(s)));
+    }
+    if let Some(a) = report.schedule_attribution() {
+        result.push((
+            "schedule_attribution",
+            Json::obj(vec![
+                ("winning_schedule", Json::str(a.winning_schedule.name())),
+                ("schedule_speedup", Json::num(a.schedule_speedup)),
+                ("strategy_speedup", Json::num(a.strategy_speedup)),
+            ]),
+        ));
+    }
+    if include_timing {
+        result.push((
+            "timing",
+            Json::obj(vec![
+                ("total_seconds", Json::num(report.timing.total_seconds)),
+                ("threads_used", Json::num(report.threads_used as f64)),
+            ]),
+        ));
+    }
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        ("result", Json::Obj(result.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+    ])
+}
+
+/// Build a sweep-request line from CLI-style parts (`distsim ask`).
+pub fn build_request_line(
+    id: &str,
+    model: &str,
+    cluster: &ClusterSpec,
+    sweep_overrides: Vec<(&str, Json)>,
+    max_candidates: usize,
+    timing: bool,
+) -> String {
+    let mut req = vec![
+        ("id", Json::str(id)),
+        ("op", Json::str("sweep")),
+        ("model", Json::str(model)),
+        ("cluster", cluster.to_json()),
+        ("sweep", Json::obj(sweep_overrides)),
+    ];
+    if max_candidates > 0 {
+        req.push((
+            "budget",
+            Json::obj(vec![("max_candidates", Json::num(max_candidates as f64))]),
+        ));
+    }
+    if timing {
+        req.push(("timing", Json::Bool(true)));
+    }
+    Json::obj(req).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_minimal_sweep_request() {
+        let line = r#"{"id":"r1","model":"bert-large","cluster":{"preset":"a40","nodes":2,"gpus_per_node":4},"sweep":{"global_batch":8}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => {
+                assert_eq!(req.id.as_deref(), Some("r1"));
+                assert_eq!(req.model.name, "bert-large");
+                assert_eq!(req.cluster.total_devices(), 8);
+                assert_eq!(req.sweep.global_batch, 8);
+                assert_eq!(req.sweep.threads, 1, "service default is 1 thread");
+                assert!(!req.include_timing);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_control_ops() {
+        assert!(matches!(
+            parse_line(r#"{"op":"ping"}"#).unwrap(),
+            Request::Ping { id: None }
+        ));
+        assert!(matches!(
+            parse_line(r#"{"op":"shutdown","id":"x"}"#).unwrap(),
+            Request::Shutdown { id: Some(_) }
+        ));
+        assert!(matches!(
+            parse_line(r#"{"op":"stats"}"#).unwrap(),
+            Request::Stats { id: None }
+        ));
+    }
+
+    #[test]
+    fn bad_lines_map_to_structured_errors() {
+        let (id, e) = parse_line("{not json").unwrap_err();
+        assert_eq!((id, e.kind), (None, ErrorKind::BadJson));
+
+        let (id, e) = parse_line(r#"{"id":"q","op":"frobnicate"}"#).unwrap_err();
+        assert_eq!(id.as_deref(), Some("q"));
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+
+        let (_, e) = parse_line(r#"{"model":"nope","cluster":{"preset":"a40"}}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(e.message.contains("nope"));
+
+        let (_, e) = parse_line(r#"{"model":"bert-large"}"#).unwrap_err();
+        assert!(e.message.contains("cluster"));
+    }
+
+    #[test]
+    fn strict_sweep_and_budget_keys() {
+        // a typo'd axis name must not silently run the default sweep
+        for body in [
+            r#""sweep":{"mbs_axis":true}"#,
+            r#""sweep":{"schedual_axis":true}"#,
+            r#""sweep":{"global_batch":"32"}"#,
+            r#""sweep":{"prune":"true"}"#,
+            r#""budget":{"deadline":5}"#,
+            r#""budget":{"deadline_ms":"100"}"#,
+            r#""budget":7"#,
+            r#""cluster2":0"#,
+        ] {
+            let line =
+                format!(r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},{body}}}"#);
+            let (_, e) = parse_line(&line).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::BadRequest, "{body}");
+        }
+    }
+
+    #[test]
+    fn strict_cost_and_preset_validation() {
+        // typo'd / mistyped cost overrides are rejected, not defaulted
+        for cost in [r#"{"scail":2.0}"#, r#"{"scale":"2.0"}"#, r#"[1]"#] {
+            let line = format!(
+                r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},"cost":{cost}}}"#
+            );
+            let (_, e) = parse_line(&line).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::BadRequest, "{cost}");
+        }
+        // a valid override parses
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"cost":{"scale":2.0}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => assert_eq!(req.cost.scale, 2.0),
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        // the a100 pod is 8 GPUs/node: a mismatched request is an error
+        assert!(cluster_from_json(
+            &Json::parse(r#"{"preset":"a100","nodes":2,"gpus_per_node":4}"#).unwrap()
+        )
+        .is_err());
+        let pod = cluster_from_json(
+            &Json::parse(r#"{"preset":"a100","nodes":2,"gpus_per_node":8}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(pod.total_devices(), 16);
+    }
+
+    #[test]
+    fn budget_overrides_max_candidates() {
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"budget":{"max_candidates":3,"deadline_ms":500}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => {
+                assert_eq!(req.sweep.max_candidates, 3);
+                assert_eq!(req.deadline_ms, Some(500));
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_response_is_one_parseable_line() {
+        let e = ServiceError::new(ErrorKind::BadJson, "expected ',' or '}'\nat byte 3");
+        let line = error_response(Some("r9"), &e).to_string();
+        assert!(!line.contains('\n'), "must stay one line: {line}");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            j.get("error").unwrap().get("kind").and_then(Json::as_str),
+            Some("bad_json")
+        );
+    }
+
+    #[test]
+    fn cli_error_line_parses() {
+        let e = anyhow::anyhow!("unknown command 'frobnicate'");
+        let j = Json::parse(&cli_error_line(&e)).unwrap();
+        assert_eq!(
+            j.get("error").unwrap().get("kind").and_then(Json::as_str),
+            Some("cli")
+        );
+        assert!(j
+            .get("error")
+            .unwrap()
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("unknown command"));
+    }
+}

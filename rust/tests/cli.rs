@@ -1,6 +1,7 @@
 //! CLI integration: drive the `distsim` binary like a user would.
 
-use std::process::Command;
+use std::io::Write;
+use std::process::{Command, Stdio};
 
 fn bin() -> Command {
     Command::new(env!("CARGO_BIN_EXE_distsim"))
@@ -78,6 +79,119 @@ fn unknown_command_fails_with_message() {
     let out = bin().arg("frobnicate").output().unwrap();
     assert!(!out.status.success());
     assert!(String::from_utf8_lossy(&out.stderr).contains("unknown command"));
+}
+
+#[test]
+fn errors_are_one_line_json_not_backtraces() {
+    // malformed request file: exit non-zero with a parseable error line
+    let out = bin()
+        .args(["ask", "--file", "/definitely/not/a/file.ndjson"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let line = stderr.lines().next().expect("an error line");
+    let j = distsim::config::Json::parse(line)
+        .unwrap_or_else(|e| panic!("stderr not JSON ({e}): {stderr}"));
+    assert_eq!(
+        j.get("error").unwrap().get("kind").and_then(|k| k.as_str()),
+        Some("cli")
+    );
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn serve_stdio_answers_a_piped_request() {
+    let mut child = bin()
+        .args(["serve", "--stdio", "--workers", "2"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    child
+        .stdin
+        .take()
+        .unwrap()
+        .write_all(
+            concat!(
+                r#"{"id":"smoke","op":"sweep","model":"bert-large","#,
+                r#""cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"#,
+                r#""sweep":{"global_batch":4,"profile_iters":1}}"#,
+                "\n"
+            )
+            .as_bytes(),
+        )
+        .unwrap(); // dropping stdin sends EOF: the daemon drains and exits
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout.lines().next().expect("one response line");
+    let j = distsim::config::Json::parse(line).unwrap();
+    assert_eq!(j.get("id").and_then(|v| v.as_str()), Some("smoke"));
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+}
+
+#[test]
+fn ask_runs_a_local_what_if_query() {
+    let out = bin()
+        .args([
+            "ask",
+            "--model",
+            "bert-large",
+            "--nodes",
+            "1",
+            "--gpus-per-node",
+            "4",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let j = distsim::config::Json::parse(stdout.lines().next().unwrap()).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(j.get("result").unwrap().get("best").is_some());
+}
+
+#[test]
+fn search_cache_file_warms_a_second_run() {
+    let path = std::env::temp_dir().join(format!(
+        "distsim_cli_cache_{}.json",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&path);
+    let args = |p: &str| {
+        vec![
+            "search".to_string(),
+            "--model".into(),
+            "bert-large".into(),
+            "--nodes".into(),
+            "1".into(),
+            "--gpus-per-node".into(),
+            "4".into(),
+            "--global-batch".into(),
+            "4".into(),
+            "--profile-iters".into(),
+            "2".into(),
+            "--cache-file".into(),
+            p.into(),
+        ]
+    };
+    let cold = bin().args(args(path.to_str().unwrap())).output().unwrap();
+    assert!(cold.status.success(), "{}", String::from_utf8_lossy(&cold.stderr));
+    assert!(path.exists(), "first run must write the snapshot");
+    let warm = bin().args(args(path.to_str().unwrap())).output().unwrap();
+    assert!(warm.status.success());
+    let text = String::from_utf8_lossy(&warm.stdout);
+    assert!(
+        text.contains("100% hit rate"),
+        "second run must profile nothing: {text}"
+    );
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,0 +1,272 @@
+//! Integration tests for the what-if sweep service: protocol round-trips,
+//! worker-count determinism, as-if-serial cache accounting, and
+//! cross-restart snapshot persistence.
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use distsim::config::Json;
+use distsim::service::{serve_ndjson, serve_tcp, ServeOpts, ServeSummary};
+
+/// Run an NDJSON session in-process and return its response lines.
+fn run_lines(input: &str, opts: &ServeOpts) -> (Vec<String>, ServeSummary) {
+    let mut out: Vec<u8> = Vec::new();
+    let summary = serve_ndjson(Cursor::new(input.to_string()), &mut out, opts);
+    let text = String::from_utf8(out).expect("responses are utf-8");
+    (text.lines().map(str::to_string).collect(), summary)
+}
+
+fn opts_with_workers(workers: usize) -> ServeOpts {
+    ServeOpts {
+        workers,
+        cache_dir: None,
+    }
+}
+
+/// A small, fast sweep request: 6 candidates on 4 devices.
+fn small_sweep(id: &str, global_batch: usize) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4}},"sweep":{{"global_batch":{global_batch},"profile_iters":1}}}}"#
+    )
+}
+
+fn parse(line: &str) -> Json {
+    Json::parse(line).unwrap_or_else(|e| panic!("unparseable response '{line}': {e}"))
+}
+
+fn result_field<'a>(j: &'a Json, k: &str) -> &'a Json {
+    j.get("result")
+        .unwrap_or_else(|| panic!("no result in {j}"))
+        .get(k)
+        .unwrap_or_else(|| panic!("no result.{k} in {j}"))
+}
+
+#[test]
+fn protocol_round_trip_good_bad_and_control_lines() {
+    let input = [
+        r#"{"id":"p1","op":"ping"}"#,
+        "{definitely not json",
+        r#"{"id":"q","op":"frobnicate"}"#,
+        r#"{"id":"m","op":"sweep","model":"no-such-model","cluster":{"preset":"a40"}}"#,
+        r#"{"op":"stats"}"#,
+    ]
+    .join("\n");
+    let (lines, summary) = run_lines(&input, &opts_with_workers(2));
+    assert_eq!(lines.len(), 5, "one response per line, in order: {lines:?}");
+    assert_eq!(summary.requests, 5);
+    assert_eq!(summary.errors, 3);
+
+    let pong = parse(&lines[0]);
+    assert_eq!(pong.get("id").and_then(Json::as_str), Some("p1"));
+    assert_eq!(pong.get("ok").and_then(Json::as_bool), Some(true));
+
+    let bad_json = parse(&lines[1]);
+    assert_eq!(bad_json.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(bad_json.get("id"), Some(&Json::Null));
+    assert_eq!(
+        bad_json.get("error").unwrap().get("kind").and_then(Json::as_str),
+        Some("bad_json")
+    );
+
+    let bad_op = parse(&lines[2]);
+    assert_eq!(bad_op.get("id").and_then(Json::as_str), Some("q"));
+    assert_eq!(
+        bad_op.get("error").unwrap().get("kind").and_then(Json::as_str),
+        Some("bad_request")
+    );
+
+    let bad_model = parse(&lines[3]);
+    assert!(bad_model
+        .get("error")
+        .unwrap()
+        .get("message")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("no-such-model"));
+
+    let stats = parse(&lines[4]);
+    assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn sweep_response_carries_candidates_and_best() {
+    let (lines, summary) = run_lines(&small_sweep("s1", 4), &opts_with_workers(1));
+    assert_eq!((lines.len(), summary.sweeps), (1, 1));
+    let j = parse(&lines[0]);
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    let cands = result_field(&j, "candidates").as_arr().unwrap();
+    assert_eq!(cands.len(), 6, "grid(4) has 6 strategies");
+    for c in cands {
+        assert!(c.get("strategy").and_then(Json::as_str).is_some());
+        assert_eq!(c.get("schedule").and_then(Json::as_str), Some("dapple"));
+    }
+    assert!(result_field(&j, "best").get("throughput").and_then(Json::as_f64).unwrap() > 0.0);
+    let speedup = result_field(&j, "speedup").as_f64().unwrap();
+    assert!(speedup >= 1.0);
+    // deterministic by default: no wall-clock in the response
+    assert!(j.get("result").unwrap().get("timing").is_none());
+}
+
+#[test]
+fn responses_are_bit_identical_for_any_worker_count() {
+    // mixed session: two distinct sweeps, one repeat, an error line and a
+    // ping interleaved — the response stream must not depend on how many
+    // workers race on it
+    let input = [
+        small_sweep("a", 4),
+        r#"{"op":"ping","id":"mid"}"#.to_string(),
+        small_sweep("b", 8),
+        "not json at all".to_string(),
+        small_sweep("a-again", 4),
+    ]
+    .join("\n");
+    let (one, s1) = run_lines(&input, &opts_with_workers(1));
+    for workers in [2, 4] {
+        let (many, sn) = run_lines(&input, &opts_with_workers(workers));
+        assert_eq!(one, many, "{workers} workers diverged from serial");
+        assert_eq!(s1, sn);
+    }
+}
+
+#[test]
+fn second_identical_request_is_a_full_cache_hit() {
+    let input = format!("{}\n{}", small_sweep("cold", 4), small_sweep("warm", 4));
+    let (lines, _) = run_lines(&input, &opts_with_workers(4));
+    let cold = parse(&lines[0]);
+    let warm = parse(&lines[1]);
+
+    let cold_cache = result_field(&cold, "cache");
+    assert!(cold_cache.get("misses").and_then(Json::as_usize).unwrap() > 0);
+    assert!(cold_cache.get("gpu_seconds").and_then(Json::as_f64).unwrap() > 0.0);
+
+    let warm_cache = result_field(&warm, "cache");
+    assert_eq!(warm_cache.get("misses").and_then(Json::as_usize), Some(0));
+    assert_eq!(warm_cache.get("gpu_seconds").and_then(Json::as_f64), Some(0.0));
+    assert_eq!(warm_cache.get("hit_rate").and_then(Json::as_f64), Some(1.0));
+    assert!(warm_cache.get("hits").and_then(Json::as_usize).unwrap() > 0);
+
+    // and the shared cache must never change the answer
+    assert_eq!(
+        result_field(&cold, "candidates").to_string(),
+        result_field(&warm, "candidates").to_string()
+    );
+}
+
+fn fresh_cache_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "distsim_service_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn snapshots_survive_a_daemon_restart() {
+    let dir = fresh_cache_dir("persist");
+    let opts = ServeOpts {
+        workers: 2,
+        cache_dir: Some(dir.clone()),
+    };
+
+    // session 1: cold sweep, then clean shutdown -> snapshot on disk
+    let input = format!("{}\n{}", small_sweep("r", 4), r#"{"op":"shutdown"}"#);
+    let (lines1, summary1) = run_lines(&input, &opts);
+    assert_eq!(lines1.len(), 2);
+    assert_eq!(summary1.snapshots_saved, 1);
+    let first = parse(&lines1[0]);
+    assert!(result_field(&first, "cache").get("misses").and_then(Json::as_usize).unwrap() > 0);
+    let snapshot_files: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    assert_eq!(snapshot_files.len(), 1);
+    assert!(snapshot_files[0].starts_with("cache-") && snapshot_files[0].ends_with(".json"));
+
+    // session 2 (a "restarted daemon"): the same request is answered from
+    // the loaded snapshot — identical payload, zero profiling cost
+    let (lines2, _) = run_lines(&small_sweep("r", 4), &opts);
+    let second = parse(&lines2[0]);
+    assert_eq!(
+        result_field(&first, "candidates").to_string(),
+        result_field(&second, "candidates").to_string(),
+        "restart with a persisted cache must not change the answer"
+    );
+    assert_eq!(
+        result_field(&first, "fingerprint").as_str(),
+        result_field(&second, "fingerprint").as_str()
+    );
+    let cache2 = result_field(&second, "cache");
+    assert_eq!(cache2.get("misses").and_then(Json::as_usize), Some(0));
+    assert_eq!(cache2.get("hit_rate").and_then(Json::as_f64), Some(1.0));
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn budget_caps_candidates_and_deadlines_do_not_fire_when_generous() {
+    let line = r#"{"id":"b","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1},"budget":{"max_candidates":3,"deadline_ms":600000}}"#;
+    let (lines, _) = run_lines(line, &opts_with_workers(1));
+    let j = parse(&lines[0]);
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        result_field(&j, "candidates").as_arr().unwrap().len(),
+        3,
+        "budget.max_candidates must truncate the space"
+    );
+}
+
+#[test]
+fn schedule_axis_attributes_wins_in_the_response() {
+    let line = r#"{"id":"sched","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1,"schedule_axis":true}}"#;
+    let (lines, _) = run_lines(line, &opts_with_workers(2));
+    let j = parse(&lines[0]);
+    let cands = result_field(&j, "candidates").as_arr().unwrap();
+    let mut schedules: Vec<&str> = cands
+        .iter()
+        .filter_map(|c| c.get("schedule").and_then(Json::as_str))
+        .collect();
+    schedules.sort();
+    schedules.dedup();
+    assert!(
+        schedules.len() >= 3,
+        "schedule axis must enumerate dapple/gpipe/naive, got {schedules:?}"
+    );
+    let attr = result_field(&j, "schedule_attribution");
+    assert!(attr.get("winning_schedule").and_then(Json::as_str).is_some());
+    assert!(attr.get("schedule_speedup").and_then(Json::as_f64).unwrap() >= 1.0);
+    assert!(attr.get("strategy_speedup").and_then(Json::as_f64).unwrap() >= 1.0);
+}
+
+#[test]
+fn tcp_transport_serves_and_shuts_down() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let daemon = std::thread::spawn(move || {
+        serve_tcp(listener, &opts_with_workers(2)).unwrap()
+    });
+
+    let mut stream = std::net::TcpStream::connect(addr).unwrap();
+    writeln!(stream, r#"{{"id":"t0","op":"ping"}}"#).unwrap();
+    writeln!(stream, "{}", small_sweep("t1", 4)).unwrap();
+    writeln!(stream, r#"{{"id":"t2","op":"shutdown"}}"#).unwrap();
+    stream.flush().unwrap();
+
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    let lines: Vec<String> = reader.lines().take(3).map(|l| l.unwrap()).collect();
+    assert_eq!(lines.len(), 3);
+    assert_eq!(parse(&lines[0]).get("id").and_then(Json::as_str), Some("t0"));
+    let sweep = parse(&lines[1]);
+    assert_eq!(sweep.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(
+        result_field(&sweep, "candidates").as_arr().unwrap().len(),
+        6
+    );
+    assert_eq!(parse(&lines[2]).get("id").and_then(Json::as_str), Some("t2"));
+
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.requests, 3);
+    assert_eq!(summary.sweeps, 1);
+}

@@ -14,6 +14,23 @@ else
     echo "cargo fmt unavailable; skipping format check"
 fi
 
+# rustdoc must build clean: the module docs are the navigable overview
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --offline
+
+# docs drift: every op the service dispatcher accepts must be documented
+# in docs/FORMATS.md. (tests/docs_drift.rs checks the same from the const
+# itself; this grep catches drift even when the test file is edited.)
+OPS=$(sed -n 's/^pub const OPS: \[&str; [0-9]*\] = \[\(.*\)\];$/\1/p' \
+    rust/src/service/protocol.rs | tr -d '" ')
+test -n "$OPS" || { echo "could not extract OPS from protocol.rs" >&2; exit 1; }
+for op in $(printf '%s' "$OPS" | tr ',' ' '); do
+    grep -q "\`$op\`" docs/FORMATS.md || {
+        echo "docs drift: op '$op' missing from docs/FORMATS.md" >&2
+        exit 1
+    }
+done
+echo "docs-drift check passed"
+
 # smoke: one what-if request piped through the service daemon must come
 # back as a well-formed ok-response line
 SMOKE_REQ='{"id":"smoke","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1}}'

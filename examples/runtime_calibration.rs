@@ -65,7 +65,14 @@ fn main() -> anyhow::Result<()> {
     let gt = distsim::engine::GroundTruth::prepare_with_cost(&cfg, cost.clone())?;
     let mut db = distsim::events::EventDb::new();
     distsim::engine::build_programs(&gt.part, &gt.sched, &cfg.cluster, &mut db);
-    distsim::profile::profile_events(&mut db, &cfg.cluster, &cost, cfg.jitter_sigma, 100, 123);
+    distsim::profile::profile_events(
+        &mut db,
+        &cfg.cluster,
+        &distsim::cost::CostBook::uniform(cost.clone()),
+        cfg.jitter_sigma,
+        100,
+        123,
+    );
     let ds = distsim::distsim::DistSim::new(&gt.part, &gt.sched, &cfg.cluster);
     let pred = ds.predict_batch_time_us(&mut db);
     let actual = gt.mean_batch_time_us(20);

@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
                 distsim::profile::profile_events(
                     &mut db,
                     &cfg.cluster,
-                    &distsim::cost::CostModel::default(),
+                    &distsim::cost::CostBook::default(),
                     cfg.jitter_sigma,
                     cfg.profile_iters,
                     1,

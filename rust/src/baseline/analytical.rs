@@ -26,7 +26,10 @@ pub fn analytical_batch_time_us(
 ) -> TimeUs {
     let cm = CostModel::default(); // only used for its analytical method
     let strategy = part.strategy;
-    let dev = &cluster.device;
+    // heterogeneous fleets price at the *fastest* SKU present: the
+    // heuristic stays optimistic for any placement, which keeps the
+    // search engine's pruning bound a true throughput upper bound
+    let dev = cluster.fastest_spec();
     let m = sched.micro_batches as f64;
     let pp = strategy.pp as f64;
 
@@ -47,7 +50,7 @@ pub fn analytical_batch_time_us(
 
     // MP all-reduce ideal time per stage (bytes / bw, no latency)
     let mp_comm: f64 = if strategy.mp > 1 {
-        let link = cluster.group_link_class(&strategy.mp_group(0));
+        let link = cluster.rank_group_link_class(&strategy.mp_group(0));
         let bw = cluster.bw_gbs(link) * 1e3;
         part.stages
             .iter()
@@ -94,7 +97,7 @@ pub fn analytical_batch_time_us(
             .copied()
             .max()
             .unwrap_or(0) as f64;
-        let link = cluster.group_link_class(&strategy.dp_group(0));
+        let link = cluster.rank_group_link_class(&strategy.dp_group(0));
         2.0 * (strategy.dp as f64 - 1.0) / strategy.dp as f64 * bytes
             / (cluster.bw_gbs(link) * 1e3)
     } else {

@@ -94,7 +94,7 @@ pub fn daydream_batch_time_us(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostModel;
+    use crate::cost::CostBook;
     use crate::engine::GroundTruth;
     use crate::model::zoo;
     use crate::partition::partition;
@@ -115,7 +115,7 @@ mod tests {
         let sched = schedule::dapple(pp, m);
         let mut db = EventDb::new();
         crate::engine::build_programs(&part, &sched, &c, &mut db);
-        profile_events(&mut db, &c, &CostModel::default(), 0.0, 1, 5);
+        profile_events(&mut db, &c, &CostBook::default(), 0.0, 1, 5);
         (part, sched, c, db)
     }
 

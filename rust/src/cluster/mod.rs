@@ -1,13 +1,33 @@
-//! Cluster topology: nodes x devices, intra-/inter-node links, and device
+//! Cluster topology: nodes x devices, intra-/inter-node links, device
 //! presets matching the paper's testbeds (A40 x 16 over 4 nodes for §5,
-//! A10 x 16 for §6, and a 128-GPU pod for §5.5).
+//! A10 x 16 for §6, and a 128-GPU pod for §5.5) — and, beyond the paper,
+//! **heterogeneous mixed-SKU fleets** (ISSUE 4).
+//!
+//! Heterogeneity is two orthogonal tables:
+//!
+//! * **Device kinds** — `device` is kind 0; [`ClusterSpec::extra_kinds`]
+//!   adds named SKUs (kind 1..), and [`ClusterSpec::kind_of_device`] maps
+//!   every physical device slot to a kind. Empty = homogeneous (all
+//!   kind 0), byte-identical JSON to the pre-heterogeneity format.
+//! * **Placement** — a rank→device map ([`Placement`]): `Linear`
+//!   (identity, the homogeneous default), `FastFirst` (ranks fill the
+//!   fastest SKUs first), `Interleaved` (ranks deal round-robin across
+//!   SKUs), or an explicit permutation `Table`. The strategy sweep
+//!   enumerates named policies as a search axis
+//!   ([`crate::search::SweepConfig::placement_axis`]).
+//!
+//! Placement permutes *which rank runs on which device*; it never changes
+//! any profiled event cost (those depend on the device kind, carried in
+//! the event descriptor — see [`crate::events`]). The profile-cache
+//! fingerprint therefore excludes it ([`crate::search::fingerprint`]).
 
 use crate::config::Json;
-use crate::strategy::Strategy;
 
 /// A GPU-like accelerator's headline characteristics. These anchor the
 /// cost model (`cost/`); the calibration pass can rescale them to measured
-/// PJRT numbers.
+/// PJRT numbers. The `name` doubles as the **device-kind identity** in
+/// heterogeneous clusters: computation events carry it, and the per-kind
+/// cost registry ([`crate::cost::CostBook`]) resolves overrides by it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DeviceSpec {
     pub name: String,
@@ -110,14 +130,142 @@ impl LinkClass {
     }
 }
 
-/// Cluster: homogeneous devices, flat two-level network (the paper's
-/// setting: "clusters with homogeneous devices and no network hierarchy"
-/// beyond the intra/inter-node distinction its comm events carry).
+/// Rank→device placement map (see the module docs). `Linear` is the
+/// homogeneous identity; the named policies are the deterministic
+/// placements the sweep's placement axis enumerates; `Table` is an
+/// explicit permutation for hand-crafted layouts.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Placement {
+    /// rank == device (the pre-heterogeneity behaviour).
+    Linear,
+    /// Ranks fill devices fastest-SKU-first (stable by device index
+    /// within a kind): low ranks — and with Megatron's MP-fastest rank
+    /// order, the early pipeline stages — land on the fastest silicon.
+    FastFirst,
+    /// Ranks deal round-robin across SKUs (fastest kind first, stable by
+    /// device index within a kind): every contiguous rank group mixes
+    /// SKUs, the adversarial layout for MP groups.
+    Interleaved,
+    /// Explicit rank→device permutation; `table[rank] = device`.
+    Table(Vec<usize>),
+}
+
+impl Placement {
+    /// Canonical serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Placement::Linear => "linear",
+            Placement::FastFirst => "fast_first",
+            Placement::Interleaved => "interleaved",
+            Placement::Table(_) => "table",
+        }
+    }
+
+    /// Parse a named policy (`linear` / `fast_first` / `interleaved`;
+    /// hyphens accepted for CLI friendliness). `Table` only arrives as a
+    /// JSON array, never by name.
+    pub fn parse(name: &str) -> anyhow::Result<Placement> {
+        match name.replace('-', "_").as_str() {
+            "linear" => Ok(Placement::Linear),
+            "fast_first" => Ok(Placement::FastFirst),
+            "interleaved" => Ok(Placement::Interleaved),
+            other => {
+                anyhow::bail!("unknown placement '{other}' (linear|fast_first|interleaved)")
+            }
+        }
+    }
+
+    /// JSON form: a policy name string, or the raw table as an array.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Placement::Table(t) => {
+                Json::Arr(t.iter().map(|&d| Json::num(d as f64)).collect())
+            }
+            named => Json::str(named.name()),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Placement> {
+        if let Some(name) = j.as_str() {
+            return Placement::parse(name);
+        }
+        if let Some(arr) = j.as_arr() {
+            let table = arr
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("placement table entries must be numbers"))
+                })
+                .collect::<anyhow::Result<Vec<usize>>>()?;
+            return Ok(Placement::Table(table));
+        }
+        anyhow::bail!("placement must be a policy name or a rank->device array")
+    }
+}
+
+/// One point on the strategy sweep's placement axis: keep the cluster's
+/// own placement, or override it with a named policy. `Copy`, so candidate
+/// specs stay `Copy`; an explicit [`Placement::Table`] can only arrive via
+/// the cluster spec itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PlacementPolicy {
+    /// Evaluate under the cluster spec's own placement (the baseline —
+    /// and the only point when the axis is off).
+    Cluster,
+    FastFirst,
+    Interleaved,
+}
+
+impl PlacementPolicy {
+    /// The deterministic axis the sweep enumerates for heterogeneous
+    /// clusters, baseline first (ties resolve toward it).
+    pub const AXIS: [PlacementPolicy; 3] = [
+        PlacementPolicy::Cluster,
+        PlacementPolicy::FastFirst,
+        PlacementPolicy::Interleaved,
+    ];
+
+    /// Canonical serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementPolicy::Cluster => "cluster",
+            PlacementPolicy::FastFirst => "fast_first",
+            PlacementPolicy::Interleaved => "interleaved",
+        }
+    }
+
+    /// The placement override this policy applies, if any.
+    pub fn placement(&self) -> Option<Placement> {
+        match self {
+            PlacementPolicy::Cluster => None,
+            PlacementPolicy::FastFirst => Some(Placement::FastFirst),
+            PlacementPolicy::Interleaved => Some(Placement::Interleaved),
+        }
+    }
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Cluster: devices across nodes with a flat two-level network (the
+/// paper's intra/inter-node distinction). Homogeneous by default; see the
+/// module docs for the mixed-SKU extension.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterSpec {
     pub nodes: usize,
     pub gpus_per_node: usize,
+    /// Device kind 0 — the whole fleet in a homogeneous cluster.
     pub device: DeviceSpec,
+    /// Named device kinds 1.. (empty = homogeneous).
+    pub extra_kinds: Vec<DeviceSpec>,
+    /// `kind_of_device[d]` = kind index of physical device slot `d`.
+    /// Empty = every device is kind 0; otherwise one entry per device.
+    pub kind_of_device: Vec<usize>,
+    /// Rank→device placement map ([`Placement::Linear`] by default).
+    pub placement: Placement,
     /// Intra-node per-direction bandwidth, GB/s (NVLink-ish).
     pub intra_bw_gbs: f64,
     /// Inter-node per-NIC bandwidth, GB/s (IB-ish).
@@ -135,6 +283,9 @@ impl ClusterSpec {
             nodes,
             gpus_per_node,
             device: DeviceSpec::a40(),
+            extra_kinds: Vec::new(),
+            kind_of_device: Vec::new(),
+            placement: Placement::Linear,
             intra_bw_gbs: 24.0,
             inter_bw_gbs: 12.0,
             intra_lat_us: 6.0,
@@ -145,13 +296,9 @@ impl ClusterSpec {
     /// The paper's §6 testbed: 4 nodes x 4 A10.
     pub fn a10_cluster(nodes: usize, gpus_per_node: usize) -> Self {
         ClusterSpec {
-            nodes,
-            gpus_per_node,
             device: DeviceSpec::a10(),
             intra_bw_gbs: 20.0,
-            inter_bw_gbs: 12.0,
-            intra_lat_us: 6.0,
-            inter_lat_us: 18.0,
+            ..ClusterSpec::a40_cluster(nodes, gpus_per_node)
         }
     }
 
@@ -159,32 +306,252 @@ impl ClusterSpec {
     /// 8x200Gb HDR inter.
     pub fn a100_pod(nodes: usize) -> Self {
         ClusterSpec {
-            nodes,
-            gpus_per_node: 8,
             device: DeviceSpec::a100(),
             intra_bw_gbs: 300.0,
             inter_bw_gbs: 100.0,
             intra_lat_us: 3.0,
             inter_lat_us: 10.0,
+            ..ClusterSpec::a40_cluster(nodes, 8)
         }
+    }
+
+    /// A mixed-SKU fleet on the §5 fabric: even-index nodes carry A40s
+    /// (kind 0), odd-index nodes carry A10s (kind 1). The smallest
+    /// realistic heterogeneous scenario — a cluster grown in two
+    /// procurement rounds.
+    pub fn mixed_a40_a10(nodes: usize, gpus_per_node: usize) -> Self {
+        assert!(
+            nodes >= 2,
+            "a mixed a40-a10 fleet needs >= 2 nodes (got {nodes}); \
+             with one node every device would be an A40"
+        );
+        let mut c = ClusterSpec::a40_cluster(nodes, gpus_per_node);
+        c.extra_kinds = vec![DeviceSpec::a10()];
+        let kinds: Vec<usize> = (0..c.total_devices()).map(|d| c.node_of(d) % 2).collect();
+        c.kind_of_device = kinds;
+        c
+    }
+
+    /// Same topology with a different rank→device placement.
+    pub fn with_placement(&self, placement: Placement) -> Self {
+        ClusterSpec {
+            placement,
+            ..self.clone()
+        }
+    }
+
+    /// Structural invariants of the kind and placement tables. Called by
+    /// [`ClusterSpec::from_json`]; builders uphold them by construction.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.total_devices();
+        // kind names are the SKU identity events carry: two kinds sharing
+        // a name would conflate in the cache and price the wrong silicon
+        for (i, a) in self.extra_kinds.iter().enumerate() {
+            anyhow::ensure!(
+                a.name != self.device.name
+                    && self.extra_kinds[i + 1..].iter().all(|b| b.name != a.name),
+                "duplicate device-kind name '{}': kind names must be unique",
+                a.name
+            );
+        }
+        if !self.kind_of_device.is_empty() {
+            anyhow::ensure!(
+                self.kind_of_device.len() == n,
+                "kind_of_device has {} entries for {} devices",
+                self.kind_of_device.len(),
+                n
+            );
+            for (d, &k) in self.kind_of_device.iter().enumerate() {
+                anyhow::ensure!(
+                    k < self.kind_count(),
+                    "device {d} maps to kind {k}, but only {} kinds exist",
+                    self.kind_count()
+                );
+            }
+        }
+        if let Placement::Table(t) = &self.placement {
+            anyhow::ensure!(
+                t.len() == n,
+                "placement table has {} entries for {} devices",
+                t.len(),
+                n
+            );
+            let mut seen = vec![false; n];
+            for (r, &d) in t.iter().enumerate() {
+                anyhow::ensure!(d < n, "rank {r} placed on device {d} of {n}");
+                anyhow::ensure!(
+                    !std::mem::replace(&mut seen[d], true),
+                    "placement table maps two ranks to device {d}"
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn total_devices(&self) -> usize {
         self.nodes * self.gpus_per_node
     }
 
+    // -- device kinds -----------------------------------------------------
+
+    /// Number of named device kinds (kind 0 = `device`).
+    pub fn kind_count(&self) -> usize {
+        1 + self.extra_kinds.len()
+    }
+
+    /// The [`DeviceSpec`] of a kind index.
+    pub fn kind_spec(&self, kind: usize) -> &DeviceSpec {
+        if kind == 0 {
+            &self.device
+        } else {
+            &self.extra_kinds[kind - 1]
+        }
+    }
+
+    /// A kind's SKU name (the identity computation events carry).
+    pub fn kind_name(&self, kind: usize) -> &str {
+        &self.kind_spec(kind).name
+    }
+
+    /// Kind index of a physical device slot.
+    pub fn device_kind(&self, device: usize) -> usize {
+        self.kind_of_device.get(device).copied().unwrap_or(0)
+    }
+
+    /// Resolve a SKU name back to its spec (profilers price computation
+    /// events on the kind the event was generated for).
+    pub fn kind_by_name(&self, name: &str) -> Option<&DeviceSpec> {
+        std::iter::once(&self.device)
+            .chain(self.extra_kinds.iter())
+            .find(|k| k.name == name)
+    }
+
+    /// Does more than one SKU actually appear in the fleet? (A fleet whose
+    /// every device maps to the same kind — even a non-zero one — is
+    /// homogeneous: all placements price identically there.)
+    pub fn is_heterogeneous(&self) -> bool {
+        self.kinds_in_use().len() > 1
+    }
+
+    /// Kind indices with at least one device, ascending.
+    pub fn kinds_in_use(&self) -> Vec<usize> {
+        if self.kind_of_device.is_empty() {
+            return vec![0];
+        }
+        let mut v = self.kind_of_device.clone();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Highest-peak SKU in the fleet — what the analytical lower bound
+    /// prices compute at (optimistic on purpose, so the pruning bound
+    /// stays a true upper bound on throughput for any placement).
+    pub fn fastest_spec(&self) -> &DeviceSpec {
+        self.kinds_in_use()
+            .into_iter()
+            .map(|k| self.kind_spec(k))
+            .max_by(|a, b| a.peak_tflops.total_cmp(&b.peak_tflops))
+            .expect("at least one kind in use")
+    }
+
+    /// Smallest device memory in the fleet, GiB — deployability must hold
+    /// on every rank, so the tightest SKU gates.
+    pub fn min_mem_gib(&self) -> f64 {
+        self.kinds_in_use()
+            .into_iter()
+            .map(|k| self.kind_spec(k).mem_gib)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    // -- placement --------------------------------------------------------
+
+    /// The resolved rank→device table under the current [`Placement`].
+    /// O(n log n); hot paths (program building, engine base costs) call
+    /// this once and index.
+    pub fn rank_to_device(&self) -> Vec<usize> {
+        let n = self.total_devices();
+        match &self.placement {
+            Placement::Linear => (0..n).collect(),
+            Placement::Table(t) => t.clone(),
+            Placement::FastFirst => {
+                let mut devs: Vec<usize> = (0..n).collect();
+                devs.sort_by(|&a, &b| {
+                    let pa = self.kind_spec(self.device_kind(a)).peak_tflops;
+                    let pb = self.kind_spec(self.device_kind(b)).peak_tflops;
+                    pb.total_cmp(&pa).then(a.cmp(&b))
+                });
+                devs
+            }
+            Placement::Interleaved => {
+                // bucket devices by kind (fastest kind first, device index
+                // order within), then deal one device per bucket per round
+                let mut kinds = self.kinds_in_use();
+                kinds.sort_by(|&a, &b| {
+                    self.kind_spec(b)
+                        .peak_tflops
+                        .total_cmp(&self.kind_spec(a).peak_tflops)
+                        .then(a.cmp(&b))
+                });
+                let mut buckets: Vec<Vec<usize>> = kinds
+                    .iter()
+                    .map(|&k| (0..n).filter(|&d| self.device_kind(d) == k).collect())
+                    .collect();
+                for b in &mut buckets {
+                    b.reverse(); // pop() yields ascending device index
+                }
+                let mut out = Vec::with_capacity(n);
+                while out.len() < n {
+                    for b in &mut buckets {
+                        if let Some(d) = b.pop() {
+                            out.push(d);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// The physical device a strategy rank runs on (one-off lookup; batch
+    /// callers use [`ClusterSpec::rank_to_device`]).
+    pub fn device_of_rank(&self, rank: usize) -> usize {
+        match &self.placement {
+            Placement::Linear => rank,
+            Placement::Table(t) => t[rank],
+            _ => self.rank_to_device()[rank],
+        }
+    }
+
+    /// Kind index of the SKU a rank runs on.
+    pub fn kind_of_rank(&self, rank: usize) -> usize {
+        self.device_kind(self.device_of_rank(rank))
+    }
+
+    /// The [`DeviceSpec`] a rank runs on.
+    pub fn spec_of_rank(&self, rank: usize) -> &DeviceSpec {
+        self.kind_spec(self.kind_of_rank(rank))
+    }
+
+    // -- topology ---------------------------------------------------------
+
     /// Which node a global device index lives on.
     pub fn node_of(&self, device: usize) -> usize {
         device / self.gpus_per_node
     }
 
-    /// Link class between two global device indices.
+    /// Link class between two global *device* indices.
     pub fn link_class(&self, a: usize, b: usize) -> LinkClass {
         if self.node_of(a) == self.node_of(b) {
             LinkClass::Intra
         } else {
             LinkClass::Inter
         }
+    }
+
+    /// Link class between two *ranks*, through the placement map.
+    pub fn rank_link_class(&self, a: usize, b: usize) -> LinkClass {
+        self.link_class(self.device_of_rank(a), self.device_of_rank(b))
     }
 
     pub fn bw_gbs(&self, class: LinkClass) -> f64 {
@@ -201,29 +568,45 @@ impl ClusterSpec {
         }
     }
 
-    /// Link class of a communication *group*: inter-node as soon as any
-    /// pair of members crosses nodes (the slowest hop gates a ring).
-    pub fn group_link_class(&self, ranks: &[usize]) -> LinkClass {
-        let first = self.node_of(ranks[0]);
-        if ranks.iter().all(|&r| self.node_of(r) == first) {
+    /// Link class of a communication *group* of device indices: inter-node
+    /// as soon as any pair of members crosses nodes (the slowest hop gates
+    /// a ring).
+    pub fn group_link_class(&self, devices: &[usize]) -> LinkClass {
+        let first = self.node_of(devices[0]);
+        if devices.iter().all(|&d| self.node_of(d) == first) {
             LinkClass::Intra
         } else {
             LinkClass::Inter
         }
     }
 
-    /// Does one rank's share of the model fit in device memory? Used by
-    /// the search driver to mark configurations as unreachable (paper
-    /// Fig. 12 draws those as 0).
+    /// [`ClusterSpec::group_link_class`] over *ranks*, through placement.
+    pub fn rank_group_link_class(&self, ranks: &[usize]) -> LinkClass {
+        if matches!(self.placement, Placement::Linear) {
+            return self.group_link_class(ranks);
+        }
+        // resolve the placement table once, not per member (FastFirst /
+        // Interleaved resolution sorts the whole fleet)
+        let table = self.rank_to_device();
+        let devices: Vec<usize> = ranks.iter().map(|&r| table[r]).collect();
+        self.group_link_class(&devices)
+    }
+
+    /// Does one rank's share of the model fit in device memory? Gated by
+    /// the smallest SKU in the fleet — the search driver marks
+    /// configurations as unreachable (paper Fig. 12 draws those as 0).
     pub fn fits(&self, params_per_rank: u64) -> bool {
         // params + grads + Adam moments = 4x, fp32 = 4 bytes, plus ~25%
         // activation headroom.
         let need = params_per_rank as f64 * 4.0 * 4.0 * 1.25;
-        need <= self.device.mem_gib * (1u64 << 30) as f64
+        need <= self.min_mem_gib() * (1u64 << 30) as f64
     }
 
+    /// Canonical JSON. Heterogeneity fields are emitted only when
+    /// non-default, so a homogeneous cluster's JSON is byte-identical to
+    /// the pre-heterogeneity format (see docs/FORMATS.md).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("nodes", Json::num(self.nodes as f64)),
             ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
             ("device", self.device.to_json()),
@@ -231,11 +614,32 @@ impl ClusterSpec {
             ("inter_bw_gbs", Json::num(self.inter_bw_gbs)),
             ("intra_lat_us", Json::num(self.intra_lat_us)),
             ("inter_lat_us", Json::num(self.inter_lat_us)),
-        ])
+        ];
+        if !self.extra_kinds.is_empty() {
+            fields.push((
+                "extra_kinds",
+                Json::Arr(self.extra_kinds.iter().map(DeviceSpec::to_json).collect()),
+            ));
+        }
+        if !self.kind_of_device.is_empty() {
+            fields.push((
+                "kind_of_device",
+                Json::Arr(
+                    self.kind_of_device
+                        .iter()
+                        .map(|&k| Json::num(k as f64))
+                        .collect(),
+                ),
+            ));
+        }
+        if self.placement != Placement::Linear {
+            fields.push(("placement", self.placement.to_json()));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
-        Ok(ClusterSpec {
+        let c = ClusterSpec {
             nodes: j
                 .get("nodes")
                 .and_then(Json::as_usize)
@@ -248,18 +652,35 @@ impl ClusterSpec {
                 j.get("device")
                     .ok_or_else(|| anyhow::anyhow!("cluster missing device"))?,
             )?,
+            extra_kinds: match j.get("extra_kinds").and_then(Json::as_arr) {
+                Some(arr) => arr
+                    .iter()
+                    .map(DeviceSpec::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+            kind_of_device: match j.get("kind_of_device").and_then(Json::as_arr) {
+                Some(arr) => arr
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| {
+                            anyhow::anyhow!("kind_of_device entries must be numbers")
+                        })
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                None => Vec::new(),
+            },
+            placement: match j.get("placement") {
+                Some(p) => Placement::from_json(p)?,
+                None => Placement::Linear,
+            },
             intra_bw_gbs: j.get("intra_bw_gbs").and_then(Json::as_f64).unwrap_or(24.0),
             inter_bw_gbs: j.get("inter_bw_gbs").and_then(Json::as_f64).unwrap_or(12.0),
             intra_lat_us: j.get("intra_lat_us").and_then(Json::as_f64).unwrap_or(6.0),
             inter_lat_us: j.get("inter_lat_us").and_then(Json::as_f64).unwrap_or(18.0),
-        })
-    }
-
-    /// Map a strategy rank onto a physical device index (identity in this
-    /// homogeneous flat layout: rank == device). Kept as an explicit hook
-    /// so heterogeneous mappings can slot in.
-    pub fn device_of_rank(&self, _strategy: &Strategy, rank: usize) -> usize {
-        rank
+        };
+        c.validate()?;
+        Ok(c)
     }
 }
 
@@ -292,6 +713,7 @@ mod tests {
             ClusterSpec::a40_cluster(4, 4),
             ClusterSpec::a10_cluster(4, 4),
             ClusterSpec::a100_pod(16),
+            ClusterSpec::mixed_a40_a10(4, 4),
         ] {
             assert!(c.intra_bw_gbs > c.inter_bw_gbs);
             assert!(c.intra_lat_us < c.inter_lat_us);
@@ -312,5 +734,135 @@ mod tests {
         let c = ClusterSpec::a10_cluster(4, 4);
         let j = Json::parse(&c.to_json().to_string()).unwrap();
         assert_eq!(ClusterSpec::from_json(&j).unwrap(), c);
+    }
+
+    #[test]
+    fn homogeneous_json_has_no_heterogeneity_fields() {
+        // byte-compatibility: the old format is the homogeneous format
+        let text = ClusterSpec::a40_cluster(4, 4).to_json().to_string();
+        for key in ["extra_kinds", "kind_of_device", "placement"] {
+            assert!(!text.contains(key), "unexpected '{key}' in {text}");
+        }
+    }
+
+    #[test]
+    fn mixed_preset_alternates_kinds_by_node() {
+        let c = ClusterSpec::mixed_a40_a10(4, 4);
+        assert!(c.is_heterogeneous());
+        assert_eq!(c.kind_count(), 2);
+        assert_eq!(c.kinds_in_use(), vec![0, 1]);
+        for d in 0..c.total_devices() {
+            assert_eq!(c.device_kind(d), c.node_of(d) % 2);
+        }
+        assert_eq!(c.kind_name(0), "A40");
+        assert_eq!(c.kind_name(1), "A10");
+        assert_eq!(c.fastest_spec().name, "A40");
+        assert_eq!(c.min_mem_gib(), DeviceSpec::a10().mem_gib);
+        assert!(c.kind_by_name("A10").is_some());
+        assert!(c.kind_by_name("H100").is_none());
+    }
+
+    #[test]
+    fn heterogeneous_json_roundtrips_all_placements() {
+        let base = ClusterSpec::mixed_a40_a10(2, 4);
+        for p in [
+            Placement::Linear,
+            Placement::FastFirst,
+            Placement::Interleaved,
+            Placement::Table(vec![7, 6, 5, 4, 3, 2, 1, 0]),
+        ] {
+            let c = base.with_placement(p);
+            let j = Json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(ClusterSpec::from_json(&j).unwrap(), c, "{:?}", c.placement);
+        }
+    }
+
+    #[test]
+    fn placement_resolution_is_a_permutation() {
+        let c = ClusterSpec::mixed_a40_a10(2, 4);
+        for p in [Placement::Linear, Placement::FastFirst, Placement::Interleaved] {
+            let map = c.with_placement(p.clone()).rank_to_device();
+            let mut sorted = map.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..8).collect::<Vec<_>>(), "{p:?}: {map:?}");
+        }
+    }
+
+    #[test]
+    fn fast_first_packs_fast_devices_into_low_ranks() {
+        // 2x4 mixed: node 0 = A40 (devices 0-3), node 1 = A10 (devices 4-7)
+        let c = ClusterSpec::mixed_a40_a10(2, 4).with_placement(Placement::FastFirst);
+        assert_eq!(c.rank_to_device(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+        for r in 0..4 {
+            assert_eq!(c.spec_of_rank(r).name, "A40", "rank {r}");
+        }
+        for r in 4..8 {
+            assert_eq!(c.spec_of_rank(r).name, "A10", "rank {r}");
+        }
+        // flip the kind layout: A10s on node 0 -> fast-first reorders
+        let mut flipped = ClusterSpec::mixed_a40_a10(2, 4);
+        let flipped_kinds: Vec<usize> = (0..8).map(|d| 1 - flipped.node_of(d) % 2).collect();
+        flipped.kind_of_device = flipped_kinds;
+        let map = flipped.with_placement(Placement::FastFirst).rank_to_device();
+        assert_eq!(map, vec![4, 5, 6, 7, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn interleaved_alternates_kinds() {
+        let c = ClusterSpec::mixed_a40_a10(2, 4).with_placement(Placement::Interleaved);
+        let kinds: Vec<usize> = (0..8).map(|r| c.kind_of_rank(r)).collect();
+        assert_eq!(kinds, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+        assert_eq!(c.rank_to_device(), vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn rank_link_class_follows_placement() {
+        let c = ClusterSpec::mixed_a40_a10(2, 4);
+        // linear: ranks 0 and 1 share node 0
+        assert_eq!(c.rank_link_class(0, 1), LinkClass::Intra);
+        // interleaved: rank 1 sits on device 4 (node 1)
+        let i = c.with_placement(Placement::Interleaved);
+        assert_eq!(i.rank_link_class(0, 1), LinkClass::Inter);
+        assert_eq!(i.rank_group_link_class(&[0, 1]), LinkClass::Inter);
+        assert_eq!(i.rank_group_link_class(&[0, 2]), LinkClass::Intra);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_tables() {
+        let base = ClusterSpec::mixed_a40_a10(2, 4);
+        let mut short = base.clone();
+        short.kind_of_device = vec![0, 1];
+        assert!(short.validate().is_err());
+        let mut bad_kind = base.clone();
+        bad_kind.kind_of_device = vec![0, 0, 0, 0, 0, 0, 0, 9];
+        assert!(bad_kind.validate().is_err());
+        let dup = base.with_placement(Placement::Table(vec![0; 8]));
+        assert!(dup.validate().is_err());
+        let short_table = base.with_placement(Placement::Table(vec![0, 1]));
+        assert!(short_table.validate().is_err());
+        let ok = base.with_placement(Placement::Table((0..8).rev().collect()));
+        ok.validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_kind_names() {
+        // two kinds sharing a name would conflate in the event cache and
+        // silently price the wrong silicon
+        let mut c = ClusterSpec::mixed_a40_a10(2, 4);
+        let mut throttled = DeviceSpec::a40();
+        throttled.peak_tflops = 37.0;
+        c.extra_kinds.push(throttled);
+        assert!(c.validate().unwrap_err().to_string().contains("duplicate"));
+        let mut twice = ClusterSpec::mixed_a40_a10(2, 4);
+        twice.extra_kinds.push(DeviceSpec::a10());
+        assert!(twice.validate().is_err());
+        ClusterSpec::mixed_a40_a10(2, 4).validate().unwrap();
+    }
+
+    #[test]
+    fn placement_parse_accepts_hyphens() {
+        assert_eq!(Placement::parse("fast-first").unwrap(), Placement::FastFirst);
+        assert_eq!(Placement::parse("interleaved").unwrap(), Placement::Interleaved);
+        assert!(Placement::parse("random").is_err());
     }
 }

@@ -12,6 +12,14 @@
 //! The paper profiles all-reduce directly up to 8 devices and extrapolates
 //! beyond with this law (measured effect on iteration time < 2%); we mirror
 //! that in `profile/`.
+//!
+//! These laws price *links*, not compute, so they are device-kind
+//! agnostic: in a mixed-SKU fleet (ISSUE 4) communication events carry no
+//! SKU identity and a measurement transfers across kinds — but the
+//! functions here take **physical device indices**, so callers with a
+//! non-linear rank→device placement must map ranks through
+//! [`ClusterSpec::rank_to_device`] first (the engine's base-cost pass and
+//! the hierarchical model both do).
 
 use crate::cluster::{ClusterSpec, LinkClass};
 use crate::util::TimeUs;

@@ -12,6 +12,16 @@
 //!
 //! The curve's absolute scale can be recalibrated from measured PJRT
 //! executions of the AOT artifacts (`profile/calibrate.rs`).
+//!
+//! **Heterogeneous fleets (ISSUE 4).** A mixed-SKU cluster prices the same
+//! operator differently per device kind twice over: the [`DeviceSpec`]
+//! differs (peak FLOPs, bandwidth, launch overhead), and the efficiency
+//! curve itself may differ (an A100's tensor cores saturate differently
+//! than an A10's). [`CostBook`] is the per-device-kind registry: a base
+//! [`CostModel`] plus named per-SKU overrides, resolved by the kind name a
+//! computation event carries. Every pricing site (ground-truth engine,
+//! profiler, sweep engine, service) consumes a `CostBook`; a bare
+//! `CostModel` lifts via [`CostBook::uniform`].
 
 use crate::cluster::DeviceSpec;
 use crate::config::Json;
@@ -155,6 +165,91 @@ impl CostModel {
     }
 }
 
+/// Per-device-kind cost-model registry: `base` prices every SKU without an
+/// override; `per_kind` maps SKU names (see
+/// [`DeviceSpec::name`]) to their own curves. Kept
+/// name-sorted so the canonical JSON — and therefore the profile-cache
+/// fingerprint — is independent of insertion order.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CostBook {
+    pub base: CostModel,
+    /// (SKU name, override), sorted by name.
+    pub per_kind: Vec<(String, CostModel)>,
+}
+
+impl From<CostModel> for CostBook {
+    fn from(base: CostModel) -> Self {
+        CostBook::uniform(base)
+    }
+}
+
+impl CostBook {
+    /// One model for every kind (the homogeneous / pre-heterogeneity case).
+    pub fn uniform(base: CostModel) -> Self {
+        CostBook {
+            base,
+            per_kind: Vec::new(),
+        }
+    }
+
+    /// Add (or replace) a per-SKU override, keeping name order.
+    pub fn with_kind(mut self, name: impl Into<String>, model: CostModel) -> Self {
+        let name = name.into();
+        match self.per_kind.binary_search_by(|(n, _)| n.as_str().cmp(&name)) {
+            Ok(i) => self.per_kind[i].1 = model,
+            Err(i) => self.per_kind.insert(i, (name, model)),
+        }
+        self
+    }
+
+    /// The model pricing a SKU: its override, else the base model.
+    pub fn for_kind(&self, kind: &str) -> &CostModel {
+        match self.per_kind.binary_search_by(|(n, _)| n.as_str().cmp(kind)) {
+            Ok(i) => &self.per_kind[i].1,
+            Err(_) => &self.base,
+        }
+    }
+
+    /// No per-SKU overrides: every kind prices through `base`.
+    pub fn is_uniform(&self) -> bool {
+        self.per_kind.is_empty()
+    }
+
+    /// Canonical JSON: the base model's fields flat (byte-identical to a
+    /// bare [`CostModel`] when uniform) plus a `per_kind` object when
+    /// overrides exist.
+    pub fn to_json(&self) -> Json {
+        let mut j = self.base.to_json();
+        if !self.per_kind.is_empty() {
+            if let Json::Obj(map) = &mut j {
+                map.insert(
+                    "per_kind".to_string(),
+                    Json::Obj(
+                        self.per_kind
+                            .iter()
+                            .map(|(n, m)| (n.clone(), m.to_json()))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        j
+    }
+
+    /// Lenient parse, mirroring [`CostModel::from_json`]: missing fields
+    /// default, unknown keys are ignored (the service's strict validation
+    /// lives in `service::protocol`).
+    pub fn from_json(j: &Json) -> Self {
+        let mut book = CostBook::uniform(CostModel::from_json(j));
+        if let Some(per) = j.get("per_kind").and_then(Json::as_obj) {
+            for (name, m) in per {
+                book = book.with_kind(name.clone(), CostModel::from_json(m));
+            }
+        }
+        book
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -237,5 +332,57 @@ mod tests {
         cm.scale = 1.25;
         let j = Json::parse(&cm.to_json().to_string()).unwrap();
         assert_eq!(CostModel::from_json(&j), cm);
+    }
+
+    #[test]
+    fn book_resolves_overrides_by_kind_name() {
+        let mut slow = CostModel::default();
+        slow.scale = 2.0;
+        let book = CostBook::default().with_kind("A10", slow.clone());
+        assert_eq!(book.for_kind("A10"), &slow);
+        assert_eq!(book.for_kind("A40"), &book.base);
+        assert!(!book.is_uniform());
+        assert!(CostBook::default().is_uniform());
+        // the same op prices differently per SKU through the book
+        let d = a40();
+        let base_t = book
+            .for_kind("A40")
+            .op_latency_us(&d, OpClass::Matmul, 1 << 30, 1 << 20);
+        let slow_t = book
+            .for_kind("A10")
+            .op_latency_us(&d, OpClass::Matmul, 1 << 30, 1 << 20);
+        assert!((slow_t / base_t - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn book_with_kind_replaces_and_sorts() {
+        let mut a = CostModel::default();
+        a.scale = 2.0;
+        let mut b = CostModel::default();
+        b.scale = 3.0;
+        let book = CostBook::default()
+            .with_kind("Z", a.clone())
+            .with_kind("A", a.clone())
+            .with_kind("Z", b.clone());
+        assert_eq!(book.per_kind.len(), 2);
+        assert_eq!(book.per_kind[0].0, "A");
+        assert_eq!(book.for_kind("Z"), &b);
+    }
+
+    #[test]
+    fn book_json_roundtrip_and_uniform_compat() {
+        // uniform book JSON == bare CostModel JSON (fingerprint stability)
+        let mut cm = CostModel::default();
+        cm.scale = 1.25;
+        assert_eq!(
+            CostBook::uniform(cm.clone()).to_json().to_string(),
+            cm.to_json().to_string()
+        );
+        // roundtrip with overrides
+        let mut slow = CostModel::default();
+        slow.scale = 1.5;
+        let book = CostBook::uniform(cm).with_kind("A10", slow);
+        let j = Json::parse(&book.to_json().to_string()).unwrap();
+        assert_eq!(CostBook::from_json(&j), book);
     }
 }

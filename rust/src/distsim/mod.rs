@@ -11,6 +11,19 @@
 //! * **Data-parallelism modeling** — replicate the event-list across DP
 //!   replicas and append the gradient all-reduce event per stage.
 //!
+//! **Heterogeneous fleets (ISSUE 4).** On a mixed-SKU cluster the same
+//! layer costs different profiled times per device kind, so composition
+//! generalizes in two ways: (1) a composed item's duration within an MP
+//! group is the **max over the group members' kinds** — the per-layer
+//! all-reduce barriers make the slowest SKU gate every step, exactly as
+//! the ground-truth engine's collective barriers do; (2) the Algorithm-1
+//! walk runs **once per DP replica**, because placement can give each
+//! replica a different SKU profile, and the per-stage gradient all-reduce
+//! then starts at the *latest* replica's availability (a barrier across
+//! the DP group). On a homogeneous cluster every group has one kind and
+//! every replica walks identically, so the output is bit-identical to the
+//! pre-heterogeneity model.
+//!
 //! The output is a [`Timeline`] with the *same tags* as the ground-truth
 //! engine emits, so the metrics layer aligns spans one-to-one. DistSim
 //! never executes the per-rank programs — it only ever touches profiled
@@ -33,14 +46,25 @@ pub enum Item {
     MpAr { event: EventId, layer: u32, idx: u32 },
 }
 
+impl Item {
+    fn event(&self) -> EventId {
+        match *self {
+            Item::Comp { event, .. } | Item::MpAr { event, .. } => event,
+        }
+    }
+}
+
 /// Model-parallelism modeling: the composed event-list of one stage for
-/// one phase. Layers run in order (reversed for backward), each compute
-/// event followed by its MP all-reduces.
+/// one phase, targeting one device kind (`kind` is the SKU name stamped
+/// into the compute events — heterogeneous stages compose one list per
+/// kind present). Layers run in order (reversed for backward), each
+/// compute event followed by its MP all-reduces.
 pub fn stage_items(
     part: &Partition,
     db: &mut EventDb,
     stage: usize,
     phase: Phase,
+    kind: &str,
 ) -> Vec<Item> {
     let work = &part.stages[stage];
     let mut items = Vec::new();
@@ -54,7 +78,7 @@ pub fn stage_items(
             Phase::Bwd => (&lw.bwd, lw.ar_count_bwd),
         };
         items.push(Item::Comp {
-            event: db.intern(Event::Comp(comp.clone())),
+            event: db.intern(Event::Comp(comp.for_kind(kind))),
             layer: lw.layer_idx as u32,
         });
         if let Some(ar) = &lw.mp_allreduce {
@@ -91,105 +115,181 @@ impl<'a> DistSim<'a> {
         }
     }
 
-    /// Hierarchical modeling: MP composition → Algorithm-1 pipeline walk →
-    /// DP expansion. `db` must contain profiled times for every event the
-    /// partition references (run `profile::profile_events` first).
+    /// Hierarchical modeling: MP composition → Algorithm-1 pipeline walk
+    /// (per DP replica) → DP expansion. `db` must contain profiled times
+    /// for every event the partition references on every device kind in
+    /// use (run `profile::profile_events` after `engine::build_programs`,
+    /// which interns the full per-kind set).
     pub fn predict(&self, db: &mut EventDb) -> Timeline {
         let strategy = self.part.strategy;
         let pp = strategy.pp;
-        let launch = self.cluster.device.launch_overhead_us;
+        let dpn = strategy.dp;
+        let rank_dev = self.cluster.rank_to_device();
+        let kind_of_rank =
+            |rank: usize| self.cluster.device_kind(rank_dev[rank]);
 
         // -- model parallelism modeling: composed event lists ------------
-        let fwd_items: Vec<Vec<Item>> = (0..pp)
-            .map(|s| stage_items(self.part, db, s, Phase::Fwd))
-            .collect();
-        let bwd_items: Vec<Vec<Item>> = (0..pp)
-            .map(|s| stage_items(self.part, db, s, Phase::Bwd))
-            .collect();
-
-        // inter-stage p2p events (boundary s -> s+1); link class from the
-        // representative dp-0 lane (homogeneous layout)
-        let p2p_fwd: Vec<Option<EventId>> = (0..pp)
+        // kinds present per stage (across every mp x dp lane), ascending
+        let stage_kinds: Vec<Vec<usize>> = (0..pp)
             .map(|s| {
-                if s + 1 < pp {
-                    let a = strategy.rank_of(RankCoords { mp: 0, pp: s, dp: 0 });
-                    let b = strategy.rank_of(RankCoords { mp: 0, pp: s + 1, dp: 0 });
-                    Some(db.intern(Event::Comm(CommEvent::P2p {
-                        bytes: self.part.stages[s].act_bytes,
-                        link: self.cluster.link_class(a, b),
-                    })))
-                } else {
-                    None
-                }
+                let mut ks: Vec<usize> = (0..strategy.mp)
+                    .flat_map(|m| {
+                        (0..dpn).map(move |d| (m, d))
+                    })
+                    .map(|(m, d)| {
+                        kind_of_rank(strategy.rank_of(RankCoords { mp: m, pp: s, dp: d }))
+                    })
+                    .collect();
+                ks.sort_unstable();
+                ks.dedup();
+                ks
+            })
+            .collect();
+        // composed items per (stage, kind-slot), aligned with stage_kinds
+        let items_for = |db: &mut EventDb, phase: Phase| -> Vec<Vec<Vec<Item>>> {
+            (0..pp)
+                .map(|s| {
+                    stage_kinds[s]
+                        .iter()
+                        .map(|&k| {
+                            stage_items(self.part, db, s, phase, self.cluster.kind_name(k))
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let fwd_items = items_for(db, Phase::Fwd);
+        let bwd_items = items_for(db, Phase::Bwd);
+
+        // inter-stage p2p events (boundary s -> s+1), per DP replica: each
+        // replica's mp-0 lane resolves its own link class through the
+        // placement map — under a scattered placement replica k's hop can
+        // cross nodes where replica 0's does not, and the engine prices
+        // each rank pair individually, so the model must too
+        let p2p_fwd: Vec<Vec<Option<EventId>>> = (0..dpn)
+            .map(|d| {
+                (0..pp)
+                    .map(|s| {
+                        if s + 1 < pp {
+                            let a = strategy.rank_of(RankCoords { mp: 0, pp: s, dp: d });
+                            let b =
+                                strategy.rank_of(RankCoords { mp: 0, pp: s + 1, dp: d });
+                            Some(db.intern(Event::Comm(CommEvent::P2p {
+                                bytes: self.part.stages[s].act_bytes,
+                                link: self.cluster.link_class(rank_dev[a], rank_dev[b]),
+                            })))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
             })
             .collect();
 
-        // -- pipeline parallelism modeling (Algorithm 1) ------------------
+        // -- pipeline parallelism modeling (Algorithm 1), per DP replica --
         let m = self.sched.micro_batches;
-        let mut queue_pos = vec![0usize; pp];
-        let mut free = vec![0.0f64; pp];
-        let mut done_f = vec![vec![None::<TimeUs>; m]; pp];
-        let mut done_b = vec![vec![None::<TimeUs>; m]; pp];
-        // spans per logical stage (replicated over MP and DP at the end)
-        let mut stage_spans: Vec<Vec<(TimeUs, TimeUs, Tag)>> = vec![Vec::new(); pp];
+        // spans per (replica, logical stage); replicated over MP at the end
+        let mut stage_spans: Vec<Vec<Vec<(TimeUs, TimeUs, Tag)>>> =
+            vec![vec![Vec::new(); pp]; dpn];
+        let mut free_all = vec![vec![0.0f64; pp]; dpn];
 
-        let total: usize = self.sched.stage_tasks.iter().map(Vec::len).sum();
-        let mut processed = 0usize;
-        while processed < total {
-            let mut advanced = false;
-            for s in 0..pp {
-                let pos = queue_pos[s];
-                if pos >= self.sched.stage_tasks[s].len() {
-                    continue;
-                }
-                let task = self.sched.stage_tasks[s][pos];
-                let (mb, phase) = (task.mb, task.phase);
-                // first_available: data dependency satisfied?
-                let upstream_done = match phase {
-                    Phase::Fwd if s > 0 => done_f[s - 1][mb],
-                    Phase::Bwd if s + 1 < pp => done_b[s + 1][mb],
-                    _ => Some(0.0),
-                };
-                let Some(dep_done) = upstream_done else {
-                    continue;
-                };
+        for d in 0..dpn {
+            // this replica's per-stage kind subset (over its MP group) and
+            // sender-side launch overheads (mp-0 representative)
+            let lane_kinds: Vec<Vec<usize>> = (0..pp)
+                .map(|s| {
+                    let mut ks: Vec<usize> = (0..strategy.mp)
+                        .map(|mp| {
+                            kind_of_rank(strategy.rank_of(RankCoords { mp, pp: s, dp: d }))
+                        })
+                        .collect();
+                    ks.sort_unstable();
+                    ks.dedup();
+                    ks
+                })
+                .collect();
+            let launch: Vec<f64> = (0..pp)
+                .map(|s| {
+                    let r = strategy.rank_of(RankCoords { mp: 0, pp: s, dp: d });
+                    self.cluster.kind_spec(kind_of_rank(r)).launch_overhead_us
+                })
+                .collect();
+            // composed item duration: max over the lane's kinds — the MP
+            // all-reduce barriers make the slowest member gate each step
+            let lane_dur = |db: &EventDb, items: &[Vec<Item>], s: usize, i: usize| {
+                lane_kinds[s]
+                    .iter()
+                    .map(|k| {
+                        let slot = stage_kinds[s]
+                            .iter()
+                            .position(|sk| sk == k)
+                            .expect("lane kind enumerated per stage");
+                        db.elapsed(items[slot][i].event())
+                    })
+                    .fold(f64::NEG_INFINITY, f64::max)
+            };
 
-                let mut cur = free[s];
-                // inter-stage transfer (a p2p communication event)
-                let recv_ev = match phase {
-                    Phase::Fwd if s > 0 => p2p_fwd[s - 1],
-                    Phase::Bwd if s + 1 < pp => p2p_fwd[s],
-                    _ => None,
-                };
-                if let Some(ev) = recv_ev {
-                    let send_post = dep_done + launch;
-                    let start = cur.max(send_post);
-                    let dur = db.elapsed(ev);
-                    stage_spans[s].push((
-                        start,
-                        start + dur,
-                        Tag {
-                            stage: s as u32,
-                            mb: mb as u32,
-                            phase,
-                            layer: u32::MAX,
-                            kind: SpanKind::P2p,
-                            idx: 0,
-                        },
-                    ));
-                    cur = start + dur;
-                }
+            let mut queue_pos = vec![0usize; pp];
+            let free = &mut free_all[d];
+            let mut done_f = vec![vec![None::<TimeUs>; m]; pp];
+            let mut done_b = vec![vec![None::<TimeUs>; m]; pp];
 
-                // composed events of this stage
-                let items = match phase {
-                    Phase::Fwd => &fwd_items[s],
-                    Phase::Bwd => &bwd_items[s],
-                };
-                for item in items {
-                    let (ev, tag) = match *item {
-                        Item::Comp { event, layer } => (
-                            event,
+            let total: usize = self.sched.stage_tasks.iter().map(Vec::len).sum();
+            let mut processed = 0usize;
+            while processed < total {
+                let mut advanced = false;
+                for s in 0..pp {
+                    let pos = queue_pos[s];
+                    if pos >= self.sched.stage_tasks[s].len() {
+                        continue;
+                    }
+                    let task = self.sched.stage_tasks[s][pos];
+                    let (mb, phase) = (task.mb, task.phase);
+                    // first_available: data dependency satisfied?
+                    let upstream_done = match phase {
+                        Phase::Fwd if s > 0 => done_f[s - 1][mb],
+                        Phase::Bwd if s + 1 < pp => done_b[s + 1][mb],
+                        _ => Some(0.0),
+                    };
+                    let Some(dep_done) = upstream_done else {
+                        continue;
+                    };
+
+                    let mut cur = free[s];
+                    // inter-stage transfer (a p2p communication event);
+                    // the sender pays its own SKU's launch overhead
+                    let (recv_ev, sender) = match phase {
+                        Phase::Fwd if s > 0 => (p2p_fwd[d][s - 1], Some(s - 1)),
+                        Phase::Bwd if s + 1 < pp => (p2p_fwd[d][s], Some(s + 1)),
+                        _ => (None, None),
+                    };
+                    if let Some(ev) = recv_ev {
+                        let send_post = dep_done + launch[sender.unwrap()];
+                        let start = cur.max(send_post);
+                        let dur = db.elapsed(ev);
+                        stage_spans[d][s].push((
+                            start,
+                            start + dur,
                             Tag {
+                                stage: s as u32,
+                                mb: mb as u32,
+                                phase,
+                                layer: u32::MAX,
+                                kind: SpanKind::P2p,
+                                idx: 0,
+                            },
+                        ));
+                        cur = start + dur;
+                    }
+
+                    // composed events of this stage
+                    let items = match phase {
+                        Phase::Fwd => &fwd_items[s],
+                        Phase::Bwd => &bwd_items[s],
+                    };
+                    for (i, item) in items[0].iter().enumerate() {
+                        let tag = match *item {
+                            Item::Comp { layer, .. } => Tag {
                                 stage: s as u32,
                                 mb: mb as u32,
                                 phase,
@@ -197,10 +297,7 @@ impl<'a> DistSim<'a> {
                                 kind: SpanKind::Comp,
                                 idx: 0,
                             },
-                        ),
-                        Item::MpAr { event, layer, idx } => (
-                            event,
-                            Tag {
+                            Item::MpAr { layer, idx, .. } => Tag {
                                 stage: s as u32,
                                 mb: mb as u32,
                                 phase,
@@ -208,63 +305,82 @@ impl<'a> DistSim<'a> {
                                 kind: SpanKind::MpAllReduce,
                                 idx,
                             },
-                        ),
-                    };
-                    let dur = db.elapsed(ev);
-                    stage_spans[s].push((cur, cur + dur, tag));
-                    cur += dur;
-                }
+                        };
+                        let dur = lane_dur(db, items, s, i);
+                        stage_spans[d][s].push((cur, cur + dur, tag));
+                        cur += dur;
+                    }
 
-                match phase {
-                    Phase::Fwd => done_f[s][mb] = Some(cur),
-                    Phase::Bwd => done_b[s][mb] = Some(cur),
+                    match phase {
+                        Phase::Fwd => done_f[s][mb] = Some(cur),
+                        Phase::Bwd => done_b[s][mb] = Some(cur),
+                    }
+                    // sender-side launch overhead for the outgoing transfer
+                    let sends = matches!(phase, Phase::Fwd if s + 1 < pp)
+                        || matches!(phase, Phase::Bwd if s > 0);
+                    if sends {
+                        cur += launch[s];
+                    }
+                    free[s] = cur;
+                    queue_pos[s] += 1;
+                    processed += 1;
+                    advanced = true;
                 }
-                // sender-side launch overhead for the outgoing transfer
-                let sends = matches!(phase, Phase::Fwd if s + 1 < pp)
-                    || matches!(phase, Phase::Bwd if s > 0);
-                if sends {
-                    cur += launch;
-                }
-                free[s] = cur;
-                queue_pos[s] += 1;
-                processed += 1;
-                advanced = true;
+                assert!(
+                    advanced,
+                    "pipeline modeling stuck: schedule has an unsatisfiable dependency"
+                );
             }
-            assert!(
-                advanced,
-                "pipeline modeling stuck: schedule has an unsatisfiable dependency"
-            );
         }
 
         // -- data parallelism modeling: expansion + gradient all-reduce --
+        // link class from the mp-0 lane's DP group: under the named
+        // placements every mp lane's group is translation-equivalent, so
+        // one event covers the stage; only a hand-crafted Table placement
+        // can give sibling lanes a different class (approximated here,
+        // priced exactly by the engine)
         let grad_ar: Vec<Option<EventId>> = (0..pp)
             .map(|s| {
                 if strategy.dp > 1 {
                     let group = strategy.dp_group(
                         strategy.rank_of(RankCoords { mp: 0, pp: s, dp: 0 }),
                     );
+                    let group_devs: Vec<usize> =
+                        group.iter().map(|&r| rank_dev[r]).collect();
                     Some(db.intern(Event::Comm(CommEvent::AllReduce {
                         bytes: self.part.grad_bytes_per_rank[s],
                         group: strategy.dp,
-                        link: self.cluster.group_link_class(&group),
+                        link: self.cluster.group_link_class(&group_devs),
                     })))
                 } else {
                     None
                 }
             })
             .collect();
+        // the gradient all-reduce is a barrier across replicas: it starts
+        // when the *last* replica's stage becomes free
+        let ar_start: Vec<TimeUs> = (0..pp)
+            .map(|s| {
+                (0..dpn)
+                    .map(|d| free_all[d][s])
+                    .fold(f64::NEG_INFINITY, f64::max)
+            })
+            .collect();
 
-        let per_lane: usize = stage_spans.iter().map(Vec::len).sum();
+        let per_lane: usize = stage_spans
+            .iter()
+            .map(|per_d| per_d.iter().map(Vec::len).sum::<usize>())
+            .sum();
         let grad_lanes = grad_ar.iter().filter(|g| g.is_some()).count();
         let mut timeline = Timeline::with_capacity(
             strategy.world_size(),
-            strategy.mp * strategy.dp * (per_lane + grad_lanes),
+            strategy.mp * (per_lane + grad_lanes * dpn),
         );
-        for dp in 0..strategy.dp {
+        for dp in 0..dpn {
             for s in 0..pp {
                 for mp in 0..strategy.mp {
                     let device = strategy.rank_of(RankCoords { mp, pp: s, dp });
-                    for &(start, end, tag) in &stage_spans[s] {
+                    for &(start, end, tag) in &stage_spans[dp][s] {
                         timeline.push(Span {
                             device,
                             start,
@@ -276,8 +392,8 @@ impl<'a> DistSim<'a> {
                         let dur = db.elapsed(ev);
                         timeline.push(Span {
                             device,
-                            start: free[s],
-                            end: free[s] + dur,
+                            start: ar_start[s],
+                            end: ar_start[s] + dur,
                             tag: Tag {
                                 stage: s as u32,
                                 mb: 0,
@@ -304,35 +420,36 @@ impl<'a> DistSim<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::CostModel;
+    use crate::cost::CostBook;
     use crate::model::zoo;
     use crate::partition::partition;
     use crate::profile::profile_events;
     use crate::schedule;
     use crate::strategy::Strategy;
 
-    /// Profile (noise-free) + predict for one strategy.
-    fn predict(mp: usize, pp: usize, dp: usize, m: usize) -> Timeline {
+    /// Profile (noise-free) + predict for one strategy on `cluster`.
+    fn predict_on(
+        mp: usize,
+        pp: usize,
+        dp: usize,
+        m: usize,
+        c: &ClusterSpec,
+    ) -> Timeline {
         let model = zoo::bert_large();
         let s = Strategy::new(mp, pp, dp);
-        let c = ClusterSpec::a40_cluster(4, 4);
-        let part = partition(&model, &s, &c, 4);
+        let part = partition(&model, &s, c, 4);
         let sched = schedule::dapple(pp, m);
         let mut db = EventDb::new();
-        // intern exactly what the model needs, then profile
-        let ds = DistSim::new(&part, &sched, &c);
-        // build event set by a dry predict requires profiled times; intern
-        // via stage_items + comm events first:
-        for stage in 0..pp {
-            stage_items(&part, &mut db, stage, Phase::Fwd);
-            stage_items(&part, &mut db, stage, Phase::Bwd);
-        }
-        // p2p + grad AR events are interned lazily in predict; intern the
-        // same keys here by calling the same constructors through a probe
-        // profile loop:
-        crate::engine::build_programs(&part, &sched, &c, &mut db);
-        profile_events(&mut db, &c, &CostModel::default(), 0.0, 1, 99);
+        let ds = DistSim::new(&part, &sched, c);
+        // build_programs interns the full per-rank (per-kind) event set;
+        // profiling then covers everything predict() touches
+        crate::engine::build_programs(&part, &sched, c, &mut db);
+        profile_events(&mut db, c, &CostBook::default(), 0.0, 1, 99);
         ds.predict(&mut db)
+    }
+
+    fn predict(mp: usize, pp: usize, dp: usize, m: usize) -> Timeline {
+        predict_on(mp, pp, dp, m, &ClusterSpec::a40_cluster(4, 4))
     }
 
     #[test]
@@ -405,5 +522,47 @@ mod tests {
             .spans()
             .iter()
             .any(|s| s.tag.kind == SpanKind::GradAllReduce));
+    }
+
+    #[test]
+    fn mixed_fleet_prediction_sits_between_homogeneous_bounds() {
+        // A40+A10 mixed cluster: predicted batch time must be slower than
+        // the all-A40 fleet, no slower than the all-A10 fleet (the slowest
+        // SKU gates, it never accelerates), and strictly different from
+        // the fast homogeneous baseline — the tentpole claim of ISSUE 4.
+        let fast = ClusterSpec::a40_cluster(2, 4);
+        let mut slow = ClusterSpec::a40_cluster(2, 4);
+        slow.device = crate::cluster::DeviceSpec::a10();
+        let mixed = ClusterSpec::mixed_a40_a10(2, 4);
+        for (mp, pp, dp, m) in [(1, 4, 2, 4), (2, 2, 2, 4), (1, 8, 1, 8)] {
+            let tf = predict_on(mp, pp, dp, m, &fast).batch_time_us();
+            let ts = predict_on(mp, pp, dp, m, &slow).batch_time_us();
+            let tm = predict_on(mp, pp, dp, m, &mixed).batch_time_us();
+            assert!(tm > tf * 1.001, "{mp}M{pp}P{dp}D: mixed {tm} !> fast {tf}");
+            assert!(tm <= ts * 1.001, "{mp}M{pp}P{dp}D: mixed {tm} !<= slow {ts}");
+        }
+    }
+
+    #[test]
+    fn placement_changes_mixed_fleet_predictions() {
+        use crate::cluster::Placement;
+        // 1M4P1D on a 2x4 mixed cluster: fast-first packs every stage onto
+        // A40s (ranks 0-3 -> node 0); interleaved alternates SKUs, so the
+        // pipeline is gated by A10 stages — the predictions must differ,
+        // and fast-first must win
+        let base = ClusterSpec::mixed_a40_a10(2, 4);
+        let ff = predict_on(1, 4, 1, 8, &base.with_placement(Placement::FastFirst))
+            .batch_time_us();
+        let il = predict_on(1, 4, 1, 8, &base.with_placement(Placement::Interleaved))
+            .batch_time_us();
+        assert!(
+            ff < il * 0.999,
+            "fast-first ({ff}) should beat interleaved ({il}) for a 4-stage pipeline"
+        );
+        // and fast-first on the mixed fleet matches the all-A40 prediction
+        // (all four ranks land on A40 silicon, same links)
+        let all_fast = predict_on(1, 4, 1, 8, &ClusterSpec::a40_cluster(2, 4))
+            .batch_time_us();
+        assert_eq!(ff, all_fast, "fast-first == homogeneous-fast placement");
     }
 }

@@ -11,7 +11,7 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::program::{Instr, Program};
 use crate::cluster::{ClusterSpec, LinkClass};
 use crate::comm;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::events::{CommEvent, Event, EventDb};
 use crate::timeline::{Span, Tag, Timeline};
 use crate::util::{Rng, TimeUs};
@@ -123,10 +123,17 @@ fn contention_factor(active: usize) -> f64 {
 /// program and shared across iterations (§Perf: the logistic efficiency
 /// curve and the collective laws are by far the hottest pure-compute in
 /// the engine loop; re-pricing them every iteration cost ~40%).
+///
+/// Heterogeneity enters here: each rank's compute and launch overhead are
+/// priced on *its* SKU (placement-resolved [`DeviceSpec`] + per-kind
+/// [`CostBook`] model), so a mixed fleet's timeline has per-rank stage
+/// latencies while the executor loop stays SKU-oblivious.
+///
+/// [`DeviceSpec`]: crate::cluster::DeviceSpec
 #[derive(Debug, Clone)]
 pub struct BaseCosts {
     /// `per_instr[rank][pc]` = noise-free duration of that instruction
-    /// (for Send: the launch overhead; for Recv: the wire time).
+    /// (for Send: the sender's launch overhead; for Recv: the wire time).
     pub per_instr: Vec<Vec<TimeUs>>,
 }
 
@@ -135,12 +142,16 @@ impl BaseCosts {
         prog: &Program,
         db: &EventDb,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        book: &CostBook,
     ) -> BaseCosts {
+        let rank_dev = cluster.rank_to_device();
         let per_instr = prog
             .instrs
             .iter()
-            .map(|instrs| {
+            .enumerate()
+            .map(|(rank, instrs)| {
+                let spec = cluster.kind_spec(cluster.device_kind(rank_dev[rank]));
+                let model = book.for_kind(&spec.name);
                 instrs
                     .iter()
                     .map(|i| match i {
@@ -148,9 +159,9 @@ impl BaseCosts {
                             let Event::Comp(c) = db.get(*event) else {
                                 panic!("comp instr references comm event")
                             };
-                            cost.op_latency_us(&cluster.device, c.class, c.flops, c.bytes)
+                            model.op_latency_us(spec, c.class, c.flops, c.bytes)
                         }
-                        Instr::Send { .. } => cluster.device.launch_overhead_us,
+                        Instr::Send { .. } => spec.launch_overhead_us,
                         Instr::Recv { event, .. } => {
                             let Event::Comm(CommEvent::P2p { bytes, link }) = db.get(*event)
                             else {
@@ -163,11 +174,11 @@ impl BaseCosts {
                             else {
                                 panic!("allreduce references non-AR event")
                             };
-                            comm::hierarchical_allreduce_time_us(
-                                cluster,
-                                &prog.groups[*group as usize],
-                                *bytes,
-                            )
+                            let devices: Vec<usize> = prog.groups[*group as usize]
+                                .iter()
+                                .map(|&r| rank_dev[r])
+                                .collect();
+                            comm::hierarchical_allreduce_time_us(cluster, &devices, *bytes)
                         }
                     })
                     .collect()
@@ -246,10 +257,10 @@ pub fn execute(
     prog: &Program,
     db: &EventDb,
     cluster: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     params: &EngineParams,
 ) -> Timeline {
-    let base = BaseCosts::compute(prog, db, cluster, cost);
+    let base = BaseCosts::compute(prog, db, cluster, book);
     execute_with_base(prog, db, cluster, &base, params)
 }
 
@@ -278,6 +289,11 @@ pub fn execute_with_scratch(
     params: &EngineParams,
     scratch: &mut ExecScratch,
 ) -> Timeline {
+    // every price — including per-rank (per-SKU) launch overheads — is
+    // pre-resolved in `base`; the executor no longer consults the
+    // topology per instruction. The parameter stays for signature
+    // stability and future fabric-level semantics.
+    let _ = cluster;
     let n = prog.n_ranks();
     scratch.prepare(n, prog.groups.len());
     let mut master_rng = Rng::new(params.seed);
@@ -348,8 +364,9 @@ pub fn execute_with_scratch(
                 Instr::Send { peer, event, tag } => {
                     let _ = (event, tag);
                     let peer = *peer;
-                    // eager buffered send: pay launch overhead, enqueue
-                    states[r].clock += cluster.device.launch_overhead_us;
+                    // eager buffered send: pay this rank's (SKU's) launch
+                    // overhead — pre-priced per instruction — and enqueue
+                    states[r].clock += base.per_instr[r][pc];
                     channels[r * n + peer]
                         .pending_sends
                         .push_back(states[r].clock);
@@ -483,7 +500,7 @@ mod tests {
         let sched = schedule::by_name(sched_name, pp, m).unwrap();
         let mut db = EventDb::new();
         let prog = build_programs(&part, &sched, &c, &mut db);
-        execute(&prog, &db, &c, &CostModel::default(), params)
+        execute(&prog, &db, &c, &CostBook::default(), params)
     }
 
     fn quiet() -> EngineParams {
@@ -533,7 +550,7 @@ mod tests {
         let sched = schedule::by_name("dapple", 2, 4).unwrap();
         let mut db = EventDb::new();
         let prog = build_programs(&part, &sched, &c, &mut db);
-        let base = BaseCosts::compute(&prog, &db, &c, &CostModel::default());
+        let base = BaseCosts::compute(&prog, &db, &c, &CostBook::default());
         let mut scratch = ExecScratch::new();
         for seed in [1u64, 2, 3] {
             let params = EngineParams { seed, ..EngineParams::default() };
@@ -664,7 +681,7 @@ mod proptests {
                 &prog,
                 &db,
                 &c,
-                &CostModel::default(),
+                &CostBook::default(),
                 &EngineParams {
                     jitter_sigma: rng.f64() * 0.1,
                     clock_skew_us: rng.f64() * 50.0,

@@ -16,7 +16,7 @@ pub use des::{
 pub use program::{build_programs, Instr, Program};
 
 use crate::config::RunConfig;
-use crate::cost::CostModel;
+use crate::cost::{CostBook, CostModel};
 use crate::events::EventDb;
 use crate::model::ModelSpec;
 use crate::partition::{partition, Partition};
@@ -32,7 +32,8 @@ pub struct GroundTruth {
     pub sched: PipelineSchedule,
     pub prog: Program,
     pub db: EventDb,
-    pub cost: CostModel,
+    /// Per-device-kind cost registry the run is priced under.
+    pub book: CostBook,
     /// Noise-free per-instruction prices, computed once (§Perf).
     base: des::BaseCosts,
 }
@@ -44,7 +45,13 @@ impl GroundTruth {
         Self::prepare_with_cost(cfg, CostModel::default())
     }
 
+    /// Prepare with one cost model for every device kind.
     pub fn prepare_with_cost(cfg: &RunConfig, cost: CostModel) -> anyhow::Result<Self> {
+        Self::prepare_with_book(cfg, CostBook::uniform(cost))
+    }
+
+    /// Prepare with a full per-device-kind cost registry (mixed fleets).
+    pub fn prepare_with_book(cfg: &RunConfig, book: CostBook) -> anyhow::Result<Self> {
         let model = crate::model::by_name(&cfg.model)
             .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", cfg.model))?;
         anyhow::ensure!(
@@ -69,7 +76,7 @@ impl GroundTruth {
         sched.validate()?;
         let mut db = EventDb::new();
         let prog = build_programs(&part, &sched, &cfg.cluster, &mut db);
-        let base = des::BaseCosts::compute(&prog, &db, &cfg.cluster, &cost);
+        let base = des::BaseCosts::compute(&prog, &db, &cfg.cluster, &book);
         Ok(GroundTruth {
             cfg: cfg.clone(),
             model,
@@ -77,7 +84,7 @@ impl GroundTruth {
             sched,
             prog,
             db,
-            cost,
+            book,
             base,
         })
     }

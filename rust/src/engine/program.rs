@@ -83,10 +83,18 @@ pub fn build_programs(
         groups: Vec::new(),
     };
 
+    // rank -> physical device (identity unless the cluster has a
+    // non-linear placement); links and device kinds resolve through it
+    let rank_dev = cluster.rank_to_device();
+    let link = |a: usize, b: usize| cluster.link_class(rank_dev[a], rank_dev[b]);
+
     for rank in 0..world {
         let c = strategy.coords(rank);
         let stage = c.pp;
         let work = &part.stages[stage];
+        // the SKU this rank runs on: computation events are re-stamped per
+        // rank so mixed fleets intern (and profile) one event per kind
+        let kind = cluster.kind_name(cluster.device_kind(rank_dev[rank]));
         let mut instrs = Vec::new();
 
         // interned ids used repeatedly
@@ -105,7 +113,7 @@ pub fn build_programs(
                         let bytes = part.stages[stage - 1].act_bytes;
                         let ev = db.intern(Event::Comm(CommEvent::P2p {
                             bytes,
-                            link: cluster.link_class(peer, rank),
+                            link: link(peer, rank),
                         }));
                         instrs.push(Instr::Recv {
                             peer,
@@ -122,7 +130,7 @@ pub fn build_programs(
                     }
                     for lw in &work.layers {
                         instrs.push(Instr::Comp {
-                            event: db.intern(Event::Comp(lw.fwd.clone())),
+                            event: db.intern(Event::Comp(lw.fwd.for_kind(kind))),
                             tag: Tag::comp(stage, mb, phase, lw.layer_idx),
                         });
                         if let (Some(ar), Some(gid)) = (&lw.mp_allreduce, mp_group_id) {
@@ -147,7 +155,7 @@ pub fn build_programs(
                         let peer = strategy.rank_of(RankCoords { pp: stage + 1, ..c });
                         let ev = db.intern(Event::Comm(CommEvent::P2p {
                             bytes: work.act_bytes,
-                            link: cluster.link_class(rank, peer),
+                            link: link(rank, peer),
                         }));
                         instrs.push(Instr::Send {
                             peer,
@@ -169,7 +177,7 @@ pub fn build_programs(
                         let bytes = work.act_bytes;
                         let ev = db.intern(Event::Comm(CommEvent::P2p {
                             bytes,
-                            link: cluster.link_class(peer, rank),
+                            link: link(peer, rank),
                         }));
                         instrs.push(Instr::Recv {
                             peer,
@@ -186,7 +194,7 @@ pub fn build_programs(
                     }
                     for lw in work.layers.iter().rev() {
                         instrs.push(Instr::Comp {
-                            event: db.intern(Event::Comp(lw.bwd.clone())),
+                            event: db.intern(Event::Comp(lw.bwd.for_kind(kind))),
                             tag: Tag::comp(stage, mb, phase, lw.layer_idx),
                         });
                         if let (Some(ar), Some(gid)) = (&lw.mp_allreduce, mp_group_id) {
@@ -212,7 +220,7 @@ pub fn build_programs(
                         let bytes = part.stages[stage - 1].act_bytes;
                         let ev = db.intern(Event::Comm(CommEvent::P2p {
                             bytes,
-                            link: cluster.link_class(rank, peer),
+                            link: link(rank, peer),
                         }));
                         instrs.push(Instr::Send {
                             peer,
@@ -234,7 +242,8 @@ pub fn build_programs(
         // DP gradient all-reduce.
         if strategy.dp > 1 {
             let group = strategy.dp_group(rank);
-            let link = cluster.group_link_class(&group);
+            let group_devs: Vec<usize> = group.iter().map(|&r| rank_dev[r]).collect();
+            let link = cluster.group_link_class(&group_devs);
             let ev = db.intern(Event::Comm(CommEvent::AllReduce {
                 bytes: part.grad_bytes_per_rank[stage],
                 group: strategy.dp,

@@ -3,8 +3,17 @@
 //! An event is an equivalence class of identical work — "the same
 //! computation and communication performed by different devices can be
 //! gathered into one event and need to be profiled only once". Identity is
-//! (operator name, parameters, input shape) for computation events, plus an
-//! intra-/inter-node attribute for communication events (§4.1).
+//! (operator name, parameters, input shape, **device kind**) for
+//! computation events, plus an intra-/inter-node attribute for
+//! communication events (§4.1).
+//!
+//! The device kind (the SKU name, e.g. `"A40"`) generalizes the paper's
+//! homogeneous setting to mixed fleets: a layer's forward pass on an A40
+//! and the same shapes on an A10 are *different* events with different
+//! measured costs, so a profile cached for one SKU can never serve a
+//! lookup for another (ISSUE 4). Communication events carry no kind —
+//! their cost is a property of the link fabric, which the cluster
+//! fingerprint already pins.
 //!
 //! [`EventDb`] interns event descriptors to dense [`EventId`]s; profiling
 //! (profile/) fills in elapsed times; hierarchical modeling (distsim/)
@@ -21,7 +30,7 @@ use crate::cost::OpClass;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct EventId(pub u32);
 
-/// A computation event: one operator on one device.
+/// A computation event: one operator on one device kind.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct CompEvent {
     /// Operator name + parameter digest, e.g. "layer_fwd/h1024/mp2".
@@ -31,6 +40,19 @@ pub struct CompEvent {
     pub flops: u64,
     /// Per-device bytes touched (activations + weights read/written).
     pub bytes: u64,
+    /// Device-kind (SKU) name the operator runs on, e.g. "A40" — part of
+    /// the event identity (an A40 profile must never price an A10 rank).
+    pub kind: String,
+}
+
+impl CompEvent {
+    /// The same operator re-targeted to another device kind (program
+    /// builders stamp the partition's template descriptor per rank).
+    pub fn for_kind(&self, kind: &str) -> CompEvent {
+        let mut e = self.clone();
+        e.kind = kind.to_string();
+        e
+    }
 }
 
 /// A communication event (§4.2 families).
@@ -56,7 +78,7 @@ pub enum Event {
 impl Event {
     pub fn name(&self) -> String {
         match self {
-            Event::Comp(c) => c.name.clone(),
+            Event::Comp(c) => format!("{}@{}", c.name, c.kind),
             Event::Comm(CommEvent::P2p { bytes, link }) => {
                 format!("p2p/{bytes}B/{link:?}")
             }
@@ -82,6 +104,7 @@ impl Event {
                 ("class", Json::str(c.class.name())),
                 ("flops", Json::str(c.flops.to_string())),
                 ("bytes", Json::str(c.bytes.to_string())),
+                ("kind", Json::str(&c.kind)),
             ]),
             Event::Comm(CommEvent::P2p { bytes, link }) => Json::obj(vec![
                 ("type", Json::str("p2p")),
@@ -119,6 +142,7 @@ impl Event {
                 class: OpClass::parse(str_field(j, "class")?)?,
                 flops: u64_field(j, "flops")?,
                 bytes: u64_field(j, "bytes")?,
+                kind: str_field(j, "kind")?.to_string(),
             })),
             "p2p" => Ok(Event::Comm(CommEvent::P2p {
                 bytes: u64_field(j, "bytes")?,
@@ -216,6 +240,7 @@ mod tests {
             class: OpClass::Matmul,
             flops,
             bytes: flops / 100,
+            kind: "A40".into(),
         })
     }
 
@@ -299,6 +324,25 @@ mod tests {
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_eq!(a, comp("x", 1).key());
+    }
+
+    #[test]
+    fn device_kind_separates_otherwise_identical_comp_events() {
+        // ISSUE 4: the same shapes on different SKUs are different events
+        let Event::Comp(on_a40) = comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 30) else {
+            unreachable!()
+        };
+        let on_a10 = on_a40.for_kind("A10");
+        assert_ne!(Event::Comp(on_a40.clone()), Event::Comp(on_a10.clone()));
+        assert_ne!(Event::Comp(on_a40.clone()).key(), Event::Comp(on_a10.clone()).key());
+        let mut db = EventDb::new();
+        let a = db.intern(Event::Comp(on_a40));
+        let b = db.intern(Event::Comp(on_a10));
+        assert_ne!(a, b);
+        assert_eq!(db.len(), 2);
+        // and from_json refuses kind-less comp events (v1 snapshots)
+        let v1 = r#"{"bytes":"8","class":"matmul","flops":"8","name":"x","type":"comp"}"#;
+        assert!(Event::from_json(&Json::parse(v1).unwrap()).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::baseline::daydream::daydream_batch_time_us;
 use crate::cluster::ClusterSpec;
 use crate::comm;
 use crate::config::RunConfig;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::distsim::DistSim;
 use crate::engine::GroundTruth;
 use crate::events::{CommEvent, Event, EventDb};
@@ -43,7 +43,7 @@ pub fn allreduce(profile_iters: usize) -> anyhow::Result<Vec<AllReduceAblation>>
         // normal path (profiler caps rings at 8 and extrapolates)
         let mut db = EventDb::new();
         crate::engine::build_programs(&gt.part, &gt.sched, &cfg.cluster, &mut db);
-        profile_events(&mut db, &cfg.cluster, &CostModel::default(), 0.0, profile_iters, 3);
+        profile_events(&mut db, &cfg.cluster, &CostBook::default(), 0.0, profile_iters, 3);
         let ds = DistSim::new(&gt.part, &gt.sched, &cfg.cluster);
         let extrapolated = ds.predict_batch_time_us(&mut db);
 
@@ -134,7 +134,7 @@ pub fn hierarchy(gt_iters: usize, profile_iters: usize) -> anyhow::Result<Vec<Hi
 
         let mut db = EventDb::new();
         crate::engine::build_programs(&run.gt.part, &run.gt.sched, &cfg.cluster, &mut db);
-        profile_events(&mut db, &cfg.cluster, &CostModel::default(), 0.0, profile_iters, 3);
+        profile_events(&mut db, &cfg.cluster, &CostBook::default(), 0.0, profile_iters, 3);
         let daydream_pred =
             daydream_batch_time_us(&run.gt.part, &run.gt.sched, &cfg.cluster, &mut db);
 

@@ -14,7 +14,7 @@ pub mod table3;
 
 use crate::cluster::ClusterSpec;
 use crate::config::RunConfig;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::distsim::DistSim;
 use crate::engine::GroundTruth;
 use crate::events::EventDb;
@@ -62,7 +62,7 @@ pub fn eval_cfg(cfg: &RunConfig) -> anyhow::Result<EvalRun> {
     let profile = profile_events(
         &mut db,
         &cfg.cluster,
-        &CostModel::default(),
+        &CostBook::default(),
         cfg.jitter_sigma,
         cfg.profile_iters,
         cfg.seed.wrapping_mul(0x5EED).wrapping_add(1),

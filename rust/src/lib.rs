@@ -14,7 +14,12 @@
 //!   16-GPU testbed, analytical & Daydream-style baselines ([`baseline`]),
 //!   the auto-parallel strategy search ([`search`]), and a long-lived
 //!   what-if sweep service ([`service`]) answering concurrent strategy
-//!   queries over a disk-persistent shared profile cache.
+//!   queries over a disk-persistent shared profile cache. Beyond the
+//!   paper's homogeneous testbeds, clusters can mix device SKUs
+//!   ([`cluster`]: named device kinds + rank→device placement maps) with
+//!   per-kind cost models ([`cost::CostBook`]) and a placement axis in
+//!   the sweep — see `docs/FORMATS.md` for every externally visible byte
+//!   format (service protocol, cache snapshots, bench output).
 //! * **Layer 2 (python/compile/model.py)** — JAX transformer-layer event
 //!   graphs, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas matmul/attention/

@@ -106,9 +106,10 @@ USAGE:
                     [--micro-batches N] [--micro-batch-size B]
                     [--gt] [--trace out.json] [--trace-actual out.json]
   distsim search    [--model bert-exlarge] [--global-batch 16] [--nodes 4]
-                    [--gpus-per-node 4] [--device a10|a40|a100] [--threads N]
-                    [--wide] [--mbs-axis] [--schedule-axis] [--prune]
-                    [--no-cache] [--max-candidates N] [--cache-file F]
+                    [--gpus-per-node 4] [--device a10|a40|a100|a40-a10]
+                    [--placement linear|fast-first|interleaved] [--threads N]
+                    [--wide] [--mbs-axis] [--schedule-axis] [--placement-axis]
+                    [--prune] [--no-cache] [--max-candidates N] [--cache-file F]
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
                     # long-lived what-if daemon: one NDJSON request per
                     # line in, one deterministic response line out
@@ -127,12 +128,24 @@ USAGE:
 fn cluster_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<ClusterSpec> {
     let nodes = usize_flag(flags, "nodes", 4);
     let gpn = usize_flag(flags, "gpus-per-node", 4);
-    Ok(match flag(flags, "device", "a40") {
+    let mut cluster = match flag(flags, "device", "a40") {
         "a40" => ClusterSpec::a40_cluster(nodes, gpn),
         "a10" => ClusterSpec::a10_cluster(nodes, gpn),
         "a100" => ClusterSpec::a100_pod(nodes),
-        other => anyhow::bail!("unknown device '{other}'"),
-    })
+        // mixed-SKU fleet: A40 nodes + A10 nodes, alternating by node
+        "a40-a10" => {
+            anyhow::ensure!(
+                nodes >= 2,
+                "--device a40-a10 needs --nodes >= 2 (one node would be all-A40)"
+            );
+            ClusterSpec::mixed_a40_a10(nodes, gpn)
+        }
+        other => anyhow::bail!("unknown device '{other}' (a40|a10|a100|a40-a10)"),
+    };
+    if let Some(p) = flags.get("placement") {
+        cluster.placement = distsim::cluster::Placement::parse(p)?;
+    }
+    Ok(cluster)
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -202,19 +215,21 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         widened: flags.contains_key("wide"),
         micro_batch_axis: flags.contains_key("mbs-axis"),
         schedule_axis: flags.contains_key("schedule-axis"),
+        placement_axis: flags.contains_key("placement-axis"),
         max_candidates: usize_flag(flags, "max-candidates", 0),
         prune: flags.contains_key("prune"),
         use_cache: !flags.contains_key("no-cache"),
         ..distsim::search::SweepConfig::default()
     };
     let cost = distsim::cost::CostModel::default();
+    let book = distsim::cost::CostBook::uniform(cost.clone());
 
     // --cache-file: warm the sweep from a persisted snapshot when its
     // (cluster, cost, protocol) fingerprint matches, and save back after
     let cache_file = flags.get("cache-file").map(std::path::PathBuf::from);
     let fp = distsim::search::fingerprint(
         &cluster,
-        &cost,
+        &book,
         cfg.jitter_sigma,
         cfg.profile_iters,
         cfg.profile_seed,
@@ -225,29 +240,45 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut save_cache_file = true;
     if let Some(path) = cache_file.as_deref().filter(|p| p.exists()) {
         let json = distsim::config::Json::read_file(path)?;
-        let snap = distsim::search::ProfileCache::load_json(&json)?;
-        if snap.fingerprint == fp {
-            println!(
-                "cache file {}: loaded {} profiled events (fingerprint {fp})",
-                path.display(),
-                snap.keys.len()
-            );
-            engine = distsim::search::SearchEngine::with_cache(
-                &model,
-                &cluster,
-                &cost,
-                cfg.clone(),
-                std::sync::Arc::new(snap.cache),
-            )
-            .with_prior(snap.keys);
-        } else {
-            save_cache_file = false;
-            eprintln!(
-                "warning: cache file {} has fingerprint {} (this sweep: {fp}); \
-                 starting cold and leaving the file untouched",
-                path.display(),
-                snap.fingerprint
-            );
+        // only a *pre-current* snapshot version is ours to upgrade; a
+        // future version or unrecognizable file belongs to someone else
+        let upgradeable = matches!(
+            json.get("version").and_then(distsim::config::Json::as_usize),
+            Some(v) if v < distsim::search::SNAPSHOT_VERSION
+        );
+        match distsim::search::ProfileCache::load_json(&json) {
+            Ok(snap) if snap.fingerprint == fp => {
+                println!(
+                    "cache file {}: loaded {} profiled events (fingerprint {fp})",
+                    path.display(),
+                    snap.keys.len()
+                );
+                engine = distsim::search::SearchEngine::with_cache(
+                    &model,
+                    &cluster,
+                    &cost,
+                    cfg.clone(),
+                    std::sync::Arc::new(snap.cache),
+                )
+                .with_prior(snap.keys);
+            }
+            Ok(snap) => {
+                save_cache_file = false;
+                eprintln!(
+                    "warning: cache file {} has fingerprint {} (this sweep: {fp}); \
+                     starting cold and leaving the file untouched",
+                    path.display(),
+                    snap.fingerprint
+                );
+            }
+            Err(e) => {
+                // refuse to serve the snapshot (never silently price the
+                // wrong SKU) and report the reason as one parseable line;
+                // overwrite only genuinely-stale pre-current versions —
+                // future-version or foreign files are left untouched
+                save_cache_file = upgradeable;
+                eprintln!("{}", distsim::service::cli_error_line(&e));
+            }
         }
     }
     let report = engine.sweep();
@@ -261,9 +292,10 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             format!("{:.3} it/s", c.throughput)
         };
         println!(
-            "{:10} {:7} mbs {:>2} x{:<3} {:>26}   [{:7.1} ms]",
+            "{:10} {:7} {:11} mbs {:>2} x{:<3} {:>26}   [{:7.1} ms]",
             c.strategy.notation(),
             c.schedule.name(),
+            c.placement.name(),
             c.micro_batch_size,
             c.micro_batches,
             status,
@@ -304,12 +336,19 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             a.winning_schedule, a.schedule_speedup, a.strategy_speedup
         );
     }
+    if let Some(a) = report.placement_attribution().filter(|_| cfg.placement_axis) {
+        println!(
+            "placement axis: winner deploys {} ({:.2}x over best baseline placement); \
+             strategy alone spans {:.2}x",
+            a.winning_placement, a.placement_speedup, a.strategy_speedup
+        );
+    }
     if let Some(path) = cache_file.as_deref().filter(|_| save_cache_file) {
         engine
             .cache()
             .save_json(
                 &cluster,
-                &cost,
+                &book,
                 cfg.jitter_sigma,
                 cfg.profile_iters,
                 cfg.profile_seed,
@@ -388,6 +427,7 @@ fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ("wide", "widened"),
             ("mbs-axis", "micro_batch_axis"),
             ("schedule-axis", "schedule_axis"),
+            ("placement-axis", "placement_axis"),
             ("prune", "prune"),
         ] {
             if flags.contains_key(name) {

@@ -83,25 +83,33 @@ fn layer_comp_events(
     mbs: usize,
     seq: usize,
     mp: usize,
+    kind: &str,
 ) -> (CompEvent, CompEvent, u64) {
     let tokens = (mbs * seq) as u64;
+    let comp = |name: String, class: OpClass, flops: u64, bytes: u64| CompEvent {
+        name,
+        class,
+        flops,
+        bytes,
+        kind: kind.to_string(),
+    };
     match layer {
         Layer::Embedding { vocab, hidden } => {
             let bytes = tokens * *hidden as u64 * 4 * 2;
             let params = (*vocab * *hidden) as u64 / mp as u64;
             (
-                CompEvent {
-                    name: format!("embed/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
-                    class: OpClass::Gather,
-                    flops: tokens * *hidden as u64 / mp as u64,
-                    bytes: bytes / mp as u64,
-                },
-                CompEvent {
-                    name: format!("embed_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
-                    class: OpClass::Gather,
-                    flops: tokens * *hidden as u64 / mp as u64,
-                    bytes: bytes / mp as u64,
-                },
+                comp(
+                    format!("embed/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    OpClass::Gather,
+                    tokens * *hidden as u64 / mp as u64,
+                    bytes / mp as u64,
+                ),
+                comp(
+                    format!("embed_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    OpClass::Gather,
+                    tokens * *hidden as u64 / mp as u64,
+                    bytes / mp as u64,
+                ),
                 params,
             )
         }
@@ -113,24 +121,24 @@ fn layer_comp_events(
                 + tokens * t.hidden as u64 * 4 * 8 / mp as u64;
             let _ = layer_idx;
             (
-                CompEvent {
-                    name: format!(
+                comp(
+                    format!(
                         "xfmr_fwd/h{}f{}a{}/mp{}/b{}s{}",
                         t.hidden, t.ffn, t.heads, mp, mbs, seq
                     ),
-                    class: OpClass::Matmul,
+                    OpClass::Matmul,
                     flops,
                     bytes,
-                },
-                CompEvent {
-                    name: format!(
+                ),
+                comp(
+                    format!(
                         "xfmr_bwd/h{}f{}a{}/mp{}/b{}s{}",
                         t.hidden, t.ffn, t.heads, mp, mbs, seq
                     ),
-                    class: OpClass::Matmul,
-                    flops: 2 * flops,
-                    bytes: 2 * bytes,
-                },
+                    OpClass::Matmul,
+                    2 * flops,
+                    2 * bytes,
+                ),
                 t.params() / mp as u64,
             )
         }
@@ -138,18 +146,18 @@ fn layer_comp_events(
             let flops = 2 * tokens * (*hidden as u64) * (*vocab as u64) / mp as u64;
             let bytes = (*vocab * *hidden) as u64 * 4 / mp as u64;
             (
-                CompEvent {
-                    name: format!("head/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
-                    class: OpClass::Matmul,
+                comp(
+                    format!("head/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    OpClass::Matmul,
                     flops,
                     bytes,
-                },
-                CompEvent {
-                    name: format!("head_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
-                    class: OpClass::Matmul,
-                    flops: 2 * flops,
-                    bytes: 2 * bytes,
-                },
+                ),
+                comp(
+                    format!("head_bwd/v{vocab}h{hidden}/mp{mp}/b{mbs}s{seq}"),
+                    OpClass::Matmul,
+                    2 * flops,
+                    2 * bytes,
+                ),
                 (*vocab * *hidden) as u64 / mp as u64,
             )
         }
@@ -172,9 +180,15 @@ pub fn partition(
     );
     let ranges = stage_ranges(model.layers.len(), pp);
 
-    // MP group link class: MP ranks are contiguous, so the group for stage
-    // 0 / dp 0 is representative for all (homogeneous layout).
-    let mp_link = cluster.group_link_class(&strategy.mp_group(0));
+    // MP group link class, resolved through the placement map from the
+    // stage-0 / dp-0 representative group. The named placements (linear /
+    // fast-first / interleaved) map equal-stride rank groups to
+    // translation-equivalent device sets, so one class covers every lane;
+    // a hand-crafted Placement::Table can break that symmetry, in which
+    // case other lanes' MP all-reduces are approximated at this class
+    // (the ground-truth engine always prices each group's real devices —
+    // see DESIGN.md §6).
+    let mp_link = cluster.rank_group_link_class(&strategy.mp_group(0));
 
     let tokens = (mbs * model.seq) as u64;
     let act_bytes = tokens * model.hidden as u64 * 4;
@@ -185,8 +199,10 @@ pub fn partition(
         let mut stage_params = 0u64;
         for li in range.clone() {
             let layer = &model.layers[li];
+            // events are templated on kind 0; program builders re-stamp the
+            // kind per rank (heterogeneous fleets intern one event per SKU)
             let (fwd, bwd, params) =
-                layer_comp_events(layer, li, mbs, model.seq, mp);
+                layer_comp_events(layer, li, mbs, model.seq, mp, &cluster.device.name);
             let is_sharded = mp > 1;
             let mp_allreduce = if is_sharded {
                 Some(CommEvent::AllReduce {

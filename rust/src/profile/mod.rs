@@ -13,9 +13,9 @@
 
 pub mod calibrate;
 
-use crate::cluster::{ClusterSpec, LinkClass};
+use crate::cluster::{ClusterSpec, LinkClass, Placement};
 use crate::comm;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::engine::program::{Instr, Program};
 use crate::engine::EngineParams;
 use crate::events::{CommEvent, Event, EventDb, EventId};
@@ -60,10 +60,17 @@ impl ProfiledEvent {
     }
 }
 
-/// The profiling testbed: a 2-node slice of the target cluster.
+/// The profiling testbed: a 2-node slice of the target cluster, stripped
+/// of heterogeneity — each micro-program runs on a *uniform* pair of nodes
+/// of one SKU. Computation events are profiled on a slice of *their* kind
+/// (see [`profile_single`]); communication events on the reference kind 0
+/// (their cost is a property of the fabric, not the SKU).
 fn profiling_slice(cluster: &ClusterSpec) -> ClusterSpec {
     let mut slice = cluster.clone();
     slice.nodes = cluster.nodes.min(2);
+    slice.extra_kinds.clear();
+    slice.kind_of_device.clear();
+    slice.placement = Placement::Linear;
     slice
 }
 
@@ -86,14 +93,14 @@ fn quiet_tag(kind: SpanKind) -> Tag {
 pub fn profile_events(
     db: &mut EventDb,
     cluster: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
 ) -> ProfileReport {
     let mut report = ProfileReport::default();
     for id in db.unprofiled() {
-        let p = profile_single(db, id, cluster, cost, jitter_sigma, iters, seed);
+        let p = profile_single(db, id, cluster, book, jitter_sigma, iters, seed);
         db.set_elapsed(id, p.mean_us);
         report.gpu_seconds += p.gpu_seconds(iters);
         report.events_profiled += 1;
@@ -113,7 +120,7 @@ pub fn profile_single(
     db: &EventDb,
     id: EventId,
     cluster: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
@@ -121,18 +128,28 @@ pub fn profile_single(
     let slice = profiling_slice(cluster);
     let event = db.get(id).clone();
     let (mean_us, devices, extrapolated) = match &event {
-        Event::Comp(_) => {
-            let t = profile_comp(id, db, &slice, cost, jitter_sigma, iters, seed);
+        Event::Comp(c) => {
+            // measure on a slice of the event's own SKU: the descriptor's
+            // device kind must resolve in the target cluster's kind table
+            let spec = cluster.kind_by_name(&c.kind).unwrap_or_else(|| {
+                panic!(
+                    "comp event '{}' targets device kind '{}', unknown to this cluster",
+                    c.name, c.kind
+                )
+            });
+            let mut kind_slice = slice.clone();
+            kind_slice.device = spec.clone();
+            let t = profile_comp(id, db, &kind_slice, book, jitter_sigma, iters, seed);
             (t, 1, false)
         }
         Event::Comm(CommEvent::P2p { link, .. }) => {
-            let t = profile_p2p(id, db, &slice, cost, jitter_sigma, iters, seed, *link);
+            let t = profile_p2p(id, db, &slice, book, jitter_sigma, iters, seed, *link);
             (t, 2, false)
         }
         Event::Comm(CommEvent::AllReduce { group, link, bytes }) => {
             let profiled_n = (*group).min(ring_cap(&slice, *link));
             let t = profile_allreduce(
-                id, db, &slice, cost, jitter_sigma, iters, seed, *link, profiled_n,
+                id, db, &slice, book, jitter_sigma, iters, seed, *link, profiled_n,
             );
             let t = if profiled_n < *group {
                 // §4.2 extrapolation beyond the 2-node slice: scale the
@@ -185,7 +202,7 @@ fn run_micro(
     prog: &Program,
     db: &EventDb,
     slice: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
@@ -196,7 +213,7 @@ fn run_micro(
     // and one scratch serves all of them (the paper's protocol runs ~100
     // iterations per event — per-iteration engine allocation was pure
     // allocator churn across a sweep)
-    let base = crate::engine::BaseCosts::compute(prog, db, slice, cost);
+    let base = crate::engine::BaseCosts::compute(prog, db, slice, book);
     let mut scratch = crate::engine::ExecScratch::new();
     let samples: Vec<f64> = (0..iters)
         .map(|i| {
@@ -230,7 +247,7 @@ fn profile_comp(
     id: EventId,
     db: &EventDb,
     slice: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
@@ -242,7 +259,7 @@ fn profile_comp(
         }]],
         groups: vec![],
     };
-    run_micro(&prog, db, slice, cost, jitter_sigma, iters, seed, 0, SpanKind::Comp)
+    run_micro(&prog, db, slice, book, jitter_sigma, iters, seed, 0, SpanKind::Comp)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -250,7 +267,7 @@ fn profile_p2p(
     id: EventId,
     db: &EventDb,
     slice: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
@@ -277,7 +294,7 @@ fn profile_p2p(
         groups: vec![],
     };
     run_micro(
-        &prog, db, slice, cost, jitter_sigma, iters, seed, receiver, SpanKind::P2p,
+        &prog, db, slice, book, jitter_sigma, iters, seed, receiver, SpanKind::P2p,
     )
 }
 
@@ -286,7 +303,7 @@ fn profile_allreduce(
     id: EventId,
     db: &EventDb,
     slice: &ClusterSpec,
-    cost: &CostModel,
+    book: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
@@ -309,14 +326,14 @@ fn profile_allreduce(
         groups: vec![members.clone()],
     };
     run_micro(
-        &prog, db, slice, cost, jitter_sigma, iters, seed, members[0], SpanKind::MpAllReduce,
+        &prog, db, slice, book, jitter_sigma, iters, seed, members[0], SpanKind::MpAllReduce,
     )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cost::OpClass;
+    use crate::cost::{CostModel, OpClass};
     use crate::events::CompEvent;
 
     fn db_with(ev: Event) -> (EventDb, EventId) {
@@ -336,10 +353,11 @@ mod tests {
             class: OpClass::Matmul,
             flops: 1 << 30,
             bytes: 1 << 24,
+            kind: "A40".into(),
         }));
         let c = cluster();
         let cost = CostModel::default();
-        profile_events(&mut db, &c, &cost, 0.0, 3, 7);
+        profile_events(&mut db, &c, &CostBook::default(), 0.0, 3, 7);
         let want = cost.op_latency_us(&c.device, OpClass::Matmul, 1 << 30, 1 << 24);
         assert!((db.elapsed(id) / want - 1.0).abs() < 1e-9);
     }
@@ -351,10 +369,11 @@ mod tests {
             class: OpClass::Matmul,
             flops: 1 << 30,
             bytes: 1 << 24,
+            kind: "A40".into(),
         }));
         let c = cluster();
         let cost = CostModel::default();
-        profile_events(&mut db, &c, &cost, 0.03, 200, 11);
+        profile_events(&mut db, &c, &CostBook::default(), 0.03, 200, 11);
         let want = cost.op_latency_us(&c.device, OpClass::Matmul, 1 << 30, 1 << 24);
         assert!(
             (db.elapsed(id) / want - 1.0).abs() < 0.01,
@@ -372,7 +391,7 @@ mod tests {
                 link,
             }));
             let c = cluster();
-            profile_events(&mut db, &c, &CostModel::default(), 0.0, 3, 7);
+            profile_events(&mut db, &c, &CostBook::default(), 0.0, 3, 7);
             let want = comm::p2p_time_us(&c, link, 1 << 22);
             assert!(
                 (db.elapsed(id) / want - 1.0).abs() < 1e-9,
@@ -389,7 +408,7 @@ mod tests {
             link: LinkClass::Intra,
         }));
         let c = cluster();
-        let rep = profile_events(&mut db, &c, &CostModel::default(), 0.0, 3, 7);
+        let rep = profile_events(&mut db, &c, &CostBook::default(), 0.0, 3, 7);
         assert_eq!(rep.extrapolated, 0);
         let want = comm::allreduce_time_us(&c, LinkClass::Intra, 4, 1 << 24);
         assert!((db.elapsed(id) / want - 1.0).abs() < 1e-9);
@@ -405,7 +424,7 @@ mod tests {
             link: LinkClass::Inter,
         }));
         let c = cluster();
-        let rep = profile_events(&mut db, &c, &CostModel::default(), 0.0, 3, 7);
+        let rep = profile_events(&mut db, &c, &CostBook::default(), 0.0, 3, 7);
         assert_eq!(rep.extrapolated, 1);
         // ground truth: 16 ranks over 4 nodes, hierarchical
         let members: Vec<usize> = (0..16).collect();
@@ -415,6 +434,68 @@ mod tests {
         assert!(err < 0.02, "extrapolation err {err} (got {got}, want {want})");
     }
 
+    fn mixed_comp(kind: &str) -> Event {
+        Event::Comp(CompEvent {
+            name: "x".into(),
+            class: OpClass::Matmul,
+            flops: 1 << 30,
+            bytes: 1 << 24,
+            kind: kind.into(),
+        })
+    }
+
+    #[test]
+    fn comp_profile_prices_on_the_events_own_kind() {
+        // the same shapes, stamped A40 vs A10, measure to different costs
+        let c = ClusterSpec::mixed_a40_a10(4, 4);
+        let (mut db, fast) = db_with(mixed_comp("A40"));
+        let slow = db.intern(mixed_comp("A10"));
+        profile_events(&mut db, &c, &CostBook::default(), 0.0, 2, 7);
+        let cost = CostModel::default();
+        let want_fast = cost.op_latency_us(
+            &crate::cluster::DeviceSpec::a40(),
+            OpClass::Matmul,
+            1 << 30,
+            1 << 24,
+        );
+        let want_slow = cost.op_latency_us(
+            &crate::cluster::DeviceSpec::a10(),
+            OpClass::Matmul,
+            1 << 30,
+            1 << 24,
+        );
+        assert!((db.elapsed(fast) / want_fast - 1.0).abs() < 1e-9);
+        assert!((db.elapsed(slow) / want_slow - 1.0).abs() < 1e-9);
+        assert!(db.elapsed(slow) > db.elapsed(fast));
+    }
+
+    #[test]
+    fn per_kind_cost_override_applies_to_that_kind_only() {
+        let c = ClusterSpec::mixed_a40_a10(4, 4);
+        let mut slow_model = CostModel::default();
+        slow_model.scale = 2.0;
+        let book = CostBook::default().with_kind("A10", slow_model);
+        let (mut db, fast) = db_with(mixed_comp("A40"));
+        let slow = db.intern(mixed_comp("A10"));
+        profile_events(&mut db, &c, &book, 0.0, 2, 7);
+        let mut plain_db = EventDb::new();
+        let pf = plain_db.intern(mixed_comp("A40"));
+        let ps = plain_db.intern(mixed_comp("A10"));
+        profile_events(&mut plain_db, &c, &CostBook::default(), 0.0, 2, 7);
+        assert_eq!(db.elapsed(fast), plain_db.elapsed(pf), "A40 unaffected");
+        assert!(
+            (db.elapsed(slow) / plain_db.elapsed(ps) - 2.0).abs() < 1e-9,
+            "A10 override must scale only A10 events"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown to this cluster")]
+    fn comp_profile_rejects_unknown_kind() {
+        let (mut db, _) = db_with(mixed_comp("H100"));
+        profile_events(&mut db, &cluster(), &CostBook::default(), 0.0, 1, 7);
+    }
+
     #[test]
     fn gpu_seconds_accounted() {
         let (mut db, _) = db_with(Event::Comp(CompEvent {
@@ -422,8 +503,9 @@ mod tests {
             class: OpClass::Matmul,
             flops: 1 << 32,
             bytes: 1 << 24,
+            kind: "A40".into(),
         }));
-        let rep = profile_events(&mut db, &cluster(), &CostModel::default(), 0.0, 10, 7);
+        let rep = profile_events(&mut db, &cluster(), &CostBook::default(), 0.0, 10, 7);
         assert!(rep.gpu_seconds > 0.0);
         assert_eq!(rep.events_profiled, 1);
     }

@@ -8,7 +8,12 @@
 //!
 //! The schedule fixes *order only*; timing comes from dependencies —
 //! enforced physically by the ground-truth engine (send/recv rendezvous)
-//! and analytically by DistSim's Algorithm-1 modeling.
+//! and analytically by DistSim's Algorithm-1 modeling. That split is what
+//! makes heterogeneous fleets (ISSUE 4) free at this layer: a schedule is
+//! valid regardless of which SKU each stage lands on, and stage latencies
+//! that vary by device kind enter purely through the executors — per-rank
+//! base costs in the engine, per-kind composed-event durations in the
+//! model — never through the task order itself.
 
 use std::fmt;
 

@@ -3,8 +3,11 @@
 //! **Cache key.** An interned [`Event`] descriptor *is* the key. For
 //! computation events the descriptor name encodes the model layer kind,
 //! the tensor-MP shard shape (`.../mp{mp}/...`) and the micro-batch size
-//! (`.../b{mbs}s{seq}`); for communication events the payload bytes, group
-//! size and intra/inter link class are the identity (paper §4.1). Two
+//! (`.../b{mbs}s{seq}`), and the descriptor additionally carries the
+//! **device kind** (SKU name) the event runs on — an event profiled on an
+//! A40 can never serve a lookup for an A100 (ISSUE 4); for communication
+//! events the payload bytes, group size and intra/inter link class are
+//! the identity (paper §4.1). Two
 //! sweep candidates that shard a layer the same way therefore hash to the
 //! same key and the second one reuses the first's measured cost instead of
 //! re-running the profiling micro-program — the cross-candidate
@@ -23,9 +26,9 @@ use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, Placement};
 use crate::config::Json;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::events::{Event, EventDb};
 use crate::profile::{profile_single, ProfileReport, ProfiledEvent};
 
@@ -162,6 +165,13 @@ pub fn stats_against(uses: &[EventUse], prior: &HashSet<String>) -> CacheStats {
     stats
 }
 
+/// On-disk snapshot format version (see docs/FORMATS.md §2). Version 2
+/// added the device kind to computation-event descriptors and replaced the
+/// flat cost model with the per-kind [`CostBook`]; version-1 files are
+/// rejected with a versioned error rather than silently serving costs
+/// whose SKU identity is unknown.
+pub const SNAPSHOT_VERSION: usize = 2;
+
 fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
@@ -199,18 +209,26 @@ fn protocol_from_json(j: &Json) -> anyhow::Result<(f64, usize, u64)> {
 }
 
 /// Identity of a profile cache: hash of the canonical JSON of (cluster,
-/// cost model, profiling protocol). Two sweeps may share measurements iff
+/// cost book, profiling protocol). Two sweeps may share measurements iff
 /// their fingerprints agree — the same condition under which
 /// [`profile_single`] is guaranteed to return identical values.
+///
+/// The cluster enters *without its placement*: placement permutes which
+/// rank runs on which device but never changes any event's measured cost
+/// (device kinds travel in the event descriptors), so sweeps that differ
+/// only in placement — in particular every point of a placement-axis
+/// sweep — share one cache. Device kinds, the kind→device table and the
+/// per-kind cost overrides all stay in the fingerprint: an A40-fleet
+/// snapshot can never serve an A100 fleet.
 pub fn fingerprint(
     cluster: &ClusterSpec,
-    cost: &CostModel,
+    cost: &CostBook,
     jitter_sigma: f64,
     iters: usize,
     seed: u64,
 ) -> String {
     let desc = Json::obj(vec![
-        ("cluster", cluster.to_json()),
+        ("cluster", cluster.with_placement(Placement::Linear).to_json()),
         ("cost", cost.to_json()),
         ("protocol", protocol_json(jitter_sigma, iters, seed)),
     ])
@@ -224,7 +242,7 @@ pub struct CacheSnapshot {
     /// Fingerprint recomputed from the stored cluster/cost/protocol.
     pub fingerprint: String,
     pub cluster: ClusterSpec,
-    pub cost: CostModel,
+    pub cost: CostBook,
     /// (jitter_sigma, iters, seed) the entries were measured under.
     pub protocol: (f64, usize, u64),
     pub cache: ProfileCache,
@@ -254,7 +272,7 @@ impl ProfileCache {
     pub fn save_json(
         &self,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        cost: &CostBook,
         jitter_sigma: f64,
         iters: usize,
         seed: u64,
@@ -284,7 +302,7 @@ impl ProfileCache {
         entries.sort_by(|a, b| a.0.cmp(&b.0));
         Json::obj(vec![
             ("kind", Json::str("distsim-profile-cache")),
-            ("version", Json::num(1.0)),
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
             (
                 "fingerprint",
                 Json::str(fingerprint(cluster, cost, jitter_sigma, iters, seed)),
@@ -311,15 +329,23 @@ impl ProfileCache {
             j.get("kind").and_then(Json::as_str) == Some("distsim-profile-cache"),
             "not a profile-cache snapshot"
         );
-        anyhow::ensure!(
-            j.get("version").and_then(Json::as_usize) == Some(1),
-            "unsupported snapshot version"
-        );
+        match j.get("version").and_then(Json::as_usize) {
+            Some(SNAPSHOT_VERSION) => {}
+            Some(v) if v < SNAPSHOT_VERSION => anyhow::bail!(
+                "snapshot version {v} predates per-device-kind cache keys \
+                 (expected {SNAPSHOT_VERSION}): its entries cannot be trusted across \
+                 SKUs — delete the file or re-profile"
+            ),
+            Some(v) => anyhow::bail!(
+                "unsupported snapshot version {v} (this build reads {SNAPSHOT_VERSION})"
+            ),
+            None => anyhow::bail!("snapshot missing version"),
+        }
         let cluster = ClusterSpec::from_json(
             j.get("cluster")
                 .ok_or_else(|| anyhow::anyhow!("snapshot missing cluster"))?,
         )?;
-        let cost = CostModel::from_json(
+        let cost = CostBook::from_json(
             j.get("cost")
                 .ok_or_else(|| anyhow::anyhow!("snapshot missing cost"))?,
         );
@@ -390,7 +416,7 @@ impl ProfileCache {
         db: &EventDb,
         id: crate::events::EventId,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        cost: &CostBook,
         jitter_sigma: f64,
         iters: usize,
         seed: u64,
@@ -427,7 +453,7 @@ impl ProfileCache {
         &self,
         db: &mut EventDb,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        cost: &CostBook,
         jitter_sigma: f64,
         iters: usize,
         seed: u64,
@@ -442,7 +468,7 @@ impl ProfileCache {
         &self,
         db: &mut EventDb,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        cost: &CostBook,
         jitter_sigma: f64,
         iters: usize,
         seed: u64,
@@ -504,18 +530,23 @@ mod tests {
     use crate::events::CompEvent;
 
     fn comp(name: &str, flops: u64) -> Event {
+        comp_on(name, flops, "A40")
+    }
+
+    fn comp_on(name: &str, flops: u64, kind: &str) -> Event {
         Event::Comp(CompEvent {
             name: name.into(),
             class: OpClass::Matmul,
             flops,
             bytes: flops / 64,
+            kind: kind.into(),
         })
     }
 
     #[test]
     fn second_lookup_hits_and_matches_fresh_measurement() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
 
         let mut db1 = EventDb::new();
@@ -538,7 +569,7 @@ mod tests {
     #[test]
     fn distinct_shard_shapes_do_not_collide() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         let a = db.intern(comp("xfmr_fwd/h1024/mp1/b4s128", 1 << 30));
@@ -552,7 +583,7 @@ mod tests {
     #[test]
     fn profile_into_fills_db_and_counts_lookups() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         let a = db.intern(comp("a", 1 << 28));
@@ -567,7 +598,7 @@ mod tests {
     #[should_panic(expected = "different profiling protocol")]
     fn protocol_mismatch_is_rejected() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         let a = db.intern(comp("a", 1 << 28));
@@ -578,7 +609,7 @@ mod tests {
     #[test]
     fn snapshot_roundtrip_restores_bit_identical_measurements() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         let a = db.intern(comp("xfmr_fwd/h1024/mp2/b4s128", 1 << 30));
@@ -613,7 +644,7 @@ mod tests {
     fn fingerprint_separates_cluster_cost_and_protocol() {
         let c1 = ClusterSpec::a40_cluster(4, 4);
         let c2 = ClusterSpec::a10_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let base = fingerprint(&c1, &cost, 0.0, 1, 7);
         assert_eq!(base, fingerprint(&c1, &cost, 0.0, 1, 7));
         assert_ne!(base, fingerprint(&c2, &cost, 0.0, 1, 7));
@@ -621,14 +652,14 @@ mod tests {
         assert_ne!(base, fingerprint(&c1, &cost, 0.0, 2, 7));
         assert_ne!(base, fingerprint(&c1, &cost, 0.0, 1, 8));
         let mut tweaked = cost.clone();
-        tweaked.scale = 1.01;
+        tweaked.base.scale = 1.01;
         assert_ne!(base, fingerprint(&c1, &tweaked, 0.0, 1, 7));
     }
 
     #[test]
     fn load_rejects_tampered_snapshots() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         let a = db.intern(comp("a", 1 << 28));
@@ -643,9 +674,69 @@ mod tests {
     }
 
     #[test]
+    fn device_kinds_never_share_cache_entries() {
+        // ISSUE 4 invariant: the same shapes on different SKUs are
+        // distinct keys with distinct measured costs
+        let cluster = ClusterSpec::mixed_a40_a10(4, 4);
+        let cost = CostBook::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp_on("xfmr_fwd/h1024/mp1/b4s128", 1 << 30, "A40"));
+        let b = db.intern(comp_on("xfmr_fwd/h1024/mp1/b4s128", 1 << 30, "A10"));
+        let pa = cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        let pb = cache.get_or_profile(&db, b, &cluster, &cost, 0.0, 1, 7);
+        let s = cache.stats(1);
+        assert_eq!((s.hits, s.misses, s.unique_events), (0, 2, 2));
+        assert!(pb.mean_us > pa.mean_us, "A10 must measure slower than A40");
+    }
+
+    #[test]
+    fn fingerprint_ignores_placement_but_not_kinds() {
+        use crate::cluster::Placement;
+        let cost = CostBook::default();
+        let mixed = ClusterSpec::mixed_a40_a10(4, 4);
+        let base = fingerprint(&mixed, &cost, 0.0, 1, 7);
+        // placement permutes ranks, not costs: same cache identity
+        for p in [Placement::FastFirst, Placement::Interleaved] {
+            assert_eq!(base, fingerprint(&mixed.with_placement(p), &cost, 0.0, 1, 7));
+        }
+        // but the kind tables and per-kind cost overrides are identity
+        assert_ne!(
+            base,
+            fingerprint(&ClusterSpec::a40_cluster(4, 4), &cost, 0.0, 1, 7)
+        );
+        let mut slow = crate::cost::CostModel::default();
+        slow.scale = 1.5;
+        let tweaked = CostBook::default().with_kind("A10", slow);
+        assert_ne!(base, fingerprint(&mixed, &tweaked, 0.0, 1, 7));
+    }
+
+    #[test]
+    fn load_rejects_pre_heterogeneity_snapshot_versions() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostBook::default();
+        let cache = ProfileCache::new();
+        let mut db = EventDb::new();
+        let a = db.intern(comp("a", 1 << 28));
+        cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        let good = cache.save_json(&cluster, &cost, 0.0, 1, 7).to_string();
+        assert!(good.contains("\"version\":2"), "{good}");
+
+        let stale = good.replace("\"version\":2", "\"version\":1");
+        let err = ProfileCache::load_json(&Json::parse(&stale).unwrap()).unwrap_err();
+        assert!(
+            err.to_string().contains("version 1 predates"),
+            "want versioned error, got: {err}"
+        );
+        let future = good.replace("\"version\":2", "\"version\":9");
+        let err = ProfileCache::load_json(&Json::parse(&future).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unsupported snapshot version 9"));
+    }
+
+    #[test]
     fn lookup_log_stats_are_prior_relative() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let log = LookupLog::default();
         // two "candidates" sharing one event
@@ -673,7 +764,7 @@ mod tests {
     #[test]
     fn concurrent_lookups_measure_each_event_once() {
         let cluster = ClusterSpec::a40_cluster(4, 4);
-        let cost = CostModel::default();
+        let cost = CostBook::default();
         let cache = ProfileCache::new();
         let mut db = EventDb::new();
         for i in 0..6 {

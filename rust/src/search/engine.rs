@@ -7,6 +7,15 @@
 //! space beyond the paper's power-of-two grid, and can prune candidates
 //! that an analytical lower bound proves worse than an incumbent.
 //!
+//! On heterogeneous clusters the sweep gains a **placement axis**
+//! ([`SweepConfig::placement_axis`]): every point is additionally
+//! evaluated under the deterministic [`PlacementPolicy::AXIS`] overrides
+//! (baseline, fast-SKUs-first, interleaved). Placement permutes ranks
+//! onto devices without changing any profiled cost, so all placements of
+//! a sweep share one cache and the thread-count bit-identity contract is
+//! untouched; [`SweepReport::placement_attribution`] splits the win into
+//! placement vs strategy, mirroring the schedule axis.
+//!
 //! **Determinism contract.** The [`SweepReport`]'s `candidates`, `profile`
 //! and `cache` fields are bit-identical for any worker count: candidates
 //! are indexed up front and results land by index; every profiled cost
@@ -19,14 +28,15 @@
 //!
 //! [`Timeline`]: crate::timeline::Timeline
 
+use std::borrow::Cow;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::baseline::analytical::analytical_batch_time_us;
-use crate::cluster::ClusterSpec;
-use crate::cost::CostModel;
+use crate::cluster::{ClusterSpec, PlacementPolicy};
+use crate::cost::{CostBook, CostModel};
 use crate::distsim::DistSim;
 use crate::events::EventDb;
 use crate::model::ModelSpec;
@@ -62,6 +72,11 @@ pub struct SweepConfig {
     /// Enumerate every pipeline schedule ([`SchedKind::ALL`]) for pipelined
     /// candidates instead of fixing the seed protocol's Dapple.
     pub schedule_axis: bool,
+    /// Evaluate every sweep point under each placement of
+    /// [`PlacementPolicy::AXIS`] (baseline, fast-SKUs-first, interleaved).
+    /// A no-op on homogeneous clusters, where every placement prices
+    /// identically.
+    pub placement_axis: bool,
     /// Evaluate at most this many sweep points (0 = unlimited). Truncation
     /// happens on the deterministic spec order, so a budgeted sweep is a
     /// prefix of the unbudgeted one.
@@ -90,6 +105,7 @@ impl Default for SweepConfig {
             widened: false,
             micro_batch_axis: false,
             schedule_axis: false,
+            placement_axis: false,
             max_candidates: 0,
             prune: false,
             prune_margin: 0.10,
@@ -110,6 +126,9 @@ pub struct CandidateSpec {
     pub micro_batches: usize,
     /// Pipeline schedule this point runs (the seed protocol fixes Dapple).
     pub schedule: SchedKind,
+    /// Rank→device placement this point deploys under (the cluster's own
+    /// placement unless the placement axis enumerates overrides).
+    pub placement: PlacementPolicy,
 }
 
 impl CandidateSpec {
@@ -123,6 +142,7 @@ impl CandidateSpec {
                 micro_batch_size: 0,
                 micro_batches: 0,
                 schedule: SchedKind::Dapple,
+                placement: PlacementPolicy::Cluster,
             };
         }
         let per_replica = global_batch / strategy.dp;
@@ -136,6 +156,7 @@ impl CandidateSpec {
             micro_batch_size: mbs,
             micro_batches: m,
             schedule: SchedKind::Dapple,
+            placement: PlacementPolicy::Cluster,
         }
     }
 }
@@ -148,6 +169,8 @@ pub struct SweepCandidate {
     pub micro_batches: usize,
     /// Pipeline schedule the point was simulated under.
     pub schedule: SchedKind,
+    /// Placement the point was simulated under.
+    pub placement: PlacementPolicy,
     /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
     pub throughput: f64,
     /// Deployable: valid strategy and the shard fits device memory.
@@ -222,6 +245,23 @@ pub struct ScheduleAttribution {
     pub strategy_speedup: f64,
 }
 
+/// Where a placement-axis sweep's win came from (requires
+/// [`SweepConfig::placement_axis`] to be informative): the placement
+/// override's contribution on top of the best baseline-placement
+/// candidate, vs the spread the strategy axis alone explains under the
+/// baseline placement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacementAttribution {
+    /// Placement of the overall winner.
+    pub winning_placement: PlacementPolicy,
+    /// Best overall / best baseline-placement candidate: >1 exactly when
+    /// re-placing ranks beats every baseline deployment.
+    pub placement_speedup: f64,
+    /// Best baseline / worst baseline: the spread strategy choice alone
+    /// explains under the cluster's own placement.
+    pub strategy_speedup: f64,
+}
+
 /// First maximal-throughput candidate. Unlike `max_by` (which keeps the
 /// *last* of equal maxima), ties resolve toward the earlier sweep point —
 /// so a schedule-axis point that merely equals the default-schedule
@@ -287,6 +327,27 @@ impl SweepReport {
         })
     }
 
+    /// Attribute the sweep's win to the placement axis vs the strategy
+    /// axis. `None` when no baseline-placement candidate was evaluated
+    /// (every sweep space includes [`PlacementPolicy::Cluster`], so this
+    /// only happens on empty or fully-unreachable spaces).
+    pub fn placement_attribution(&self) -> Option<PlacementAttribution> {
+        let best = self.best()?;
+        let base_best = first_max(
+            self.ranked()
+                .filter(|c| c.placement == PlacementPolicy::Cluster),
+        )?;
+        let base_worst = self
+            .ranked()
+            .filter(|c| c.placement == PlacementPolicy::Cluster)
+            .min_by(|a, b| a.throughput.total_cmp(&b.throughput))?;
+        Some(PlacementAttribution {
+            winning_placement: best.placement,
+            placement_speedup: best.throughput / base_best.throughput,
+            strategy_speedup: base_best.throughput / base_worst.throughput,
+        })
+    }
+
     pub fn pruned_count(&self) -> usize {
         self.candidates.iter().filter(|c| c.pruned).count()
     }
@@ -317,7 +378,7 @@ impl SweepReport {
 pub struct SearchEngine<'a> {
     model: &'a ModelSpec,
     cluster: &'a ClusterSpec,
-    cost: &'a CostModel,
+    book: CostBook,
     cfg: SweepConfig,
     cache: Arc<ProfileCache>,
     prior: HashSet<String>,
@@ -343,13 +404,42 @@ impl<'a> SearchEngine<'a> {
         cfg: SweepConfig,
         cache: Arc<ProfileCache>,
     ) -> Self {
+        Self::with_book(model, cluster, CostBook::uniform(cost.clone()), cfg, cache)
+    }
+
+    /// Build an engine pricing through a full per-device-kind cost
+    /// registry (mixed-SKU fleets; the service's request path).
+    pub fn with_book(
+        model: &'a ModelSpec,
+        cluster: &'a ClusterSpec,
+        book: CostBook,
+        cfg: SweepConfig,
+        cache: Arc<ProfileCache>,
+    ) -> Self {
         SearchEngine {
             model,
             cluster,
-            cost,
+            book,
             cfg,
             cache,
             prior: HashSet::new(),
+        }
+    }
+
+    /// The per-device-kind cost registry this engine prices with.
+    pub fn book(&self) -> &CostBook {
+        &self.book
+    }
+
+    /// The cluster a sweep point deploys on: the engine's cluster, with
+    /// the candidate's placement override applied when the placement axis
+    /// set one. Profiled costs are placement-independent, so every
+    /// placement shares the engine's cache (see
+    /// [`super::cache::fingerprint`]).
+    fn cluster_for(&self, spec: &CandidateSpec) -> Cow<'a, ClusterSpec> {
+        match spec.placement.placement() {
+            None => Cow::Borrowed(self.cluster),
+            Some(p) => Cow::Owned(self.cluster.with_placement(p)),
         }
     }
 
@@ -410,6 +500,7 @@ impl<'a> SearchEngine<'a> {
                             micro_batch_size: mbs,
                             micro_batches: per_replica / mbs,
                             schedule,
+                            placement: PlacementPolicy::Cluster,
                         });
                     }
                 }
@@ -424,6 +515,7 @@ impl<'a> SearchEngine<'a> {
                     micro_batch_size: 1,
                     micro_batches: per_replica,
                     schedule: SchedKind::GPipe,
+                    placement: PlacementPolicy::Cluster,
                 });
                 push_mb_grid(&mut specs, SchedKind::GPipe);
                 // naive: the whole replica batch as one micro-batch
@@ -432,8 +524,23 @@ impl<'a> SearchEngine<'a> {
                     micro_batch_size: per_replica,
                     micro_batches: 1,
                     schedule: SchedKind::Naive,
+                    placement: PlacementPolicy::Cluster,
                 });
             }
+        }
+        // placement axis: each point replicated across the deterministic
+        // placement set, baseline first (spec-major order keeps a budgeted
+        // sweep a prefix of the unbudgeted one). Homogeneous clusters skip
+        // it — every placement prices identically there.
+        if self.cfg.placement_axis && self.cluster.is_heterogeneous() {
+            specs = specs
+                .into_iter()
+                .flat_map(|base| {
+                    PlacementPolicy::AXIS
+                        .into_iter()
+                        .map(move |placement| CandidateSpec { placement, ..base })
+                })
+                .collect();
         }
         if self.cfg.max_candidates > 0 {
             specs.truncate(self.cfg.max_candidates);
@@ -462,17 +569,18 @@ impl<'a> SearchEngine<'a> {
         if !self.valid(spec) {
             return 0.0;
         }
+        let cluster = self.cluster_for(spec);
         let part = partition(
             self.model,
             &spec.strategy,
-            self.cluster,
+            &cluster,
             spec.micro_batch_size,
         );
-        if !self.cluster.fits(part.max_params_per_rank()) {
+        if !cluster.fits(part.max_params_per_rank()) {
             return 0.0;
         }
         let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
-        let us = analytical_batch_time_us(self.model, &part, &sched, self.cluster);
+        let us = analytical_batch_time_us(self.model, &part, &sched, &cluster);
         if us > 0.0 {
             1e6 / us
         } else {
@@ -491,6 +599,7 @@ impl<'a> SearchEngine<'a> {
             micro_batch_size: spec.micro_batch_size,
             micro_batches: spec.micro_batches,
             schedule: spec.schedule,
+            placement: spec.placement,
             throughput: 0.0,
             reachable: false,
             pruned: false,
@@ -503,23 +612,24 @@ impl<'a> SearchEngine<'a> {
             cand.micro_batches = 0;
             return (cand, ProfileReport::default());
         }
+        let cluster = self.cluster_for(spec);
         let part = partition(
             self.model,
             &spec.strategy,
-            self.cluster,
+            &cluster,
             spec.micro_batch_size,
         );
-        if !self.cluster.fits(part.max_params_per_rank()) {
+        if !cluster.fits(part.max_params_per_rank()) {
             return (cand, ProfileReport::default());
         }
         let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
         let mut db = EventDb::new();
-        crate::engine::build_programs(&part, &sched, self.cluster, &mut db);
+        crate::engine::build_programs(&part, &sched, &cluster, &mut db);
         let profile = if self.cfg.use_cache {
             self.cache.profile_into_logged(
                 &mut db,
-                self.cluster,
-                self.cost,
+                &cluster,
+                &self.book,
                 self.cfg.jitter_sigma,
                 self.cfg.profile_iters,
                 self.cfg.profile_seed,
@@ -530,14 +640,14 @@ impl<'a> SearchEngine<'a> {
         } else {
             profile_events(
                 &mut db,
-                self.cluster,
-                self.cost,
+                &cluster,
+                &self.book,
                 self.cfg.jitter_sigma,
                 self.cfg.profile_iters,
                 self.cfg.profile_seed,
             )
         };
-        let ds = DistSim::new(&part, &sched, self.cluster);
+        let ds = DistSim::new(&part, &sched, &cluster);
         let batch_us = ds.predict_batch_time_us(&mut db);
         cand.reachable = true;
         cand.throughput = 1e6 / batch_us;
@@ -602,6 +712,7 @@ impl<'a> SearchEngine<'a> {
                                 micro_batch_size: specs[j].micro_batch_size,
                                 micro_batches: specs[j].micro_batches,
                                 schedule: specs[j].schedule,
+                                placement: specs[j].placement,
                                 throughput: 0.0,
                                 reachable: true,
                                 pruned: true,

@@ -39,9 +39,11 @@ pub mod engine;
 
 pub use cache::{
     fingerprint, stats_against, CacheSnapshot, CacheStats, EventUse, LookupLog, ProfileCache,
+    SNAPSHOT_VERSION,
 };
 pub use engine::{
-    CandidateSpec, ScheduleAttribution, SearchEngine, SweepCandidate, SweepConfig, SweepReport,
+    CandidateSpec, PlacementAttribution, ScheduleAttribution, SearchEngine, SweepCandidate,
+    SweepConfig, SweepReport,
 };
 
 use crate::cluster::ClusterSpec;
@@ -188,7 +190,8 @@ pub fn evaluate_candidate(
     let sched = schedule::dapple(strategy.pp, micro_batches);
     let mut db = EventDb::new();
     crate::engine::build_programs(&part, &sched, cluster, &mut db);
-    let r = profile_events(&mut db, cluster, cost, jitter_sigma, profile_iters, 7777);
+    let book = crate::cost::CostBook::uniform(cost.clone());
+    let r = profile_events(&mut db, cluster, &book, jitter_sigma, profile_iters, 7777);
     report.gpu_seconds += r.gpu_seconds;
     report.events_profiled += r.events_profiled;
     report.extrapolated += r.extrapolated;

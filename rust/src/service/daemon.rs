@@ -51,7 +51,7 @@ use std::time::{Duration, Instant};
 
 use crate::cluster::ClusterSpec;
 use crate::config::Json;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::search::{
     fingerprint, stats_against, ProfileCache, SearchEngine, SweepReport,
 };
@@ -87,7 +87,7 @@ struct RegistryEntry {
     preloaded: Arc<HashSet<String>>,
     // identity needed to save the snapshot back
     cluster: ClusterSpec,
-    cost: CostModel,
+    cost: CostBook,
     protocol: (f64, usize, u64),
 }
 
@@ -122,7 +122,7 @@ impl CacheRegistry {
     fn resolve(
         &self,
         cluster: &ClusterSpec,
-        cost: &CostModel,
+        cost: &CostBook,
         jitter: f64,
         iters: usize,
         seed: u64,
@@ -469,8 +469,14 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
         req.sweep.profile_seed,
     );
     let outcome = match catch_unwind(AssertUnwindSafe(|| {
-        SearchEngine::with_cache(&req.model, &req.cluster, &req.cost, req.sweep.clone(), cache)
-            .sweep()
+        SearchEngine::with_book(
+            &req.model,
+            &req.cluster,
+            req.cost.clone(),
+            req.sweep.clone(),
+            cache,
+        )
+        .sweep()
     })) {
         Ok(report) => Outcome::Sweep {
             report: Box::new(report),

@@ -12,29 +12,44 @@
 //! ```json
 //! {"id": "r1", "op": "sweep",
 //!  "model": "bert-exlarge",
-//!  "cluster": {"preset": "a10", "nodes": 4, "gpus_per_node": 4},
-//!  "cost": {"scale": 1.0},
+//!  "cluster": {"preset": "a40-a10", "nodes": 4, "gpus_per_node": 4,
+//!              "placement": "interleaved"},
+//!  "cost": {"scale": 1.0, "per_kind": {"A10": {"eff_max": 0.55}}},
 //!  "sweep": {"global_batch": 16, "profile_iters": 1, "threads": 1,
 //!            "widened": false, "micro_batch_axis": false,
-//!            "schedule_axis": false, "prune": false},
+//!            "schedule_axis": false, "placement_axis": false,
+//!            "prune": false},
 //!  "budget": {"max_candidates": 100, "deadline_ms": 60000},
 //!  "timing": false}
 //! ```
 //!
-//! `op` is one of `sweep` (default), `ping`, `stats`, `shutdown`.
-//! `cluster` is either a full [`ClusterSpec`] object or a preset shorthand
-//! (`a40`/`a10`/`a100`). Omitted `sweep` fields take [`SweepConfig`]
+//! `op` is one of `sweep` (default), `ping`, `stats`, `shutdown`
+//! ([`OPS`]). `cluster` is either a full [`ClusterSpec`] object or a
+//! preset shorthand (`a40`/`a10`/`a100`/`a40-a10` — the last a mixed-SKU
+//! fleet), optionally with a `placement` policy or table. `cost` is a
+//! per-device-kind registry: base fields flat, `per_kind` mapping SKU
+//! names to overrides. Omitted `sweep` fields take [`SweepConfig`]
 //! defaults, except `threads`, which defaults to 1 inside the service
 //! (request-level parallelism comes from the daemon's worker pool).
 //! `timing: true` opts into wall-clock fields — by default responses carry
 //! only deterministic data, so equal requests produce byte-equal response
 //! lines.
+//!
+//! The full byte-level specification of every request/response field (and
+//! of every other on-disk format the project writes) lives in
+//! **docs/FORMATS.md**; a CI drift check keeps the op list there in sync
+//! with this dispatcher.
 
-use crate::cluster::ClusterSpec;
+use crate::cluster::{ClusterSpec, Placement};
 use crate::config::Json;
-use crate::cost::CostModel;
+use crate::cost::CostBook;
 use crate::model::ModelSpec;
 use crate::search::{CacheStats, SweepConfig, SweepReport};
+
+/// Every op the request dispatcher accepts, in documentation order.
+/// `docs/FORMATS.md` must describe each one (`tests/docs_drift.rs` pins
+/// that), and [`parse_line`]'s dispatcher accepts exactly this set.
+pub const OPS: [&str; 4] = ["sweep", "ping", "stats", "shutdown"];
 
 /// What went wrong, coarsely — the machine-readable half of an error
 /// response.
@@ -53,6 +68,16 @@ pub enum ErrorKind {
 }
 
 impl ErrorKind {
+    /// Every error kind a response can carry, in documentation order
+    /// (`docs/FORMATS.md` must describe each one).
+    pub const ALL: [ErrorKind; 5] = [
+        ErrorKind::BadJson,
+        ErrorKind::BadRequest,
+        ErrorKind::Deadline,
+        ErrorKind::Internal,
+        ErrorKind::Cli,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             ErrorKind::BadJson => "bad_json",
@@ -87,7 +112,9 @@ pub struct SweepRequest {
     pub model_name: String,
     pub model: ModelSpec,
     pub cluster: ClusterSpec,
-    pub cost: CostModel,
+    /// Per-device-kind cost registry (a flat cost object parses as a
+    /// uniform book; `per_kind` adds SKU overrides).
+    pub cost: CostBook,
     pub sweep: SweepConfig,
     /// Reject the request if it cannot *start* within this budget. Never
     /// truncates a running sweep — payloads stay deterministic.
@@ -110,6 +137,9 @@ fn req_id(j: &Json) -> Option<String> {
 }
 
 /// Build a cluster from either a preset shorthand or a full spec object.
+/// Both forms accept an optional `placement` (policy name or rank→device
+/// table); the `a40-a10` preset is the mixed-SKU fleet (A40 nodes and A10
+/// nodes alternating).
 pub fn cluster_from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
     if let Some(preset) = j.get("preset").and_then(Json::as_str) {
         for k in ["nodes", "gpus_per_node"] {
@@ -120,9 +150,9 @@ pub fn cluster_from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
         }
         let nodes = j.get("nodes").and_then(Json::as_usize).unwrap_or(4);
         let gpn = j.get("gpus_per_node").and_then(Json::as_usize);
-        return match preset {
-            "a40" => Ok(ClusterSpec::a40_cluster(nodes, gpn.unwrap_or(4))),
-            "a10" => Ok(ClusterSpec::a10_cluster(nodes, gpn.unwrap_or(4))),
+        let mut cluster = match preset {
+            "a40" => ClusterSpec::a40_cluster(nodes, gpn.unwrap_or(4)),
+            "a10" => ClusterSpec::a10_cluster(nodes, gpn.unwrap_or(4)),
             "a100" => {
                 // the a100 pod preset is 8 GPUs/node by definition; a
                 // different request must be rejected, not silently resized
@@ -131,23 +161,37 @@ pub fn cluster_from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
                     "a100 preset has 8 gpus_per_node (got {})",
                     gpn.unwrap_or(0)
                 );
-                Ok(ClusterSpec::a100_pod(nodes))
+                ClusterSpec::a100_pod(nodes)
             }
-            other => anyhow::bail!("unknown cluster preset '{other}' (a40|a10|a100)"),
+            "a40-a10" => {
+                // one node would be all-A40: reject rather than silently
+                // degrade a requested mixed fleet to a homogeneous one
+                anyhow::ensure!(
+                    nodes >= 2,
+                    "a40-a10 mixed preset needs >= 2 nodes (got {nodes})"
+                );
+                ClusterSpec::mixed_a40_a10(nodes, gpn.unwrap_or(4))
+            }
+            other => {
+                anyhow::bail!("unknown cluster preset '{other}' (a40|a10|a100|a40-a10)")
+            }
         };
+        if let Some(p) = j.get("placement") {
+            cluster.placement = Placement::from_json(p)?;
+            cluster.validate()?;
+        }
+        return Ok(cluster);
     }
     ClusterSpec::from_json(j)
 }
 
-/// Strict cost-model overrides: unlike [`CostModel::from_json`] (which is
+/// Strict cost-model overrides: unlike [`CostBook::from_json`] (which is
 /// lenient for hand-written calibration files), a *request's* `cost`
 /// object must contain only known keys with numeric values — a typo'd or
 /// mistyped override is a `bad_request`, never a silent fallback to the
-/// default cost model.
-fn cost_from_json_strict(j: &Json) -> anyhow::Result<CostModel> {
-    let obj = j
-        .as_obj()
-        .ok_or_else(|| anyhow::anyhow!("'cost' must be an object"))?;
+/// default cost model. The base fields sit flat; `per_kind` maps SKU
+/// names to objects of the same base fields.
+fn cost_model_fields_strict(obj: &std::collections::BTreeMap<String, Json>) -> anyhow::Result<()> {
     const KNOWN: [&str; 5] = [
         "eff_max",
         "eff_min",
@@ -162,7 +206,28 @@ fn cost_from_json_strict(j: &Json) -> anyhow::Result<CostModel> {
         );
         anyhow::ensure!(v.as_f64().is_some(), "cost field '{k}' must be a number");
     }
-    Ok(CostModel::from_json(j))
+    Ok(())
+}
+
+fn cost_from_json_strict(j: &Json) -> anyhow::Result<CostBook> {
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("'cost' must be an object"))?;
+    let mut base = obj.clone();
+    if let Some(per) = base.remove("per_kind") {
+        let per = per
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("'cost.per_kind' must be an object"))?;
+        for (kind, m) in per {
+            let m = m.as_obj().ok_or_else(|| {
+                anyhow::anyhow!("cost.per_kind['{kind}'] must be an object")
+            })?;
+            cost_model_fields_strict(m)
+                .map_err(|e| anyhow::anyhow!("cost.per_kind['{kind}']: {e}"))?;
+        }
+    }
+    cost_model_fields_strict(&base)?;
+    Ok(CostBook::from_json(j))
 }
 
 fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
@@ -183,15 +248,14 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
         let ok = match k.as_str() {
             "global_batch" | "jitter_sigma" | "profile_iters" | "threads" | "prune_margin"
             | "max_candidates" => v.as_f64().is_some(),
-            "widened" | "micro_batch_axis" | "schedule_axis" | "prune" | "use_cache" => {
-                v.as_bool().is_some()
-            }
+            "widened" | "micro_batch_axis" | "schedule_axis" | "placement_axis" | "prune"
+            | "use_cache" => v.as_bool().is_some(),
             // seeds travel as numbers or string-wrapped u64s
             "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
             other => anyhow::bail!(
                 "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
-                 profile_seed|threads|widened|micro_batch_axis|schedule_axis|prune|\
-                 prune_margin|use_cache|max_candidates)"
+                 profile_seed|threads|widened|micro_batch_axis|schedule_axis|\
+                 placement_axis|prune|prune_margin|use_cache|max_candidates)"
             ),
         };
         anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
@@ -229,6 +293,9 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     }
     if let Some(v) = j.get("schedule_axis").and_then(Json::as_bool) {
         cfg.schedule_axis = v;
+    }
+    if let Some(v) = j.get("placement_axis").and_then(Json::as_bool) {
+        cfg.placement_axis = v;
     }
     if let Some(v) = j.get("prune").and_then(Json::as_bool) {
         cfg.prune = v;
@@ -295,7 +362,7 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
             .map_err(|e| bad(e.to_string()))?;
             let cost = match j.get("cost") {
                 Some(c) => cost_from_json_strict(c).map_err(|e| bad(e.to_string()))?,
-                None => CostModel::default(),
+                None => CostBook::default(),
             };
             let mut sweep =
                 sweep_config_from_json(j.get("sweep")).map_err(|e| bad(e.to_string()))?;
@@ -330,9 +397,7 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
                 include_timing: j.get("timing").and_then(Json::as_bool).unwrap_or(false),
             })))
         }
-        other => Err(bad(format!(
-            "unknown op '{other}' (sweep|ping|stats|shutdown)"
-        ))),
+        other => Err(bad(format!("unknown op '{other}' ({})", OPS.join("|")))),
     }
 }
 
@@ -440,6 +505,7 @@ pub fn sweep_response(
             Json::obj(vec![
                 ("strategy", Json::str(c.strategy.notation())),
                 ("schedule", Json::str(c.schedule.name())),
+                ("placement", Json::str(c.placement.name())),
                 ("micro_batch_size", Json::num(c.micro_batch_size as f64)),
                 ("micro_batches", Json::num(c.micro_batches as f64)),
                 ("throughput", Json::num(c.throughput)),
@@ -489,6 +555,16 @@ pub fn sweep_response(
             Json::obj(vec![
                 ("winning_schedule", Json::str(a.winning_schedule.name())),
                 ("schedule_speedup", Json::num(a.schedule_speedup)),
+                ("strategy_speedup", Json::num(a.strategy_speedup)),
+            ]),
+        ));
+    }
+    if let Some(a) = report.placement_attribution() {
+        result.push((
+            "placement_attribution",
+            Json::obj(vec![
+                ("winning_placement", Json::str(a.winning_placement.name())),
+                ("placement_speedup", Json::num(a.placement_speedup)),
                 ("strategy_speedup", Json::num(a.strategy_speedup)),
             ]),
         ));
@@ -613,7 +689,14 @@ mod tests {
     #[test]
     fn strict_cost_and_preset_validation() {
         // typo'd / mistyped cost overrides are rejected, not defaulted
-        for cost in [r#"{"scail":2.0}"#, r#"{"scale":"2.0"}"#, r#"[1]"#] {
+        for cost in [
+            r#"{"scail":2.0}"#,
+            r#"{"scale":"2.0"}"#,
+            r#"[1]"#,
+            r#"{"per_kind":{"A10":{"scail":2.0}}}"#,
+            r#"{"per_kind":{"A10":{"scale":"2.0"}}}"#,
+            r#"{"per_kind":[1]}"#,
+        ] {
             let line = format!(
                 r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},"cost":{cost}}}"#
             );
@@ -623,7 +706,7 @@ mod tests {
         // a valid override parses
         let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"cost":{"scale":2.0}}"#;
         match parse_line(line).unwrap() {
-            Request::Sweep(req) => assert_eq!(req.cost.scale, 2.0),
+            Request::Sweep(req) => assert_eq!(req.cost.base.scale, 2.0),
             other => panic!("expected sweep, got {other:?}"),
         }
         // the a100 pod is 8 GPUs/node: a mismatched request is an error

@@ -195,6 +195,90 @@ fn search_cache_file_warms_a_second_run() {
 }
 
 #[test]
+fn stale_snapshot_is_rejected_with_a_versioned_json_error_and_upgraded() {
+    // a pre-heterogeneity (version-1) snapshot must never serve costs:
+    // the search reports one parseable JSON error line on stderr, runs
+    // cold, and overwrites the file with a current-version snapshot
+    let path = std::env::temp_dir().join(format!(
+        "distsim_cli_stale_cache_{}.json",
+        std::process::id()
+    ));
+    std::fs::write(
+        &path,
+        r#"{"kind":"distsim-profile-cache","version":1,"entries":[]}"#,
+    )
+    .unwrap();
+    let out = bin()
+        .args([
+            "search",
+            "--model",
+            "bert-large",
+            "--nodes",
+            "1",
+            "--gpus-per-node",
+            "4",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--cache-file",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let line = stderr
+        .lines()
+        .find(|l| l.starts_with('{'))
+        .expect("a JSON error line on stderr");
+    let j = distsim::config::Json::parse(line).unwrap();
+    let msg = j
+        .get("error")
+        .unwrap()
+        .get("message")
+        .and_then(|m| m.as_str())
+        .unwrap();
+    assert!(msg.contains("version 1 predates"), "{msg}");
+    // the file was upgraded to the current snapshot version
+    let upgraded = std::fs::read_to_string(&path).unwrap();
+    assert!(
+        upgraded.contains(&format!("\"version\":{}", distsim::search::SNAPSHOT_VERSION)),
+        "stale snapshot not upgraded: {}",
+        &upgraded[..upgraded.len().min(200)]
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn search_placement_axis_on_a_mixed_fleet_prints_attribution() {
+    let out = bin()
+        .args([
+            "search",
+            "--model",
+            "bert-large",
+            "--device",
+            "a40-a10",
+            "--nodes",
+            "2",
+            "--gpus-per-node",
+            "2",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--placement-axis",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("placement axis:"), "{text}");
+    assert!(text.contains("fast_first"), "{text}");
+    assert!(text.contains("interleaved"), "{text}");
+}
+
+#[test]
 fn bad_strategy_rejected() {
     let out = bin()
         .args(["simulate", "--strategy", "9X"])

@@ -1,0 +1,85 @@
+//! Docs-drift checks: `docs/FORMATS.md` is the normative spec of every
+//! externally visible byte format, so the things the code accepts or
+//! emits must appear there. These tests run as part of tier-1 (`cargo
+//! test`), which is what `ci.sh` and the workflow execute — editing the
+//! dispatcher without documenting the new surface fails CI.
+
+use distsim::search::SNAPSHOT_VERSION;
+use distsim::service::protocol::OPS;
+use distsim::service::ErrorKind;
+
+fn formats_md() -> String {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/FORMATS.md");
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("docs/FORMATS.md must exist ({path}): {e}"))
+}
+
+#[test]
+fn every_dispatcher_op_is_documented() {
+    let doc = formats_md();
+    for op in OPS {
+        assert!(
+            doc.contains(&format!("`{op}`")),
+            "service op `{op}` is accepted by the dispatcher but not \
+             documented in docs/FORMATS.md"
+        );
+    }
+}
+
+#[test]
+fn dispatcher_accepts_exactly_the_documented_ops() {
+    use distsim::service::protocol::parse_line;
+    // every listed op parses (sweep needs its required fields)
+    for op in OPS {
+        let line = if op == "sweep" {
+            format!(
+                r#"{{"op":"{op}","model":"bert-large","cluster":{{"preset":"a40"}}}}"#
+            )
+        } else {
+            format!(r#"{{"op":"{op}"}}"#)
+        };
+        assert!(parse_line(&line).is_ok(), "documented op '{op}' rejected");
+    }
+    // and nothing else does
+    assert!(parse_line(r#"{"op":"frobnicate"}"#).is_err());
+}
+
+#[test]
+fn every_error_kind_is_documented() {
+    let doc = formats_md();
+    for kind in ErrorKind::ALL {
+        assert!(
+            doc.contains(&format!("`{}`", kind.name())),
+            "error kind `{}` can be emitted but is not documented in \
+             docs/FORMATS.md",
+            kind.name()
+        );
+    }
+}
+
+#[test]
+fn snapshot_format_and_version_are_documented() {
+    let doc = formats_md();
+    assert!(doc.contains("distsim-profile-cache"));
+    assert!(
+        doc.contains(&format!("`version` is `{SNAPSHOT_VERSION}`")),
+        "docs/FORMATS.md must state the current snapshot version \
+         ({SNAPSHOT_VERSION})"
+    );
+}
+
+#[test]
+fn bench_formats_are_documented() {
+    let doc = formats_md();
+    for name in ["BENCH_engine.json", "BENCH_service.json"] {
+        assert!(doc.contains(name), "{name} missing from docs/FORMATS.md");
+    }
+}
+
+#[test]
+fn placement_and_preset_vocabulary_is_documented() {
+    let doc = formats_md();
+    for word in ["fast_first", "interleaved", "a40-a10", "per_kind", "kind_of_device"] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+}

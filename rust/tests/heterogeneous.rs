@@ -1,0 +1,322 @@
+//! Integration tests for heterogeneous mixed-SKU clusters (ISSUE 4):
+//! cache-key separation across device kinds, placement-map round-trips,
+//! end-to-end engine/model agreement on mixed fleets, the sweep's
+//! placement axis (bit-identity + attribution), and the acceptance
+//! criterion — a mixed-SKU sweep demonstrably differs from the
+//! homogeneous baseline.
+
+use std::collections::HashSet;
+
+use distsim::cluster::{ClusterSpec, DeviceSpec, Placement, PlacementPolicy};
+use distsim::config::{Json, RunConfig};
+use distsim::cost::CostModel;
+use distsim::search::{fingerprint, SearchEngine, SweepConfig, SweepReport};
+use distsim::strategy::Strategy;
+
+fn mixed() -> ClusterSpec {
+    ClusterSpec::mixed_a40_a10(2, 4)
+}
+
+fn homogeneous() -> ClusterSpec {
+    ClusterSpec::a40_cluster(2, 4)
+}
+
+fn sweep_cfg(placement_axis: bool, threads: usize) -> SweepConfig {
+    SweepConfig {
+        global_batch: 8,
+        profile_iters: 1,
+        threads,
+        placement_axis,
+        ..SweepConfig::default()
+    }
+}
+
+fn run_sweep(cluster: &ClusterSpec, cfg: SweepConfig) -> SweepReport {
+    let model = distsim::model::zoo::bert_large();
+    let cost = CostModel::default();
+    SearchEngine::new(&model, cluster, &cost, cfg).sweep()
+}
+
+// -- acceptance: mixed-SKU sweeps differ from homogeneous ----------------
+
+#[test]
+fn mixed_sweep_differs_from_homogeneous_and_attributes_the_delta() {
+    let homog = run_sweep(&homogeneous(), sweep_cfg(false, 1));
+    let mixed = run_sweep(&mixed(), sweep_cfg(true, 1));
+
+    // the axis actually enumerated placements
+    for p in PlacementPolicy::AXIS {
+        assert!(
+            mixed.candidates.iter().any(|c| c.placement == p),
+            "placement axis missing {p}"
+        );
+    }
+
+    // every interleaved-placement winner is measurably worse than the
+    // homogeneous baseline's: 8 ranks on 4xA40+4xA10 cannot match 8xA40
+    let best_homog = homog.best().expect("homogeneous sweep has a winner");
+    let best_interleaved = mixed
+        .candidates
+        .iter()
+        .filter(|c| c.placement == PlacementPolicy::Interleaved && c.evaluated())
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        .expect("interleaved candidates evaluated");
+    let differs_in_strategy = best_interleaved.strategy != best_homog.strategy;
+    let rel = (best_homog.throughput - best_interleaved.throughput).abs()
+        / best_homog.throughput;
+    assert!(
+        differs_in_strategy || rel > 0.02,
+        "mixed interleaved best ({} @ {:.4} it/s) indistinguishable from \
+         homogeneous best ({} @ {:.4} it/s)",
+        best_interleaved.strategy,
+        best_interleaved.throughput,
+        best_homog.strategy,
+        best_homog.throughput
+    );
+
+    // and the report attributes the placement axis's contribution
+    let attr = mixed
+        .placement_attribution()
+        .expect("placement attribution on a placement-axis sweep");
+    assert!(attr.placement_speedup >= 1.0, "{attr:?}");
+    assert!(attr.strategy_speedup >= 1.0, "{attr:?}");
+    assert!(
+        PlacementPolicy::AXIS.contains(&attr.winning_placement),
+        "{attr:?}"
+    );
+
+    // placement genuinely moves the needle for at least one strategy:
+    // some candidate's fast-first and interleaved evaluations differ
+    let moved = mixed.candidates.iter().any(|a| {
+        a.placement == PlacementPolicy::FastFirst
+            && a.evaluated()
+            && mixed.candidates.iter().any(|b| {
+                b.placement == PlacementPolicy::Interleaved
+                    && b.strategy == a.strategy
+                    && b.micro_batch_size == a.micro_batch_size
+                    && b.schedule == a.schedule
+                    && b.evaluated()
+                    && (b.throughput - a.throughput).abs() / a.throughput > 1e-6
+            })
+    });
+    assert!(moved, "no strategy's throughput depends on placement");
+}
+
+// -- cache-key separation across device kinds ----------------------------
+
+#[test]
+fn warm_homogeneous_snapshot_yields_no_hits_for_a_mixed_cluster() {
+    let model = distsim::model::zoo::bert_large();
+    let cost = CostModel::default();
+    let book = distsim::cost::CostBook::uniform(cost.clone());
+
+    // warm sweep on the homogeneous fleet; harvest its snapshot keys
+    let homog = homogeneous();
+    let homog_rep = SearchEngine::new(&model, &homog, &cost, sweep_cfg(false, 1)).sweep();
+    let homog_keys: HashSet<String> =
+        homog_rep.event_uses.iter().map(|u| u.key.clone()).collect();
+    assert!(!homog_keys.is_empty());
+
+    // fingerprints differ, so no registry/CLI path would ever apply the
+    // homogeneous snapshot to the mixed fleet in the first place
+    assert_ne!(
+        fingerprint(&homogeneous(), &book, 0.0, 1, 7777),
+        fingerprint(&mixed(), &book, 0.0, 1, 7777),
+        "mixed and homogeneous fleets must have distinct cache identities"
+    );
+
+    // and even if it were force-shared as a prior, not one computation
+    // event of the mixed sweep is served by it: mixed A40 events carry
+    // the same kind but A10 ranks intern their own descriptors, and a
+    // degenerate all-A10-via-kinds cluster shares nothing at all
+    let mut all_a10 = homogeneous();
+    all_a10.extra_kinds = vec![DeviceSpec::a10()];
+    let n = all_a10.total_devices();
+    all_a10.kind_of_device = vec![1; n];
+    let rep = run_sweep(&all_a10, sweep_cfg(false, 1));
+    let comp_uses: Vec<&str> = rep
+        .event_uses
+        .iter()
+        .filter(|u| u.key.contains("\"type\":\"comp\""))
+        .map(|u| u.key.as_str())
+        .collect();
+    assert!(!comp_uses.is_empty());
+    for key in comp_uses {
+        assert!(
+            !homog_keys.contains(key),
+            "A40 snapshot served an A10 computation event: {key}"
+        );
+        assert!(key.contains("\"kind\":\"A10\""), "{key}");
+    }
+}
+
+#[test]
+fn priming_a_service_with_homogeneous_sweeps_cannot_change_mixed_answers() {
+    use distsim::service::{serve_ndjson, ServeOpts};
+    use std::io::Cursor;
+
+    let homog_req = r#"{"id":"h","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1}}"#;
+    let mixed_req = r#"{"id":"m","op":"sweep","model":"bert-large","cluster":{"preset":"a40-a10","nodes":2,"gpus_per_node":2},"sweep":{"global_batch":4,"profile_iters":1,"placement_axis":true}}"#;
+
+    let run = |input: &str| -> Vec<String> {
+        let mut out = Vec::new();
+        serve_ndjson(
+            Cursor::new(input.to_string()),
+            &mut out,
+            &ServeOpts {
+                workers: 1,
+                cache_dir: None,
+            },
+        );
+        String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(str::to_string)
+            .collect()
+    };
+
+    let primed = run(&format!("{homog_req}\n{mixed_req}"));
+    let fresh = run(mixed_req);
+    assert_eq!(
+        primed[1], fresh[0],
+        "a warm homogeneous cache must contribute nothing (0% hits) to a \
+         mixed-cluster sweep — byte-identical response either way"
+    );
+    // the mixed response still pays for its own profiling (cold cache)
+    let j = Json::parse(&fresh[0]).unwrap();
+    let cache = j.get("result").unwrap().get("cache").unwrap();
+    assert!(cache.get("misses").and_then(Json::as_usize).unwrap() > 0);
+    // and it reports a placement attribution
+    assert!(j
+        .get("result")
+        .unwrap()
+        .get("placement_attribution")
+        .is_some());
+}
+
+// -- placement map JSON round-trip ---------------------------------------
+
+#[test]
+fn placement_map_round_trips_through_cluster_and_request_json() {
+    // full-spec round-trip, all placement variants
+    for placement in [
+        Placement::Linear,
+        Placement::FastFirst,
+        Placement::Interleaved,
+        Placement::Table(vec![3, 2, 1, 0, 7, 6, 5, 4]),
+    ] {
+        let c = mixed().with_placement(placement);
+        let j = Json::parse(&c.to_json().to_string()).unwrap();
+        assert_eq!(ClusterSpec::from_json(&j).unwrap(), c);
+    }
+    // preset + placement through the service's cluster parser
+    let j = Json::parse(
+        r#"{"preset":"a40-a10","nodes":2,"gpus_per_node":4,"placement":"interleaved"}"#,
+    )
+    .unwrap();
+    let c = distsim::service::protocol::cluster_from_json(&j).unwrap();
+    assert_eq!(c.placement, Placement::Interleaved);
+    assert!(c.is_heterogeneous());
+    // malformed tables are rejected, not silently accepted
+    let bad = Json::parse(r#"{"preset":"a40-a10","nodes":2,"gpus_per_node":4,"placement":[0,0,0,0,0,0,0,0]}"#).unwrap();
+    assert!(distsim::service::protocol::cluster_from_json(&bad).is_err());
+}
+
+// -- sweep bit-identity with the placement axis on -----------------------
+
+#[test]
+fn placement_axis_sweep_is_bit_identical_across_thread_counts() {
+    let one = run_sweep(&mixed(), sweep_cfg(true, 1));
+    for threads in [2, 4] {
+        let many = run_sweep(&mixed(), sweep_cfg(true, threads));
+        assert_eq!(one.candidates, many.candidates, "{threads} threads");
+        assert_eq!(one.profile, many.profile, "{threads} threads");
+        assert_eq!(one.cache, many.cache, "{threads} threads");
+        assert_eq!(one.event_uses, many.event_uses, "{threads} threads");
+    }
+}
+
+// -- ground-truth engine on mixed fleets ---------------------------------
+
+#[test]
+fn engine_brackets_mixed_fleet_between_homogeneous_bounds() {
+    // "actually running" a strategy on the mixed fleet must be slower
+    // than on all-A40 silicon and no slower than on all-A10 silicon
+    let mut slow = homogeneous();
+    slow.device = DeviceSpec::a10();
+    let strategies = ["1M4P2D", "2M2P2D", "1M2P4D"];
+    for s in strategies {
+        let time_on = |cluster: &ClusterSpec| {
+            let cfg = RunConfig::new(
+                "bert-large",
+                Strategy::parse(s).unwrap(),
+                cluster.clone(),
+            );
+            distsim::engine::GroundTruth::prepare(&cfg)
+                .unwrap()
+                .mean_batch_time_us(3)
+        };
+        let tf = time_on(&homogeneous());
+        let ts = time_on(&slow);
+        let tm = time_on(&mixed());
+        assert!(tm > tf * 1.01, "{s}: mixed {tm} !> fast {tf}");
+        assert!(tm <= ts * 1.02, "{s}: mixed {tm} !<= slow {ts}");
+    }
+}
+
+#[test]
+fn distsim_tracks_the_engine_on_mixed_fleets() {
+    // the paper's accuracy claim, extended to the mixed fleet: the
+    // hierarchical model (max-over-kinds MP composition, per-replica
+    // pipeline walks, barrier-gated gradient all-reduce) stays within a
+    // loose band of the per-rank ground truth
+    use distsim::metrics::batch_time_error_pct;
+    for (s, placement) in [
+        ("1M4P2D", Placement::Linear),
+        ("2M2P2D", Placement::Linear),
+        ("2M4P1D", Placement::Linear),
+        // scattered placement: DP replicas get different SKU profiles and
+        // different inter-stage link classes — the per-replica walk must
+        // still track the per-rank engine
+        ("1M4P2D", Placement::Interleaved),
+        ("1M2P4D", Placement::FastFirst),
+    ] {
+        let cluster = mixed().with_placement(placement.clone());
+        let mut cfg = RunConfig::new("bert-large", Strategy::parse(s).unwrap(), cluster);
+        cfg.profile_iters = 30;
+        let run = distsim::exp::eval_cfg(&cfg).unwrap();
+        let actual = run.gt.run_iteration(0);
+        let err = batch_time_error_pct(&run.predicted, &actual);
+        assert!(
+            err < 8.0,
+            "{s} under {placement:?}: mixed-fleet batch-time error {err:.2}%"
+        );
+    }
+}
+
+#[test]
+fn fast_first_placement_beats_interleaved_for_pipelines() {
+    // placement search motivation: packing the fast SKUs into the early
+    // ranks (= pipeline stages, Megatron order) beats scattering them
+    let cfg = SweepConfig {
+        global_batch: 8,
+        profile_iters: 1,
+        threads: 1,
+        placement_axis: true,
+        ..SweepConfig::default()
+    };
+    let rep = run_sweep(&mixed(), cfg);
+    let best_of = |p: PlacementPolicy| {
+        rep.candidates
+            .iter()
+            .filter(|c| c.placement == p && c.evaluated())
+            .map(|c| c.throughput)
+            .fold(f64::NEG_INFINITY, f64::max)
+    };
+    let ff = best_of(PlacementPolicy::FastFirst);
+    let il = best_of(PlacementPolicy::Interleaved);
+    assert!(
+        ff >= il,
+        "fast-first best ({ff}) should not lose to interleaved ({il})"
+    );
+}

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
     let opts = ServeOpts {
         workers: 0, // all cores
         cache_dir: Some(dir.clone()),
+        ..ServeOpts::default()
     };
 
     println!("== session 1: cold daemon, three what-if queries ==");

@@ -37,6 +37,7 @@ fn run(workers: usize, input: &str) -> (String, f64) {
     let opts = ServeOpts {
         workers,
         cache_dir: None,
+        ..ServeOpts::default()
     };
     let t0 = Instant::now();
     serve_ndjson(Cursor::new(input.to_string()), &mut out, &opts);

@@ -11,13 +11,25 @@ use crate::engine::GroundTruth;
 use crate::model::ModelSpec;
 use crate::partition::Partition;
 use crate::schedule::PipelineSchedule;
-use crate::strategy::Strategy;
+use crate::strategy::{RankCoords, Strategy};
 use crate::util::TimeUs;
 
 /// Analytical iteration-time estimate for a configuration.
 ///
 /// Ideal pipeline model: batch = (M + PP - 1) slots of the per-stage
 /// fwd+bwd time (perfect overlap, zero queuing), plus ideal comm terms.
+///
+/// **Placement-aware (ISSUE 5).** On a heterogeneous fleet the estimate
+/// prices each (stage, DP-replica) MP group at the *slowest* SKU among
+/// its own members, resolved through the cluster's placement map, and
+/// takes the max over replicas. That member's peak-rate ideal is a lower
+/// bound on its simulated time, and the per-layer all-reduce barriers
+/// make the group wait for it, so the estimate stays a true lower bound
+/// on the simulated batch time *per candidate placement* — which is what
+/// lets the search engine prune `Placement::Table` candidates soundly
+/// (an all-A10 table is bounded at A10 speed, not fleet-fastest speed;
+/// proof sketch in DESIGN.md §7). On a homogeneous fleet every group has
+/// one kind and the estimate reduces to the pre-placement-aware model.
 pub fn analytical_batch_time_us(
     model: &ModelSpec,
     part: &Partition,
@@ -26,58 +38,70 @@ pub fn analytical_batch_time_us(
 ) -> TimeUs {
     let cm = CostModel::default(); // only used for its analytical method
     let strategy = part.strategy;
-    // heterogeneous fleets price at the *fastest* SKU present: the
-    // heuristic stays optimistic for any placement, which keeps the
-    // search engine's pruning bound a true throughput upper bound
-    let dev = cluster.fastest_spec();
     let m = sched.micro_batches as f64;
     let pp = strategy.pp as f64;
+    let rank_dev = cluster.rank_to_device();
 
-    // per-stage per-microbatch compute (fwd + bwd) at peak rate
-    let stage_time: Vec<f64> = (0..strategy.pp)
-        .map(|s| {
-            part.stages[s]
-                .layers
-                .iter()
-                .map(|lw| {
-                    cm.analytical_latency_us(dev, lw.fwd.flops, lw.fwd.bytes)
-                        + cm.analytical_latency_us(dev, lw.bwd.flops, lw.bwd.bytes)
-                })
-                .sum()
-        })
-        .collect();
-    let slowest = stage_time.iter().copied().fold(0.0, f64::max);
-
-    // MP all-reduce ideal time per stage (bytes / bw, no latency)
-    let mp_comm: f64 = if strategy.mp > 1 {
-        let link = cluster.rank_group_link_class(&strategy.mp_group(0));
-        let bw = cluster.bw_gbs(link) * 1e3;
-        part.stages
-            .iter()
-            .map(|st| {
-                st.layers
-                    .iter()
-                    .map(|lw| {
-                        let n = (lw.ar_count_fwd + lw.ar_count_bwd) as f64;
-                        match &lw.mp_allreduce {
-                            Some(crate::events::CommEvent::AllReduce { bytes, .. }) => {
-                                n * 2.0 * (strategy.mp as f64 - 1.0)
-                                    / strategy.mp as f64
-                                    * *bytes as f64
-                                    / bw
-                            }
-                            _ => 0.0,
-                        }
-                    })
-                    .sum::<f64>()
-            })
-            .fold(0.0, f64::max)
-    } else {
-        0.0
+    // ideal ring all-reduce time (bytes / bw, no latency)
+    let ring = |members: &[usize], bytes: f64| {
+        let n = members.len() as f64;
+        let link = cluster.group_link_class(members);
+        2.0 * (n - 1.0) / n * bytes / (cluster.bw_gbs(link) * 1e3)
     };
 
-    // ideal pipeline fill: (M + PP - 1) x slowest stage slot
-    let pipeline = (m + pp - 1.0) * (slowest + mp_comm);
+    // per-replica ideal pipeline: (M + PP - 1) x the slowest stage slot,
+    // where a slot is that (stage, replica) group's compute (priced at
+    // the slowest member's SKU) plus its MP all-reduces (priced at the
+    // group's own link class); the batch waits for every replica
+    let pipeline = (0..strategy.dp)
+        .map(|d| {
+            let slot_max = (0..strategy.pp)
+                .map(|s| {
+                    let members: Vec<usize> = (0..strategy.mp)
+                        .map(|mp| {
+                            rank_dev[strategy.rank_of(RankCoords { mp, pp: s, dp: d })]
+                        })
+                        .collect();
+                    // slowest member's ideal gates the barrier-stepped slot
+                    let compute = members
+                        .iter()
+                        .map(|&dev| {
+                            let spec = cluster.kind_spec(cluster.device_kind(dev));
+                            part.stages[s]
+                                .layers
+                                .iter()
+                                .map(|lw| {
+                                    cm.analytical_latency_us(spec, lw.fwd.flops, lw.fwd.bytes)
+                                        + cm.analytical_latency_us(
+                                            spec, lw.bwd.flops, lw.bwd.bytes,
+                                        )
+                                })
+                                .sum::<f64>()
+                        })
+                        .fold(0.0, f64::max);
+                    let mp_comm: f64 = if strategy.mp > 1 {
+                        part.stages[s]
+                            .layers
+                            .iter()
+                            .map(|lw| {
+                                let n = (lw.ar_count_fwd + lw.ar_count_bwd) as f64;
+                                match &lw.mp_allreduce {
+                                    Some(crate::events::CommEvent::AllReduce {
+                                        bytes, ..
+                                    }) => n * ring(&members, *bytes as f64),
+                                    _ => 0.0,
+                                }
+                            })
+                            .sum()
+                    } else {
+                        0.0
+                    };
+                    compute + mp_comm
+                })
+                .fold(0.0, f64::max);
+            (m + pp - 1.0) * slot_max
+        })
+        .fold(0.0, f64::max);
 
     // activation transfers on the critical path: PP-1 hops
     let p2p: f64 = (0..strategy.pp.saturating_sub(1))
@@ -89,17 +113,24 @@ pub fn analytical_batch_time_us(
         .sum::<f64>()
         * 2.0; // fwd + bwd
 
-    // DP gradient all-reduce, ideal ring
+    // DP gradient all-reduce, ideal ring: the slowest lane's group gates
+    // the stage barrier, each lane priced at its own group's link class
     let dp_comm = if strategy.dp > 1 {
-        let bytes = part
-            .grad_bytes_per_rank
-            .iter()
-            .copied()
-            .max()
-            .unwrap_or(0) as f64;
-        let link = cluster.rank_group_link_class(&strategy.dp_group(0));
-        2.0 * (strategy.dp as f64 - 1.0) / strategy.dp as f64 * bytes
-            / (cluster.bw_gbs(link) * 1e3)
+        (0..strategy.pp)
+            .map(|s| {
+                let bytes = part.grad_bytes_per_rank[s] as f64;
+                (0..strategy.mp)
+                    .map(|mp| {
+                        let members: Vec<usize> = strategy
+                            .dp_group(strategy.rank_of(RankCoords { mp, pp: s, dp: 0 }))
+                            .iter()
+                            .map(|&r| rank_dev[r])
+                            .collect();
+                        ring(&members, bytes)
+                    })
+                    .fold(0.0, f64::max)
+            })
+            .fold(0.0, f64::max)
     } else {
         0.0
     };
@@ -152,6 +183,35 @@ mod tests {
                 "{mp}M{pp}P{dp}D: est {est} >= actual {actual}"
             );
         }
+    }
+
+    #[test]
+    fn analytical_bound_is_placement_aware_on_mixed_fleets() {
+        use crate::cluster::Placement;
+        use crate::model::zoo;
+        use crate::partition::partition;
+        // 1M4P1D on a 2x4 mixed fleet (node 0 = A40, node 1 = A10): a
+        // table packing the pipeline onto A10s must estimate strictly
+        // slower than one packing it onto A40s — the tightened bound sees
+        // each candidate's own placement, not the fleet's fastest SKU
+        let model = zoo::bert_large();
+        let s = Strategy::new(1, 4, 1);
+        let sched = crate::schedule::dapple(4, 8);
+        let est_on = |placement: Placement| {
+            let c = crate::cluster::ClusterSpec::mixed_a40_a10(2, 4)
+                .with_placement(placement);
+            let part = partition(&model, &s, &c, 1);
+            analytical_batch_time_us(&model, &part, &sched, &c)
+        };
+        let on_a40 = est_on(Placement::Table(vec![0, 1, 2, 3, 4, 5, 6, 7]));
+        let on_a10 = est_on(Placement::Table(vec![4, 5, 6, 7, 0, 1, 2, 3]));
+        assert!(
+            on_a10 > on_a40 * 1.05,
+            "all-A10 table ({on_a10}) must bound slower than all-A40 ({on_a40})"
+        );
+        // fast-first packs the 4 stages onto the A40 node: same estimate
+        // as the explicit all-A40 table
+        assert_eq!(est_on(Placement::FastFirst), on_a40);
     }
 
     #[test]

@@ -214,6 +214,11 @@ pub enum PlacementPolicy {
     Cluster,
     FastFirst,
     Interleaved,
+    /// A [`Placement::Table`] chosen by the sweep's placement optimizer.
+    /// The concrete table lives in the sweep's table pool
+    /// (`search::CandidateSpec::table` indexes it); this policy only
+    /// names the candidate's provenance in reports.
+    Optimized,
 }
 
 impl PlacementPolicy {
@@ -231,13 +236,15 @@ impl PlacementPolicy {
             PlacementPolicy::Cluster => "cluster",
             PlacementPolicy::FastFirst => "fast_first",
             PlacementPolicy::Interleaved => "interleaved",
+            PlacementPolicy::Optimized => "optimized",
         }
     }
 
-    /// The placement override this policy applies, if any.
+    /// The placement override this policy applies, if any. `Optimized`
+    /// resolves through the sweep's table pool, not through this enum.
     pub fn placement(&self) -> Option<Placement> {
         match self {
-            PlacementPolicy::Cluster => None,
+            PlacementPolicy::Cluster | PlacementPolicy::Optimized => None,
             PlacementPolicy::FastFirst => Some(Placement::FastFirst),
             PlacementPolicy::Interleaved => Some(Placement::Interleaved),
         }
@@ -465,6 +472,56 @@ impl ClusterSpec {
     }
 
     // -- placement --------------------------------------------------------
+
+    /// The placement-equivalence class of a physical device slot:
+    /// `(node, kind)`. Two devices of the same class are interchangeable
+    /// under *any* placement — swapping them changes neither any rank's
+    /// SKU nor any link class (links depend only on node membership) —
+    /// so performance is a function of the rank→class map alone. The
+    /// placement optimizer searches over class assignments, not raw
+    /// device permutations (see DESIGN.md §7).
+    pub fn device_class(&self, device: usize) -> (usize, usize) {
+        (self.node_of(device), self.device_kind(device))
+    }
+
+    /// Device slots grouped by `(node, kind)` class: classes ascending,
+    /// slots ascending within each class. The shape of the placement
+    /// optimizer's search space.
+    pub fn device_classes(&self) -> Vec<((usize, usize), Vec<usize>)> {
+        let mut out: Vec<((usize, usize), Vec<usize>)> = Vec::new();
+        for d in 0..self.total_devices() {
+            let class = self.device_class(d);
+            match out.binary_search_by(|(c, _)| c.cmp(&class)) {
+                Ok(i) => out[i].1.push(d),
+                Err(i) => out.insert(i, (class, vec![d])),
+            }
+        }
+        out
+    }
+
+    /// Canonicalize a rank→device table: keep every rank's `(node, kind)`
+    /// class but re-assign, in rank order, the smallest still-unused
+    /// device slot of that class. The result is performance-equivalent to
+    /// the input (see [`ClusterSpec::device_class`]) and is the unique
+    /// representative of its equivalence class, so two tables canonicalize
+    /// equal iff they induce the same rank→class map.
+    pub fn canonicalize_table(&self, table: &[usize]) -> Vec<usize> {
+        let mut classes = self.device_classes();
+        // reverse each slot list so pop() yields ascending device indices
+        for (_, slots) in &mut classes {
+            slots.reverse();
+        }
+        table
+            .iter()
+            .map(|&d| {
+                let class = self.device_class(d);
+                let i = classes
+                    .binary_search_by(|(c, _)| c.cmp(&class))
+                    .expect("device class enumerated");
+                classes[i].1.pop().expect("class capacity respected")
+            })
+            .collect()
+    }
 
     /// The resolved rank→device table under the current [`Placement`].
     /// O(n log n); hot paths (program building, engine base costs) call
@@ -857,6 +914,44 @@ mod tests {
         twice.extra_kinds.push(DeviceSpec::a10());
         assert!(twice.validate().is_err());
         ClusterSpec::mixed_a40_a10(2, 4).validate().unwrap();
+    }
+
+    #[test]
+    fn device_classes_partition_the_fleet() {
+        let c = ClusterSpec::mixed_a40_a10(2, 4);
+        let classes = c.device_classes();
+        // node 0 = A40 (kind 0), node 1 = A10 (kind 1)
+        assert_eq!(
+            classes,
+            vec![((0, 0), vec![0, 1, 2, 3]), ((1, 1), vec![4, 5, 6, 7])]
+        );
+        // homogeneous: one class per node
+        let h = ClusterSpec::a40_cluster(2, 2);
+        assert_eq!(
+            h.device_classes(),
+            vec![((0, 0), vec![0, 1]), ((1, 0), vec![2, 3])]
+        );
+    }
+
+    #[test]
+    fn canonicalize_table_is_idempotent_and_class_preserving() {
+        let c = ClusterSpec::mixed_a40_a10(2, 4);
+        let table = vec![3, 7, 1, 5, 2, 6, 0, 4];
+        let canon = c.canonicalize_table(&table);
+        // class-preserving: every rank keeps its (node, kind)
+        for (r, (&d, &cd)) in table.iter().zip(&canon).enumerate() {
+            assert_eq!(c.device_class(d), c.device_class(cd), "rank {r}");
+        }
+        // permutation
+        let mut sorted = canon.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+        // idempotent, and device order within a class is ascending by rank
+        assert_eq!(c.canonicalize_table(&canon), canon);
+        assert_eq!(canon, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+        // two tables with the same rank→class map canonicalize equal
+        let other = vec![1, 4, 0, 6, 3, 5, 2, 7];
+        assert_eq!(c.canonicalize_table(&other), canon);
     }
 
     #[test]

@@ -39,19 +39,15 @@ use crate::util::TimeUs;
 
 /// One element of a composed event (the paper's "event list" inside a
 /// composed-event): a compute event or an MP all-reduce, with enough
-/// identity to emit engine-compatible tags.
+/// identity to emit engine-compatible tags. MP all-reduce items carry no
+/// event id of their own — the ring's link class depends on the *group*
+/// (which ranks, through which placement), so the pipeline walk resolves
+/// each lane's all-reduce event exactly per (stage, replica) group (see
+/// DESIGN.md §6: this replaced the representative-group approximation).
 #[derive(Debug, Clone, Copy)]
 pub enum Item {
     Comp { event: EventId, layer: u32 },
-    MpAr { event: EventId, layer: u32, idx: u32 },
-}
-
-impl Item {
-    fn event(&self) -> EventId {
-        match *self {
-            Item::Comp { event, .. } | Item::MpAr { event, .. } => event,
-        }
-    }
+    MpAr { layer: u32, idx: u32 },
 }
 
 /// Model-parallelism modeling: the composed event-list of one stage for
@@ -81,11 +77,9 @@ pub fn stage_items(
             event: db.intern(Event::Comp(comp.for_kind(kind))),
             layer: lw.layer_idx as u32,
         });
-        if let Some(ar) = &lw.mp_allreduce {
-            let ev = db.intern(Event::Comm(ar.clone()));
+        if lw.mp_allreduce.is_some() {
             for k in 0..ar_count {
                 items.push(Item::MpAr {
-                    event: ev,
                     layer: lw.layer_idx as u32,
                     idx: k as u32,
                 });
@@ -161,6 +155,51 @@ impl<'a> DistSim<'a> {
         let fwd_items = items_for(db, Phase::Fwd);
         let bwd_items = items_for(db, Phase::Bwd);
 
+        // MP all-reduce events, exact per (stage, replica) group: each
+        // lane's ring resolves its own link class through the placement
+        // map. Under the named placements every lane's group is
+        // translation-equivalent (one class covers the stage), but a
+        // hand-crafted Placement::Table can put sibling lanes on
+        // different classes — the engine prices each group's real
+        // devices, so the model must too (DESIGN.md §6).
+        let mp_ar_ev: Vec<Vec<Option<EventId>>> = (0..pp)
+            .map(|s| {
+                (0..dpn)
+                    .map(|d| -> Option<EventId> {
+                        let tmpl = self.part.stages[s]
+                            .layers
+                            .iter()
+                            .find_map(|lw| lw.mp_allreduce.as_ref())?;
+                        // one template covers the stage (the partitioner
+                        // gives every layer the same payload) — enforced,
+                        // mirroring engine::build_programs
+                        debug_assert!(
+                            self.part.stages[s]
+                                .layers
+                                .iter()
+                                .filter_map(|lw| lw.mp_allreduce.as_ref())
+                                .all(|a| a == tmpl),
+                            "per-layer MP all-reduce templates diverged within a stage"
+                        );
+                        let CommEvent::AllReduce { bytes, group, .. } = tmpl else {
+                            return None;
+                        };
+                        let members: Vec<usize> = (0..strategy.mp)
+                            .map(|m| {
+                                rank_dev[strategy
+                                    .rank_of(RankCoords { mp: m, pp: s, dp: d })]
+                            })
+                            .collect();
+                        Some(db.intern(Event::Comm(CommEvent::AllReduce {
+                            bytes: *bytes,
+                            group: *group,
+                            link: self.cluster.group_link_class(&members),
+                        })))
+                    })
+                    .collect()
+            })
+            .collect();
+
         // inter-stage p2p events (boundary s -> s+1), per DP replica: each
         // replica's mp-0 lane resolves its own link class through the
         // placement map — under a scattered placement replica k's hop can
@@ -214,19 +253,29 @@ impl<'a> DistSim<'a> {
                     self.cluster.kind_spec(kind_of_rank(r)).launch_overhead_us
                 })
                 .collect();
-            // composed item duration: max over the lane's kinds — the MP
-            // all-reduce barriers make the slowest member gate each step
+            // composed item duration: compute is the max over the lane's
+            // kinds — the MP all-reduce barriers make the slowest member
+            // gate each step — and all-reduces price this lane's own
+            // group (exact link class through the placement map)
             let lane_dur = |db: &EventDb, items: &[Vec<Item>], s: usize, i: usize| {
-                lane_kinds[s]
-                    .iter()
-                    .map(|k| {
-                        let slot = stage_kinds[s]
-                            .iter()
-                            .position(|sk| sk == k)
-                            .expect("lane kind enumerated per stage");
-                        db.elapsed(items[slot][i].event())
-                    })
-                    .fold(f64::NEG_INFINITY, f64::max)
+                match items[0][i] {
+                    Item::MpAr { .. } => db.elapsed(
+                        mp_ar_ev[s][d].expect("mp > 1 lane composes an all-reduce"),
+                    ),
+                    Item::Comp { .. } => lane_kinds[s]
+                        .iter()
+                        .map(|k| {
+                            let slot = stage_kinds[s]
+                                .iter()
+                                .position(|sk| sk == k)
+                                .expect("lane kind enumerated per stage");
+                            let Item::Comp { event, .. } = items[slot][i] else {
+                                unreachable!("kind slots share one item layout")
+                            };
+                            db.elapsed(event)
+                        })
+                        .fold(f64::NEG_INFINITY, f64::max),
+                }
             };
 
             let mut queue_pos = vec![0usize; pp];
@@ -334,27 +383,32 @@ impl<'a> DistSim<'a> {
         }
 
         // -- data parallelism modeling: expansion + gradient all-reduce --
-        // link class from the mp-0 lane's DP group: under the named
-        // placements every mp lane's group is translation-equivalent, so
-        // one event covers the stage; only a hand-crafted Table placement
-        // can give sibling lanes a different class (approximated here,
-        // priced exactly by the engine)
-        let grad_ar: Vec<Option<EventId>> = (0..pp)
+        // one event per (stage, mp lane), each lane's DP group resolving
+        // its *own* link class through the placement map. Under the named
+        // placements sibling lanes are translation-equivalent (the events
+        // intern to one id); a hand-crafted Placement::Table can give
+        // lanes different classes, and each is priced exactly — matching
+        // the engine, which always prices each group's real devices.
+        let grad_ar: Vec<Vec<Option<EventId>>> = (0..pp)
             .map(|s| {
-                if strategy.dp > 1 {
-                    let group = strategy.dp_group(
-                        strategy.rank_of(RankCoords { mp: 0, pp: s, dp: 0 }),
-                    );
-                    let group_devs: Vec<usize> =
-                        group.iter().map(|&r| rank_dev[r]).collect();
-                    Some(db.intern(Event::Comm(CommEvent::AllReduce {
-                        bytes: self.part.grad_bytes_per_rank[s],
-                        group: strategy.dp,
-                        link: self.cluster.group_link_class(&group_devs),
-                    })))
-                } else {
-                    None
-                }
+                (0..strategy.mp)
+                    .map(|m| {
+                        if strategy.dp > 1 {
+                            let group = strategy.dp_group(
+                                strategy.rank_of(RankCoords { mp: m, pp: s, dp: 0 }),
+                            );
+                            let group_devs: Vec<usize> =
+                                group.iter().map(|&r| rank_dev[r]).collect();
+                            Some(db.intern(Event::Comm(CommEvent::AllReduce {
+                                bytes: self.part.grad_bytes_per_rank[s],
+                                group: strategy.dp,
+                                link: self.cluster.group_link_class(&group_devs),
+                            })))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect()
             })
             .collect();
         // the gradient all-reduce is a barrier across replicas: it starts
@@ -371,10 +425,14 @@ impl<'a> DistSim<'a> {
             .iter()
             .map(|per_d| per_d.iter().map(Vec::len).sum::<usize>())
             .sum();
-        let grad_lanes = grad_ar.iter().filter(|g| g.is_some()).count();
+        let grad_spans = grad_ar
+            .iter()
+            .map(|per_m| per_m.iter().filter(|g| g.is_some()).count())
+            .sum::<usize>()
+            * dpn;
         let mut timeline = Timeline::with_capacity(
             strategy.world_size(),
-            strategy.mp * (per_lane + grad_lanes * dpn),
+            strategy.mp * per_lane + grad_spans,
         );
         for dp in 0..dpn {
             for s in 0..pp {
@@ -388,7 +446,7 @@ impl<'a> DistSim<'a> {
                             tag,
                         });
                     }
-                    if let Some(ev) = grad_ar[s] {
+                    if let Some(ev) = grad_ar[s][mp] {
                         let dur = db.elapsed(ev);
                         timeline.push(Span {
                             device,

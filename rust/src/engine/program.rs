@@ -97,11 +97,39 @@ pub fn build_programs(
         let kind = cluster.kind_name(cluster.device_kind(rank_dev[rank]));
         let mut instrs = Vec::new();
 
-        // interned ids used repeatedly
-        let mp_group_id = if strategy.mp > 1 {
-            Some(prog.intern_group(strategy.mp_group(rank)))
+        // interned ids used repeatedly. The MP all-reduce event carries
+        // this rank's *own* group's link class, resolved through the
+        // placement map — under a hand-crafted Placement::Table sibling
+        // lanes can straddle nodes differently, and each must profile the
+        // ring at the class it actually runs on (DESIGN.md §6).
+        let (mp_group_id, mp_ar_event) = if strategy.mp > 1 {
+            let group = strategy.mp_group(rank);
+            let group_devs: Vec<usize> = group.iter().map(|&r| rank_dev[r]).collect();
+            let mp_link = cluster.group_link_class(&group_devs);
+            let ar = work.layers.iter().find_map(|lw| lw.mp_allreduce.as_ref());
+            // one event template covers the stage: the partitioner gives
+            // every layer the same all-reduce payload (stage-wide
+            // act_bytes). Enforce that invariant rather than assume it.
+            debug_assert!(
+                work.layers
+                    .iter()
+                    .filter_map(|lw| lw.mp_allreduce.as_ref())
+                    .all(|a| Some(a) == ar),
+                "per-layer MP all-reduce templates diverged within a stage"
+            );
+            let ev = ar.map(|ar| match ar {
+                CommEvent::AllReduce { bytes, group, .. } => {
+                    db.intern(Event::Comm(CommEvent::AllReduce {
+                        bytes: *bytes,
+                        group: *group,
+                        link: mp_link,
+                    }))
+                }
+                other => db.intern(Event::Comm(other.clone())),
+            });
+            (Some(prog.intern_group(group)), ev)
         } else {
-            None
+            (None, None)
         };
 
         for task in &sched.stage_tasks[stage] {
@@ -133,8 +161,7 @@ pub fn build_programs(
                             event: db.intern(Event::Comp(lw.fwd.for_kind(kind))),
                             tag: Tag::comp(stage, mb, phase, lw.layer_idx),
                         });
-                        if let (Some(ar), Some(gid)) = (&lw.mp_allreduce, mp_group_id) {
-                            let ev = db.intern(Event::Comm(ar.clone()));
+                        if let (Some(gid), Some(ev)) = (mp_group_id, mp_ar_event) {
                             for k in 0..lw.ar_count_fwd {
                                 instrs.push(Instr::AllReduce {
                                     group: gid,
@@ -197,8 +224,7 @@ pub fn build_programs(
                             event: db.intern(Event::Comp(lw.bwd.for_kind(kind))),
                             tag: Tag::comp(stage, mb, phase, lw.layer_idx),
                         });
-                        if let (Some(ar), Some(gid)) = (&lw.mp_allreduce, mp_group_id) {
-                            let ev = db.intern(Event::Comm(ar.clone()));
+                        if let (Some(gid), Some(ev)) = (mp_group_id, mp_ar_event) {
                             for k in 0..lw.ar_count_bwd {
                                 instrs.push(Instr::AllReduce {
                                     group: gid,

@@ -6,7 +6,9 @@
 //! distsim simulate  --model bert-large --strategy 2M2P2D [--schedule dapple]
 //!                   [--micro-batches 4] [--micro-batch-size 4] [--trace out.json]
 //! distsim search    [--model bert-exlarge] [--global-batch 16] [--cache-file F]
+//!                   [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
 //! distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
+//!                   [--save-interval SECS]
 //! distsim ask       [--model M ...] | --file req.ndjson  [--connect HOST:PORT]
 //! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
 //! distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
@@ -109,10 +111,17 @@ USAGE:
                     [--gpus-per-node 4] [--device a10|a40|a100|a40-a10]
                     [--placement linear|fast-first|interleaved] [--threads N]
                     [--wide] [--mbs-axis] [--schedule-axis] [--placement-axis]
-                    [--prune] [--no-cache] [--max-candidates N] [--cache-file F]
+                    [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
+                    [--no-cache] [--max-candidates N] [--cache-file F]
+                    # --placement-opt searches rank→device tables beyond
+                    # the named placements; --prune-epochs N re-prunes
+                    # against the incumbent every 1/N of the sweep
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
+                    [--save-interval SECS]
                     # long-lived what-if daemon: one NDJSON request per
-                    # line in, one deterministic response line out
+                    # line in, one deterministic response line out;
+                    # --save-interval additionally snapshots caches
+                    # periodically (atomic tmp-file + rename)
   distsim ask       [--model M --global-batch B ...] | --file req.ndjson
                     [--connect HOST:PORT] [--timing] [--workers W]
                     [--cache-dir DIR]
@@ -216,6 +225,9 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         micro_batch_axis: flags.contains_key("mbs-axis"),
         schedule_axis: flags.contains_key("schedule-axis"),
         placement_axis: flags.contains_key("placement-axis"),
+        placement_opt: flags.contains_key("placement-opt"),
+        beam: usize_flag(flags, "beam", 4),
+        prune_epochs: usize_flag(flags, "prune-epochs", 1),
         max_candidates: usize_flag(flags, "max-candidates", 0),
         prune: flags.contains_key("prune"),
         use_cache: !flags.contains_key("no-cache"),
@@ -322,6 +334,18 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.threads_used,
         report.timing.total_seconds
     );
+    // pruning accounting, mirroring the Table-3 cache block: what the
+    // staged pipeline generated, discarded by bound, re-discarded at
+    // epoch boundaries, and what that avoided in profiling currency
+    println!(
+        "pruning: {} generated, {} bound-pruned, {} epoch-repruned, {} evaluated; \
+         {:.2} gpu-s avoided",
+        report.pruning.generated,
+        report.pruning.bound_pruned,
+        report.pruning.epoch_repruned,
+        report.pruning.evaluated,
+        report.pruning.gpu_seconds_avoided
+    );
     println!(
         "profiling: {:.2} gpu-s over {} unique events; cache {} hits / {} misses ({:.0}% hit rate)",
         report.profile.gpu_seconds,
@@ -336,11 +360,20 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             a.winning_schedule, a.schedule_speedup, a.strategy_speedup
         );
     }
-    if let Some(a) = report.placement_attribution().filter(|_| cfg.placement_axis) {
+    if let Some(a) = report
+        .placement_attribution()
+        .filter(|_| cfg.placement_axis || cfg.placement_opt)
+    {
         println!(
             "placement axis: winner deploys {} ({:.2}x over best baseline placement); \
              strategy alone spans {:.2}x",
             a.winning_placement, a.placement_speedup, a.strategy_speedup
+        );
+    }
+    if let Some(t) = report.winning_table() {
+        println!(
+            "placement optimizer: winning rank→device table {:?}",
+            t
         );
     }
     if let Some(path) = cache_file.as_deref().filter(|_| save_cache_file) {
@@ -367,6 +400,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let opts = distsim::service::ServeOpts {
         workers: usize_flag(flags, "workers", 0),
         cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
+        save_interval: flags
+            .get("save-interval")
+            .and_then(|v| v.parse::<u64>().ok())
+            .filter(|&s| s > 0)
+            .map(std::time::Duration::from_secs),
     };
     if flags.contains_key("stdio") {
         let stdin = std::io::stdin();
@@ -428,10 +466,18 @@ fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ("mbs-axis", "micro_batch_axis"),
             ("schedule-axis", "schedule_axis"),
             ("placement-axis", "placement_axis"),
+            ("placement-opt", "placement_opt"),
             ("prune", "prune"),
         ] {
             if flags.contains_key(name) {
                 sweep.push((key, Json::Bool(true)));
+            }
+        }
+        // clamp to >= 1 like `distsim search` does, so the two entry
+        // points agree on the same inputs (the service rejects 0)
+        for (name, key) in [("prune-epochs", "prune_epochs"), ("beam", "beam")] {
+            if let Some(v) = flags.get(name).and_then(|v| v.parse::<usize>().ok()) {
+                sweep.push((key, Json::num(v.max(1) as f64)));
             }
         }
         distsim::service::protocol::build_request_line(
@@ -468,6 +514,7 @@ fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let opts = distsim::service::ServeOpts {
         workers: usize_flag(flags, "workers", 0),
         cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
+        ..Default::default()
     };
     distsim::service::serve_ndjson(std::io::Cursor::new(request), std::io::stdout(), &opts);
     Ok(())

@@ -5,7 +5,11 @@
 //! every candidate, evaluates candidates on a deterministic work queue
 //! across `std::thread::scope` workers, optionally widens the strategy
 //! space beyond the paper's power-of-two grid, and can prune candidates
-//! that an analytical lower bound proves worse than an incumbent.
+//! that an analytical lower bound proves worse than an incumbent. Since
+//! ISSUE 5 the sweep runs as a **staged pipeline**
+//! ([`super::pipeline`]): candidate sources (including the placement
+//! optimizer's `Placement::Table` generator) → epoch-scheduled adaptive
+//! pruner → this evaluator/cache layer.
 //!
 //! On heterogeneous clusters the sweep gains a **placement axis**
 //! ([`SweepConfig::placement_axis`]): every point is additionally
@@ -31,7 +35,7 @@
 use std::borrow::Cow;
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use crate::baseline::analytical::analytical_batch_time_us;
@@ -46,7 +50,7 @@ use crate::schedule::SchedKind;
 use crate::strategy::Strategy;
 
 use super::cache::{stats_against, CacheStats, EventUse, LookupLog, ProfileCache};
-use super::{grid, widened_grid};
+use super::pipeline::{self, CandidateSpace, EpochPlan, PruneStats, NO_TABLE};
 
 /// Sweep parameters. `Default` mirrors the seed's protocol (power-of-two
 /// grid, DistSim profiling seed 7777, cache on, no pruning).
@@ -77,6 +81,21 @@ pub struct SweepConfig {
     /// A no-op on homogeneous clusters, where every placement prices
     /// identically.
     pub placement_axis: bool,
+    /// Run the placement *optimizer*: per strategy, search
+    /// `Placement::Table` permutations (canonicalized and
+    /// symmetry-reduced; exhaustive on small fleets, bound-guided beam
+    /// beyond) and add the resulting table candidates to the space. A
+    /// no-op on homogeneous clusters. See `search::pipeline`.
+    pub placement_opt: bool,
+    /// Beam width of the placement optimizer (max tables emitted per
+    /// strategy when the symmetry-reduced space is too large to
+    /// enumerate). Also the beam kept per rank while building tables.
+    pub beam: usize,
+    /// Adaptive re-pruning epochs: evaluation proceeds bound-descending,
+    /// and after each of these fixed candidate-count epochs the incumbent
+    /// re-prunes the remainder. 1 (the default) reproduces the historical
+    /// single up-front incumbent. Only meaningful with `prune`.
+    pub prune_epochs: usize,
     /// Evaluate at most this many sweep points (0 = unlimited). Truncation
     /// happens on the deterministic spec order, so a budgeted sweep is a
     /// prefix of the unbudgeted one.
@@ -106,6 +125,9 @@ impl Default for SweepConfig {
             micro_batch_axis: false,
             schedule_axis: false,
             placement_axis: false,
+            placement_opt: false,
+            beam: 4,
+            prune_epochs: 1,
             max_candidates: 0,
             prune: false,
             prune_margin: 0.10,
@@ -129,6 +151,10 @@ pub struct CandidateSpec {
     /// Rank→device placement this point deploys under (the cluster's own
     /// placement unless the placement axis enumerates overrides).
     pub placement: PlacementPolicy,
+    /// Index into the sweep's table pool ([`SweepReport::tables`]) when
+    /// `placement` is [`PlacementPolicy::Optimized`];
+    /// [`pipeline::NO_TABLE`] otherwise.
+    pub table: u32,
 }
 
 impl CandidateSpec {
@@ -143,6 +169,7 @@ impl CandidateSpec {
                 micro_batches: 0,
                 schedule: SchedKind::Dapple,
                 placement: PlacementPolicy::Cluster,
+                table: NO_TABLE,
             };
         }
         let per_replica = global_batch / strategy.dp;
@@ -157,6 +184,7 @@ impl CandidateSpec {
             micro_batches: m,
             schedule: SchedKind::Dapple,
             placement: PlacementPolicy::Cluster,
+            table: NO_TABLE,
         }
     }
 }
@@ -171,6 +199,9 @@ pub struct SweepCandidate {
     pub schedule: SchedKind,
     /// Placement the point was simulated under.
     pub placement: PlacementPolicy,
+    /// Index into [`SweepReport::tables`] for optimizer candidates
+    /// ([`pipeline::NO_TABLE`] otherwise).
+    pub table: u32,
     /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
     pub throughput: f64,
     /// Deployable: valid strategy and the shard fits device memory.
@@ -225,6 +256,12 @@ pub struct SweepReport {
     /// material a what-if service re-accounts against *its* admission
     /// order (see `service`). Empty when the cache is off.
     pub event_uses: Vec<EventUse>,
+    /// The placement optimizer's table pool; `SweepCandidate::table`
+    /// indexes it. Empty unless [`SweepConfig::placement_opt`] ran.
+    pub tables: Vec<Vec<usize>>,
+    /// Pruning-layer accounting (the CLI's pruning block, the service's
+    /// `pruning` response object).
+    pub pruning: PruneStats,
     pub timing: SweepTiming,
     pub threads_used: usize,
 }
@@ -352,6 +389,16 @@ impl SweepReport {
         self.candidates.iter().filter(|c| c.pruned).count()
     }
 
+    /// The winner's rank→device table, when the placement optimizer won.
+    pub fn winning_table(&self) -> Option<&[usize]> {
+        let best = self.best()?;
+        if best.placement == PlacementPolicy::Optimized {
+            self.tables.get(best.table as usize).map(Vec::as_slice)
+        } else {
+            None
+        }
+    }
+
     pub fn evaluated_count(&self) -> usize {
         self.candidates.iter().filter(|c| c.evaluated()).count()
     }
@@ -382,6 +429,9 @@ pub struct SearchEngine<'a> {
     cfg: SweepConfig,
     cache: Arc<ProfileCache>,
     prior: HashSet<String>,
+    /// The candidate space, built once per engine (the optimizer's table
+    /// enumeration and bound-ranking are not free — `space()` memoizes).
+    space: OnceLock<CandidateSpace>,
 }
 
 impl<'a> SearchEngine<'a> {
@@ -423,6 +473,7 @@ impl<'a> SearchEngine<'a> {
             cfg,
             cache,
             prior: HashSet::new(),
+            space: OnceLock::new(),
         }
     }
 
@@ -433,10 +484,19 @@ impl<'a> SearchEngine<'a> {
 
     /// The cluster a sweep point deploys on: the engine's cluster, with
     /// the candidate's placement override applied when the placement axis
-    /// set one. Profiled costs are placement-independent, so every
-    /// placement shares the engine's cache (see
-    /// [`super::cache::fingerprint`]).
-    fn cluster_for(&self, spec: &CandidateSpec) -> Cow<'a, ClusterSpec> {
+    /// set one, or the optimizer's table resolved from `tables`. Profiled
+    /// costs are placement-independent, so every placement shares the
+    /// engine's cache (see [`super::cache::fingerprint`]).
+    fn cluster_for(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> Cow<'a, ClusterSpec> {
+        if spec.table != NO_TABLE {
+            let t = tables
+                .get(spec.table as usize)
+                .expect("candidate references its sweep's table pool");
+            return Cow::Owned(
+                self.cluster
+                    .with_placement(crate::cluster::Placement::Table(t.clone())),
+            );
+        }
         match spec.placement.placement() {
             None => Cow::Borrowed(self.cluster),
             Some(p) => Cow::Owned(self.cluster.with_placement(p)),
@@ -460,92 +520,20 @@ impl<'a> SearchEngine<'a> {
         &self.cfg
     }
 
-    /// The candidate space, in deterministic order: strategies in
-    /// enumeration order; for each, the Dapple points (base micro-batching
-    /// first, then extra micro-batch sizes ascending when that axis is
-    /// enabled), then — when the schedule axis is enabled and the strategy
-    /// pipelines — the same micro-batch grid under GPipe and finally the
-    /// single no-micro-batching Naive point. A `max_candidates` budget
-    /// truncates this order, so a budgeted sweep is a prefix of the full
-    /// one.
+    /// The full candidate space (specs + optimizer table pool), built by
+    /// the staged source pipeline — see [`pipeline::build_space`] for the
+    /// deterministic order. A `max_candidates` budget truncates it, so a
+    /// budgeted sweep is a prefix of the full one. Built once per engine
+    /// and memoized (the config is fixed at construction).
+    pub fn space(&self) -> &CandidateSpace {
+        self.space
+            .get_or_init(|| pipeline::build_space(self.model, self.cluster, &self.cfg))
+    }
+
+    /// The candidate specs alone (legacy accessor; optimizer candidates
+    /// reference [`SearchEngine::space`]'s table pool).
     pub fn specs(&self) -> Vec<CandidateSpec> {
-        let devices = self.cluster.total_devices();
-        let strategies = if self.cfg.widened {
-            widened_grid(devices)
-        } else {
-            grid(devices)
-        };
-        let mut specs = Vec::new();
-        for s in strategies {
-            let base = CandidateSpec::default_for(s, self.cfg.global_batch);
-            specs.push(base);
-            if s.pp <= 1 || base.micro_batch_size == 0 {
-                continue;
-            }
-            let per_replica = self.cfg.global_batch / s.dp;
-            let push_mb_grid = |specs: &mut Vec<CandidateSpec>, schedule: SchedKind| {
-                if !self.cfg.micro_batch_axis {
-                    return;
-                }
-                for mbs in 2..=per_replica {
-                    // with the schedule axis on, the single-micro-batch
-                    // point of EVERY grid is the Naive schedule (one
-                    // micro-batch degenerates them all to the same
-                    // sequential F/B); keep only the Naive-labeled copy
-                    if per_replica % mbs == 0
-                        && !(self.cfg.schedule_axis && mbs == per_replica)
-                    {
-                        specs.push(CandidateSpec {
-                            strategy: s,
-                            micro_batch_size: mbs,
-                            micro_batches: per_replica / mbs,
-                            schedule,
-                            placement: PlacementPolicy::Cluster,
-                        });
-                    }
-                }
-            };
-            push_mb_grid(&mut specs, SchedKind::Dapple);
-            // with one micro-batch per replica every schedule degenerates
-            // to the same sequential F/B — the Dapple base already covers
-            // it, so the schedule axis only applies when per_replica > 1
-            if self.cfg.schedule_axis && per_replica > 1 {
-                specs.push(CandidateSpec {
-                    strategy: s,
-                    micro_batch_size: 1,
-                    micro_batches: per_replica,
-                    schedule: SchedKind::GPipe,
-                    placement: PlacementPolicy::Cluster,
-                });
-                push_mb_grid(&mut specs, SchedKind::GPipe);
-                // naive: the whole replica batch as one micro-batch
-                specs.push(CandidateSpec {
-                    strategy: s,
-                    micro_batch_size: per_replica,
-                    micro_batches: 1,
-                    schedule: SchedKind::Naive,
-                    placement: PlacementPolicy::Cluster,
-                });
-            }
-        }
-        // placement axis: each point replicated across the deterministic
-        // placement set, baseline first (spec-major order keeps a budgeted
-        // sweep a prefix of the unbudgeted one). Homogeneous clusters skip
-        // it — every placement prices identically there.
-        if self.cfg.placement_axis && self.cluster.is_heterogeneous() {
-            specs = specs
-                .into_iter()
-                .flat_map(|base| {
-                    PlacementPolicy::AXIS
-                        .into_iter()
-                        .map(move |placement| CandidateSpec { placement, ..base })
-                })
-                .collect();
-        }
-        if self.cfg.max_candidates > 0 {
-            specs.truncate(self.cfg.max_candidates);
-        }
-        specs
+        self.space().specs.clone()
     }
 
     fn valid(&self, spec: &CandidateSpec) -> bool {
@@ -561,15 +549,30 @@ impl<'a> SearchEngine<'a> {
     /// Analytical throughput upper bound for the pruning pass (it/s).
     ///
     /// `baseline::analytical` prices compute at peak FLOPs with ideal
-    /// communication and no overheads, so its batch time lower-bounds the
-    /// simulated one and `1e6 / analytical_us` upper-bounds the
-    /// simulated throughput. 0.0 when the candidate is invalid or the
-    /// shard does not fit (those are evaluated anyway — they are cheap).
+    /// communication and no overheads — **placement-aware** since ISSUE 5
+    /// (each stage group priced at its own slowest member's SKU through
+    /// the candidate's placement) — so its batch time lower-bounds the
+    /// simulated one and `1e6 / analytical_us` upper-bounds the simulated
+    /// throughput, per candidate placement. 0.0 when the candidate is
+    /// invalid or the shard does not fit (those are evaluated anyway —
+    /// they are cheap).
+    ///
+    /// For an optimizer table candidate (as returned by
+    /// [`SearchEngine::specs`]) the table resolves through this engine's
+    /// own [`SearchEngine::space`]; `sweep` passes the pool directly.
     pub fn bound_throughput(&self, spec: &CandidateSpec) -> f64 {
+        if spec.table == NO_TABLE {
+            self.bound_with(spec, &[])
+        } else {
+            self.bound_with(spec, &self.space().tables)
+        }
+    }
+
+    fn bound_with(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> f64 {
         if !self.valid(spec) {
             return 0.0;
         }
-        let cluster = self.cluster_for(spec);
+        let cluster = self.cluster_for(spec, tables);
         let part = partition(
             self.model,
             &spec.strategy,
@@ -592,6 +595,7 @@ impl<'a> SearchEngine<'a> {
     fn evaluate(
         &self,
         spec: &CandidateSpec,
+        tables: &[Vec<usize>],
         log: Option<&LookupLog>,
     ) -> (SweepCandidate, ProfileReport) {
         let mut cand = SweepCandidate {
@@ -600,6 +604,7 @@ impl<'a> SearchEngine<'a> {
             micro_batches: spec.micro_batches,
             schedule: spec.schedule,
             placement: spec.placement,
+            table: spec.table,
             throughput: 0.0,
             reachable: false,
             pruned: false,
@@ -612,7 +617,7 @@ impl<'a> SearchEngine<'a> {
             cand.micro_batches = 0;
             return (cand, ProfileReport::default());
         }
-        let cluster = self.cluster_for(spec);
+        let cluster = self.cluster_for(spec, tables);
         let part = partition(
             self.model,
             &spec.strategy,
@@ -665,105 +670,129 @@ impl<'a> SearchEngine<'a> {
         n.max(1).min(work.max(1))
     }
 
-    /// Run the sweep.
+    /// Run the sweep through the staged pipeline.
     ///
-    /// Phases: (1) build the candidate space; (2) if pruning, compute every
-    /// candidate's analytical bound, fully evaluate the analytically-best
-    /// candidate to fix a deterministic incumbent, and mark candidates
-    /// whose bound (with margin) cannot beat it; (3) evaluate the rest on
-    /// a shared atomic work queue; (4) assemble results by index.
+    /// Phases: (1) the candidate sources build the index-addressed space
+    /// (strategies × schedules × micro-batchings × placements, plus the
+    /// placement optimizer's table candidates); (2) if pruning, every
+    /// candidate gets its placement-aware analytical bound, and the
+    /// [`EpochPlan`] schedules evaluation bound-descending — the first
+    /// epoch evaluates only the analytically-best candidate (the
+    /// deterministic incumbent seed), and each later fixed-size epoch is
+    /// evaluated on a shared atomic work queue, with the improved
+    /// incumbent re-pruning the remainder at each epoch boundary; (3)
+    /// results land by candidate index, so the report is bit-identical
+    /// for any worker count.
     pub fn sweep(&self) -> SweepReport {
         let t0 = Instant::now();
-        let specs = self.specs();
+        let space = self.space();
+        let specs = &space.specs;
+        let tables = &space.tables;
         let n = specs.len();
         let mut candidates: Vec<Option<SweepCandidate>> = vec![None; n];
         let mut per_ms = vec![0.0f64; n];
         let mut reports: Vec<ProfileReport> = vec![ProfileReport::default(); n];
         let mut bounds = vec![0.0f64; n];
-        let mut skip = vec![false; n];
+        let mut pruned = vec![false; n];
         let log = LookupLog::default();
+        let mut stats = PruneStats {
+            generated: n,
+            ..PruneStats::default()
+        };
 
-        if self.cfg.prune && n > 0 {
+        if self.cfg.prune {
             for (i, spec) in specs.iter().enumerate() {
-                bounds[i] = self.bound_throughput(spec);
+                // optimizer candidates were already bounded during table
+                // ranking — identical inputs, identical number
+                bounds[i] = match space.seed_bounds[i] {
+                    Some(b) => b,
+                    None => self.bound_with(spec, tables),
+                };
             }
-            // deterministic incumbent: the analytically-best candidate
-            // (ties break toward the lower index)
-            let incumbent = (0..n)
-                .max_by(|&a, &b| bounds[a].total_cmp(&bounds[b]).then(b.cmp(&a)))
-                .filter(|&i| bounds[i] > 0.0);
-            if let Some(i) = incumbent {
-                let ti = Instant::now();
-                let (mut cand, rep) = self.evaluate(&specs[i], Some(&log));
-                per_ms[i] = ti.elapsed().as_secs_f64() * 1e3;
-                cand.bound_throughput = bounds[i];
-                let incumbent_tp = cand.throughput;
-                candidates[i] = Some(cand);
-                reports[i] = rep;
-                skip[i] = true; // already evaluated
-                if incumbent_tp > 0.0 {
-                    for j in 0..n {
-                        if j != i
-                            && bounds[j] > 0.0
-                            && bounds[j] * (1.0 + self.cfg.prune_margin) < incumbent_tp
-                        {
-                            candidates[j] = Some(SweepCandidate {
-                                strategy: specs[j].strategy,
-                                micro_batch_size: specs[j].micro_batch_size,
-                                micro_batches: specs[j].micro_batches,
-                                schedule: specs[j].schedule,
-                                placement: specs[j].placement,
-                                throughput: 0.0,
-                                reachable: true,
-                                pruned: true,
-                                bound_throughput: bounds[j],
-                            });
-                            skip[j] = true;
+        }
+        let mut plan = EpochPlan::new(&bounds, self.cfg.prune, self.cfg.prune_epochs);
+        let threads = self.resolve_threads(n);
+        let mut incumbent = 0.0f64;
+        let mut epoch = 0usize;
+        while !plan.exhausted() {
+            // re-prune the not-yet-scheduled remainder against the
+            // incumbent (epoch 1 = the historical single up-front pass;
+            // later epochs are the adaptive re-pruning)
+            if self.cfg.prune && incumbent > 0.0 {
+                for &i in plan.remaining() {
+                    if !pruned[i]
+                        && bounds[i] > 0.0
+                        && bounds[i] * (1.0 + self.cfg.prune_margin) < incumbent
+                    {
+                        pruned[i] = true;
+                        candidates[i] = Some(SweepCandidate {
+                            strategy: specs[i].strategy,
+                            micro_batch_size: specs[i].micro_batch_size,
+                            micro_batches: specs[i].micro_batches,
+                            schedule: specs[i].schedule,
+                            placement: specs[i].placement,
+                            table: specs[i].table,
+                            throughput: 0.0,
+                            reachable: true,
+                            pruned: true,
+                            bound_throughput: bounds[i],
+                        });
+                        if epoch <= 1 {
+                            stats.bound_pruned += 1;
+                        } else {
+                            stats.epoch_repruned += 1;
                         }
                     }
                 }
             }
+            let chunk = plan.next_epoch(&pruned);
+            epoch += 1;
+            if chunk.is_empty() {
+                continue;
+            }
+            let chunk_threads = threads.min(chunk.len()).max(1);
+            let queue = AtomicUsize::new(0);
+            let slots: Vec<Mutex<Option<(SweepCandidate, ProfileReport, f64)>>> =
+                chunk.iter().map(|_| Mutex::new(None)).collect();
+            {
+                let chunk = &chunk;
+                let queue = &queue;
+                let slots = &slots;
+                let bounds = &bounds;
+                let log = &log;
+                std::thread::scope(|scope| {
+                    for _ in 0..chunk_threads {
+                        scope.spawn(move || loop {
+                            let k = queue.fetch_add(1, Ordering::Relaxed);
+                            if k >= chunk.len() {
+                                break;
+                            }
+                            let i = chunk[k];
+                            let ti = Instant::now();
+                            let (mut cand, rep) =
+                                self.evaluate(&specs[i], tables, Some(log));
+                            cand.bound_throughput = bounds[i];
+                            let ms = ti.elapsed().as_secs_f64() * 1e3;
+                            *slots[k].lock().unwrap() = Some((cand, rep, ms));
+                        });
+                    }
+                });
+            }
+            // land results by index; fold the incumbent in chunk order (a
+            // max — independent of the workers' interleaving)
+            for (k, &i) in chunk.iter().enumerate() {
+                let (cand, rep, ms) = slots[k]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("worker left a slot empty");
+                incumbent = incumbent.max(cand.throughput);
+                candidates[i] = Some(cand);
+                reports[i] = rep;
+                per_ms[i] = ms;
+            }
         }
-
-        let worklist: Vec<usize> = (0..n).filter(|&i| !skip[i]).collect();
-        let threads = self.resolve_threads(worklist.len());
-        let queue = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<(SweepCandidate, ProfileReport, f64)>>> =
-            worklist.iter().map(|_| Mutex::new(None)).collect();
-        {
-            let specs = &specs;
-            let worklist = &worklist;
-            let queue = &queue;
-            let slots = &slots;
-            let bounds = &bounds;
-            let log = &log;
-            std::thread::scope(|scope| {
-                for _ in 0..threads {
-                    scope.spawn(move || loop {
-                        let k = queue.fetch_add(1, Ordering::Relaxed);
-                        if k >= worklist.len() {
-                            break;
-                        }
-                        let i = worklist[k];
-                        let ti = Instant::now();
-                        let (mut cand, rep) = self.evaluate(&specs[i], Some(log));
-                        cand.bound_throughput = bounds[i];
-                        let ms = ti.elapsed().as_secs_f64() * 1e3;
-                        *slots[k].lock().unwrap() = Some((cand, rep, ms));
-                    });
-                }
-            });
-        }
-        for (k, &i) in worklist.iter().enumerate() {
-            let (cand, rep, ms) = slots[k]
-                .lock()
-                .unwrap()
-                .take()
-                .expect("worker left a slot empty");
-            candidates[i] = Some(cand);
-            reports[i] = rep;
-            per_ms[i] = ms;
-        }
+        stats.evaluated = n - stats.bound_pruned - stats.epoch_repruned;
 
         // aggregate profiling cost deterministically: the sweep's own
         // lookup log in sorted-key order, accounted against the prior —
@@ -771,6 +800,8 @@ impl<'a> SearchEngine<'a> {
         // interleaving and of other sweeps sharing the cache
         let event_uses = log.into_uses(self.cfg.profile_iters);
         let cache_stats = stats_against(&event_uses, &self.prior);
+        stats.gpu_seconds_avoided =
+            self.gpu_seconds_avoided(specs, tables, &pruned, &event_uses);
         let profile = if self.cfg.use_cache {
             ProfileReport {
                 gpu_seconds: cache_stats.gpu_seconds,
@@ -796,6 +827,8 @@ impl<'a> SearchEngine<'a> {
             profile,
             cache: cache_stats,
             event_uses,
+            tables: space.tables.clone(),
+            pruning: stats,
             timing: SweepTiming {
                 total_seconds: t0.elapsed().as_secs_f64(),
                 per_candidate_ms: per_ms,
@@ -803,6 +836,111 @@ impl<'a> SearchEngine<'a> {
             threads_used: threads,
         }
     }
+
+    /// Deterministic noise-free estimate of the profiling cost the pruned
+    /// candidates would have added: every event only pruned candidates
+    /// reference is priced once (like the cache dedup), via the same cost
+    /// laws the profiler's micro-programs execute — never by actually
+    /// running them, which would re-pay the cost pruning skipped. At
+    /// `jitter_sigma = 0` this matches the measurement for computation,
+    /// p2p and directly-profiled ring events; extrapolated rings use the
+    /// hierarchical law on the target group (the §4.2 < 2% relation).
+    ///
+    /// Requires the cache path's [`LookupLog`] to know what the sweep
+    /// already measured, so a cache-off sweep reports 0 (that mode exists
+    /// only as the legacy per-candidate re-profiling baseline). Pruned
+    /// candidates always have a positive bound, so their partitions are
+    /// valid and deployable by construction — only event *interning* runs
+    /// here, no simulation.
+    fn gpu_seconds_avoided(
+        &self,
+        specs: &[CandidateSpec],
+        tables: &[Vec<usize>],
+        pruned: &[bool],
+        event_uses: &[EventUse],
+    ) -> f64 {
+        if !self.cfg.use_cache || !pruned.iter().any(|&p| p) {
+            return 0.0;
+        }
+        // already paid for: this sweep's own measurements AND the prior
+        // (a warm snapshot's keys) — pruning avoids nothing for events a
+        // hit would have served, mirroring the cache block's accounting
+        let mut counted: HashSet<String> =
+            event_uses.iter().map(|u| u.key.clone()).collect();
+        counted.extend(self.prior.iter().cloned());
+        let mut avoided = 0.0;
+        for (i, spec) in specs.iter().enumerate() {
+            if !pruned[i] {
+                continue;
+            }
+            let cluster = self.cluster_for(spec, tables);
+            let part = partition(
+                self.model,
+                &spec.strategy,
+                &cluster,
+                spec.micro_batch_size,
+            );
+            let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+            let mut db = EventDb::new();
+            crate::engine::build_programs(&part, &sched, &cluster, &mut db);
+            for id in db.ids() {
+                if counted.insert(db.get(id).key()) {
+                    avoided += estimate_event_gpu_seconds(
+                        db.get(id),
+                        &cluster,
+                        &self.book,
+                        self.cfg.profile_iters,
+                    );
+                }
+            }
+        }
+        avoided
+    }
+}
+
+/// The noise-free cost of measuring one event under the profiling
+/// protocol (`mean_us x devices x iters`), from the same laws the
+/// profiler's micro-programs execute: operator roofline for computation
+/// events, the p2p law for transfers, and the (ring-capped, 2-node-slice)
+/// all-reduce laws with the §4.2 extrapolation collapsing to the
+/// hierarchical law on the target group. Mirrors `profile::profile_single`
+/// without running the discrete-event engine.
+fn estimate_event_gpu_seconds(
+    event: &crate::events::Event,
+    cluster: &ClusterSpec,
+    book: &CostBook,
+    iters: usize,
+) -> f64 {
+    use crate::comm;
+    use crate::events::{CommEvent, Event};
+    let (mean_us, devices): (f64, usize) = match event {
+        Event::Comp(c) => match cluster.kind_by_name(&c.kind) {
+            Some(spec) => (
+                book.for_kind(&c.kind).op_latency_us(spec, c.class, c.flops, c.bytes),
+                1,
+            ),
+            None => (0.0, 0),
+        },
+        Event::Comm(CommEvent::P2p { bytes, link }) => {
+            (comm::p2p_time_us(cluster, *link, *bytes), 2)
+        }
+        Event::Comm(CommEvent::AllReduce { bytes, group, link }) => {
+            let cap = match link {
+                crate::cluster::LinkClass::Intra => cluster.gpus_per_node,
+                crate::cluster::LinkClass::Inter => 2 * cluster.gpus_per_node,
+            }
+            .min(crate::profile::MAX_PROFILE_RING);
+            let n = (*group).min(cap);
+            let t = if n < *group {
+                let target = comm::synthetic_group(cluster, *group, *link);
+                comm::hierarchical_allreduce_time_us(cluster, &target, *bytes)
+            } else {
+                comm::allreduce_time_us(cluster, *link, n, *bytes)
+            };
+            (t, n)
+        }
+    };
+    mean_us * 1e-6 * iters as f64 * devices as f64
 }
 
 #[cfg(test)]
@@ -933,7 +1071,7 @@ mod tests {
         let eng = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true));
         for spec in eng.specs() {
             let bound = eng.bound_throughput(&spec);
-            let (cand, _) = eng.evaluate(&spec, None);
+            let (cand, _) = eng.evaluate(&spec, &[], None);
             if cand.evaluated() {
                 assert!(
                     bound > cand.throughput,

@@ -18,13 +18,20 @@
 //!   same way pay for its profiling once per sweep. This is the
 //!   cross-candidate generalization of the paper's §3.2 event dedup, and
 //!   Table 3 reports the saving in GPU-seconds.
-//! * An optional pruning pass skips candidates that provably lose:
-//!   **pruning bound:** `baseline::analytical` prices compute at peak
-//!   FLOPs with ideal communication and zero overheads, so its batch time
-//!   is a lower bound on the simulated batch time and `1e6 /
-//!   analytical_us` an upper bound on throughput. A candidate whose bound
-//!   (inflated by a safety margin) is still below an already-simulated
-//!   incumbent can never be the argmax and is skipped.
+//! * The sweep runs as a **staged candidate pipeline** (`pipeline`):
+//!   candidate *sources* (strategy grid × schedule × micro-batch ×
+//!   placement generators, including the [`pipeline::PlacementOptimizer`]
+//!   searching `Placement::Table` permutations) feed a *pruner* with
+//!   adaptive, epoch-scheduled re-pruning, which feeds the evaluator/
+//!   cache layer. **Pruning bound:** `baseline::analytical` prices
+//!   compute at peak FLOPs with ideal communication and zero overheads —
+//!   placement-aware, each stage group at its own slowest member's SKU —
+//!   so its batch time is a lower bound on the simulated batch time and
+//!   `1e6 / analytical_us` an upper bound on throughput, per candidate
+//!   placement. A candidate whose bound (inflated by a safety margin) is
+//!   below the incumbent — re-published at fixed candidate-index epochs
+//!   as better candidates land, so the pruned set stays bit-identical
+//!   for any thread count — can never be the argmax and is skipped.
 //! * [`SweepConfig::widened`] / [`SweepConfig::micro_batch_axis`] grow the
 //!   space beyond the paper's power-of-two grid: every (mp, pp, dp)
 //!   factoring [`Strategy::enumerate`] allows, and a micro-batch-size axis
@@ -36,6 +43,7 @@
 
 pub mod cache;
 pub mod engine;
+pub mod pipeline;
 
 pub use cache::{
     fingerprint, stats_against, CacheSnapshot, CacheStats, EventUse, LookupLog, ProfileCache,
@@ -44,6 +52,10 @@ pub use cache::{
 pub use engine::{
     CandidateSpec, PlacementAttribution, ScheduleAttribution, SearchEngine, SweepCandidate,
     SweepConfig, SweepReport,
+};
+pub use pipeline::{
+    enumerate_canonical_tables, CandidateSpace, PlacementOptimizer, PruneStats, NO_TABLE,
+    PLACEMENT_EXHAUSTIVE_LIMIT,
 };
 
 use crate::cluster::ClusterSpec;

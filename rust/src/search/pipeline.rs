@@ -1,0 +1,923 @@
+//! The staged candidate pipeline (ISSUE 5): candidate **sources** →
+//! **pruner** → evaluator/cache.
+//!
+//! The sweep used to be a monolithic `SweepConfig → enumerate → evaluate`
+//! loop. This module factors the space construction into composable
+//! source stages and adds the two layers that make placement search
+//! tractable:
+//!
+//! * **Candidate sources** — [`build_space`] composes the strategy grid,
+//!   the micro-batch and schedule axes, the named-placement axis, and the
+//!   [`PlacementOptimizer`]'s `Placement::Table` candidates into one
+//!   deterministic, index-addressed [`CandidateSpace`]. A
+//!   `max_candidates` budget truncates this order, so a budgeted sweep is
+//!   a prefix of the full one.
+//! * **Placement optimizer** — searches rank→device permutations. The key
+//!   reduction: a device's placement-relevant identity is its `(node,
+//!   kind)` class ([`ClusterSpec::device_class`]) — swapping two devices
+//!   of one class changes neither any rank's SKU nor any link class — so
+//!   the space is rank→class assignments, not raw permutations
+//!   ([`ClusterSpec::canonicalize_table`] picks the unique
+//!   representative). Identically-composed *nodes* are interchangeable as
+//!   wholes, so a fresh node of a composition is only ever entered via
+//!   its first fresh representative. When the reduced space is small
+//!   (≤ [`PLACEMENT_EXHAUSTIVE_LIMIT`]) it is enumerated completely —
+//!   together with the pruning bound's soundness this makes the optimizer
+//!   *exact* on small fleets; larger fleets fall back to a deterministic
+//!   beam search guided by a per-rank cost heuristic, with the survivors
+//!   ranked by the exact placement-aware analytical bound.
+//! * **Pruner** — [`EpochPlan`] schedules adaptive re-pruning at fixed
+//!   candidate-index epochs: evaluation proceeds in bound-descending
+//!   order (branch-and-bound style), and after every `chunk`-sized epoch
+//!   the incumbent (best simulated throughput so far) re-prunes the
+//!   remaining candidates. Because epoch boundaries are fixed counts of
+//!   the deterministic evaluation order — never wall-clock or thread
+//!   interleaving — the pruned set is bit-identical for any worker count,
+//!   preserving the engine's determinism contract. With
+//!   `prune_epochs = 1` this degenerates to the historical single
+//!   up-front incumbent.
+//!
+//! [`PruneStats`] carries the accounting the CLI, service responses and
+//! `BENCH_placement.json` surface, mirroring the Table-3 cache
+//! accounting.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::baseline::analytical::analytical_batch_time_us;
+use crate::cluster::{ClusterSpec, Placement, PlacementPolicy};
+use crate::cost::CostModel;
+use crate::model::ModelSpec;
+use crate::partition::partition;
+use crate::schedule::SchedKind;
+use crate::strategy::{RankCoords, Strategy};
+
+use super::engine::{CandidateSpec, SweepConfig};
+use super::{grid, widened_grid};
+
+/// Sentinel for "this candidate deploys no optimizer table"
+/// ([`CandidateSpec::table`]).
+pub const NO_TABLE: u32 = u32::MAX;
+
+/// Exhaustive-enumeration ceiling for the symmetry-reduced placement
+/// space: at or below this many canonical tables the optimizer emits
+/// every one of them (exact search — the pruning bound then guarantees
+/// the true optimum is never discarded); above it, beam search caps the
+/// candidate count at [`SweepConfig::beam`].
+pub const PLACEMENT_EXHAUSTIVE_LIMIT: usize = 128;
+
+/// Constructive tables the beam regime always seeds alongside the beam
+/// survivors: the three named placements plus the lane-alternating and
+/// weight-greedy anchors.
+const ANCHOR_TABLES: usize = 5;
+
+/// Accounting of the pruning layer — what the `distsim search` accounting
+/// block, the service's `pruning` response object and
+/// `BENCH_placement.json` report. Deterministic (a pure function of the
+/// candidate set and the simulated throughputs).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PruneStats {
+    /// Candidates the sources generated (= `SweepReport::candidates` len).
+    pub generated: usize,
+    /// Pruned by the initial incumbent (the analytically-best candidate,
+    /// evaluated first).
+    pub bound_pruned: usize,
+    /// Pruned by an improved incumbent at a later epoch boundary.
+    pub epoch_repruned: usize,
+    /// Candidates that went through the evaluator (everything not pruned,
+    /// including invalid/unreachable ones — those are cheap).
+    pub evaluated: usize,
+    /// Profiling cost the pruned candidates' events would have added: a
+    /// deterministic noise-free estimate (the profiler's cost laws, never
+    /// an actual measurement) of every event only pruned candidates
+    /// reference, each counted once like the cache dedup. 0 on cache-off
+    /// sweeps, whose evaluated event set is untracked.
+    pub gpu_seconds_avoided: f64,
+}
+
+/// The sweep's candidate space: index-addressed specs plus the placement
+/// optimizer's table pool (`CandidateSpec::table` indexes into `tables`).
+#[derive(Debug, Clone, Default)]
+pub struct CandidateSpace {
+    pub specs: Vec<CandidateSpec>,
+    pub tables: Vec<Vec<usize>>,
+    /// Per-spec analytical bound the optimizer already computed while
+    /// ranking tables (`None` for non-optimizer candidates) — the pruning
+    /// pass reuses it instead of re-deriving the identical number.
+    pub seed_bounds: Vec<Option<f64>>,
+}
+
+// ---------------------------------------------------------------------------
+// candidate sources
+
+/// Source stage 1+2: strategies × (micro-batching × schedule) points, in
+/// the deterministic order the engine has always used.
+fn strategy_points(cluster: &ClusterSpec, cfg: &SweepConfig) -> Vec<CandidateSpec> {
+    let devices = cluster.total_devices();
+    let strategies = if cfg.widened {
+        widened_grid(devices)
+    } else {
+        grid(devices)
+    };
+    let mut specs = Vec::new();
+    for s in strategies {
+        let base = CandidateSpec::default_for(s, cfg.global_batch);
+        specs.push(base);
+        if s.pp <= 1 || base.micro_batch_size == 0 {
+            continue;
+        }
+        let per_replica = cfg.global_batch / s.dp;
+        let push_mb_grid = |specs: &mut Vec<CandidateSpec>, schedule: SchedKind| {
+            if !cfg.micro_batch_axis {
+                return;
+            }
+            for mbs in 2..=per_replica {
+                // with the schedule axis on, the single-micro-batch point
+                // of EVERY grid is the Naive schedule (one micro-batch
+                // degenerates them all to the same sequential F/B); keep
+                // only the Naive-labeled copy
+                if per_replica % mbs == 0 && !(cfg.schedule_axis && mbs == per_replica) {
+                    specs.push(CandidateSpec {
+                        strategy: s,
+                        micro_batch_size: mbs,
+                        micro_batches: per_replica / mbs,
+                        schedule,
+                        placement: PlacementPolicy::Cluster,
+                        table: NO_TABLE,
+                    });
+                }
+            }
+        };
+        push_mb_grid(&mut specs, SchedKind::Dapple);
+        // with one micro-batch per replica every schedule degenerates to
+        // the same sequential F/B — the Dapple base already covers it, so
+        // the schedule axis only applies when per_replica > 1
+        if cfg.schedule_axis && per_replica > 1 {
+            specs.push(CandidateSpec {
+                strategy: s,
+                micro_batch_size: 1,
+                micro_batches: per_replica,
+                schedule: SchedKind::GPipe,
+                placement: PlacementPolicy::Cluster,
+                table: NO_TABLE,
+            });
+            push_mb_grid(&mut specs, SchedKind::GPipe);
+            // naive: the whole replica batch as one micro-batch
+            specs.push(CandidateSpec {
+                strategy: s,
+                micro_batch_size: per_replica,
+                micro_batches: 1,
+                schedule: SchedKind::Naive,
+                placement: PlacementPolicy::Cluster,
+                table: NO_TABLE,
+            });
+        }
+    }
+    specs
+}
+
+/// Source stage 3: the named-placement axis — each point replicated
+/// across [`PlacementPolicy::AXIS`], baseline first (spec-major order
+/// keeps a budgeted sweep a prefix of the unbudgeted one).
+fn replicate_over_placements(specs: Vec<CandidateSpec>) -> Vec<CandidateSpec> {
+    specs
+        .into_iter()
+        .flat_map(|base| {
+            PlacementPolicy::AXIS
+                .into_iter()
+                .map(move |placement| CandidateSpec { placement, ..base })
+        })
+        .collect()
+}
+
+/// Compose the full candidate space for one sweep. Order: the
+/// strategy/schedule/micro-batch points (× the named-placement axis when
+/// on), then the placement optimizer's `Placement::Table` candidates —
+/// per strategy in enumeration order, bound-descending within a strategy.
+pub fn build_space(model: &ModelSpec, cluster: &ClusterSpec, cfg: &SweepConfig) -> CandidateSpace {
+    let mut specs = strategy_points(cluster, cfg);
+    // named axis and optimizer are both no-ops on homogeneous clusters,
+    // where every placement prices identically
+    if cfg.placement_axis && cluster.is_heterogeneous() {
+        specs = replicate_over_placements(specs);
+    }
+    let mut tables = Vec::new();
+    let mut seed_bounds: Vec<Option<f64>> = vec![None; specs.len()];
+    if cfg.placement_opt && cluster.is_heterogeneous() {
+        let opt = PlacementOptimizer::new(model, cluster, cfg);
+        // the canonical enumeration is strategy-independent: run it once,
+        // and intern tables so strategies sharing a table share one pool
+        // entry (candidates still carry their own spec each)
+        let canonical = enumerate_canonical_tables(cluster, PLACEMENT_EXHAUSTIVE_LIMIT);
+        let mut interned: HashMap<Vec<usize>, u32> = HashMap::new();
+        let devices = cluster.total_devices();
+        let strategies = if cfg.widened {
+            widened_grid(devices)
+        } else {
+            grid(devices)
+        };
+        for s in strategies {
+            opt.emit(
+                s,
+                canonical.as_deref(),
+                &mut specs,
+                &mut tables,
+                &mut seed_bounds,
+                &mut interned,
+            );
+        }
+    }
+    if cfg.max_candidates > 0 {
+        specs.truncate(cfg.max_candidates);
+        seed_bounds.truncate(cfg.max_candidates);
+    }
+    CandidateSpace {
+        specs,
+        tables,
+        seed_bounds,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the placement optimizer
+
+/// Searches `Placement::Table` permutations for each strategy (module
+/// docs describe the canonicalization/symmetry/beam scheme).
+pub struct PlacementOptimizer<'a> {
+    model: &'a ModelSpec,
+    cluster: &'a ClusterSpec,
+    cfg: &'a SweepConfig,
+}
+
+impl<'a> PlacementOptimizer<'a> {
+    pub fn new(model: &'a ModelSpec, cluster: &'a ClusterSpec, cfg: &'a SweepConfig) -> Self {
+        PlacementOptimizer {
+            model,
+            cluster,
+            cfg,
+        }
+    }
+
+    /// Append this strategy's table candidates to the space. Exhaustive
+    /// when the symmetry-reduced space fits
+    /// [`PLACEMENT_EXHAUSTIVE_LIMIT`] (`canonical` is the pre-computed,
+    /// strategy-independent enumeration); beam-capped otherwise (the beam
+    /// set is seeded with the three named placements' tables so the
+    /// optimizer never does worse than the named axis). Tables land in the
+    /// sweep-wide pool through `interned`, so strategies sharing a table
+    /// share one pool entry.
+    pub fn emit(
+        &self,
+        strategy: Strategy,
+        canonical: Option<&[Vec<usize>]>,
+        specs: &mut Vec<CandidateSpec>,
+        tables: &mut Vec<Vec<usize>>,
+        seed_bounds: &mut Vec<Option<f64>>,
+        interned: &mut HashMap<Vec<usize>, u32>,
+    ) {
+        let base = CandidateSpec::default_for(strategy, self.cfg.global_batch);
+        if base.micro_batch_size == 0
+            || !strategy.is_valid_for(
+                self.model.heads,
+                self.model.num_transformer_layers(),
+                strategy.world_size(),
+            )
+        {
+            return;
+        }
+        // beam survivors + deterministic constructive anchors: the three
+        // named placements (so the optimizer never does worse than the
+        // named axis), a lane-alternating table (balances SKUs across DP
+        // replicas — the beam's greedy per-rank score is replica-blind)
+        // and a weight-greedy table (heaviest stages onto fastest SKUs)
+        let beam_set: Vec<Vec<usize>> = if canonical.is_none() {
+            let mut set: BTreeSet<Vec<usize>> = self
+                .beam_tables(strategy, base.micro_batch_size)
+                .into_iter()
+                .collect();
+            for p in [
+                self.cluster.placement.clone(),
+                Placement::FastFirst,
+                Placement::Interleaved,
+            ] {
+                let t = self.cluster.with_placement(p).rank_to_device();
+                set.insert(self.cluster.canonicalize_table(&t));
+            }
+            set.insert(
+                self.cluster
+                    .canonicalize_table(&self.alternating_table(strategy)),
+            );
+            set.insert(
+                self.cluster
+                    .canonicalize_table(&self.weight_greedy_table(strategy)),
+            );
+            set.into_iter().collect()
+        } else {
+            Vec::new()
+        };
+        let cand: &[Vec<usize>] = canonical.unwrap_or(&beam_set);
+        // rank by the exact placement-aware analytical bound, best first
+        // (ties break toward the lexicographically smaller table — a pure
+        // function of the inputs, so the emitted order is deterministic)
+        let mut scored: Vec<(f64, &Vec<usize>)> = cand
+            .iter()
+            .map(|t| (self.table_bound(strategy, &base, t), t))
+            .collect();
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(b.1)));
+        let keep = if canonical.is_some() {
+            scored.len() // exhaustive regime: emit every canonical table
+        } else {
+            scored.len().min(self.cfg.beam.max(1) + ANCHOR_TABLES)
+        };
+        for (bound, t) in scored.into_iter().take(keep) {
+            let idx = match interned.get(t) {
+                Some(&idx) => idx,
+                None => {
+                    let idx = tables.len() as u32;
+                    tables.push(t.clone());
+                    interned.insert(t.clone(), idx);
+                    idx
+                }
+            };
+            specs.push(CandidateSpec {
+                placement: PlacementPolicy::Optimized,
+                table: idx,
+                ..base
+            });
+            seed_bounds.push(Some(bound));
+        }
+    }
+
+    /// The exact analytical throughput bound of one (strategy, table)
+    /// point — the score the optimizer ranks tables by, and the same
+    /// bound the pruner later uses (so ranking and pruning agree).
+    fn table_bound(&self, strategy: Strategy, base: &CandidateSpec, table: &[usize]) -> f64 {
+        let c = self
+            .cluster
+            .with_placement(Placement::Table(table.to_vec()));
+        let part = partition(self.model, &strategy, &c, base.micro_batch_size);
+        if !c.fits(part.max_params_per_rank()) {
+            return 0.0;
+        }
+        let sched = base.schedule.build(strategy.pp, base.micro_batches);
+        let us = analytical_batch_time_us(self.model, &part, &sched, &c);
+        if us > 0.0 {
+            1e6 / us
+        } else {
+            0.0
+        }
+    }
+
+    /// Deterministic beam search over rank→class assignments for one
+    /// strategy. States expand rank by rank; the per-rank heuristic
+    /// charges the rank's stage compute at its class's SKU plus
+    /// inter-node penalties for the MP group and the inter-stage hop.
+    /// Ties break on the lexicographically smaller partial assignment.
+    fn beam_tables(&self, strategy: Strategy, mbs: usize) -> Vec<Vec<usize>> {
+        let cluster = self.cluster;
+        let classes = cluster.device_classes();
+        let sizes: Vec<usize> = classes.iter().map(|(_, slots)| slots.len()).collect();
+        let n = cluster.total_devices();
+        let beam = self.cfg.beam.max(1);
+
+        // per-(stage, kind) ideal compute and per-stage comm penalties
+        let part = partition(self.model, &strategy, cluster, mbs);
+        let cm = CostModel::default();
+        let kinds = cluster.kind_count();
+        let w: Vec<Vec<f64>> = (0..strategy.pp)
+            .map(|s| {
+                (0..kinds)
+                    .map(|k| {
+                        let spec = cluster.kind_spec(k);
+                        part.stages[s]
+                            .layers
+                            .iter()
+                            .map(|lw| {
+                                cm.analytical_latency_us(spec, lw.fwd.flops, lw.fwd.bytes)
+                                    + cm.analytical_latency_us(spec, lw.bwd.flops, lw.bwd.bytes)
+                            })
+                            .sum()
+                    })
+                    .collect()
+            })
+            .collect();
+        let inv_bw = |link: crate::cluster::LinkClass| 1.0 / (cluster.bw_gbs(link) * 1e3);
+        let bw_gap =
+            inv_bw(crate::cluster::LinkClass::Inter) - inv_bw(crate::cluster::LinkClass::Intra);
+        let ar_penalty: Vec<f64> = (0..strategy.pp)
+            .map(|s| {
+                part.stages[s]
+                    .layers
+                    .iter()
+                    .map(|lw| match &lw.mp_allreduce {
+                        Some(crate::events::CommEvent::AllReduce { bytes, .. }) => {
+                            let m = strategy.mp as f64;
+                            (lw.ar_count_fwd + lw.ar_count_bwd) as f64
+                                * 2.0
+                                * (m - 1.0)
+                                / m
+                                * *bytes as f64
+                                * bw_gap
+                        }
+                        _ => 0.0,
+                    })
+                    .sum()
+            })
+            .collect();
+        let p2p_penalty: Vec<f64> = (0..strategy.pp)
+            .map(|s| 2.0 * part.stages[s].act_bytes as f64 * bw_gap)
+            .collect();
+        let compositions: Vec<Vec<(usize, usize)>> = (0..cluster.nodes)
+            .map(|nd| node_composition(cluster, nd))
+            .collect();
+
+        struct State {
+            assign: Vec<u8>,
+            used: Vec<usize>,
+            score: f64,
+        }
+        let mut front = vec![State {
+            assign: Vec::new(),
+            used: vec![0; classes.len()],
+            score: 0.0,
+        }];
+        for r in 0..n {
+            let coords = strategy.coords(r);
+            let stage = coords.pp;
+            let mut next: Vec<State> = Vec::new();
+            for st in &front {
+                for (ci, ((node, kind), _)) in classes.iter().enumerate() {
+                    if st.used[ci] >= sizes[ci] {
+                        continue;
+                    }
+                    if fresh_node_symmetry_skip(&classes, &st.used, &compositions, *node) {
+                        continue;
+                    }
+                    let mut score = st.score + w[stage][*kind];
+                    // MP barrier: a group member on another node turns the
+                    // per-layer all-reduces inter-node
+                    let crosses_mp = (0..coords.mp).any(|m| {
+                        let peer = strategy.rank_of(RankCoords { mp: m, ..coords });
+                        classes[st.assign[peer] as usize].0 .0 != *node
+                    });
+                    if crosses_mp {
+                        score += ar_penalty[stage];
+                    }
+                    // inter-stage hop from the pipeline predecessor
+                    if stage > 0 {
+                        let pred = strategy.rank_of(RankCoords {
+                            pp: stage - 1,
+                            ..coords
+                        });
+                        if pred < st.assign.len()
+                            && classes[st.assign[pred] as usize].0 .0 != *node
+                        {
+                            score += p2p_penalty[stage - 1];
+                        }
+                    }
+                    let mut assign = st.assign.clone();
+                    assign.push(ci as u8);
+                    let mut used = st.used.clone();
+                    used[ci] += 1;
+                    next.push(State {
+                        assign,
+                        used,
+                        score,
+                    });
+                }
+            }
+            next.sort_by(|a, b| a.score.total_cmp(&b.score).then(a.assign.cmp(&b.assign)));
+            next.truncate(beam);
+            front = next;
+        }
+        front
+            .into_iter()
+            .map(|st| assignment_to_table(&classes, &st.assign))
+            .collect()
+    }
+
+    /// Fill one (stage, replica) lane's `mp` ranks from the classes in
+    /// `preference` order (first class with free slots wins, slot indices
+    /// ascending). Shared by the constructive table builders.
+    fn fill_lane(
+        &self,
+        strategy: Strategy,
+        s: usize,
+        d: usize,
+        preference: &[usize],
+        classes: &[((usize, usize), Vec<usize>)],
+        next_free: &mut [usize],
+        table: &mut [usize],
+    ) {
+        for m in 0..strategy.mp {
+            let rank = strategy.rank_of(RankCoords { mp: m, pp: s, dp: d });
+            let ci = preference
+                .iter()
+                .copied()
+                .find(|&ci| next_free[ci] < classes[ci].1.len())
+                .expect("class capacities cover the world");
+            table[rank] = classes[ci].1[next_free[ci]];
+            next_free[ci] += 1;
+        }
+    }
+
+    /// Kind ranking (fastest first) and, per kind, that kind's class
+    /// indices (node ascending).
+    fn kind_classes(
+        &self,
+        classes: &[((usize, usize), Vec<usize>)],
+    ) -> Vec<(usize, Vec<usize>)> {
+        let mut kinds = self.cluster.kinds_in_use();
+        kinds.sort_by(|&a, &b| {
+            self.cluster
+                .kind_spec(b)
+                .peak_tflops
+                .total_cmp(&self.cluster.kind_spec(a).peak_tflops)
+                .then(a.cmp(&b))
+        });
+        kinds
+            .into_iter()
+            .map(|k| {
+                let cis: Vec<usize> = classes
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, ((_, ck), _))| *ck == k)
+                    .map(|(ci, _)| ci)
+                    .collect();
+                (k, cis)
+            })
+            .collect()
+    }
+
+    /// Constructive anchor 1: deal SKUs across (stage, replica) lanes
+    /// round-robin — lane (s, d) prefers the `(s + d) % kinds`-fastest
+    /// kind — so every DP replica gets a balanced SKU mix (the DP-barrier
+    /// gradient all-reduce waits for the slowest replica, so an all-slow
+    /// replica paces the whole batch).
+    fn alternating_table(&self, strategy: Strategy) -> Vec<usize> {
+        let classes = self.cluster.device_classes();
+        let by_kind = self.kind_classes(&classes);
+        let n = self.cluster.total_devices();
+        let mut table = vec![0usize; n];
+        let mut next_free = vec![0usize; classes.len()];
+        for d in 0..strategy.dp {
+            for s in 0..strategy.pp {
+                let start = (s + d) % by_kind.len();
+                let preference: Vec<usize> = (0..by_kind.len())
+                    .flat_map(|o| by_kind[(start + o) % by_kind.len()].1.clone())
+                    .collect();
+                self.fill_lane(
+                    strategy, s, d, &preference, &classes, &mut next_free, &mut table,
+                );
+            }
+        }
+        table
+    }
+
+    /// Constructive anchor 2: lanes sorted by descending stage FLOPs take
+    /// the fastest remaining SKUs — every replica's heavy stages (the
+    /// head, remainder-layer stages) land on fast silicon first.
+    fn weight_greedy_table(&self, strategy: Strategy) -> Vec<usize> {
+        let classes = self.cluster.device_classes();
+        let by_kind = self.kind_classes(&classes);
+        let part = partition(
+            self.model,
+            &strategy,
+            self.cluster,
+            CandidateSpec::default_for(strategy, self.cfg.global_batch)
+                .micro_batch_size
+                .max(1),
+        );
+        let weight = |s: usize| -> u64 {
+            part.stages[s]
+                .layers
+                .iter()
+                .map(|lw| lw.fwd.flops + lw.bwd.flops)
+                .sum()
+        };
+        let mut lanes: Vec<(usize, usize)> = (0..strategy.pp)
+            .flat_map(|s| (0..strategy.dp).map(move |d| (s, d)))
+            .collect();
+        lanes.sort_by(|a, b| weight(b.0).cmp(&weight(a.0)).then(a.cmp(b)));
+        let preference: Vec<usize> = by_kind.iter().flat_map(|(_, cis)| cis.clone()).collect();
+        let n = self.cluster.total_devices();
+        let mut table = vec![0usize; n];
+        let mut next_free = vec![0usize; classes.len()];
+        for (s, d) in lanes {
+            self.fill_lane(
+                strategy, s, d, &preference, &classes, &mut next_free, &mut table,
+            );
+        }
+        table
+    }
+
+}
+
+/// Identical-node symmetry breaking, shared by the exhaustive DFS and the
+/// beam search (one rule, one implementation — the two regimes must agree
+/// on which placements are symmetric duplicates): entering a completely
+/// fresh node is only allowed via the first fresh node of its composition.
+fn fresh_node_symmetry_skip(
+    classes: &[((usize, usize), Vec<usize>)],
+    used: &[usize],
+    compositions: &[Vec<(usize, usize)>],
+    node: usize,
+) -> bool {
+    let node_fresh = |n: usize| {
+        classes
+            .iter()
+            .enumerate()
+            .filter(|(_, ((cn, _), _))| *cn == n)
+            .all(|(ci, _)| used[ci] == 0)
+    };
+    node_fresh(node)
+        && (0..node).any(|n2| node_fresh(n2) && compositions[n2] == compositions[node])
+}
+
+/// A node's kind composition: sorted (kind, count) pairs. Two nodes with
+/// equal compositions are interchangeable as wholes.
+fn node_composition(cluster: &ClusterSpec, node: usize) -> Vec<(usize, usize)> {
+    let mut counts: Vec<(usize, usize)> = Vec::new();
+    for d in 0..cluster.total_devices() {
+        if cluster.node_of(d) != node {
+            continue;
+        }
+        let k = cluster.device_kind(d);
+        match counts.binary_search_by(|(ck, _)| ck.cmp(&k)) {
+            Ok(i) => counts[i].1 += 1,
+            Err(i) => counts.insert(i, (k, 1)),
+        }
+    }
+    counts
+}
+
+/// Turn a rank→class assignment into its canonical rank→device table
+/// (smallest unused slot of the class, in rank order).
+fn assignment_to_table(classes: &[((usize, usize), Vec<usize>)], assign: &[u8]) -> Vec<usize> {
+    let mut next = vec![0usize; classes.len()];
+    assign
+        .iter()
+        .map(|&ci| {
+            let ci = ci as usize;
+            let slot = classes[ci].1[next[ci]];
+            next[ci] += 1;
+            slot
+        })
+        .collect()
+}
+
+/// Enumerate every canonical rank→device table of the fleet, with
+/// identical-node symmetry breaking, in deterministic (class-index
+/// lexicographic) order. Returns `None` as soon as more than `limit`
+/// tables exist — the caller then falls back to beam search.
+pub fn enumerate_canonical_tables(
+    cluster: &ClusterSpec,
+    limit: usize,
+) -> Option<Vec<Vec<usize>>> {
+    let classes = cluster.device_classes();
+    let sizes: Vec<usize> = classes.iter().map(|(_, slots)| slots.len()).collect();
+    let n = cluster.total_devices();
+    let compositions: Vec<Vec<(usize, usize)>> = (0..cluster.nodes)
+        .map(|nd| node_composition(cluster, nd))
+        .collect();
+
+    let mut out: Vec<Vec<usize>> = Vec::new();
+    let mut assign: Vec<u8> = Vec::with_capacity(n);
+    let mut used = vec![0usize; classes.len()];
+
+    fn dfs(
+        rank: usize,
+        n: usize,
+        classes: &[((usize, usize), Vec<usize>)],
+        sizes: &[usize],
+        compositions: &[Vec<(usize, usize)>],
+        assign: &mut Vec<u8>,
+        used: &mut Vec<usize>,
+        out: &mut Vec<Vec<usize>>,
+        limit: usize,
+    ) -> bool {
+        if rank == n {
+            if out.len() >= limit {
+                return false; // space too large: abort enumeration
+            }
+            out.push(assignment_to_table(classes, assign));
+            return true;
+        }
+        for ci in 0..classes.len() {
+            if used[ci] >= sizes[ci] {
+                continue;
+            }
+            let node = classes[ci].0 .0;
+            if fresh_node_symmetry_skip(classes, used, compositions, node) {
+                continue;
+            }
+            assign.push(ci as u8);
+            used[ci] += 1;
+            let ok = dfs(
+                rank + 1,
+                n,
+                classes,
+                sizes,
+                compositions,
+                assign,
+                used,
+                out,
+                limit,
+            );
+            used[ci] -= 1;
+            assign.pop();
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+
+    if dfs(
+        0,
+        n,
+        &classes,
+        &sizes,
+        &compositions,
+        &mut assign,
+        &mut used,
+        &mut out,
+        limit,
+    ) {
+        Some(out)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the adaptive pruner
+
+/// The deterministic epoch schedule of one pruned sweep: evaluation
+/// proceeds over `order` (bound-descending when pruning); the first epoch
+/// evaluates exactly one candidate (the analytically-best — the incumbent
+/// seed, reproducing the historical behaviour), and every later epoch
+/// evaluates up to `chunk` not-yet-pruned candidates. Between epochs the
+/// caller re-prunes against the improved incumbent. Epoch boundaries are
+/// fixed candidate counts, so the schedule — and therefore the pruned set
+/// — is independent of worker count.
+#[derive(Debug)]
+pub struct EpochPlan {
+    pub order: Vec<usize>,
+    pub chunk: usize,
+    seeded: bool,
+    cursor: usize,
+}
+
+impl EpochPlan {
+    /// Build the plan: `order` is bound-descending (ties toward the lower
+    /// spec index) when pruning, the natural spec order otherwise.
+    pub fn new(bounds: &[f64], prune: bool, epochs: usize) -> EpochPlan {
+        let n = bounds.len();
+        let order: Vec<usize> = if prune {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| bounds[b].total_cmp(&bounds[a]).then(a.cmp(&b)));
+            idx
+        } else {
+            (0..n).collect()
+        };
+        let epochs = epochs.max(1);
+        let chunk = if prune {
+            n.saturating_sub(1).div_ceil(epochs).max(1)
+        } else {
+            n.max(1)
+        };
+        EpochPlan {
+            order,
+            chunk,
+            seeded: !prune,
+            cursor: 0,
+        }
+    }
+
+    /// The next epoch's evaluation set (skipping pruned indices), or an
+    /// empty vector when the order is exhausted.
+    pub fn next_epoch(&mut self, pruned: &[bool]) -> Vec<usize> {
+        let take = if self.seeded { self.chunk } else { 1 };
+        self.seeded = true;
+        let mut chunk = Vec::new();
+        while self.cursor < self.order.len() && chunk.len() < take {
+            let i = self.order[self.cursor];
+            self.cursor += 1;
+            if !pruned[i] {
+                chunk.push(i);
+            }
+        }
+        chunk
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.cursor >= self.order.len()
+    }
+
+    /// Indices not yet handed to an epoch — the set a re-prune may touch
+    /// (already-evaluated candidates are behind the cursor and immutable).
+    pub fn remaining(&self) -> &[usize] {
+        &self.order[self.cursor..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    #[test]
+    fn canonical_enumeration_counts_the_symmetry_reduced_space() {
+        // mixed 2x4: 8 ranks over two 4-slot classes -> C(8,4) = 70
+        let c = ClusterSpec::mixed_a40_a10(2, 4);
+        let all = enumerate_canonical_tables(&c, 128).expect("70 <= 128");
+        assert_eq!(all.len(), 70);
+        // every table is canonical, unique, and a permutation
+        let set: BTreeSet<&Vec<usize>> = all.iter().collect();
+        assert_eq!(set.len(), 70);
+        for t in &all {
+            assert_eq!(c.canonicalize_table(t), *t, "not canonical: {t:?}");
+            let mut s = t.clone();
+            s.sort_unstable();
+            assert_eq!(s, (0..8).collect::<Vec<_>>());
+        }
+        // the named placements' tables are all in the set
+        for p in [Placement::Linear, Placement::FastFirst, Placement::Interleaved] {
+            let t = c.with_placement(p.clone()).rank_to_device();
+            let canon = c.canonicalize_table(&t);
+            assert!(all.contains(&canon), "{p:?} missing from the canonical set");
+        }
+        // and a tight limit aborts instead of truncating
+        assert!(enumerate_canonical_tables(&c, 69).is_none());
+    }
+
+    #[test]
+    fn identical_nodes_are_entered_via_their_first_representative() {
+        // 2 identical all-A40 nodes: the only rank->class choice that
+        // matters is "how many ranks on the first-touched node", so the
+        // space collapses from C(4,2)=6 raw class assignments to 3
+        let c = ClusterSpec::a40_cluster(2, 2);
+        let all = enumerate_canonical_tables(&c, 128).unwrap();
+        assert_eq!(all.len(), 3, "{all:?}");
+    }
+
+    #[test]
+    fn epoch_plan_reproduces_the_single_incumbent_scheme() {
+        let bounds = vec![1.0, 5.0, 3.0, 5.0, 0.0];
+        let mut plan = EpochPlan::new(&bounds, true, 1);
+        // bound-descending, ties toward the lower index
+        assert_eq!(plan.order, vec![1, 3, 2, 0, 4]);
+        let pruned = vec![false; 5];
+        assert_eq!(plan.next_epoch(&pruned), vec![1], "seed epoch");
+        // one epoch: everything else in one chunk
+        assert_eq!(plan.next_epoch(&pruned), vec![3, 2, 0, 4]);
+        assert!(plan.exhausted());
+    }
+
+    #[test]
+    fn epoch_plan_chunks_and_skips_pruned() {
+        let bounds = vec![4.0, 3.0, 2.0, 1.0, 0.5];
+        let mut plan = EpochPlan::new(&bounds, true, 2);
+        assert_eq!(plan.chunk, 2);
+        let mut pruned = vec![false; 5];
+        assert_eq!(plan.next_epoch(&pruned), vec![0]);
+        pruned[2] = true; // re-pruned between epochs
+        assert_eq!(plan.next_epoch(&pruned), vec![1, 3]);
+        assert_eq!(plan.next_epoch(&pruned), vec![4]);
+        assert!(plan.exhausted());
+        assert_eq!(plan.next_epoch(&pruned), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn optimizer_emits_bound_ranked_tables_for_a_mixed_fleet() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4);
+        let cfg = SweepConfig {
+            global_batch: 8,
+            placement_opt: true,
+            ..SweepConfig::default()
+        };
+        let space = build_space(&model, &cluster, &cfg);
+        assert!(!space.tables.is_empty());
+        let opt: Vec<&CandidateSpec> = space
+            .specs
+            .iter()
+            .filter(|s| s.placement == PlacementPolicy::Optimized)
+            .collect();
+        assert!(!opt.is_empty());
+        for s in &opt {
+            let t = &space.tables[s.table as usize];
+            assert_eq!(cluster.canonicalize_table(t), **t);
+        }
+        // exhaustive regime on this fleet: every strategy with tables
+        // carries the full 70-table canonical set
+        let per_strategy = opt
+            .iter()
+            .filter(|s| s.strategy == Strategy::new(1, 2, 4))
+            .count();
+        assert_eq!(per_strategy, 70);
+        // homogeneous clusters skip the optimizer entirely
+        let h = build_space(&model, &ClusterSpec::a40_cluster(2, 4), &cfg);
+        assert!(h.tables.is_empty());
+    }
+}

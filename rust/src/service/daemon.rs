@@ -66,6 +66,12 @@ pub struct ServeOpts {
     /// Directory for profile-cache snapshots (`cache-<fingerprint>.json`),
     /// loaded lazily per fingerprint and saved back on shutdown/EOF.
     pub cache_dir: Option<PathBuf>,
+    /// Additionally persist cache snapshots every this often while the
+    /// daemon runs (`distsim serve --save-interval <secs>`), so a crash
+    /// or kill loses at most one interval's measurements. Writes are
+    /// atomic (tmp file + rename), so a reader — or a crash mid-write —
+    /// never observes a torn snapshot. No-op without a cache dir.
+    pub save_interval: Option<Duration>,
 }
 
 /// What a daemon run did, for callers that want to report it.
@@ -189,6 +195,11 @@ impl CacheRegistry {
 
     /// Persist every cache with at least one measurement. Returns how many
     /// snapshot files were written.
+    ///
+    /// Each snapshot is written to a `.tmp` sibling and atomically
+    /// renamed into place, so a concurrent reader (or a crash mid-write)
+    /// never observes a torn file — the invariant the periodic
+    /// `--save-interval` saver relies on.
     pub fn save_all(&self) -> usize {
         let Some(dir) = self.dir.as_deref() else {
             return 0;
@@ -197,20 +208,90 @@ impl CacheRegistry {
             eprintln!("warning: cannot create cache dir {}: {e}", dir.display());
             return 0;
         }
-        let map = self.map.lock().unwrap();
+        // serialization and disk I/O happen OUTSIDE the registry lock —
+        // the same invariant resolve() documents — so a periodic save
+        // never stalls workers admitting requests
+        type Entry = (String, Arc<ProfileCache>, ClusterSpec, CostBook, (f64, usize, u64));
+        let entries: Vec<Entry> = {
+            let map = self.map.lock().unwrap();
+            map.iter()
+                .filter(|(_, e)| e.cache.measured_len() > 0)
+                .map(|(fp, e)| {
+                    (
+                        fp.clone(),
+                        e.cache.clone(),
+                        e.cluster.clone(),
+                        e.cost.clone(),
+                        e.protocol,
+                    )
+                })
+                .collect()
+        };
         let mut saved = 0;
-        for (fp, e) in map.iter() {
-            if e.cache.measured_len() == 0 {
-                continue;
-            }
-            let (jitter, iters, seed) = e.protocol;
-            let json = e.cache.save_json(&e.cluster, &e.cost, jitter, iters, seed);
-            match json.write_file(&Self::snapshot_path(dir, fp)) {
+        for (fp, cache, cluster, cost, (jitter, iters, seed)) in entries {
+            let json = cache.save_json(&cluster, &cost, jitter, iters, seed);
+            let path = Self::snapshot_path(dir, &fp);
+            let tmp = path.with_extension("json.tmp");
+            let res = json
+                .write_file(&tmp)
+                .and_then(|()| {
+                    std::fs::rename(&tmp, &path).map_err(|e| {
+                        anyhow::anyhow!(
+                            "cannot move snapshot into place at {}: {e}",
+                            path.display()
+                        )
+                    })
+                });
+            match res {
                 Ok(()) => saved += 1,
-                Err(err) => eprintln!("warning: {err}"),
+                Err(err) => {
+                    std::fs::remove_file(&tmp).ok();
+                    eprintln!("warning: {err}");
+                }
             }
         }
         saved
+    }
+}
+
+/// The periodic snapshot saver: parks on a condvar with the configured
+/// interval and calls [`CacheRegistry::save_all`] until stopped (final
+/// shutdown saves happen separately, after the writer drains).
+struct PeriodicSaver {
+    stop: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl PeriodicSaver {
+    fn new() -> Self {
+        PeriodicSaver {
+            stop: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn run(&self, registry: &CacheRegistry, interval: Duration) {
+        let mut stopped = self.stop.lock().unwrap();
+        loop {
+            let (guard, timeout) = self
+                .cv
+                .wait_timeout(stopped, interval)
+                .expect("saver lock poisoned");
+            stopped = guard;
+            if *stopped {
+                return;
+            }
+            if timeout.timed_out() {
+                drop(stopped);
+                registry.save_all();
+                stopped = self.stop.lock().unwrap();
+            }
+        }
+    }
+
+    fn stop(&self) {
+        *self.stop.lock().unwrap() = true;
+        self.cv.notify_all();
     }
 }
 
@@ -469,6 +550,11 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
         req.sweep.profile_seed,
     );
     let outcome = match catch_unwind(AssertUnwindSafe(|| {
+        // the snapshot's keys are the engine's prior: in-sweep accounting
+        // (pruning.gpu_seconds_avoided) then agrees with the writer's
+        // as-if-serial cache block that nothing a hit would have served
+        // counts as avoided or spent. (The writer still substitutes its
+        // own admission-order cache stats for the engine's.)
         SearchEngine::with_book(
             &req.model,
             &req.cluster,
@@ -476,6 +562,7 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
             req.sweep.clone(),
             cache,
         )
+        .with_prior((*preloaded).clone())
         .sweep()
     })) {
         Ok(report) => Outcome::Sweep {
@@ -608,10 +695,14 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
     let registry = CacheRegistry::new(opts.cache_dir.clone());
     let shared = Shared::default();
     let workers = resolve_workers(opts.workers);
+    let saver = PeriodicSaver::new();
     let mut summary = ServeSummary::default();
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| worker_loop(&shared, &registry));
+        }
+        if let Some(interval) = opts.save_interval.filter(|_| opts.cache_dir.is_some()) {
+            scope.spawn(|| saver.run(&registry, interval));
         }
         let writer = scope.spawn({
             let shared = &shared;
@@ -634,6 +725,7 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
         read_requests(&shared, input, 0);
         shared.close();
         summary = writer.join().expect("writer panicked");
+        saver.stop();
     });
     summary.snapshots_saved = registry.save_all();
     summary
@@ -647,6 +739,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
     let registry = CacheRegistry::new(opts.cache_dir.clone());
     let shared = Shared::default();
     let workers = resolve_workers(opts.workers);
+    let saver = PeriodicSaver::new();
     listener.set_nonblocking(true)?;
     let conns: Mutex<HashMap<usize, TcpStream>> = Mutex::new(HashMap::new());
     let active_readers = AtomicUsize::new(0);
@@ -654,6 +747,9 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(|| worker_loop(&shared, &registry));
+        }
+        if let Some(interval) = opts.save_interval.filter(|_| opts.cache_dir.is_some()) {
+            scope.spawn(|| saver.run(&registry, interval));
         }
         let writer = scope.spawn({
             let shared = &shared;
@@ -731,6 +827,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
         }
         shared.close();
         summary = writer.join().expect("writer panicked");
+        saver.stop();
     });
     summary.snapshots_saved = registry.save_all();
     Ok(summary)

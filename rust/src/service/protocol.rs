@@ -18,7 +18,8 @@
 //!  "sweep": {"global_batch": 16, "profile_iters": 1, "threads": 1,
 //!            "widened": false, "micro_batch_axis": false,
 //!            "schedule_axis": false, "placement_axis": false,
-//!            "prune": false},
+//!            "placement_opt": false, "beam": 4,
+//!            "prune": false, "prune_epochs": 1},
 //!  "budget": {"max_candidates": 100, "deadline_ms": 60000},
 //!  "timing": false}
 //! ```
@@ -247,15 +248,16 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     for (k, v) in obj {
         let ok = match k.as_str() {
             "global_batch" | "jitter_sigma" | "profile_iters" | "threads" | "prune_margin"
-            | "max_candidates" => v.as_f64().is_some(),
-            "widened" | "micro_batch_axis" | "schedule_axis" | "placement_axis" | "prune"
-            | "use_cache" => v.as_bool().is_some(),
+            | "max_candidates" | "prune_epochs" | "beam" => v.as_f64().is_some(),
+            "widened" | "micro_batch_axis" | "schedule_axis" | "placement_axis"
+            | "placement_opt" | "prune" | "use_cache" => v.as_bool().is_some(),
             // seeds travel as numbers or string-wrapped u64s
             "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
             other => anyhow::bail!(
                 "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
                  profile_seed|threads|widened|micro_batch_axis|schedule_axis|\
-                 placement_axis|prune|prune_margin|use_cache|max_candidates)"
+                 placement_axis|placement_opt|beam|prune|prune_margin|prune_epochs|\
+                 use_cache|max_candidates)"
             ),
         };
         anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
@@ -296,6 +298,17 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     }
     if let Some(v) = j.get("placement_axis").and_then(Json::as_bool) {
         cfg.placement_axis = v;
+    }
+    if let Some(v) = j.get("placement_opt").and_then(Json::as_bool) {
+        cfg.placement_opt = v;
+    }
+    if let Some(v) = j.get("beam").and_then(Json::as_usize) {
+        anyhow::ensure!(v >= 1, "beam must be >= 1");
+        cfg.beam = v;
+    }
+    if let Some(v) = j.get("prune_epochs").and_then(Json::as_usize) {
+        anyhow::ensure!(v >= 1, "prune_epochs must be >= 1");
+        cfg.prune_epochs = v;
     }
     if let Some(v) = j.get("prune").and_then(Json::as_bool) {
         cfg.prune = v;
@@ -498,11 +511,17 @@ pub fn sweep_response(
     cache: &CacheStats,
     include_timing: bool,
 ) -> Json {
+    let table_json = |idx: u32| {
+        report
+            .tables
+            .get(idx as usize)
+            .map(|t| Json::Arr(t.iter().map(|&d| Json::num(d as f64)).collect()))
+    };
     let candidates: Vec<Json> = report
         .candidates
         .iter()
         .map(|c| {
-            Json::obj(vec![
+            let mut fields = vec![
                 ("strategy", Json::str(c.strategy.notation())),
                 ("schedule", Json::str(c.schedule.name())),
                 ("placement", Json::str(c.placement.name())),
@@ -512,7 +531,11 @@ pub fn sweep_response(
                 ("reachable", Json::Bool(c.reachable)),
                 ("pruned", Json::Bool(c.pruned)),
                 ("bound_throughput", Json::num(c.bound_throughput)),
-            ])
+            ];
+            if let Some(t) = table_json(c.table) {
+                fields.push(("table", t));
+            }
+            Json::obj(fields)
         })
         .collect();
     let mut result = vec![
@@ -524,17 +547,38 @@ pub fn sweep_response(
             Json::num(report.evaluated_count() as f64),
         ),
         ("pruned", Json::num(report.pruned_count() as f64)),
+        (
+            "pruning",
+            Json::obj(vec![
+                ("generated", Json::num(report.pruning.generated as f64)),
+                (
+                    "bound_pruned",
+                    Json::num(report.pruning.bound_pruned as f64),
+                ),
+                (
+                    "epoch_repruned",
+                    Json::num(report.pruning.epoch_repruned as f64),
+                ),
+                ("evaluated", Json::num(report.pruning.evaluated as f64)),
+                (
+                    "gpu_seconds_avoided",
+                    Json::num(report.pruning.gpu_seconds_avoided),
+                ),
+            ]),
+        ),
         ("cache", cache_stats_json(cache)),
     ];
     if let Some(b) = report.best() {
-        result.push((
-            "best",
-            Json::obj(vec![
-                ("strategy", Json::str(b.strategy.notation())),
-                ("schedule", Json::str(b.schedule.name())),
-                ("throughput", Json::num(b.throughput)),
-            ]),
-        ));
+        let mut fields = vec![
+            ("strategy", Json::str(b.strategy.notation())),
+            ("schedule", Json::str(b.schedule.name())),
+            ("placement", Json::str(b.placement.name())),
+            ("throughput", Json::num(b.throughput)),
+        ];
+        if let Some(t) = table_json(b.table) {
+            fields.push(("table", t));
+        }
+        result.push(("best", Json::obj(fields)));
     }
     if let Some(w) = report.worst() {
         result.push((
@@ -542,6 +586,7 @@ pub fn sweep_response(
             Json::obj(vec![
                 ("strategy", Json::str(w.strategy.notation())),
                 ("schedule", Json::str(w.schedule.name())),
+                ("placement", Json::str(w.placement.name())),
                 ("throughput", Json::num(w.throughput)),
             ]),
         ));

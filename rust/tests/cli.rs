@@ -279,6 +279,43 @@ fn search_placement_axis_on_a_mixed_fleet_prints_attribution() {
 }
 
 #[test]
+fn search_placement_opt_prints_the_pruning_block_and_optimized_rows() {
+    let out = bin()
+        .args([
+            "search",
+            "--model",
+            "bert-large",
+            "--device",
+            "a40-a10",
+            "--nodes",
+            "2",
+            "--gpus-per-node",
+            "2",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--placement-opt",
+            "--prune",
+            "--prune-epochs",
+            "2",
+            "--beam",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // the Table-3-style pruning accounting block
+    assert!(text.contains("pruning:"), "{text}");
+    assert!(text.contains("bound-pruned"), "{text}");
+    assert!(text.contains("epoch-repruned"), "{text}");
+    assert!(text.contains("gpu-s avoided"), "{text}");
+    // optimizer candidates appear as rows
+    assert!(text.contains("optimized"), "{text}");
+}
+
+#[test]
 fn bad_strategy_rejected() {
     let out = bin()
         .args(["simulate", "--strategy", "9X"])

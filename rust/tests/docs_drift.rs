@@ -71,7 +71,7 @@ fn snapshot_format_and_version_are_documented() {
 #[test]
 fn bench_formats_are_documented() {
     let doc = formats_md();
-    for name in ["BENCH_engine.json", "BENCH_service.json"] {
+    for name in ["BENCH_engine.json", "BENCH_service.json", "BENCH_placement.json"] {
         assert!(doc.contains(name), "{name} missing from docs/FORMATS.md");
     }
 }
@@ -82,4 +82,28 @@ fn placement_and_preset_vocabulary_is_documented() {
     for word in ["fast_first", "interleaved", "a40-a10", "per_kind", "kind_of_device"] {
         assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
     }
+}
+
+#[test]
+fn placement_optimizer_and_pruning_schema_is_documented() {
+    // ISSUE 5 surface: the staged pipeline's request fields, the
+    // optimizer's placement vocabulary, and the pruning-accounting
+    // response object must all be specified in docs/FORMATS.md
+    let doc = formats_md();
+    for word in [
+        "placement_opt",
+        "prune_epochs",
+        "beam",
+        "optimized",
+        "bound_pruned",
+        "epoch_repruned",
+        "gpu_seconds_avoided",
+        "save-interval",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // and the parser accepts exactly what the spec names
+    use distsim::service::protocol::parse_line;
+    let ok = r#"{"model":"bert-large","cluster":{"preset":"a40-a10","nodes":2},"sweep":{"placement_opt":true,"prune_epochs":2,"beam":3}}"#;
+    assert!(parse_line(ok).is_ok());
 }

@@ -166,6 +166,7 @@ fn priming_a_service_with_homogeneous_sweeps_cannot_change_mixed_answers() {
             &ServeOpts {
                 workers: 1,
                 cache_dir: None,
+                ..ServeOpts::default()
             },
         );
         String::from_utf8(out)
@@ -292,6 +293,29 @@ fn distsim_tracks_the_engine_on_mixed_fleets() {
             "{s} under {placement:?}: mixed-fleet batch-time error {err:.2}%"
         );
     }
+}
+
+#[test]
+fn distsim_tracks_the_engine_under_lane_asymmetric_tables() {
+    // ISSUE 5 satellite: MP-AR and grad-AR link classes are computed
+    // exactly per group. This hand-crafted table breaks the lane
+    // symmetry the named placements guarantee: MP pair (r0,r1) sits
+    // intra-node on A40s, pairs (r2,r3)/(r4,r5) straddle nodes (inter
+    // all-reduces, mixed SKUs), and the grad-AR groups (r0,r4) vs
+    // (r1,r5) resolve to different classes. The representative-group
+    // approximation this replaced mispriced exactly these lanes.
+    use distsim::metrics::batch_time_error_pct;
+    let table = vec![0, 1, 2, 4, 3, 5, 6, 7];
+    let cluster = mixed().with_placement(Placement::Table(table));
+    let mut cfg = RunConfig::new("bert-large", Strategy::parse("2M2P2D").unwrap(), cluster);
+    cfg.profile_iters = 30;
+    let run = distsim::exp::eval_cfg(&cfg).unwrap();
+    let actual = run.gt.run_iteration(0);
+    let err = batch_time_error_pct(&run.predicted, &actual);
+    assert!(
+        err < 8.0,
+        "2M2P2D under a lane-asymmetric table: batch-time error {err:.2}%"
+    );
 }
 
 #[test]

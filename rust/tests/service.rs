@@ -20,6 +20,7 @@ fn opts_with_workers(workers: usize) -> ServeOpts {
     ServeOpts {
         workers,
         cache_dir: None,
+        ..ServeOpts::default()
     }
 }
 
@@ -167,6 +168,7 @@ fn snapshots_survive_a_daemon_restart() {
     let opts = ServeOpts {
         workers: 2,
         cache_dir: Some(dir.clone()),
+        ..ServeOpts::default()
     };
 
     // session 1: cold sweep, then clean shutdown -> snapshot on disk
@@ -236,6 +238,165 @@ fn schedule_axis_attributes_wins_in_the_response() {
     assert!(attr.get("winning_schedule").and_then(Json::as_str).is_some());
     assert!(attr.get("schedule_speedup").and_then(Json::as_f64).unwrap() >= 1.0);
     assert!(attr.get("strategy_speedup").and_then(Json::as_f64).unwrap() >= 1.0);
+}
+
+#[test]
+fn placement_opt_request_reports_pruning_and_optimized_tables() {
+    // 2x2 mixed fleet: the symmetry-reduced table space is tiny (C(4,2)
+    // = 6), so the optimizer enumerates it exhaustively
+    let line = r#"{"id":"opt","model":"bert-large","cluster":{"preset":"a40-a10","nodes":2,"gpus_per_node":2},"sweep":{"global_batch":4,"profile_iters":1,"placement_axis":true,"placement_opt":true,"prune":true,"prune_epochs":2,"beam":2}}"#;
+    let (lines, _) = run_lines(line, &opts_with_workers(2));
+    let j = parse(&lines[0]);
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+
+    // the pruning-accounting block is surfaced and self-consistent
+    let pruning = result_field(&j, "pruning");
+    let field = |k: &str| pruning.get(k).and_then(Json::as_f64).unwrap();
+    let cands = result_field(&j, "candidates").as_arr().unwrap();
+    assert_eq!(field("generated") as usize, cands.len());
+    assert_eq!(
+        field("generated"),
+        field("bound_pruned") + field("epoch_repruned") + field("evaluated")
+    );
+    assert!(field("gpu_seconds_avoided") >= 0.0);
+
+    // optimized candidates carry their rank->device table
+    let optimized: Vec<&Json> = cands
+        .iter()
+        .filter(|c| c.get("placement").and_then(Json::as_str) == Some("optimized"))
+        .collect();
+    assert!(!optimized.is_empty(), "no optimized candidates in {j}");
+    for c in &optimized {
+        let t = c.get("table").and_then(Json::as_arr).expect("table array");
+        let mut devs: Vec<usize> = t.iter().filter_map(Json::as_usize).collect();
+        devs.sort_unstable();
+        assert_eq!(devs, (0..4).collect::<Vec<_>>(), "{c}");
+    }
+    // and best names its placement
+    assert!(result_field(&j, "best")
+        .get("placement")
+        .and_then(Json::as_str)
+        .is_some());
+
+    // responses stay bit-identical across worker counts with the
+    // optimizer and adaptive epochs on
+    let (again, _) = run_lines(line, &opts_with_workers(1));
+    assert_eq!(lines, again);
+}
+
+#[test]
+fn placement_opt_fields_are_strictly_validated() {
+    for body in [
+        r#""sweep":{"placement_opt":"yes"}"#,
+        r#""sweep":{"prune_epochs":0}"#,
+        r#""sweep":{"beam":0}"#,
+        r#""sweep":{"beem":2}"#,
+    ] {
+        let line = format!(r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},{body}}}"#);
+        let (lines, _) = run_lines(&line, &opts_with_workers(1));
+        let j = parse(&lines[0]);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{body}");
+        assert_eq!(
+            j.get("error").unwrap().get("kind").and_then(Json::as_str),
+            Some("bad_request"),
+            "{body}"
+        );
+    }
+}
+
+#[test]
+fn save_interval_persists_snapshots_while_the_daemon_runs() {
+    use std::io::{BufReader, Read};
+    use std::sync::mpsc;
+    use std::time::{Duration, Instant};
+
+    /// Blocks between chunks like a live client connection, so the daemon
+    /// stays up while the test inspects the cache dir.
+    struct ChannelReader {
+        rx: mpsc::Receiver<Vec<u8>>,
+        buf: Vec<u8>,
+        pos: usize,
+    }
+    impl Read for ChannelReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.buf.len() {
+                match self.rx.recv() {
+                    Ok(b) => {
+                        self.buf = b;
+                        self.pos = 0;
+                    }
+                    Err(_) => return Ok(0), // sender dropped = EOF
+                }
+            }
+            let n = (self.buf.len() - self.pos).min(out.len());
+            out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    let dir = fresh_cache_dir("interval");
+    let opts = ServeOpts {
+        workers: 1,
+        cache_dir: Some(dir.clone()),
+        save_interval: Some(Duration::from_millis(50)),
+    };
+    let (tx, rx) = mpsc::channel::<Vec<u8>>();
+    let daemon = std::thread::spawn({
+        let opts = opts.clone();
+        move || {
+            serve_ndjson(
+                BufReader::new(ChannelReader {
+                    rx,
+                    buf: Vec::new(),
+                    pos: 0,
+                }),
+                std::io::sink(),
+                &opts,
+            )
+        }
+    });
+
+    // one sweep fills a cache; the daemon then idles (no EOF yet) and the
+    // periodic saver must persist a snapshot on its own
+    tx.send(format!("{}\n", small_sweep("s", 4)).into_bytes())
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let snapshot_on_disk = loop {
+        let files: Vec<String> = std::fs::read_dir(&dir)
+            .map(|rd| {
+                rd.map(|e| e.unwrap().file_name().into_string().unwrap())
+                    .collect()
+            })
+            .unwrap_or_default();
+        if files
+            .iter()
+            .any(|f| f.starts_with("cache-") && f.ends_with(".json"))
+        {
+            break true;
+        }
+        if Instant::now() > deadline {
+            break false;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(
+        snapshot_on_disk,
+        "periodic saver wrote no snapshot while the daemon was live"
+    );
+
+    drop(tx); // EOF: drain and exit
+    let summary = daemon.join().unwrap();
+    assert_eq!(summary.sweeps, 1);
+    assert_eq!(summary.snapshots_saved, 1, "final save still happens");
+    // atomic writes: with the saver stopped, no torn .tmp is left behind
+    let leftover: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .filter(|f| f.ends_with(".tmp"))
+        .collect();
+    assert!(leftover.is_empty(), "leftover tmp files: {leftover:?}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -1,32 +1,44 @@
 //! Bench: what-if service throughput — concurrent requests over one shared
 //! profile cache vs the same request stream served serially.
 //!
-//! Feeds a mixed NDJSON session (distinct sweeps + repeats) through the
-//! in-process service core at worker counts 1 / N, asserts the response
-//! streams are byte-identical (the service determinism contract), and
-//! reports requests/second plus the cache's cross-request dedup. Emits a
-//! machine-readable BENCH_service.json line like the engine bench.
+//! Two scenarios:
+//!
+//! * **single stream** — a mixed NDJSON session (distinct sweeps +
+//!   repeats) through the in-process service core at worker counts 1 / N,
+//!   asserting the response streams are byte-identical (the service
+//!   determinism contract) and reporting requests/second plus the cache's
+//!   cross-request dedup.
+//! * **saturation** — the same dialogue fanned out over 8 concurrent TCP
+//!   connections at worker counts 1 / N, asserting every *connection's*
+//!   stream is byte-identical across worker counts (the per-connection
+//!   determinism contract of ISSUE 6) and reporting aggregate
+//!   requests/second under multi-tenant load.
+//!
+//! Emits a machine-readable BENCH_service.json line like the engine bench.
 
-use std::io::Cursor;
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Cursor, Write};
+use std::net::{TcpListener, TcpStream};
 use std::time::Instant;
 
 use distsim::config::Json;
-use distsim::service::{serve_ndjson, ServeOpts};
+use distsim::service::{serve_ndjson, serve_tcp, ServeOpts};
 
-fn request(id: usize, model: &str, batch: usize) -> String {
+fn request(id: &str, model: &str, batch: usize) -> String {
     format!(
-        r#"{{"id":"r{id}","op":"sweep","model":"{model}","cluster":{{"preset":"a10","nodes":4,"gpus_per_node":4}},"sweep":{{"global_batch":{batch},"profile_iters":1}}}}"#
+        r#"{{"id":"{id}","op":"sweep","model":"{model}","cluster":{{"preset":"a10","nodes":4,"gpus_per_node":4}},"sweep":{{"global_batch":{batch},"profile_iters":1}}}}"#
     )
 }
+
+const SHAPES: [(&str, usize); 3] = [("bert-large", 16), ("bert-exlarge", 16), ("bert-large", 32)];
 
 fn session() -> String {
     // 12 requests: 3 distinct shapes x 4 repeats each, interleaved — the
     // shape of a real what-if dialogue (ask, tweak, re-ask)
-    let shapes = [("bert-large", 16), ("bert-exlarge", 16), ("bert-large", 32)];
     (0..12)
         .map(|i| {
-            let (m, b) = shapes[i % shapes.len()];
-            request(i, m, b)
+            let (m, b) = SHAPES[i % SHAPES.len()];
+            request(&format!("r{i}"), m, b)
         })
         .collect::<Vec<_>>()
         .join("\n")
@@ -42,6 +54,58 @@ fn run(workers: usize, input: &str) -> (String, f64) {
     let t0 = Instant::now();
     serve_ndjson(Cursor::new(input.to_string()), &mut out, &opts);
     (String::from_utf8(out).unwrap(), t0.elapsed().as_secs_f64())
+}
+
+const SAT_CONNS: usize = 8;
+const SAT_REQS_PER_CONN: usize = 6;
+
+/// Fan the dialogue out over `SAT_CONNS` concurrent TCP connections and
+/// collect each connection's response stream. Returns (per-connection
+/// streams, wall seconds).
+fn run_saturation(workers: usize) -> (BTreeMap<String, Vec<String>>, f64) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let opts = ServeOpts {
+        workers,
+        ..ServeOpts::default()
+    };
+    let daemon = std::thread::spawn(move || serve_tcp(listener, &opts).expect("serve_tcp"));
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..SAT_CONNS {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            for i in 0..SAT_REQS_PER_CONN {
+                // each connection walks the shapes in its own order, with
+                // an in-connection repeat so per-conn cache re-scoping is
+                // exercised too
+                let (m, b) = SHAPES[(c + i) % SHAPES.len()];
+                writeln!(stream, "{}", request(&format!("c{c}-r{i}"), m, b)).expect("send");
+            }
+            stream.flush().expect("flush");
+            let reader = BufReader::new(stream.try_clone().expect("clone"));
+            let lines: Vec<String> = reader
+                .lines()
+                .take(SAT_REQS_PER_CONN)
+                .map(|l| l.expect("read"))
+                .collect();
+            assert_eq!(lines.len(), SAT_REQS_PER_CONN, "short stream on conn {c}");
+            (format!("c{c}"), lines)
+        }));
+    }
+    let mut by_conn = BTreeMap::new();
+    for h in handles {
+        let (tag, lines) = h.join().expect("client");
+        by_conn.insert(tag, lines);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut ctl = TcpStream::connect(addr).expect("connect ctl");
+    writeln!(ctl, r#"{{"op":"shutdown"}}"#).expect("send shutdown");
+    ctl.flush().expect("flush");
+    daemon.join().expect("daemon");
+    (by_conn, wall)
 }
 
 fn main() {
@@ -87,6 +151,31 @@ fn main() {
     );
     assert_eq!(misses(&last), 0, "repeats must be full cache hits");
 
+    // multi-connection saturation: same worker counts, 8 concurrent
+    // tenants, per-connection byte-identity
+    let sat_requests = SAT_CONNS * SAT_REQS_PER_CONN;
+    println!(
+        "\n# saturation: {SAT_CONNS} TCP connections x {SAT_REQS_PER_CONN} requests\n"
+    );
+    let (sat_serial, sat_serial_wall) = run_saturation(1);
+    let (sat_parallel, sat_parallel_wall) = run_saturation(parallel_workers);
+    assert_eq!(
+        sat_serial, sat_parallel,
+        "every connection's stream must be bit-identical for any worker count"
+    );
+    println!(
+        "1 worker:          {sat_serial_wall:.3} s  ({:.1} req/s aggregate)",
+        sat_requests as f64 / sat_serial_wall
+    );
+    println!(
+        "{parallel_workers} workers:         {sat_parallel_wall:.3} s  ({:.1} req/s aggregate)",
+        sat_requests as f64 / sat_parallel_wall
+    );
+    println!(
+        "wall-clock improvement: {:.2}x   per-connection streams identical: true",
+        sat_serial_wall / sat_parallel_wall
+    );
+
     println!(
         "BENCH_service.json {}",
         Json::obj(vec![
@@ -99,6 +188,17 @@ fn main() {
                 Json::num(serial_wall / parallel_wall)
             ),
             ("identical", Json::Bool(true)),
+            (
+                "saturation",
+                Json::obj(vec![
+                    ("connections", Json::num(SAT_CONNS as f64)),
+                    ("requests", Json::num(sat_requests as f64)),
+                    ("serial_seconds", Json::num(sat_serial_wall)),
+                    ("parallel_seconds", Json::num(sat_parallel_wall)),
+                    ("speedup", Json::num(sat_serial_wall / sat_parallel_wall)),
+                    ("per_connection_identical", Json::Bool(true)),
+                ])
+            ),
         ])
     );
 }

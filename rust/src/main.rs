@@ -8,7 +8,7 @@
 //! distsim search    [--model bert-exlarge] [--global-batch 16] [--cache-file F]
 //!                   [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
 //! distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
-//!                   [--save-interval SECS]
+//!                   [--save-interval SECS] [--max-queue N]
 //! distsim ask       [--model M ...] | --file req.ndjson  [--connect HOST:PORT]
 //! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
 //! distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
@@ -117,11 +117,14 @@ USAGE:
                     # the named placements; --prune-epochs N re-prunes
                     # against the incumbent every 1/N of the sweep
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
-                    [--save-interval SECS]
+                    [--save-interval SECS] [--max-queue N]
                     # long-lived what-if daemon: one NDJSON request per
-                    # line in, one deterministic response line out;
+                    # line in, one response line out, each connection's
+                    # responses in its own admission order;
                     # --save-interval additionally snapshots caches
-                    # periodically (atomic tmp-file + rename)
+                    # periodically (atomic tmp-file + rename);
+                    # --max-queue bounds queued sweeps (default 1024),
+                    # overflow answered with a structured `unavailable`
   distsim ask       [--model M --global-batch B ...] | --file req.ndjson
                     [--connect HOST:PORT] [--timing] [--workers W]
                     [--cache-dir DIR]
@@ -405,6 +408,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .and_then(|v| v.parse::<u64>().ok())
             .filter(|&s| s > 0)
             .map(std::time::Duration::from_secs),
+        // 0 = the default bound; sweeps past it shed with `unavailable`
+        max_queue: usize_flag(flags, "max-queue", 0),
+        ..Default::default()
     };
     if flags.contains_key("stdio") {
         let stdin = std::io::stdin();

@@ -24,13 +24,28 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
 
 use crate::cluster::{ClusterSpec, Placement};
 use crate::config::Json;
 use crate::cost::CostBook;
 use crate::events::{Event, EventDb};
 use crate::profile::{profile_single, ProfileReport, ProfiledEvent};
+
+/// Lock a mutex, recovering from poisoning (ISSUE 6).
+///
+/// Every mutex in the cache/service layer guards an **append-only**
+/// structure (entry maps that only gain measured cells, counters that only
+/// grow, queues whose elements are owned values): a panic that unwinds
+/// while the guard is held can abandon the holder's *intent* but can never
+/// leave the guarded data half-mutated in a way later readers would
+/// misinterpret. Recovering the poisoned guard is therefore safe — and
+/// necessary: the daemon catches sweep panics with `catch_unwind`, and a
+/// single poisoned `.lock().unwrap()` would otherwise wedge every
+/// subsequent request (the poisoned-lock daemon crash of ISSUE 6).
+pub(crate) fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shared cache of profiled event costs.
 ///
@@ -115,7 +130,7 @@ pub struct LookupLog {
 
 impl LookupLog {
     pub fn record(&self, event: &Event, p: &ProfiledEvent) {
-        let mut map = self.entries.lock().unwrap();
+        let mut map = lock_recover(&self.entries);
         if let Some(e) = map.get_mut(event) {
             e.1 += 1;
         } else {
@@ -129,7 +144,7 @@ impl LookupLog {
         let mut v: Vec<EventUse> = self
             .entries
             .into_inner()
-            .unwrap()
+            .unwrap_or_else(PoisonError::into_inner)
             .into_iter()
             .map(|(ev, (p, lookups))| EventUse {
                 key: ev.key(),
@@ -258,7 +273,7 @@ impl ProfileCache {
 
     /// Number of descriptors with a measured (or restored) value.
     pub fn measured_len(&self) -> usize {
-        let map = self.entries.lock().unwrap();
+        let map = lock_recover(&self.entries);
         map.values().filter(|c| c.get().is_some()).count()
     }
 
@@ -284,7 +299,7 @@ impl ProfileCache {
                 "ProfileCache snapshot requested under a different profiling protocol"
             );
         }
-        let map = self.entries.lock().unwrap();
+        let map = lock_recover(&self.entries);
         let mut entries: Vec<(String, Json)> = map
             .iter()
             .filter_map(|(ev, cell)| {
@@ -369,7 +384,7 @@ impl ProfileCache {
             .expect("fresh cache");
         let mut keys = HashSet::new();
         {
-            let mut map = cache.entries.lock().unwrap();
+            let mut map = lock_recover(&cache.entries);
             for e in j
                 .get("entries")
                 .and_then(Json::as_arr)
@@ -430,7 +445,7 @@ impl ProfileCache {
         );
         let key = db.get(id).clone();
         let cell = {
-            let mut map = self.entries.lock().unwrap();
+            let mut map = lock_recover(&self.entries);
             map.entry(key).or_default().clone()
         };
         let mut measured = false;
@@ -489,7 +504,7 @@ impl ProfileCache {
     /// Snapshot of the cache's deterministic totals. `iters` must match
     /// the profiling protocol used to fill the cache (GPU-second scaling).
     pub fn stats(&self, iters: usize) -> CacheStats {
-        let map = self.entries.lock().unwrap();
+        let map = lock_recover(&self.entries);
         // sort by event name so the f64 sum is bit-stable across runs
         // (HashMap iteration order is not)
         let mut profiled: Vec<(String, ProfiledEvent)> = map
@@ -520,6 +535,17 @@ impl ProfileCache {
             extrapolated: s.extrapolated,
             cache_hits: s.hits,
         }
+    }
+
+    /// Test-only fault injection: panic while *holding* the entries lock,
+    /// genuinely poisoning it the way a panicking sweep caught by the
+    /// daemon's `catch_unwind` would. Exists so the poisoned-lock recovery
+    /// path (ISSUE 6) can be exercised end-to-end without depending on a
+    /// data-dependent panic inside the evaluator.
+    #[doc(hidden)]
+    pub fn panic_holding_entries_lock(&self) -> ! {
+        let _guard = lock_recover(&self.entries);
+        panic!("injected panic while holding the profile-cache entries lock");
     }
 }
 
@@ -759,6 +785,62 @@ mod tests {
         assert_eq!((warm.hits, warm.misses), (2, 0));
         assert_eq!(warm.gpu_seconds, 0.0);
         assert_eq!(warm.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn poisoned_entries_lock_is_recovered_not_fatal() {
+        // ISSUE 6: a panic unwinding through a held entries guard poisons
+        // the mutex; every cache operation must keep working afterwards
+        // (the map is append-only, so recovery is safe).
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostBook::default();
+        let cache = Arc::new(ProfileCache::new());
+        let mut db = EventDb::new();
+        let a = db.intern(comp("pre-poison", 1 << 28));
+        let before = cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+
+        let poisoner = Arc::clone(&cache);
+        let panicked = std::thread::spawn(move || poisoner.panic_holding_entries_lock())
+            .join()
+            .is_err();
+        assert!(panicked, "injection must actually panic");
+        assert!(cache.entries.is_poisoned(), "lock must be genuinely poisoned");
+
+        // reads, writes and snapshots all survive the poisoned state
+        assert_eq!(cache.measured_len(), 1);
+        let again = cache.get_or_profile(&db, a, &cluster, &cost, 0.0, 1, 7);
+        assert_eq!(again, before);
+        let b = db.intern(comp("post-poison", 1 << 29));
+        cache.get_or_profile(&db, b, &cluster, &cost, 0.0, 1, 7);
+        assert_eq!(cache.measured_len(), 2);
+        let s = cache.stats(1);
+        assert_eq!(s.unique_events, 2);
+        let snap = cache.save_json(&cluster, &cost, 0.0, 1, 7).to_string();
+        assert!(snap.contains("post-poison"));
+    }
+
+    #[test]
+    fn poisoned_lookup_log_still_drains() {
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let cost = CostBook::default();
+        let cache = ProfileCache::new();
+        let log = Arc::new(LookupLog::default());
+        let mut db = EventDb::new();
+        db.intern(comp("logged", 1 << 28));
+        cache.profile_into_logged(&mut db, &cluster, &cost, 0.0, 1, 7, Some(&log));
+
+        let poisoner = Arc::clone(&log);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.entries.lock().unwrap();
+            panic!("poison the log");
+        })
+        .join();
+        assert!(log.entries.is_poisoned());
+
+        let log = Arc::into_inner(log).expect("sole owner");
+        let uses = log.into_uses(1);
+        assert_eq!(uses.len(), 1);
+        assert_eq!(uses[0].lookups, 1);
     }
 
     #[test]

@@ -50,7 +50,7 @@ use crate::schedule::SchedKind;
 use crate::strategy::Strategy;
 
 use super::cache::{stats_against, CacheStats, EventUse, LookupLog, ProfileCache};
-use super::pipeline::{self, CandidateSpace, EpochPlan, PruneStats, NO_TABLE};
+use super::pipeline::{self, CancelToken, CandidateSpace, EpochPlan, PruneStats, NO_TABLE};
 
 /// Sweep parameters. `Default` mirrors the seed's protocol (power-of-two
 /// grid, DistSim profiling seed 7777, cache on, no pruning).
@@ -429,6 +429,9 @@ pub struct SearchEngine<'a> {
     cfg: SweepConfig,
     cache: Arc<ProfileCache>,
     prior: HashSet<String>,
+    /// Cooperative cancellation flag ([`SearchEngine::with_cancel`]);
+    /// default is a never-fired token, so plain sweeps are unaffected.
+    cancel: CancelToken,
     /// The candidate space, built once per engine (the optimizer's table
     /// enumeration and bound-ranking are not free — `space()` memoizes).
     space: OnceLock<CandidateSpace>,
@@ -473,6 +476,7 @@ impl<'a> SearchEngine<'a> {
             cfg,
             cache,
             prior: HashSet::new(),
+            cancel: CancelToken::default(),
             space: OnceLock::new(),
         }
     }
@@ -508,6 +512,19 @@ impl<'a> SearchEngine<'a> {
     /// charge them no GPU-seconds.
     pub fn with_prior(mut self, prior: HashSet<String>) -> Self {
         self.prior = prior;
+        self
+    }
+
+    /// Attach a cooperative [`CancelToken`]. The sweep checks it at
+    /// candidate-evaluation boundaries — at every pruning-epoch head and
+    /// before dispatching each candidate — and stops evaluating once it
+    /// fires; candidates never evaluated come back as unreachable
+    /// placeholders (`throughput 0`, `reachable false`). A cancelled
+    /// sweep's report is *not* covered by the bit-identity contract
+    /// (which boundary observes the flag is wall-clock), like
+    /// deadline-bearing requests in the service.
+    pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
+        self.cancel = cancel;
         self
     }
 
@@ -715,6 +732,11 @@ impl<'a> SearchEngine<'a> {
         let mut incumbent = 0.0f64;
         let mut epoch = 0usize;
         while !plan.exhausted() {
+            // cancellation boundary: a fired token stops scheduling new
+            // epochs; already-landed results stay valid
+            if self.cancel.is_cancelled() {
+                break;
+            }
             // re-prune the not-yet-scheduled remainder against the
             // incumbent (epoch 1 = the historical single up-front pass;
             // later epochs are the adaptive re-pruning)
@@ -763,6 +785,12 @@ impl<'a> SearchEngine<'a> {
                 std::thread::scope(|scope| {
                     for _ in 0..chunk_threads {
                         scope.spawn(move || loop {
+                            // per-candidate cancellation boundary: stop
+                            // claiming work once the token fires (a
+                            // started evaluation runs to completion)
+                            if self.cancel.is_cancelled() {
+                                break;
+                            }
                             let k = queue.fetch_add(1, Ordering::Relaxed);
                             if k >= chunk.len() {
                                 break;
@@ -779,20 +807,32 @@ impl<'a> SearchEngine<'a> {
                 });
             }
             // land results by index; fold the incumbent in chunk order (a
-            // max — independent of the workers' interleaving)
+            // max — independent of the workers' interleaving). An empty
+            // slot means the token fired before a worker claimed it — only
+            // reachable on cancelled sweeps; the placeholder fill below
+            // covers it.
             for (k, &i) in chunk.iter().enumerate() {
-                let (cand, rep, ms) = slots[k]
-                    .lock()
-                    .unwrap()
-                    .take()
-                    .expect("worker left a slot empty");
-                incumbent = incumbent.max(cand.throughput);
-                candidates[i] = Some(cand);
-                reports[i] = rep;
-                per_ms[i] = ms;
+                let taken = slots[k].lock().unwrap().take();
+                match taken {
+                    Some((cand, rep, ms)) => {
+                        incumbent = incumbent.max(cand.throughput);
+                        candidates[i] = Some(cand);
+                        reports[i] = rep;
+                        per_ms[i] = ms;
+                    }
+                    None => debug_assert!(
+                        self.cancel.is_cancelled(),
+                        "worker left a slot empty without cancellation"
+                    ),
+                }
             }
         }
-        stats.evaluated = n - stats.bound_pruned - stats.epoch_repruned;
+        // on a cancelled sweep the unclaimed candidates were neither pruned
+        // nor evaluated; count only what actually ran (identical to
+        // `n - pruned` when the token never fired)
+        stats.evaluated = candidates.iter().filter(|c| c.is_some()).count()
+            - stats.bound_pruned
+            - stats.epoch_repruned;
 
         // aggregate profiling cost deterministically: the sweep's own
         // lookup log in sorted-key order, accounted against the prior —
@@ -822,7 +862,27 @@ impl<'a> SearchEngine<'a> {
         SweepReport {
             candidates: candidates
                 .into_iter()
-                .map(|c| c.expect("every candidate resolved"))
+                .enumerate()
+                .map(|(i, c)| {
+                    c.unwrap_or_else(|| {
+                        // only reachable when the sweep was cancelled:
+                        // an unevaluated spec comes back as a
+                        // non-deployable placeholder
+                        debug_assert!(self.cancel.is_cancelled());
+                        SweepCandidate {
+                            strategy: specs[i].strategy,
+                            micro_batch_size: specs[i].micro_batch_size,
+                            micro_batches: specs[i].micro_batches,
+                            schedule: specs[i].schedule,
+                            placement: specs[i].placement,
+                            table: specs[i].table,
+                            throughput: 0.0,
+                            reachable: false,
+                            pruned: false,
+                            bound_throughput: bounds[i],
+                        }
+                    })
+                })
                 .collect(),
             profile,
             cache: cache_stats,

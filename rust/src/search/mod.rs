@@ -54,8 +54,8 @@ pub use engine::{
     SweepConfig, SweepReport,
 };
 pub use pipeline::{
-    enumerate_canonical_tables, CandidateSpace, PlacementOptimizer, PruneStats, NO_TABLE,
-    PLACEMENT_EXHAUSTIVE_LIMIT,
+    enumerate_canonical_tables, CancelToken, CandidateSpace, PlacementOptimizer, PruneStats,
+    NO_TABLE, PLACEMENT_EXHAUSTIVE_LIMIT,
 };
 
 use crate::cluster::ClusterSpec;

@@ -42,6 +42,8 @@
 //! accounting.
 
 use std::collections::{BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use crate::baseline::analytical::analytical_batch_time_us;
 use crate::cluster::{ClusterSpec, Placement, PlacementPolicy};
@@ -69,6 +71,43 @@ pub const PLACEMENT_EXHAUSTIVE_LIMIT: usize = 128;
 /// survivors: the three named placements plus the lane-alternating and
 /// weight-greedy anchors.
 const ANCHOR_TABLES: usize = 5;
+
+/// Cooperative cancellation flag for an in-flight sweep (ISSUE 6).
+///
+/// Cloned into every evaluation worker; the sweep checks it at
+/// candidate-evaluation boundaries — at the top of every pruning epoch
+/// and before each individual candidate — and stops dispatching new work
+/// once it fires. A candidate whose evaluation has *started* runs to
+/// completion (evaluation never observes the flag mid-candidate), so
+/// cancellation can never produce a torn measurement or a torn cache
+/// entry; everything the cancelled sweep did measure stays valid in the
+/// shared [`ProfileCache`](super::ProfileCache).
+///
+/// Cancellation is inherently wall-clock (like `budget.deadline_ms`):
+/// which candidate boundary observes the flag depends on timing, so a
+/// cancelled sweep's partial report is *not* covered by the bit-identity
+/// contract. Callers that care about determinism simply never cancel.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    fired: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    /// A fresh, un-fired token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fire the token. Idempotent; safe from any thread.
+    pub fn cancel(&self) {
+        self.fired.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`cancel`](Self::cancel) been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+}
 
 /// Accounting of the pruning layer — what the `distsim search` accounting
 /// block, the service's `pruning` response object and

@@ -1,44 +1,86 @@
 //! The long-lived what-if daemon: transports, worker pool, cache registry
-//! and the in-order response writer.
+//! and the per-connection in-order response writer.
 //!
 //! ## Architecture
 //!
 //! ```text
-//!  stdin / TCP conns --> reader(s) --parse--> job queue --> worker pool
-//!                                     |  (seq-stamped)        |  sweeps share
-//!                                     |                       |  per-fingerprint
-//!                                     v                       v  ProfileCaches
-//!                                 done map (seq -> outcome) <-+
-//!                                     |
-//!                                     v
-//!                              writer: emits responses in admission
-//!                              order, re-accounting cache stats
-//!                              "as-if-serial"
+//!  stdin / TCP conns --> reader(s) --parse--> bounded job queue --> workers
+//!          |  control ops (ping/stats/      |  (per-conn seq)        |
+//!          |  shutdown/cancel) answered     |  full => structured    |  sweeps share
+//!          |  inline by the reader          |  `unavailable` shed    |  per-fingerprint
+//!          v                                v                        v  ProfileCaches
+//!      done map ((conn, seq) -> outcome) <--------------------------+
+//!          |
+//!          v
+//!      writer: per-connection pipelines — each connection's responses
+//!      in *its own* admission order, cache stats re-accounted
+//!      "as-if-serial" against a per-connection prior
 //! ```
+//!
+//! **Per-connection ordering (ISSUE 6).** Responses are delivered in
+//! per-connection admission order: connection C's k-th request gets C's
+//! k-th response line, but one connection's slow sweep never delays
+//! another connection's responses — a `ping` on an idle connection is
+//! answered immediately while a neighbour's sweep runs (the daemon used
+//! to deliver in *global* admission order, head-of-line blocking every
+//! client behind the slowest). Control ops (`ping`, `stats`, `shutdown`,
+//! `cancel`) are answered inline by the connection's reader without
+//! entering the job queue, so they stay prompt even when the queue is
+//! full.
 //!
 //! **Determinism.** Each request's deterministic payload (candidates,
 //! throughputs) depends only on the request itself — profiled costs are
 //! functions of (descriptor, cluster, cost, protocol), never of which
 //! request measured them first. Cache hit/miss accounting *would* be racy
-//! under sharing, so the writer recomputes it deterministically: request
-//! k's misses are the unique events of k not in the union of the loaded
-//! snapshot and requests 0..k-1's events — exactly what serial execution
-//! in admission order would report. Responses are therefore bit-identical
-//! for any worker count and any execution interleaving ( `tests/service.rs`
-//! pins 1-vs-4 workers byte-for-byte). Two deliberate exceptions opt out
-//! of the contract: the `stats` op is a *diagnostic* — it reports live
-//! cache occupancy at write time — and a request that sets
-//! `budget.deadline_ms` trades determinism for a bounded queue wait
-//! (whether it expired depends on wall-clock). Requests without a
-//! deadline are never affected by either.
+//! under sharing, so the writer recomputes it deterministically,
+//! re-scoped **per connection** (DESIGN.md §4.2): request k of connection
+//! C charges as misses exactly its unique events not in the union of the
+//! loaded snapshot and C's *own* requests 0..k-1 — a pure function of
+//! C's request sequence. Each connection's response stream is therefore
+//! bit-identical for any worker count, any cross-connection
+//! interleaving, and any traffic on other connections
+//! (`tests/saturation.rs` pins 1-vs-4 workers byte-for-byte across ~100
+//! connections). The conceptual global merge order is the writer's
+//! `(connection, per-connection seq)` key order — deterministic, but no
+//! response ever waits on another connection's progress, because no
+//! response *depends* on another connection's requests. Three deliberate
+//! exceptions opt out of the contract: the `stats` op (a diagnostic —
+//! live cache occupancy at write time), `budget.deadline_ms` requests
+//! (whether the deadline expired is wall-clock), and cancelled sweeps
+//! (which candidate boundary observes the token is wall-clock). Requests
+//! using none of those are never affected.
 //!
-//! **Fairness.** Jobs start in admission order (FIFO queue) and responses
-//! are *delivered* in admission order; a slow early request delays later
-//! responses (head-of-line) but never changes them. Deadlines
-//! (`budget.deadline_ms`) bound queue wait only: an expired request is
-//! answered with a structured `deadline` error before it starts, and a
-//! request that did start always runs to completion — wall-clock never
-//! truncates a payload.
+//! **Fairness and backpressure.** Jobs start in global admission order
+//! (FIFO queue) over the shared worker pool; responses are *delivered*
+//! per connection as soon as that connection's turn comes. The admission
+//! queue is bounded ([`ServeOpts::max_queue`], `--max-queue`, default
+//! [`DEFAULT_MAX_QUEUE`]): a sweep that would overflow it is answered
+//! immediately with a structured `unavailable` error (load shed) instead
+//! of growing the queue without bound. A job racing with shutdown gets
+//! the same `unavailable` kind — the request was well-formed; the daemon
+//! just can't serve it. Deadlines (`budget.deadline_ms`) bound queue
+//! wait only: an expired request is answered with a structured
+//! `deadline` error before it starts, and a request that did start
+//! always runs to completion — wall-clock never truncates a payload.
+//!
+//! **Cancellation.** `{"op":"cancel","target":ID}` aborts the same
+//! connection's queued or running sweep whose request id is `ID`: a
+//! queued job is yanked from the queue outright (its response is a
+//! `cancelled` error, the cancel's own response reports
+//! `"cancelled_queued"`); a running sweep's [`CancelToken`] fires and
+//! the engine stops at the next candidate-evaluation boundary
+//! (`"cancelling"`, and the sweep answers with a `cancelled` error when
+//! it stops); anything else — finished, unknown, or submitted without an
+//! id — is `"not_found"`. Cancellation is cooperative and best-effort:
+//! a sweep that completes before its token is observed completes
+//! normally from the engine's point of view, but its report is
+//! discarded and a `cancelled` error is answered (cancel wins).
+//!
+//! **Crash-resilience.** A panicking sweep is caught (`catch_unwind`)
+//! and answered as an `internal` error; mutexes it may have poisoned on
+//! the way out are recovered ([`crate::search::cache::lock_recover`] —
+//! every guarded structure here is append-only, so recovery is safe)
+//! rather than killing every later locker and wedging the daemon.
 
 use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::io::{BufRead, BufReader, Write};
@@ -52,11 +94,18 @@ use std::time::{Duration, Instant};
 use crate::cluster::ClusterSpec;
 use crate::config::Json;
 use crate::cost::CostBook;
+use crate::search::cache::lock_recover;
 use crate::search::{
-    fingerprint, stats_against, ProfileCache, SearchEngine, SweepReport,
+    fingerprint, stats_against, CancelToken, ProfileCache, SearchEngine, SweepReport,
 };
 
 use super::protocol::{self, ErrorKind, Request, ServiceError, SweepRequest};
+
+/// Default admission-queue bound when [`ServeOpts::max_queue`] is 0:
+/// generous enough that well-behaved clients never see it, small enough
+/// that a runaway client sheds load instead of growing memory without
+/// bound.
+pub const DEFAULT_MAX_QUEUE: usize = 1024;
 
 /// Daemon configuration (transport-independent).
 #[derive(Debug, Clone, Default)]
@@ -72,6 +121,27 @@ pub struct ServeOpts {
     /// atomic (tmp file + rename), so a reader — or a crash mid-write —
     /// never observes a torn snapshot. No-op without a cache dir.
     pub save_interval: Option<Duration>,
+    /// Bound on queued (admitted, not yet started) sweeps; a sweep that
+    /// would overflow it is answered with a structured `unavailable`
+    /// error instead (`--max-queue`). 0 means [`DEFAULT_MAX_QUEUE`].
+    pub max_queue: usize,
+    /// Test-only fault injection: a sweep whose request id equals this
+    /// panics inside the worker while holding the profile-cache entries
+    /// lock, exercising the poisoned-lock recovery path end to end. Not
+    /// reachable from the CLI.
+    #[doc(hidden)]
+    pub panic_inject_id: Option<String>,
+}
+
+impl ServeOpts {
+    /// The admission-queue bound actually enforced (0 → the default).
+    pub fn effective_max_queue(&self) -> usize {
+        if self.max_queue == 0 {
+            DEFAULT_MAX_QUEUE
+        } else {
+            self.max_queue
+        }
+    }
 }
 
 /// What a daemon run did, for callers that want to report it.
@@ -134,7 +204,7 @@ impl CacheRegistry {
         seed: u64,
     ) -> (String, Arc<ProfileCache>, Arc<HashSet<String>>) {
         let fp = fingerprint(cluster, cost, jitter, iters, seed);
-        if let Some(e) = self.map.lock().unwrap().get(&fp) {
+        if let Some(e) = lock_recover(&self.map).get(&fp) {
             return (fp, e.cache.clone(), e.preloaded.clone());
         }
         let loaded = self.dir.as_deref().and_then(|d| {
@@ -176,7 +246,7 @@ impl CacheRegistry {
                 protocol: (jitter, iters, seed),
             },
         };
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_recover(&self.map);
         let entry = map.entry(fp.clone()).or_insert(fresh);
         let out = (entry.cache.clone(), entry.preloaded.clone());
         (fp, out.0, out.1)
@@ -184,7 +254,7 @@ impl CacheRegistry {
 
     /// (fingerprint, measured entries) per cache, sorted by fingerprint.
     pub fn summary(&self) -> Vec<(String, usize)> {
-        let map = self.map.lock().unwrap();
+        let map = lock_recover(&self.map);
         let mut v: Vec<(String, usize)> = map
             .iter()
             .map(|(fp, e)| (fp.clone(), e.cache.measured_len()))
@@ -213,7 +283,7 @@ impl CacheRegistry {
         // never stalls workers admitting requests
         type Entry = (String, Arc<ProfileCache>, ClusterSpec, CostBook, (f64, usize, u64));
         let entries: Vec<Entry> = {
-            let map = self.map.lock().unwrap();
+            let map = lock_recover(&self.map);
             map.iter()
                 .filter(|(_, e)| e.cache.measured_len() > 0)
                 .map(|(fp, e)| {
@@ -271,12 +341,12 @@ impl PeriodicSaver {
     }
 
     fn run(&self, registry: &CacheRegistry, interval: Duration) {
-        let mut stopped = self.stop.lock().unwrap();
+        let mut stopped = lock_recover(&self.stop);
         loop {
             let (guard, timeout) = self
                 .cv
                 .wait_timeout(stopped, interval)
-                .expect("saver lock poisoned");
+                .unwrap_or_else(|e| e.into_inner());
             stopped = guard;
             if *stopped {
                 return;
@@ -284,13 +354,13 @@ impl PeriodicSaver {
             if timeout.timed_out() {
                 drop(stopped);
                 registry.save_all();
-                stopped = self.stop.lock().unwrap();
+                stopped = lock_recover(&self.stop);
             }
         }
     }
 
     fn stop(&self) {
-        *self.stop.lock().unwrap() = true;
+        *lock_recover(&self.stop) = true;
         self.cv.notify_all();
     }
 }
@@ -306,6 +376,12 @@ enum Outcome {
         include_timing: bool,
     },
     Error(ServiceError),
+    Cancel {
+        target: String,
+        /// `"cancelled_queued"` | `"cancelling"` | `"not_found"` — see
+        /// [`protocol::cancel_response`].
+        outcome: &'static str,
+    },
     Pong,
     Stats,
     Shutdown,
@@ -318,17 +394,33 @@ struct Completed {
 }
 
 struct Job {
+    /// Per-connection admission index (the writer delivers `conn`'s
+    /// responses in this order).
     seq: u64,
     conn: usize,
     req: Box<SweepRequest>,
     admitted_at: Instant,
+    /// Fired by a `cancel` op targeting this job's id.
+    cancel: CancelToken,
+}
+
+/// Cancellation handle for an admitted-but-unfinished sweep, kept in
+/// [`Shared::active`] under `(conn, request id)`. The `seq` disambiguates
+/// reused ids on one connection (last one wins; a stale completion only
+/// unregisters its own seq).
+#[derive(Clone)]
+struct JobHandle {
+    seq: u64,
+    cancel: CancelToken,
 }
 
 #[derive(Default)]
 struct DoneState {
-    map: BTreeMap<u64, Completed>,
-    /// Total requests admitted (sequence numbers 0..admitted are spoken
-    /// for); the writer exits once it has emitted all of them after close.
+    /// Finished outcomes awaiting delivery, keyed by `(conn, per-conn
+    /// seq)` — the writer's deterministic merge order.
+    ready: BTreeMap<(usize, u64), Completed>,
+    /// Total requests admitted across all connections; the writer exits
+    /// once it has emitted all of them after close.
     admitted: u64,
     closed: bool,
 }
@@ -340,48 +432,67 @@ struct QueueState {
 }
 
 /// Per-connection liveness: undelivered responses + whether the reader
-/// has exited. Lets the TCP transport reclaim a finished connection's
-/// socket as soon as its last response goes out — without dropping queued
-/// responses for half-close clients (write shut, still reading).
+/// has exited (plus the connection's admission counter). Lets the TCP
+/// transport reclaim a finished connection's socket as soon as its last
+/// response goes out — without dropping queued responses for half-close
+/// clients (write shut, still reading).
 #[derive(Default)]
 struct ConnLive {
     outstanding: usize,
     reader_done: bool,
+    /// Next per-connection sequence number to assign.
+    next_seq: u64,
 }
 
-#[derive(Default)]
 struct Shared {
     queue: Mutex<QueueState>,
     queue_cv: Condvar,
     done: Mutex<DoneState>,
     done_cv: Condvar,
     conns_live: Mutex<HashMap<usize, ConnLive>>,
+    /// Cancellation handles of admitted-but-unfinished sweeps that carry
+    /// a request id ((conn, id) → handle); id-less sweeps are not
+    /// addressable and never enter.
+    active: Mutex<HashMap<(usize, String), JobHandle>>,
+    /// Bound on `queue.jobs` ([`ServeOpts::effective_max_queue`]).
+    max_queue: usize,
     /// Set when a shutdown op is admitted: transports stop reading.
     stopping: AtomicBool,
 }
 
 impl Shared {
-    /// Admit one request from `conn`, assigning its global sequence number.
+    fn new(max_queue: usize) -> Self {
+        Shared {
+            queue: Mutex::default(),
+            queue_cv: Condvar::new(),
+            done: Mutex::default(),
+            done_cv: Condvar::new(),
+            conns_live: Mutex::default(),
+            active: Mutex::default(),
+            max_queue,
+            stopping: AtomicBool::new(false),
+        }
+    }
+
+    /// Admit one request from `conn`, assigning its per-connection
+    /// sequence number (the slot its response will be delivered in).
     fn admit(&self, conn: usize) -> u64 {
         let seq = {
-            let mut done = self.done.lock().unwrap();
-            let seq = done.admitted;
-            done.admitted += 1;
+            let mut map = lock_recover(&self.conns_live);
+            let c = map.entry(conn).or_default();
+            c.outstanding += 1;
+            let seq = c.next_seq;
+            c.next_seq += 1;
             seq
         };
-        self.conns_live
-            .lock()
-            .unwrap()
-            .entry(conn)
-            .or_default()
-            .outstanding += 1;
+        lock_recover(&self.done).admitted += 1;
         seq
     }
 
     /// One response delivered for `conn`; true when the connection is
     /// finished (reader gone, nothing left to deliver) and can be closed.
     fn response_delivered(&self, conn: usize) -> bool {
-        let mut map = self.conns_live.lock().unwrap();
+        let mut map = lock_recover(&self.conns_live);
         if let Some(c) = map.get_mut(&conn) {
             c.outstanding = c.outstanding.saturating_sub(1);
             if c.reader_done && c.outstanding == 0 {
@@ -395,7 +506,7 @@ impl Shared {
     /// `conn`'s reader exited; true when nothing is pending and the
     /// connection can be closed right away.
     fn reader_finished(&self, conn: usize) -> bool {
-        let mut map = self.conns_live.lock().unwrap();
+        let mut map = lock_recover(&self.conns_live);
         let c = map.entry(conn).or_default();
         c.reader_done = true;
         if c.outstanding == 0 {
@@ -406,27 +517,114 @@ impl Shared {
         }
     }
 
-    fn complete(&self, seq: u64, c: Completed) {
-        let mut done = self.done.lock().unwrap();
-        done.map.insert(seq, c);
+    fn complete(&self, conn: usize, seq: u64, c: Completed) {
+        let mut done = lock_recover(&self.done);
+        done.ready.insert((conn, seq), c);
         self.done_cv.notify_all();
     }
 
-    fn enqueue(&self, job: Job) {
-        let mut q = self.queue.lock().unwrap();
-        if q.closed {
-            // raced with shutdown: answer rather than silently dropping
-            let seq = job.seq;
-            let c = Completed {
+    /// Register a cancellation handle for an admitted sweep with an id.
+    /// A duplicate id on one connection replaces the handle: the *last*
+    /// job under an id is the cancellable one.
+    fn register_active(&self, conn: usize, id: &Option<String>, handle: JobHandle) {
+        if let Some(id) = id {
+            lock_recover(&self.active).insert((conn, id.clone()), handle);
+        }
+    }
+
+    /// Drop `(conn, id)`'s handle, but only if it still belongs to `seq`
+    /// (a reused id may have re-registered a newer job).
+    fn unregister_active(&self, conn: usize, id: &Option<String>, seq: u64) {
+        if let Some(id) = id {
+            let mut active = lock_recover(&self.active);
+            let key = (conn, id.clone());
+            if active.get(&key).map(|h| h.seq) == Some(seq) {
+                active.remove(&key);
+            }
+        }
+    }
+
+    /// Cancel `conn`'s sweep with request id `target`. Returns the
+    /// outcome word for [`protocol::cancel_response`].
+    fn cancel_target(&self, conn: usize, target: &str) -> &'static str {
+        let handle = lock_recover(&self.active)
+            .get(&(conn, target.to_string()))
+            .cloned();
+        let Some(handle) = handle else {
+            return "not_found";
+        };
+        // fire the token first: if the job is mid-sweep this is the
+        // cooperative interrupt; if it is still queued the yank below
+        // answers it without ever starting
+        handle.cancel.cancel();
+        let yanked = {
+            let mut q = lock_recover(&self.queue);
+            q.jobs
+                .iter()
+                .position(|j| j.conn == conn && j.seq == handle.seq)
+                .and_then(|pos| q.jobs.remove(pos))
+        };
+        match yanked {
+            Some(job) => {
+                self.unregister_active(conn, &job.req.id, job.seq);
+                self.complete(
+                    conn,
+                    job.seq,
+                    Completed {
+                        id: job.req.id.clone(),
+                        conn,
+                        outcome: Outcome::Error(ServiceError::new(
+                            ErrorKind::Cancelled,
+                            format!("sweep '{target}' cancelled while queued"),
+                        )),
+                    },
+                );
+                "cancelled_queued"
+            }
+            // not queued: either mid-sweep (the token interrupts it at
+            // the next candidate boundary) or finishing right now (the
+            // worker's post-sweep token check answers `cancelled`)
+            None => "cancelling",
+        }
+    }
+
+    /// Answer an admitted job that will never run with an `unavailable`
+    /// error (queue full, or racing with shutdown).
+    fn shed_job(&self, job: Job, message: String) {
+        self.unregister_active(job.conn, &job.req.id, job.seq);
+        self.complete(
+            job.conn,
+            job.seq,
+            Completed {
                 id: job.req.id.clone(),
                 conn: job.conn,
-                outcome: Outcome::Error(ServiceError::new(
-                    ErrorKind::BadRequest,
-                    "daemon is shutting down",
-                )),
-            };
+                outcome: Outcome::Error(ServiceError::new(ErrorKind::Unavailable, message)),
+            },
+        );
+    }
+
+    fn enqueue(&self, job: Job) {
+        let mut q = lock_recover(&self.queue);
+        if q.closed {
+            // raced with shutdown: answer rather than silently dropping.
+            // `unavailable`, not `bad_request` — the request was fine.
             drop(q);
-            self.complete(seq, c);
+            self.shed_job(job, "daemon is shutting down".to_string());
+            return;
+        }
+        if q.jobs.len() >= self.max_queue {
+            // bounded admission: shed load with a structured error
+            // instead of growing the queue without bound
+            let depth = q.jobs.len();
+            drop(q);
+            self.shed_job(
+                job,
+                format!(
+                    "admission queue is full ({depth} sweeps queued, --max-queue {}); \
+                     retry later",
+                    self.max_queue
+                ),
+            );
             return;
         }
         q.jobs.push_back(job);
@@ -435,9 +633,9 @@ impl Shared {
 
     /// No more requests will be admitted: wake everyone so they can drain.
     fn close(&self) {
-        self.queue.lock().unwrap().closed = true;
+        lock_recover(&self.queue).closed = true;
         self.queue_cv.notify_all();
-        self.done.lock().unwrap().closed = true;
+        lock_recover(&self.done).closed = true;
         self.done_cv.notify_all();
     }
 }
@@ -467,6 +665,7 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
             Err((id, err)) => {
                 let seq = shared.admit(conn);
                 shared.complete(
+                    conn,
                     seq,
                     Completed {
                         id,
@@ -478,6 +677,7 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
             Ok(Request::Ping { id }) => {
                 let seq = shared.admit(conn);
                 shared.complete(
+                    conn,
                     seq,
                     Completed {
                         id,
@@ -489,6 +689,7 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
             Ok(Request::Stats { id }) => {
                 let seq = shared.admit(conn);
                 shared.complete(
+                    conn,
                     seq,
                     Completed {
                         id,
@@ -497,10 +698,28 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
                     },
                 );
             }
+            Ok(Request::Cancel { id, target }) => {
+                // control op, answered inline: a cancel must work even
+                // (especially) when the job queue is saturated. Per-conn
+                // ordering puts the ack *after* the target's own response
+                // — the target was admitted earlier on this connection.
+                let seq = shared.admit(conn);
+                let outcome = shared.cancel_target(conn, &target);
+                shared.complete(
+                    conn,
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Cancel { target, outcome },
+                    },
+                );
+            }
             Ok(Request::Shutdown { id }) => {
                 shared.stopping.store(true, Ordering::SeqCst);
                 let seq = shared.admit(conn);
                 shared.complete(
+                    conn,
                     seq,
                     Completed {
                         id,
@@ -512,11 +731,21 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
             }
             Ok(Request::Sweep(req)) => {
                 let seq = shared.admit(conn);
+                let cancel = CancelToken::new();
+                shared.register_active(
+                    conn,
+                    &req.id,
+                    JobHandle {
+                        seq,
+                        cancel: cancel.clone(),
+                    },
+                );
                 shared.enqueue(Job {
                     seq,
                     conn,
                     req,
                     admitted_at: Instant::now(),
+                    cancel,
                 });
             }
         }
@@ -525,21 +754,31 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
 }
 
 /// Execute one admitted sweep job end to end.
-fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
+fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u64, Completed) {
     let req = &job.req;
+    let answer = |outcome: Outcome| {
+        (
+            job.seq,
+            Completed {
+                id: req.id.clone(),
+                conn: job.conn,
+                outcome,
+            },
+        )
+    };
+    if job.cancel.is_cancelled() {
+        // the cancel landed between dequeue and here: never start
+        return answer(Outcome::Error(ServiceError::new(
+            ErrorKind::Cancelled,
+            "sweep cancelled before it started",
+        )));
+    }
     if let Some(deadline) = job.req.deadline_ms {
         if job.admitted_at.elapsed() > Duration::from_millis(deadline) {
-            return (
-                job.seq,
-                Completed {
-                    id: req.id.clone(),
-                    conn: job.conn,
-                    outcome: Outcome::Error(ServiceError::new(
-                        ErrorKind::Deadline,
-                        format!("deadline of {deadline} ms expired before the sweep started"),
-                    )),
-                },
-            );
+            return answer(Outcome::Error(ServiceError::new(
+                ErrorKind::Deadline,
+                format!("deadline of {deadline} ms expired before the sweep started"),
+            )));
         }
     }
     let (fp, cache, preloaded) = registry.resolve(
@@ -549,7 +788,13 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
         req.sweep.profile_iters,
         req.sweep.profile_seed,
     );
+    let inject = panic_inject.is_some() && panic_inject == req.id.as_deref();
     let outcome = match catch_unwind(AssertUnwindSafe(|| {
+        if inject {
+            // test-only: blow up while holding the entries lock, leaving
+            // it poisoned for every later request to recover from
+            cache.panic_holding_entries_lock();
+        }
         // the snapshot's keys are the engine's prior: in-sweep accounting
         // (pruning.gpu_seconds_avoided) then agrees with the writer's
         // as-if-serial cache block that nothing a hit would have served
@@ -563,8 +808,16 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
             cache,
         )
         .with_prior((*preloaded).clone())
+        .with_cancel(job.cancel.clone())
         .sweep()
     })) {
+        // cancel wins a finish-line race: a report produced while (or
+        // after) the token fired is discarded, so the client that
+        // cancelled never has to parse a full sweep payload
+        Ok(_) if job.cancel.is_cancelled() => Outcome::Error(ServiceError::new(
+            ErrorKind::Cancelled,
+            "sweep cancelled at a candidate boundary",
+        )),
         Ok(report) => Outcome::Sweep {
             report: Box::new(report),
             fp,
@@ -580,20 +833,13 @@ fn run_job(registry: &CacheRegistry, job: Job) -> (u64, Completed) {
             Outcome::Error(ServiceError::new(ErrorKind::Internal, msg))
         }
     };
-    (
-        job.seq,
-        Completed {
-            id: req.id.clone(),
-            conn: job.conn,
-            outcome,
-        },
-    )
+    answer(outcome)
 }
 
-fn worker_loop(shared: &Shared, registry: &CacheRegistry) {
+fn worker_loop(shared: &Shared, registry: &CacheRegistry, panic_inject: Option<&str>) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(job) = q.jobs.pop_front() {
                     break job;
@@ -601,18 +847,28 @@ fn worker_loop(shared: &Shared, registry: &CacheRegistry) {
                 if q.closed {
                     return;
                 }
-                q = shared.queue_cv.wait(q).unwrap();
+                q = shared.queue_cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let (seq, completed) = run_job(registry, job);
-        shared.complete(seq, completed);
+        let (seq, completed) = run_job(registry, job, panic_inject);
+        // unregister BEFORE completing: once the response is deliverable
+        // a cancel for this id must be not_found, never a dangling handle
+        shared.unregister_active(completed.conn, &completed.id, seq);
+        shared.complete(completed.conn, seq, completed);
     }
 }
 
-/// Emit responses in admission order, recomputing per-request cache stats
-/// against the as-if-serial prior. `emit` receives (conn, line);
-/// `on_conn_idle` fires when a connection whose reader already exited has
-/// received its last pending response (transport closes it there).
+/// Emit responses in per-connection admission order, recomputing each
+/// sweep's cache stats against its *connection's* as-if-serial prior
+/// (loaded snapshot ∪ that connection's earlier sweeps — a pure function
+/// of the connection's own request sequence, so its stream is
+/// bit-identical for any worker count or cross-connection interleaving).
+/// A response is emitted as soon as it is the next one *for its
+/// connection*; the `(conn, seq)` key order of `ready` is the
+/// deterministic global merge order, but nothing ever waits on another
+/// connection's slow sweep. `emit` receives (conn, line); `on_conn_idle`
+/// fires when a connection whose reader already exited has received its
+/// last pending response (transport closes it there).
 fn writer_loop(
     shared: &Shared,
     registry: &CacheRegistry,
@@ -620,22 +876,32 @@ fn writer_loop(
     mut on_conn_idle: impl FnMut(usize),
 ) -> ServeSummary {
     let mut summary = ServeSummary::default();
-    let mut seen: HashMap<String, HashSet<String>> = HashMap::new();
-    let mut next = 0u64;
+    // per-(conn, fingerprint) as-if-serial prior
+    let mut seen: HashMap<(usize, String), HashSet<String>> = HashMap::new();
+    // next deliverable per-connection seq (absent == 0: nothing emitted yet)
+    let mut cursors: HashMap<usize, u64> = HashMap::new();
+    let mut emitted = 0u64;
     loop {
         let completed = {
-            let mut done = shared.done.lock().unwrap();
+            let mut done = lock_recover(&shared.done);
             loop {
-                if let Some(c) = done.map.remove(&next) {
-                    break c;
+                // any connection whose head-of-line response is ready?
+                let key = done
+                    .ready
+                    .keys()
+                    .copied()
+                    .find(|&(conn, seq)| seq == cursors.get(&conn).copied().unwrap_or(0));
+                if let Some(key) = key {
+                    break done.ready.remove(&key).expect("key just found");
                 }
-                if done.closed && next >= done.admitted {
+                if done.closed && emitted >= done.admitted {
                     return summary;
                 }
-                done = shared.done_cv.wait(done).unwrap();
+                done = shared.done_cv.wait(done).unwrap_or_else(|e| e.into_inner());
             }
         };
         summary.requests += 1;
+        let conn = completed.conn;
         let id = completed.id.as_deref();
         let line = match completed.outcome {
             Outcome::Sweep {
@@ -646,7 +912,7 @@ fn writer_loop(
             } => {
                 summary.sweeps += 1;
                 let prior = seen
-                    .entry(fp.clone())
+                    .entry((conn, fp.clone()))
                     .or_insert_with(|| (*preloaded).clone());
                 let stats = stats_against(&report.event_uses, prior);
                 for u in &report.event_uses {
@@ -658,15 +924,23 @@ fn writer_loop(
                 summary.errors += 1;
                 protocol::error_response(id, &err).to_string()
             }
+            Outcome::Cancel { target, outcome } => {
+                protocol::cancel_response(id, &target, outcome).to_string()
+            }
             Outcome::Pong => protocol::pong_response(id).to_string(),
             Outcome::Stats => protocol::stats_response(id, &registry.summary()).to_string(),
             Outcome::Shutdown => protocol::shutdown_response(id).to_string(),
         };
-        emit(completed.conn, &line);
-        if shared.response_delivered(completed.conn) {
-            on_conn_idle(completed.conn);
+        emit(conn, &line);
+        *cursors.entry(conn).or_insert(0) += 1;
+        emitted += 1;
+        if shared.response_delivered(conn) {
+            on_conn_idle(conn);
+            // a finished conn id is never reused; drop its bookkeeping so
+            // a long-lived daemon doesn't accrete per-conn state forever
+            cursors.remove(&conn);
+            seen.retain(|(c, _), _| *c != conn);
         }
-        next += 1;
     }
 }
 
@@ -693,13 +967,13 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
     opts: &ServeOpts,
 ) -> ServeSummary {
     let registry = CacheRegistry::new(opts.cache_dir.clone());
-    let shared = Shared::default();
+    let shared = Shared::new(opts.effective_max_queue());
     let workers = resolve_workers(opts.workers);
     let saver = PeriodicSaver::new();
     let mut summary = ServeSummary::default();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| worker_loop(&shared, &registry));
+            scope.spawn(|| worker_loop(&shared, &registry, opts.panic_inject_id.as_deref()));
         }
         if let Some(interval) = opts.save_interval.filter(|_| opts.cache_dir.is_some()) {
             scope.spawn(|| saver.run(&registry, interval));
@@ -731,13 +1005,40 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
     summary
 }
 
+/// Split an accepted TCP stream into (write half, read half), or clean up
+/// and return `None` when the clone failed — the client is answered with
+/// one structured `unavailable` line and the socket is shut down, so a
+/// clone failure never leaks a registered-but-unreadable connection (the
+/// old code inserted the stream into the connection table *before*
+/// checking the clone, stranding the fd until shutdown).
+fn split_accepted(
+    stream: TcpStream,
+    read_half: std::io::Result<TcpStream>,
+) -> Option<(TcpStream, TcpStream)> {
+    match read_half {
+        Ok(read_half) => Some((stream, read_half)),
+        Err(e) => {
+            let err = ServiceError::new(
+                ErrorKind::Unavailable,
+                format!("connection setup failed (cannot clone socket): {e}"),
+            );
+            let mut s = &stream;
+            let line = protocol::error_response(None, &err).to_string();
+            writeln!(s, "{line}").ok();
+            stream.shutdown(NetShutdown::Both).ok();
+            None
+        }
+    }
+}
+
 /// Serve TCP connections on `listener`. Each connection is an independent
 /// NDJSON stream multiplexed onto the shared queue, worker pool and cache
-/// registry; responses are delivered in global admission order. Returns
+/// registry; each connection's responses are delivered in its *own*
+/// admission order, independent of other connections' progress. Returns
 /// when any connection sends a `shutdown` op.
 pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<ServeSummary> {
     let registry = CacheRegistry::new(opts.cache_dir.clone());
-    let shared = Shared::default();
+    let shared = Shared::new(opts.effective_max_queue());
     let workers = resolve_workers(opts.workers);
     let saver = PeriodicSaver::new();
     listener.set_nonblocking(true)?;
@@ -746,7 +1047,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
     let mut summary = ServeSummary::default();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| worker_loop(&shared, &registry));
+            scope.spawn(|| worker_loop(&shared, &registry, opts.panic_inject_id.as_deref()));
         }
         if let Some(interval) = opts.save_interval.filter(|_| opts.cache_dir.is_some()) {
             scope.spawn(|| saver.run(&registry, interval));
@@ -761,7 +1062,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                     registry,
                     |conn, line| {
                         let stream =
-                            conns.lock().unwrap().get(&conn).and_then(|s| s.try_clone().ok());
+                            lock_recover(conns).get(&conn).and_then(|s| s.try_clone().ok());
                         match stream {
                             Some(mut s) => {
                                 if writeln!(s, "{line}").is_err() {
@@ -778,7 +1079,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                     // last pending response delivered after the reader left:
                     // drop the socket so finished clients don't leak fds
                     |conn| {
-                        conns.lock().unwrap().remove(&conn);
+                        lock_recover(conns).remove(&conn);
                     },
                 )
             }
@@ -789,8 +1090,11 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                 Ok((stream, _addr)) => {
                     stream.set_nonblocking(false).ok();
                     let read_half = stream.try_clone();
-                    conns.lock().unwrap().insert(conn_id, stream);
-                    if let Ok(read_half) = read_half {
+                    // register only a connection we can actually serve:
+                    // a failed clone is answered + closed by
+                    // split_accepted, never inserted (fd-leak fix)
+                    if let Some((write_half, read_half)) = split_accepted(stream, read_half) {
+                        lock_recover(&conns).insert(conn_id, write_half);
                         let id = conn_id;
                         active_readers.fetch_add(1, Ordering::SeqCst);
                         let shared = &shared;
@@ -801,7 +1105,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                             // nothing pending? close the socket now; else the
                             // writer closes it after the last response
                             if shared.reader_finished(id) {
-                                conns.lock().unwrap().remove(&id);
+                                lock_recover(conns).remove(&id);
                             }
                             active.fetch_sub(1, Ordering::SeqCst);
                         });
@@ -819,7 +1123,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
         }
         // unblock readers stuck in read_line, then wait for them to exit
         // before closing the queue (they may still be admitting requests)
-        for (_, s) in conns.lock().unwrap().iter() {
+        for (_, s) in lock_recover(&conns).iter() {
             s.shutdown(NetShutdown::Read).ok();
         }
         while active_readers.load(Ordering::SeqCst) > 0 {
@@ -831,4 +1135,75 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
     });
     summary.snapshots_saved = registry.save_all();
     Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    #[test]
+    fn effective_max_queue_defaults_when_zero() {
+        let opts = ServeOpts::default();
+        assert_eq!(opts.effective_max_queue(), DEFAULT_MAX_QUEUE);
+        let opts = ServeOpts {
+            max_queue: 3,
+            ..Default::default()
+        };
+        assert_eq!(opts.effective_max_queue(), 3);
+    }
+
+    /// The fd-leak fix: a failed `try_clone` answers the client with one
+    /// structured `unavailable` line, shuts the socket, and registers
+    /// nothing (`split_accepted` returns None).
+    #[test]
+    fn failed_clone_is_answered_and_closed_not_registered() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let client = std::thread::spawn(move || {
+            let mut c = TcpStream::connect(addr).expect("connect");
+            let mut text = String::new();
+            c.read_to_string(&mut text).expect("read to EOF");
+            text
+        });
+        let (stream, _) = listener.accept().expect("accept");
+        let injected: std::io::Result<TcpStream> =
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "simulated clone failure",
+            ));
+        assert!(split_accepted(stream, injected).is_none());
+        let text = client.join().expect("client thread");
+        let json = Json::parse(text.trim()).expect("one well-formed response line");
+        let err = json.get("error").expect("error object");
+        assert_eq!(
+            err.get("kind").and_then(Json::as_str),
+            Some("unavailable"),
+            "clone failure sheds with the unavailable kind: {text}"
+        );
+        let msg = err.get("message").and_then(Json::as_str).unwrap_or("");
+        assert!(
+            msg.contains("simulated clone failure"),
+            "message carries the cause: {msg}"
+        );
+    }
+
+    /// Cancelling an id that was never admitted reports `not_found` and
+    /// completes nothing.
+    #[test]
+    fn cancel_unknown_target_is_not_found() {
+        let shared = Shared::new(4);
+        assert_eq!(shared.cancel_target(0, "nope"), "not_found");
+        assert!(lock_recover(&shared.done).ready.is_empty());
+    }
+
+    /// Per-connection seqs are independent: each connection counts from 0.
+    #[test]
+    fn admission_seqs_are_per_connection() {
+        let shared = Shared::new(4);
+        assert_eq!(shared.admit(7), 0);
+        assert_eq!(shared.admit(7), 1);
+        assert_eq!(shared.admit(9), 0);
+        assert_eq!(lock_recover(&shared.done).admitted, 3);
+    }
 }

@@ -16,10 +16,14 @@
 //! * [`protocol`] — the NDJSON request/response schema, parsed with the
 //!   crate's own [`Json`](crate::config::Json); malformed input maps to
 //!   structured error responses, shared with the CLI's error path.
-//! * [`daemon`] — transports (stdio, TCP), the worker pool, the
-//!   per-fingerprint [`CacheRegistry`] with disk-persistent snapshots, and
-//!   the in-order writer that keeps responses deterministic (see the
-//!   module docs for the determinism and fairness contracts).
+//! * [`daemon`] — transports (stdio, TCP), the bounded admission queue
+//!   (`--max-queue`, overflow shed with structured `unavailable` errors),
+//!   the worker pool with cooperative sweep cancellation (`cancel` op),
+//!   the per-fingerprint [`CacheRegistry`] with disk-persistent
+//!   snapshots, and the per-connection in-order writer that keeps each
+//!   connection's response stream deterministic without cross-connection
+//!   head-of-line blocking (see the module docs for the determinism,
+//!   fairness and cancellation contracts).
 //! * `distsim serve` / `distsim ask` — the CLI entry points (`main.rs`);
 //!   `ask` doubles as an in-process self-test client.
 //!
@@ -30,5 +34,7 @@
 pub mod daemon;
 pub mod protocol;
 
-pub use daemon::{serve_ndjson, serve_tcp, CacheRegistry, ServeOpts, ServeSummary};
+pub use daemon::{
+    serve_ndjson, serve_tcp, CacheRegistry, ServeOpts, ServeSummary, DEFAULT_MAX_QUEUE,
+};
 pub use protocol::{cli_error_line, ErrorKind, Request, ServiceError, SweepRequest};

@@ -24,8 +24,11 @@
 //!  "timing": false}
 //! ```
 //!
-//! `op` is one of `sweep` (default), `ping`, `stats`, `shutdown`
-//! ([`OPS`]). `cluster` is either a full [`ClusterSpec`] object or a
+//! `op` is one of `sweep` (default), `cancel`, `ping`, `stats`,
+//! `shutdown` ([`OPS`]). `cancel` carries a required `target` — the `id`
+//! of an earlier sweep on the *same connection* to abort (drop it from
+//! the queue, or cooperatively interrupt it if already running).
+//! `cluster` is either a full [`ClusterSpec`] object or a
 //! preset shorthand (`a40`/`a10`/`a100`/`a40-a10` — the last a mixed-SKU
 //! fleet), optionally with a `placement` policy or table. `cost` is a
 //! per-device-kind registry: base fields flat, `per_kind` mapping SKU
@@ -50,7 +53,7 @@ use crate::search::{CacheStats, SweepConfig, SweepReport};
 /// Every op the request dispatcher accepts, in documentation order.
 /// `docs/FORMATS.md` must describe each one (`tests/docs_drift.rs` pins
 /// that), and [`parse_line`]'s dispatcher accepts exactly this set.
-pub const OPS: [&str; 4] = ["sweep", "ping", "stats", "shutdown"];
+pub const OPS: [&str; 5] = ["sweep", "cancel", "ping", "stats", "shutdown"];
 
 /// What went wrong, coarsely — the machine-readable half of an error
 /// response.
@@ -66,17 +69,25 @@ pub enum ErrorKind {
     Internal,
     /// CLI-level failure (config file, flags); shares the same error shape.
     Cli,
+    /// The daemon could not admit a well-formed request: the bounded
+    /// admission queue is full (load shed) or the daemon is shutting
+    /// down. Retryable — nothing is wrong with the request itself.
+    Unavailable,
+    /// The sweep was aborted by a `cancel` op before completing.
+    Cancelled,
 }
 
 impl ErrorKind {
     /// Every error kind a response can carry, in documentation order
     /// (`docs/FORMATS.md` must describe each one).
-    pub const ALL: [ErrorKind; 5] = [
+    pub const ALL: [ErrorKind; 7] = [
         ErrorKind::BadJson,
         ErrorKind::BadRequest,
         ErrorKind::Deadline,
         ErrorKind::Internal,
         ErrorKind::Cli,
+        ErrorKind::Unavailable,
+        ErrorKind::Cancelled,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -86,6 +97,8 @@ impl ErrorKind {
             ErrorKind::Deadline => "deadline",
             ErrorKind::Internal => "internal",
             ErrorKind::Cli => "cli",
+            ErrorKind::Unavailable => "unavailable",
+            ErrorKind::Cancelled => "cancelled",
         }
     }
 }
@@ -128,6 +141,9 @@ pub struct SweepRequest {
 #[derive(Debug, Clone)]
 pub enum Request {
     Sweep(Box<SweepRequest>),
+    /// Abort the queued/running sweep whose `id` equals `target` on the
+    /// same connection. Answered inline by the reader (never queued).
+    Cancel { id: Option<String>, target: String },
     Ping { id: Option<String> },
     Stats { id: Option<String> },
     Shutdown { id: Option<String> },
@@ -338,11 +354,14 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
         return Err(bad("request must be a JSON object".into()));
     };
     for k in obj.keys() {
-        if !["id", "op", "model", "cluster", "cost", "sweep", "budget", "timing"]
-            .contains(&k.as_str())
+        if ![
+            "id", "op", "model", "cluster", "cost", "sweep", "budget", "timing", "target",
+        ]
+        .contains(&k.as_str())
         {
             return Err(bad(format!(
-                "unknown request field '{k}' (id|op|model|cluster|cost|sweep|budget|timing)"
+                "unknown request field '{k}' \
+                 (id|op|model|cluster|cost|sweep|budget|timing|target)"
             )));
         }
     }
@@ -356,7 +375,20 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
             return Err(bad("'timing' must be a boolean".into()));
         }
     }
-    match j.get("op").and_then(Json::as_str).unwrap_or("sweep") {
+    let op = j.get("op").and_then(Json::as_str).unwrap_or("sweep");
+    if op != "cancel" && j.get("target").is_some() {
+        return Err(bad(format!("'target' is only valid on op 'cancel' (got '{op}')")));
+    }
+    match op {
+        "cancel" => {
+            let target = j
+                .get("target")
+                .ok_or_else(|| bad("cancel request missing 'target' (the sweep id to abort)".into()))?
+                .as_str()
+                .ok_or_else(|| bad("'target' must be a string".into()))?
+                .to_string();
+            Ok(Request::Cancel { id, target })
+        }
         "ping" => Ok(Request::Ping { id }),
         "stats" => Ok(Request::Stats { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
@@ -451,6 +483,31 @@ pub fn pong_response(id: Option<&str>) -> Json {
         ("id", id_json(id)),
         ("ok", Json::Bool(true)),
         ("result", Json::obj(vec![("op", Json::str("ping"))])),
+    ])
+}
+
+/// Response to a `cancel` op. `outcome` is one of:
+///
+/// * `"cancelled_queued"` — the target was still queued and was dropped
+///   outright (the target's own response line is a `cancelled` error);
+/// * `"cancelling"` — the target is mid-sweep; its token fired and it
+///   will stop at the next candidate boundary (its response line is a
+///   `cancelled` error when it does);
+/// * `"not_found"` — no queued or running sweep with that id exists on
+///   this connection (already finished, never existed, or sent without
+///   an id — cancellation requires the target to be addressable).
+pub fn cancel_response(id: Option<&str>, target: &str, outcome: &str) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("op", Json::str("cancel")),
+                ("target", Json::str(target)),
+                ("outcome", Json::str(outcome)),
+            ]),
+        ),
     ])
 }
 
@@ -692,6 +749,43 @@ mod tests {
             parse_line(r#"{"op":"stats"}"#).unwrap(),
             Request::Stats { id: None }
         ));
+    }
+
+    #[test]
+    fn parse_cancel_op() {
+        match parse_line(r#"{"id":"c1","op":"cancel","target":"r7"}"#).unwrap() {
+            Request::Cancel { id, target } => {
+                assert_eq!(id.as_deref(), Some("c1"));
+                assert_eq!(target, "r7");
+            }
+            other => panic!("expected cancel, got {other:?}"),
+        }
+        // target is required, must be a string, and is cancel-only
+        let (_, e) = parse_line(r#"{"op":"cancel"}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(e.message.contains("target"));
+        let (_, e) = parse_line(r#"{"op":"cancel","target":7}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        let (_, e) = parse_line(r#"{"op":"ping","target":"r7"}"#).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(e.message.contains("only valid on op 'cancel'"));
+        let (_, e) = parse_line(
+            r#"{"model":"bert-large","cluster":{"preset":"a40"},"target":"r7"}"#,
+        )
+        .unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn cancel_response_shape() {
+        let j = cancel_response(Some("c1"), "r7", "cancelled_queued");
+        let line = j.to_string();
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("ok").and_then(Json::as_bool), Some(true));
+        let r = back.get("result").unwrap();
+        assert_eq!(r.get("op").and_then(Json::as_str), Some("cancel"));
+        assert_eq!(r.get("target").and_then(Json::as_str), Some("r7"));
+        assert_eq!(r.get("outcome").and_then(Json::as_str), Some("cancelled_queued"));
     }
 
     #[test]

@@ -29,19 +29,46 @@ fn every_dispatcher_op_is_documented() {
 #[test]
 fn dispatcher_accepts_exactly_the_documented_ops() {
     use distsim::service::protocol::parse_line;
-    // every listed op parses (sweep needs its required fields)
+    // every listed op parses (sweep and cancel need their required fields)
     for op in OPS {
-        let line = if op == "sweep" {
-            format!(
+        let line = match op {
+            "sweep" => format!(
                 r#"{{"op":"{op}","model":"bert-large","cluster":{{"preset":"a40"}}}}"#
-            )
-        } else {
-            format!(r#"{{"op":"{op}"}}"#)
+            ),
+            "cancel" => format!(r#"{{"op":"{op}","target":"r1"}}"#),
+            _ => format!(r#"{{"op":"{op}"}}"#),
         };
         assert!(parse_line(&line).is_ok(), "documented op '{op}' rejected");
     }
     // and nothing else does
     assert!(parse_line(r#"{"op":"frobnicate"}"#).is_err());
+}
+
+#[test]
+fn admission_and_cancellation_contract_is_documented() {
+    // ISSUE 6 surface: the per-connection delivery contract, the cancel
+    // op's outcomes, the bounded admission queue and its CLI flag must
+    // all be specified in docs/FORMATS.md
+    let doc = formats_md();
+    for word in [
+        "per-connection",
+        "target",
+        "cancelled_queued",
+        "cancelling",
+        "not_found",
+        "max-queue",
+        "unavailable",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // and the parser enforces what the spec says about `target`
+    use distsim::service::protocol::parse_line;
+    assert!(parse_line(r#"{"op":"cancel","target":"r1"}"#).is_ok());
+    assert!(parse_line(r#"{"op":"cancel"}"#).is_err(), "target is required");
+    assert!(
+        parse_line(r#"{"op":"ping","target":"r1"}"#).is_err(),
+        "target is cancel-only"
+    );
 }
 
 #[test]

@@ -1,0 +1,270 @@
+//! Multi-connection saturation tests for the what-if daemon (ISSUE 6):
+//! per-connection response ordering, per-connection byte-identity across
+//! worker counts, prompt control ops while a neighbour sweeps, and
+//! structured load-shedding when the bounded admission queue fills.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use distsim::config::Json;
+use distsim::service::{serve_tcp, ServeOpts, ServeSummary};
+
+fn parse(line: &str) -> Json {
+    Json::parse(line).unwrap_or_else(|e| panic!("unparseable response '{line}': {e}"))
+}
+
+fn small_sweep(id: &str, global_batch: usize) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4}},"sweep":{{"global_batch":{global_batch},"profile_iters":1}}}}"#
+    )
+}
+
+fn response_id(j: &Json) -> String {
+    j.get("id")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("no id in {j}"))
+        .to_string()
+}
+
+/// Spawn a daemon, run `clients` request scripts against it concurrently
+/// (one TCP connection each), and return each client's raw response lines
+/// keyed by client tag.
+fn run_fleet(
+    opts: &ServeOpts,
+    clients: Vec<(String, Vec<String>, usize)>,
+) -> (BTreeMap<String, Vec<String>>, ServeSummary) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let daemon = std::thread::spawn({
+        let opts = opts.clone();
+        move || serve_tcp(listener, &opts).expect("serve_tcp")
+    });
+
+    let mut handles = Vec::new();
+    for (tag, requests, expect) in clients {
+        handles.push(std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            for line in &requests {
+                writeln!(stream, "{line}").expect("send");
+            }
+            stream.flush().expect("flush");
+            let reader = BufReader::new(stream.try_clone().expect("clone"));
+            let lines: Vec<String> = reader
+                .lines()
+                .take(expect)
+                .map(|l| l.expect("read response"))
+                .collect();
+            assert_eq!(lines.len(), expect, "client {tag} got a short stream");
+            (tag, lines)
+        }));
+    }
+    let mut by_tag = BTreeMap::new();
+    for h in handles {
+        let (tag, lines) = h.join().expect("client thread");
+        by_tag.insert(tag, lines);
+    }
+
+    // all clients done: one control connection shuts the daemon down
+    let mut ctl = TcpStream::connect(addr).expect("connect ctl");
+    writeln!(ctl, r#"{{"id":"ctl","op":"shutdown"}}"#).expect("send shutdown");
+    ctl.flush().expect("flush ctl");
+    let summary = daemon.join().expect("daemon thread");
+    (by_tag, summary)
+}
+
+/// The tentpole contract end to end at scale: ~100 concurrent connections,
+/// each receiving its responses in its *own* admission order, with every
+/// connection's stream byte-identical between 1 worker and 4 workers —
+/// i.e. independent of scheduling, worker races and cross-connection
+/// interleaving.
+#[test]
+fn per_connection_streams_are_ordered_and_byte_identical_across_worker_counts() {
+    const CONNS: usize = 96;
+    let clients = || -> Vec<(String, Vec<String>, usize)> {
+        (0..CONNS)
+            .map(|i| {
+                let gb = if i % 2 == 0 { 4 } else { 8 };
+                let tag = format!("c{i}");
+                let requests = vec![
+                    format!(r#"{{"id":"{tag}-p0","op":"ping"}}"#),
+                    small_sweep(&format!("{tag}-s0"), gb),
+                    small_sweep(&format!("{tag}-s1"), gb),
+                    format!(r#"{{"id":"{tag}-p1","op":"ping"}}"#),
+                ];
+                (tag, requests, 4)
+            })
+            .collect()
+    };
+
+    let (one, s1) = run_fleet(
+        &ServeOpts {
+            workers: 1,
+            ..ServeOpts::default()
+        },
+        clients(),
+    );
+    assert_eq!(s1.sweeps, 2 * CONNS);
+
+    for (tag, lines) in &one {
+        // per-connection admission order, regardless of the other 95
+        // connections' traffic
+        let ids: Vec<String> = lines.iter().map(|l| response_id(&parse(l))).collect();
+        assert_eq!(
+            ids,
+            vec![
+                format!("{tag}-p0"),
+                format!("{tag}-s0"),
+                format!("{tag}-s1"),
+                format!("{tag}-p1")
+            ],
+            "connection {tag} saw out-of-order responses"
+        );
+        // per-connection as-if-serial cache accounting: the first sweep is
+        // always cold *for this connection* (never silently warmed by a
+        // neighbour), the identical repeat always a full hit
+        let s0 = parse(&lines[1]);
+        let cache0 = s0.get("result").unwrap().get("cache").unwrap();
+        assert!(
+            cache0.get("misses").and_then(Json::as_usize).unwrap() > 0,
+            "{tag}: first sweep must be cold under per-connection scoping"
+        );
+        let s1 = parse(&lines[2]);
+        let cache1 = s1.get("result").unwrap().get("cache").unwrap();
+        assert_eq!(
+            cache1.get("misses").and_then(Json::as_usize),
+            Some(0),
+            "{tag}: identical repeat on the same connection must hit"
+        );
+    }
+
+    let (four, s4) = run_fleet(
+        &ServeOpts {
+            workers: 4,
+            ..ServeOpts::default()
+        },
+        clients(),
+    );
+    assert_eq!(s4.sweeps, 2 * CONNS);
+    assert_eq!(
+        one, four,
+        "some connection's stream changed between 1 and 4 workers"
+    );
+}
+
+/// A ping on an idle connection is answered while another connection's
+/// sweeps occupy the single worker — the cross-connection head-of-line
+/// block this PR removes (the ping used to wait behind every earlier
+/// admitted sweep).
+#[test]
+fn idle_connection_ping_is_answered_during_anothers_sweeps() {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("addr");
+    let daemon = std::thread::spawn(move || {
+        serve_tcp(
+            listener,
+            &ServeOpts {
+                workers: 1,
+                ..ServeOpts::default()
+            },
+        )
+        .expect("serve_tcp")
+    });
+
+    // connection A: enough sweeps to keep the lone worker busy
+    let mut a = TcpStream::connect(addr).expect("connect a");
+    for i in 0..4 {
+        writeln!(a, "{}", small_sweep(&format!("a{i}"), 8)).expect("send");
+    }
+    a.flush().expect("flush");
+    let a_reader = std::thread::spawn(move || {
+        let reader = BufReader::new(a.try_clone().expect("clone"));
+        let lines: Vec<String> = reader.lines().take(4).map(|l| l.expect("read")).collect();
+        (Instant::now(), lines)
+    });
+
+    // connection B pings while A's sweeps are in flight
+    std::thread::sleep(Duration::from_millis(30));
+    let mut b = TcpStream::connect(addr).expect("connect b");
+    writeln!(b, r#"{{"id":"b","op":"ping"}}"#).expect("send ping");
+    b.flush().expect("flush b");
+    let mut pong = String::new();
+    BufReader::new(b.try_clone().expect("clone"))
+        .read_line(&mut pong)
+        .expect("read pong");
+    let pong_at = Instant::now();
+    let j = parse(pong.trim());
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+    assert_eq!(response_id(&j), "b");
+
+    let (a_done_at, a_lines) = a_reader.join().expect("a reader");
+    assert_eq!(a_lines.len(), 4);
+    for (i, line) in a_lines.iter().enumerate() {
+        assert_eq!(response_id(&parse(line)), format!("a{i}"));
+    }
+    assert!(
+        pong_at < a_done_at,
+        "B's ping waited for A's whole backlog (head-of-line block)"
+    );
+
+    writeln!(b, r#"{{"op":"shutdown"}}"#).expect("send shutdown");
+    b.flush().expect("flush");
+    daemon.join().expect("daemon");
+}
+
+/// Burst far past a tiny `--max-queue` from many connections at once:
+/// every request is answered (ok sweep or structured `unavailable` shed —
+/// never dropped, never unbounded growth), and the daemon stays healthy
+/// afterwards.
+#[test]
+fn saturated_queue_sheds_cleanly_across_connections() {
+    const CONNS: usize = 32;
+    let opts = ServeOpts {
+        workers: 1,
+        max_queue: 2,
+        ..ServeOpts::default()
+    };
+    let clients: Vec<(String, Vec<String>, usize)> = (0..CONNS)
+        .map(|i| {
+            let tag = format!("burst{i}");
+            // distinct batch sizes keep every sweep cold (real profiling
+            // work), so the lone worker cannot outrun the burst
+            (tag.clone(), vec![small_sweep(&tag, 4 + 4 * (i % 8))], 1)
+        })
+        .collect();
+    let (by_tag, summary) = run_fleet(&opts, clients);
+
+    let mut oks = 0usize;
+    let mut sheds = 0usize;
+    for (tag, lines) in &by_tag {
+        let j = parse(&lines[0]);
+        assert_eq!(response_id(&j), *tag);
+        if j.get("ok").and_then(Json::as_bool) == Some(true) {
+            oks += 1;
+        } else {
+            let err = j.get("error").expect("error object");
+            assert_eq!(
+                err.get("kind").and_then(Json::as_str),
+                Some("unavailable"),
+                "{j}"
+            );
+            assert!(
+                err.get("message")
+                    .and_then(Json::as_str)
+                    .unwrap()
+                    .contains("queue is full"),
+                "{j}"
+            );
+            sheds += 1;
+        }
+    }
+    assert_eq!(oks + sheds, CONNS, "every burst request was answered");
+    assert!(oks >= 1, "the head sweep always runs");
+    assert!(
+        sheds >= 1,
+        "{CONNS} simultaneous sweeps vs --max-queue 2 must shed"
+    );
+    assert_eq!(summary.sweeps, oks);
+    assert_eq!(summary.errors, sheds);
+}

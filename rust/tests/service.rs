@@ -340,6 +340,7 @@ fn save_interval_persists_snapshots_while_the_daemon_runs() {
         workers: 1,
         cache_dir: Some(dir.clone()),
         save_interval: Some(Duration::from_millis(50)),
+        ..ServeOpts::default()
     };
     let (tx, rx) = mpsc::channel::<Vec<u8>>();
     let daemon = std::thread::spawn({
@@ -430,4 +431,163 @@ fn tcp_transport_serves_and_shuts_down() {
     let summary = daemon.join().unwrap();
     assert_eq!(summary.requests, 3);
     assert_eq!(summary.sweeps, 1);
+}
+
+fn error_kind<'a>(j: &'a Json) -> &'a str {
+    j.get("error")
+        .and_then(|e| e.get("kind"))
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("no error.kind in {j}"))
+}
+
+fn cancel_outcome<'a>(j: &'a Json) -> &'a str {
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+    assert_eq!(
+        result_field(j, "op").as_str(),
+        Some("cancel"),
+        "not a cancel ack: {j}"
+    );
+    result_field(j, "outcome").as_str().unwrap()
+}
+
+#[test]
+fn cancel_of_a_queued_sweep_aborts_it_with_a_structured_error() {
+    // one worker: the head sweep occupies it while the reader (which runs
+    // far ahead of any sweep) queues the victim and then cancels it
+    let input = [
+        small_sweep("head", 8),
+        small_sweep("victim", 4),
+        r#"{"id":"c","op":"cancel","target":"victim"}"#.to_string(),
+        r#"{"id":"p","op":"ping"}"#.to_string(),
+    ]
+    .join("\n");
+    let (lines, summary) = run_lines(&input, &opts_with_workers(1));
+    assert_eq!(lines.len(), 4, "{lines:?}");
+    // per-connection order: head, victim, cancel ack, pong
+    for (i, id) in ["head", "victim", "c", "p"].iter().enumerate() {
+        assert_eq!(
+            parse(&lines[i]).get("id").and_then(Json::as_str),
+            Some(*id),
+            "response {i} out of order: {lines:?}"
+        );
+    }
+    let head = parse(&lines[0]);
+    assert_eq!(head.get("ok").and_then(Json::as_bool), Some(true));
+    let victim = parse(&lines[1]);
+    assert_eq!(victim.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(error_kind(&victim), "cancelled", "{victim}");
+    assert_eq!(cancel_outcome(&parse(&lines[2])), "cancelled_queued");
+    assert_eq!(parse(&lines[3]).get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(summary.sweeps, 1, "the cancelled sweep never produced a report");
+    assert_eq!(summary.errors, 1);
+}
+
+#[test]
+fn cancel_of_an_unknown_or_finished_target_is_not_found() {
+    let input = [
+        r#"{"id":"c0","op":"cancel","target":"ghost"}"#.to_string(),
+        small_sweep("done", 4),
+        r#"{"id":"c1","op":"cancel","target":"done"}"#.to_string(),
+    ]
+    .join("\n");
+    let (lines, _) = run_lines(&input, &opts_with_workers(1));
+    assert_eq!(lines.len(), 3);
+    assert_eq!(cancel_outcome(&parse(&lines[0])), "not_found");
+    // "done" may still be queued/running when the reader cancels it, so
+    // only the *never-submitted* target has a deterministic outcome; the
+    // ack itself must still be well-formed either way
+    let late = cancel_outcome(&parse(&lines[2]));
+    assert!(
+        ["not_found", "cancelled_queued", "cancelling"].contains(&late),
+        "unexpected outcome {late}"
+    );
+}
+
+#[test]
+fn full_admission_queue_sheds_load_with_structured_unavailable() {
+    // one worker + a queue bound of 1: the reader races far ahead of the
+    // sweeps, so at least one of the 4 admitted sweeps must overflow
+    let opts = ServeOpts {
+        workers: 1,
+        max_queue: 1,
+        ..ServeOpts::default()
+    };
+    let input = [
+        small_sweep("s0", 4),
+        small_sweep("s1", 4),
+        small_sweep("s2", 4),
+        small_sweep("s3", 4),
+        r#"{"id":"p","op":"ping"}"#.to_string(),
+    ]
+    .join("\n");
+    let (lines, summary) = run_lines(&input, &opts);
+    assert_eq!(lines.len(), 5, "every admitted request is answered: {lines:?}");
+    assert_eq!(summary.requests, 5);
+    let mut shed = 0;
+    for (i, id) in ["s0", "s1", "s2", "s3"].iter().enumerate() {
+        let j = parse(&lines[i]);
+        assert_eq!(j.get("id").and_then(Json::as_str), Some(*id), "{lines:?}");
+        if j.get("ok").and_then(Json::as_bool) == Some(true) {
+            assert!(result_field(&j, "best").get("throughput").is_some());
+        } else {
+            assert_eq!(error_kind(&j), "unavailable", "{j}");
+            let msg = j
+                .get("error")
+                .unwrap()
+                .get("message")
+                .and_then(Json::as_str)
+                .unwrap();
+            assert!(msg.contains("queue is full"), "{msg}");
+            shed += 1;
+        }
+    }
+    assert!(shed >= 1, "queue bound 1 with 4 burst sweeps must shed: {lines:?}");
+    assert!(shed <= 3, "the head sweep always runs: {lines:?}");
+    // control ops bypass the queue entirely: the ping works regardless
+    assert_eq!(parse(&lines[4]).get("ok").and_then(Json::as_bool), Some(true));
+}
+
+#[test]
+fn injected_worker_panic_poisons_locks_but_daemon_keeps_answering() {
+    // the "boom" sweep panics inside the worker *while holding the
+    // profile-cache entries lock*; every later request must recover the
+    // poisoned lock and answer normally (ISSUE 6 satellite: a poisoned
+    // mutex used to unwind every subsequent .lock().unwrap())
+    let opts = ServeOpts {
+        workers: 1,
+        panic_inject_id: Some("boom".to_string()),
+        ..ServeOpts::default()
+    };
+    let input = [
+        small_sweep("boom", 4),
+        small_sweep("after", 4),
+        r#"{"id":"st","op":"stats"}"#.to_string(),
+        r#"{"id":"p","op":"ping"}"#.to_string(),
+    ]
+    .join("\n");
+    let (lines, summary) = run_lines(&input, &opts);
+    assert_eq!(lines.len(), 4, "{lines:?}");
+    let boom = parse(&lines[0]);
+    assert_eq!(boom.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(error_kind(&boom), "internal", "{boom}");
+    assert!(
+        boom.get("error")
+            .unwrap()
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("injected panic"),
+        "{boom}"
+    );
+    // same fingerprint, same (now-poisoned, recovered) cache: still works
+    let after = parse(&lines[1]);
+    assert_eq!(after.get("ok").and_then(Json::as_bool), Some(true), "{after}");
+    assert_eq!(
+        result_field(&after, "candidates").as_arr().unwrap().len(),
+        6
+    );
+    assert_eq!(parse(&lines[2]).get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(parse(&lines[3]).get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(summary.sweeps, 1);
+    assert_eq!(summary.errors, 1);
 }

@@ -43,3 +43,20 @@ if command -v python3 >/dev/null 2>&1; then
     printf '%s' "$SMOKE_OUT" | python3 -c 'import json,sys; json.loads(sys.stdin.read())'
 fi
 echo "service smoke test passed"
+
+# scenario smoke: the same sweep under a straggler + elastic-resize
+# scenario must answer with per-candidate scenario throughputs and a
+# robustness attribution block (the unhappy-path what-if path end-to-end)
+SCN_REQ='{"id":"scn-smoke","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1,"scenario":{"stragglers":[{"device":0,"factor":1.5}],"resize":{"dp_delta":1,"reshard_us":500}}}}'
+SCN_OUT=$(printf '%s\n' "$SCN_REQ" | ./target/release/distsim serve --stdio --workers 2)
+printf '%s' "$SCN_OUT" | grep -q '"ok":true' || {
+    echo "scenario smoke test failed: $SCN_OUT" >&2
+    exit 1
+}
+for field in '"robustness"' '"scenario_throughput"' '"regret"'; do
+    printf '%s' "$SCN_OUT" | grep -q "$field" || {
+        echo "scenario smoke: missing $field in $SCN_OUT" >&2
+        exit 1
+    }
+done
+echo "scenario smoke test passed"

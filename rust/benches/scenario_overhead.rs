@@ -1,0 +1,158 @@
+//! Bench: scenario engine overhead (ISSUE 7).
+//!
+//! Three contracts, asserted in-bench:
+//!
+//! * the **empty scenario is bit-identical** to running without one,
+//!   span for span;
+//! * its overhead on the DES hot loop is **~zero** — every scenario hook
+//!   is gated on `is_empty()` before any per-span work, so attaching an
+//!   empty spec must not slow the executor measurably;
+//! * a **scenario-scored sweep** answers with a robustness block at a
+//!   small constant-factor cost over the nominal sweep (two extra
+//!   analytical walks per candidate plus three cache-warm re-walks of
+//!   the winner — never a second profiling pass).
+//!
+//! Emits a machine-readable `BENCH_scenario.json` line (docs/FORMATS.md §3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::{Json, RunConfig};
+use distsim::cost::CostModel;
+use distsim::engine::GroundTruth;
+use distsim::model::zoo;
+use distsim::scenario::{ScenarioSpec, Straggler};
+use distsim::search::{SearchEngine, SweepConfig};
+use distsim::strategy::Strategy;
+
+/// Min-of-trials wall time of `iters` engine iterations.
+fn engine_seconds(gt: &GroundTruth, iters: usize, trials: usize) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..trials {
+        let t0 = Instant::now();
+        let mean = gt.mean_batch_time_us(iters);
+        assert!(mean > 0.0);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let cfg = {
+        let mut c = RunConfig::new(
+            "bert-large",
+            Strategy::new(2, 2, 2),
+            ClusterSpec::a40_cluster(2, 4),
+        );
+        c.micro_batches = 4;
+        c.micro_batch_size = 2;
+        c
+    };
+    let straggle = ScenarioSpec {
+        stragglers: vec![Straggler {
+            device: 0,
+            factor: 1.5,
+        }],
+        ..ScenarioSpec::default()
+    };
+
+    let plain = GroundTruth::prepare(&cfg).expect("prepare");
+    let empty = GroundTruth::prepare(&cfg)
+        .expect("prepare")
+        .with_scenario(Arc::new(ScenarioSpec::default()));
+    let straggled = GroundTruth::prepare(&cfg)
+        .expect("prepare")
+        .with_scenario(Arc::new(straggle.clone()));
+
+    // contract 1: empty scenario is bit-identical, span for span
+    for iter in 0..3 {
+        let a = plain.run_iteration(iter);
+        let b = empty.run_iteration(iter);
+        assert_eq!(a.len(), b.len(), "iteration {iter}: span count differs");
+        let identical = a.spans().iter().zip(b.spans()).all(|(x, y)| {
+            x.device == y.device
+                && x.start.to_bits() == y.start.to_bits()
+                && x.end.to_bits() == y.end.to_bits()
+        });
+        assert!(identical, "iteration {iter}: empty scenario moved a span");
+    }
+
+    // contract 2: ~zero hot-loop overhead for the empty spec
+    let (iters, trials) = (30, 3);
+    engine_seconds(&plain, 2, 1); // warm up allocators and caches
+    let none_s = engine_seconds(&plain, iters, trials);
+    let empty_s = engine_seconds(&empty, iters, trials);
+    let straggled_s = engine_seconds(&straggled, iters, trials);
+    let overhead = empty_s / none_s;
+    assert!(
+        overhead < 1.25,
+        "empty-scenario overhead x{overhead:.3} (none {none_s:.4}s, empty {empty_s:.4}s) \
+         — the is_empty() gate is not short-circuiting the hot loop"
+    );
+    println!(
+        "engine: {iters} iters  none {none_s:.4}s  empty {empty_s:.4}s (x{overhead:.3})  \
+         straggler {straggled_s:.4}s"
+    );
+
+    // contract 3: the scenario-scored sweep answers with robustness at a
+    // bounded constant factor over the nominal sweep
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    let cost = CostModel::default();
+    let base = SweepConfig {
+        global_batch: 8,
+        profile_iters: 1,
+        threads: 1,
+        ..SweepConfig::default()
+    };
+    let t0 = Instant::now();
+    let nominal = SearchEngine::new(&model, &cluster, &cost, base.clone()).sweep();
+    let nominal_s = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let robust = SearchEngine::new(
+        &model,
+        &cluster,
+        &cost,
+        SweepConfig {
+            scenario: straggle,
+            ..base
+        },
+    )
+    .sweep();
+    let scenario_s = t0.elapsed().as_secs_f64();
+    assert!(nominal.robustness.is_none(), "nominal sweep grew a robustness block");
+    let rb = robust
+        .robustness
+        .expect("scenario sweep must attribute robustness");
+    assert!(rb.straggler_slowdown > 1.0, "straggler not attributed");
+    let sweep_ratio = scenario_s / nominal_s;
+    assert!(
+        sweep_ratio < 10.0,
+        "scenario sweep x{sweep_ratio:.2} over nominal — scoring should be \
+         walk-bound, not profile-bound"
+    );
+    println!(
+        "sweep: nominal {nominal_s:.3}s  scenario {scenario_s:.3}s (x{sweep_ratio:.2})  \
+         regret {:.4}",
+        rb.regret
+    );
+
+    println!(
+        "BENCH_scenario.json {}",
+        Json::obj(vec![
+            ("bench", Json::str("scenario_overhead")),
+            ("engine_iters", Json::num(iters as f64)),
+            ("none_seconds", Json::num(none_s)),
+            ("empty_seconds", Json::num(empty_s)),
+            ("straggler_seconds", Json::num(straggled_s)),
+            ("empty_overhead_ratio", Json::num(overhead)),
+            ("identical", Json::Bool(true)),
+            ("sweep_nominal_seconds", Json::num(nominal_s)),
+            ("sweep_scenario_seconds", Json::num(scenario_s)),
+            ("sweep_ratio", Json::num(sweep_ratio)),
+            ("straggler_slowdown", Json::num(rb.straggler_slowdown)),
+            ("regret", Json::num(rb.regret)),
+        ])
+    );
+}

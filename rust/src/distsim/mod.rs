@@ -32,6 +32,7 @@
 use crate::cluster::ClusterSpec;
 use crate::events::{CommEvent, Event, EventDb, EventId};
 use crate::partition::Partition;
+use crate::scenario::{Degrade, ScenarioSpec};
 use crate::schedule::{Phase, PipelineSchedule};
 use crate::strategy::RankCoords;
 use crate::timeline::{Span, SpanKind, Tag, Timeline};
@@ -115,6 +116,22 @@ impl<'a> DistSim<'a> {
     /// use (run `profile::profile_events` after `engine::build_programs`,
     /// which interns the full per-kind set).
     pub fn predict(&self, db: &mut EventDb) -> Timeline {
+        self.predict_with(db, None)
+    }
+
+    /// The analytical degradation-aware walk (ISSUE 7): the same
+    /// hierarchical model with every composed duration scaled by a
+    /// scenario's time-weighted effective factors — compute by the
+    /// slowest degraded MP-group member, transfers and all-reduces by
+    /// their link class's effective bandwidth/latency multipliers. The
+    /// `None` path is the exact pre-scenario walk (every adjustment is
+    /// behind `if let Some`), which keeps sweep responses bit-identical
+    /// without a scenario.
+    pub fn predict_degraded(&self, db: &mut EventDb, deg: &Degrade) -> Timeline {
+        self.predict_with(db, Some(deg))
+    }
+
+    fn predict_with(&self, db: &mut EventDb, deg: Option<&Degrade>) -> Timeline {
         let strategy = self.part.strategy;
         let pp = strategy.pp;
         let dpn = strategy.dp;
@@ -225,6 +242,23 @@ impl<'a> DistSim<'a> {
             })
             .collect();
 
+        // scenario degradation of one communication duration: resolve the
+        // event's link class and apply the effective bandwidth/latency
+        // multipliers (identity without a degrade)
+        let degrade_link = |db: &EventDb, ev: EventId, dur: TimeUs| -> TimeUs {
+            match deg {
+                None => dur,
+                Some(dg) => {
+                    let link = match db.get(ev) {
+                        Event::Comm(CommEvent::P2p { link, .. })
+                        | Event::Comm(CommEvent::AllReduce { link, .. }) => *link,
+                        Event::Comp(_) => return dur,
+                    };
+                    dg.link_dur(link, dur, self.cluster.lat_us(link))
+                }
+            }
+        };
+
         // -- pipeline parallelism modeling (Algorithm 1), per DP replica --
         let m = self.sched.micro_batches;
         // spans per (replica, logical stage); replicated over MP at the end
@@ -259,22 +293,43 @@ impl<'a> DistSim<'a> {
             // group (exact link class through the placement map)
             let lane_dur = |db: &EventDb, items: &[Vec<Item>], s: usize, i: usize| {
                 match items[0][i] {
-                    Item::MpAr { .. } => db.elapsed(
-                        mp_ar_ev[s][d].expect("mp > 1 lane composes an all-reduce"),
-                    ),
-                    Item::Comp { .. } => lane_kinds[s]
-                        .iter()
-                        .map(|k| {
-                            let slot = stage_kinds[s]
-                                .iter()
-                                .position(|sk| sk == k)
-                                .expect("lane kind enumerated per stage");
-                            let Item::Comp { event, .. } = items[slot][i] else {
-                                unreachable!("kind slots share one item layout")
-                            };
-                            db.elapsed(event)
-                        })
-                        .fold(f64::NEG_INFINITY, f64::max),
+                    Item::MpAr { .. } => {
+                        let ev = mp_ar_ev[s][d].expect("mp > 1 lane composes an all-reduce");
+                        degrade_link(db, ev, db.elapsed(ev))
+                    }
+                    Item::Comp { .. } => match deg {
+                        // happy path: the max over the lane's kinds
+                        None => lane_kinds[s]
+                            .iter()
+                            .map(|k| {
+                                let slot = stage_kinds[s]
+                                    .iter()
+                                    .position(|sk| sk == k)
+                                    .expect("lane kind enumerated per stage");
+                                let Item::Comp { event, .. } = items[slot][i] else {
+                                    unreachable!("kind slots share one item layout")
+                                };
+                                db.elapsed(event)
+                            })
+                            .fold(f64::NEG_INFINITY, f64::max),
+                        // degraded: the max over the lane's *members* —
+                        // a straggler slows its own device's copy, and
+                        // the MP barrier makes the slowest member gate
+                        Some(dg) => (0..strategy.mp)
+                            .map(|mp| {
+                                let rank =
+                                    strategy.rank_of(RankCoords { mp, pp: s, dp: d });
+                                let slot = stage_kinds[s]
+                                    .iter()
+                                    .position(|sk| *sk == kind_of_rank(rank))
+                                    .expect("lane kind enumerated per stage");
+                                let Item::Comp { event, .. } = items[slot][i] else {
+                                    unreachable!("kind slots share one item layout")
+                                };
+                                db.elapsed(event) * dg.comp_factor(rank_dev[rank])
+                            })
+                            .fold(f64::NEG_INFINITY, f64::max),
+                    },
                 }
             };
 
@@ -315,7 +370,7 @@ impl<'a> DistSim<'a> {
                     if let Some(ev) = recv_ev {
                         let send_post = dep_done + launch[sender.unwrap()];
                         let start = cur.max(send_post);
-                        let dur = db.elapsed(ev);
+                        let dur = degrade_link(db, ev, db.elapsed(ev));
                         stage_spans[d][s].push((
                             start,
                             start + dur,
@@ -447,7 +502,7 @@ impl<'a> DistSim<'a> {
                         });
                     }
                     if let Some(ev) = grad_ar[s][mp] {
-                        let dur = db.elapsed(ev);
+                        let dur = degrade_link(db, ev, db.elapsed(ev));
                         timeline.push(Span {
                             device,
                             start: ar_start[s],
@@ -472,6 +527,27 @@ impl<'a> DistSim<'a> {
     /// Predicted iteration (batch) time in microseconds.
     pub fn predict_batch_time_us(&self, db: &mut EventDb) -> f64 {
         self.predict(db).batch_time_us()
+    }
+
+    /// Two-pass scenario prediction: the nominal walk fixes the horizon,
+    /// the scenario's episodes are time-weighted over it
+    /// ([`ScenarioSpec::degrade_over`]), and a second walk applies the
+    /// effective factors. Returns `(nominal_us, degraded_us)`; resize and
+    /// failure accounting compose on top
+    /// ([`ScenarioSpec::compose_batch_us`]). With an identity degrade the
+    /// second walk is skipped and both numbers are bit-identical.
+    pub fn predict_batch_time_us_scenario(
+        &self,
+        db: &mut EventDb,
+        spec: &ScenarioSpec,
+    ) -> (f64, f64) {
+        let nominal = self.predict_batch_time_us(db);
+        let deg = spec.degrade_over(self.cluster.total_devices(), nominal);
+        if deg.is_identity() {
+            return (nominal, nominal);
+        }
+        let degraded = self.predict_degraded(db, &deg).batch_time_us();
+        (nominal, degraded)
     }
 }
 
@@ -580,6 +656,65 @@ mod tests {
             .spans()
             .iter()
             .any(|s| s.tag.kind == SpanKind::GradAllReduce));
+    }
+
+    #[test]
+    fn identity_degrade_is_bit_identical_to_predict() {
+        let model = zoo::bert_large();
+        let s = Strategy::new(2, 2, 2);
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let part = partition(&model, &s, &c, 4);
+        let sched = schedule::dapple(2, 4);
+        let mut db = EventDb::new();
+        crate::engine::build_programs(&part, &sched, &c, &mut db);
+        profile_events(&mut db, &c, &CostBook::default(), 0.0, 1, 99);
+        let ds = DistSim::new(&part, &sched, &c);
+        let plain = ds.predict(&mut db);
+        let deg = crate::scenario::ScenarioSpec::default()
+            .degrade_over(c.total_devices(), 1000.0);
+        let degraded = ds.predict_degraded(&mut db, &deg);
+        assert_eq!(plain.len(), degraded.len());
+        for (a, b) in plain.spans().iter().zip(degraded.spans()) {
+            assert_eq!(a, b);
+        }
+        // the two-pass scenario path agrees too
+        let (nom, deg_us) =
+            ds.predict_batch_time_us_scenario(&mut db, &crate::scenario::ScenarioSpec::default());
+        assert_eq!(nom, deg_us);
+        assert_eq!(nom, plain.batch_time_us());
+    }
+
+    #[test]
+    fn degraded_walk_is_slower_under_stragglers_and_link_episodes() {
+        use crate::scenario::{LinkEpisode, ScenarioSpec, Straggler};
+        let model = zoo::bert_large();
+        let s = Strategy::new(1, 2, 2);
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let part = partition(&model, &s, &c, 4);
+        let sched = schedule::dapple(2, 4);
+        let mut db = EventDb::new();
+        crate::engine::build_programs(&part, &sched, &c, &mut db);
+        profile_events(&mut db, &c, &CostBook::default(), 0.0, 1, 99);
+        let ds = DistSim::new(&part, &sched, &c);
+        let nominal = ds.predict_batch_time_us(&mut db);
+        let strag = ScenarioSpec {
+            stragglers: vec![Straggler { device: 0, factor: 1.5 }],
+            ..ScenarioSpec::default()
+        };
+        let (_, strag_us) = ds.predict_batch_time_us_scenario(&mut db, &strag);
+        assert!(strag_us > nominal, "straggler {strag_us} !> {nominal}");
+        let link = ScenarioSpec {
+            link_episodes: vec![LinkEpisode {
+                link: crate::cluster::LinkClass::Intra,
+                bw_factor: 3.0,
+                lat_factor: 2.0,
+                start_us: 0.0,
+                end_us: f64::MAX,
+            }],
+            ..ScenarioSpec::default()
+        };
+        let (_, link_us) = ds.predict_batch_time_us_scenario(&mut db, &link);
+        assert!(link_us > nominal, "link episode {link_us} !> {nominal}");
     }
 
     #[test]

@@ -7,12 +7,14 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 
 use super::program::{Instr, Program};
 use crate::cluster::{ClusterSpec, LinkClass};
 use crate::comm;
 use crate::cost::CostBook;
 use crate::events::{CommEvent, Event, EventDb};
+use crate::scenario::ScenarioSpec;
 use crate::timeline::{Span, Tag, Timeline};
 use crate::util::{Rng, TimeUs};
 
@@ -27,6 +29,13 @@ pub struct EngineParams {
     /// Model link contention (concurrent transfers share bandwidth).
     pub contention: bool,
     pub seed: u64,
+    /// Unhappy-path scenario (stragglers, link episodes — see
+    /// `scenario`). `None` and `Some(empty)` are bit-identical to the
+    /// pre-scenario engine: every adjustment is gated on a non-empty
+    /// spec, including the scenario RNG forks. Failures and elastic
+    /// resize are accounting events, composed analytically on top of the
+    /// simulated batch time — the executor never mutates rank count.
+    pub scenario: Option<Arc<ScenarioSpec>>,
 }
 
 impl Default for EngineParams {
@@ -36,6 +45,7 @@ impl Default for EngineParams {
             clock_skew_us: 20.0,
             contention: true,
             seed: 42,
+            scenario: None,
         }
     }
 }
@@ -290,10 +300,8 @@ pub fn execute_with_scratch(
     scratch: &mut ExecScratch,
 ) -> Timeline {
     // every price — including per-rank (per-SKU) launch overheads — is
-    // pre-resolved in `base`; the executor no longer consults the
-    // topology per instruction. The parameter stays for signature
-    // stability and future fabric-level semantics.
-    let _ = cluster;
+    // pre-resolved in `base`; the executor consults the topology only to
+    // resolve a scenario's device factors and base link latencies.
     let n = prog.n_ranks();
     scratch.prepare(n, prog.groups.len());
     let mut master_rng = Rng::new(params.seed);
@@ -313,6 +321,26 @@ pub fn execute_with_scratch(
         st.rng = master_rng.fork(r as u64 + 1);
     }
     let mut coll_rng = master_rng.fork(0xA11);
+
+    // scenario state, all gated on a non-empty spec so the empty scenario
+    // consumes no master draws and allocates nothing (bit-identity with
+    // the pre-scenario engine). The per-rank scenario streams are forked
+    // *after* every pre-existing fork, salted by (scenario, rank): the
+    // scenario salt hashes the canonical spec JSON and each rank xors in
+    // its index, so streams are distinct per rank and per scenario.
+    let scn: Option<&ScenarioSpec> = params.scenario.as_deref().filter(|s| !s.is_empty());
+    let rank_dev: Vec<usize> = if scn.is_some() {
+        cluster.rank_to_device()
+    } else {
+        Vec::new()
+    };
+    let mut scn_rngs: Vec<Rng> = match scn {
+        Some(spec) if spec.sigma > 0.0 => {
+            let salt = spec.salt();
+            (0..n).map(|r| master_rng.fork(salt ^ (r as u64 + 1))).collect()
+        }
+        _ => Vec::new(),
+    };
 
     let mut timeline = scratch.spare.take().unwrap_or_default();
     timeline.reset(n);
@@ -354,9 +382,18 @@ pub fn execute_with_scratch(
             }
             match &prog.instrs[r][pc] {
                 Instr::Comp { event: _, tag } => {
-                    let dur =
+                    let mut dur =
                         base.per_instr[r][pc] * states[r].rng.jitter(params.jitter_sigma);
                     let start = states[r].clock;
+                    if let Some(spec) = scn {
+                        // straggler factors resolve at the span's start in
+                        // unskewed simulated time (skew shifts recorded
+                        // timestamps only, never this clock)
+                        dur *= spec.comp_factor_at(rank_dev[r], start);
+                        if spec.sigma > 0.0 {
+                            dur *= scn_rngs[r].jitter(spec.sigma);
+                        }
+                    }
                     states[r].clock += dur;
                     record(&mut timeline, r, start, states[r].clock, *tag, skews[r] - skew0);
                     states[r].pc += 1;
@@ -388,9 +425,12 @@ pub fn execute_with_scratch(
                         };
                         let start = send_post.max(recv_post);
                         let active = if params.contention { load.active(*link, start) } else { 0 };
-                        let dur = base.per_instr[peer][peer_pc]
+                        let mut dur = base.per_instr[peer][peer_pc]
                             * contention_factor(active)
                             * coll_rng.jitter(params.jitter_sigma);
+                        if let Some(spec) = scn {
+                            dur = spec.link_dur_at(*link, start, dur, cluster.lat_us(*link));
+                        }
                         if params.contention {
                             load.register(*link, start + dur);
                         }
@@ -411,9 +451,12 @@ pub fn execute_with_scratch(
                         };
                         let start = send_post.max(states[r].clock);
                         let active = if params.contention { load.active(*link, start) } else { 0 };
-                        let dur = base.per_instr[r][pc]
+                        let mut dur = base.per_instr[r][pc]
                             * contention_factor(active)
                             * coll_rng.jitter(params.jitter_sigma);
+                        if let Some(spec) = scn {
+                            dur = spec.link_dur_at(*link, start, dur, cluster.lat_us(*link));
+                        }
                         if params.contention {
                             load.register(*link, start + dur);
                         }
@@ -432,7 +475,6 @@ pub fn execute_with_scratch(
                     let members = &prog.groups[gid];
                     if arrivals[gid].len() == members.len() {
                         // barrier complete: price the ring
-                        let _ = event;
                         let start = arrivals[gid]
                             .iter()
                             .map(|&(_, t)| t)
@@ -442,8 +484,15 @@ pub fn execute_with_scratch(
                         // links), so unlike p2p they do not contend with
                         // each other in this fabric model; they only see
                         // jitter. See DESIGN.md.
-                        let dur =
+                        let mut dur =
                             base.per_instr[r][pc] * coll_rng.jitter(params.jitter_sigma);
+                        if let Some(spec) = scn {
+                            let Event::Comm(CommEvent::AllReduce { link, .. }) = db.get(*event)
+                            else {
+                                panic!("allreduce references non-AR event")
+                            };
+                            dur = spec.link_dur_at(*link, start, dur, cluster.lat_us(*link));
+                        }
                         // drain in place (not mem::take) so the arrival
                         // buffer's allocation survives for the next round
                         for k in 0..arrivals[gid].len() {
@@ -509,6 +558,7 @@ mod tests {
             clock_skew_us: 0.0,
             contention: false,
             seed: 1,
+            scenario: None,
         }
     }
 
@@ -629,6 +679,45 @@ mod tests {
     }
 
     #[test]
+    fn empty_scenario_is_bit_identical_to_none() {
+        let without = run(2, 2, 2, 4, "dapple", &EngineParams::default());
+        let with = run(
+            2,
+            2,
+            2,
+            4,
+            "dapple",
+            &EngineParams {
+                scenario: Some(Arc::new(ScenarioSpec::default())),
+                ..EngineParams::default()
+            },
+        );
+        assert_eq!(without.len(), with.len());
+        for (a, b) in without.spans().iter().zip(with.spans()) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn persistent_straggler_slows_the_batch() {
+        use crate::scenario::Straggler;
+        let nominal = run(2, 2, 2, 4, "dapple", &quiet());
+        let spec = ScenarioSpec {
+            stragglers: vec![Straggler { device: 0, factor: 1.5 }],
+            ..ScenarioSpec::default()
+        };
+        let slow = run(
+            2,
+            2,
+            2,
+            4,
+            "dapple",
+            &EngineParams { scenario: Some(Arc::new(spec)), ..quiet() },
+        );
+        assert!(slow.batch_time_us() > nominal.batch_time_us());
+    }
+
+    #[test]
     fn clock_skew_shifts_recorded_timestamps_only() {
         let no_skew = run(1, 2, 1, 2, "gpipe", &quiet());
         let skewed = run(
@@ -642,6 +731,7 @@ mod tests {
                 clock_skew_us: 50.0,
                 contention: false,
                 seed: 9,
+                scenario: None,
             },
         );
         // rank 0 spans unshifted relative to each other; other devices
@@ -687,6 +777,7 @@ mod proptests {
                     clock_skew_us: rng.f64() * 50.0,
                     contention: rng.f64() < 0.5,
                     seed: rng.next_u64(),
+                    scenario: None,
                 },
             );
             assert!(tl.batch_time_us() > 0.0);

@@ -15,11 +15,14 @@ pub use des::{
 };
 pub use program::{build_programs, Instr, Program};
 
+use std::sync::Arc;
+
 use crate::config::RunConfig;
 use crate::cost::{CostBook, CostModel};
 use crate::events::EventDb;
 use crate::model::ModelSpec;
 use crate::partition::{partition, Partition};
+use crate::scenario::ScenarioSpec;
 use crate::schedule::{self, PipelineSchedule};
 use crate::timeline::Timeline;
 use crate::util::stats;
@@ -36,6 +39,9 @@ pub struct GroundTruth {
     pub book: CostBook,
     /// Noise-free per-instruction prices, computed once (§Perf).
     base: des::BaseCosts,
+    /// Unhappy-path scenario every iteration runs under
+    /// ([`GroundTruth::with_scenario`]; `None` = happy path).
+    scenario: Option<Arc<ScenarioSpec>>,
 }
 
 impl GroundTruth {
@@ -86,7 +92,17 @@ impl GroundTruth {
             db,
             book,
             base,
+            scenario: None,
         })
+    }
+
+    /// Run every iteration under an unhappy-path scenario (stragglers and
+    /// link episodes perturb the executor; failures/resize are accounted
+    /// analytically — see `scenario`). An empty spec is bit-identical to
+    /// no scenario.
+    pub fn with_scenario(mut self, scenario: Arc<ScenarioSpec>) -> Self {
+        self.scenario = Some(scenario);
+        self
     }
 
     fn params(&self, seed: u64) -> EngineParams {
@@ -95,6 +111,7 @@ impl GroundTruth {
             clock_skew_us: self.cfg.clock_skew_us,
             contention: true,
             seed,
+            scenario: self.scenario.clone(),
         }
     }
 

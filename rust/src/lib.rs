@@ -18,8 +18,10 @@
 //!   paper's homogeneous testbeds, clusters can mix device SKUs
 //!   ([`cluster`]: named device kinds + rank→device placement maps) with
 //!   per-kind cost models ([`cost::CostBook`]) and a placement axis in
-//!   the sweep — see `docs/FORMATS.md` for every externally visible byte
-//!   format (service protocol, cache snapshots, bench output).
+//!   the sweep, and sweeps can run under deterministic unhappy-path
+//!   scenarios ([`scenario`]: stragglers, link degradation, failures,
+//!   elastic resize) — see `docs/FORMATS.md` for every externally visible
+//!   byte format (service protocol, cache snapshots, bench output).
 //! * **Layer 2 (python/compile/model.py)** — JAX transformer-layer event
 //!   graphs, AOT-lowered to HLO text artifacts.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas matmul/attention/
@@ -43,6 +45,7 @@ pub mod model;
 pub mod partition;
 pub mod profile;
 pub mod runtime;
+pub mod scenario;
 pub mod schedule;
 pub mod search;
 pub mod service;

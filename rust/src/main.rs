@@ -7,9 +7,11 @@
 //!                   [--micro-batches 4] [--micro-batch-size 4] [--trace out.json]
 //! distsim search    [--model bert-exlarge] [--global-batch 16] [--cache-file F]
 //!                   [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
+//!                   [--scenario-file scenario.json]
 //! distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
 //!                   [--save-interval SECS] [--max-queue N]
-//! distsim ask       [--model M ...] | --file req.ndjson  [--connect HOST:PORT]
+//! distsim ask       [--model M ...] [--scenario-file scenario.json]
+//!                   | --file req.ndjson  [--connect HOST:PORT]
 //! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
 //! distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
 //!                   ablate-allreduce|ablate-noise|ablate-hierarchy|all
@@ -113,9 +115,12 @@ USAGE:
                     [--wide] [--mbs-axis] [--schedule-axis] [--placement-axis]
                     [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
                     [--no-cache] [--max-candidates N] [--cache-file F]
+                    [--scenario-file scenario.json]
                     # --placement-opt searches rank→device tables beyond
                     # the named placements; --prune-epochs N re-prunes
-                    # against the incumbent every 1/N of the sweep
+                    # against the incumbent every 1/N of the sweep;
+                    # --scenario-file scores every candidate under an
+                    # unhappy-path ScenarioSpec and prints the robust pick
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
                     [--save-interval SECS] [--max-queue N]
                     # long-lived what-if daemon: one NDJSON request per
@@ -127,9 +132,11 @@ USAGE:
                     # overflow answered with a structured `unavailable`
   distsim ask       [--model M --global-batch B ...] | --file req.ndjson
                     [--connect HOST:PORT] [--timing] [--workers W]
-                    [--cache-dir DIR]
+                    [--cache-dir DIR] [--scenario-file scenario.json]
                     # self-test client: runs the request in-process, or
-                    # sends it to a running daemon with --connect
+                    # sends it to a running daemon with --connect;
+                    # --scenario-file attaches an unhappy-path scenario
+                    # to the flag-built sweep request
   distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
   distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
                     ablate-allreduce|ablate-noise|ablate-hierarchy|ablate-schedule|all [--fast]
@@ -219,7 +226,19 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let mut dflags = flags.clone();
     dflags.entry("device".to_string()).or_insert("a10".to_string());
     let cluster = cluster_from_flags(&dflags)?;
+    // --scenario-file: load an unhappy-path spec and score every sweep
+    // candidate under it; device indices must exist on this cluster
+    let scenario = match flags.get("scenario-file") {
+        Some(path) => {
+            let json = distsim::config::Json::read_file(std::path::Path::new(path))?;
+            let spec = distsim::scenario::ScenarioSpec::from_json(&json)?;
+            spec.validate_devices(cluster.total_devices())?;
+            spec
+        }
+        None => distsim::scenario::ScenarioSpec::default(),
+    };
     let cfg = distsim::search::SweepConfig {
+        scenario,
         global_batch: usize_flag(flags, "global-batch", 16),
         jitter_sigma: 0.02,
         profile_iters: usize_flag(flags, "profile-iters", 100),
@@ -328,6 +347,28 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             report.speedup().unwrap_or(f64::NAN)
         ),
         _ => println!("\nno reachable candidate for this model/cluster"),
+    }
+    if let Some(rb) = &report.robustness {
+        let nb = &report.candidates[rb.nominal_best];
+        let sb = &report.candidates[rb.scenario_best];
+        println!(
+            "robustness: nominal best {} -> scenario best {} ({:.3} it/s under scenario); \
+             regret {:.1}%",
+            nb.strategy.notation(),
+            sb.strategy.notation(),
+            sb.scenario_throughput,
+            rb.regret * 100.0
+        );
+        println!(
+            "  scenario slowdown x{:.3} (stragglers x{:.3}, links x{:.3}); \
+             restart penalty {:.0} us, reshard {:.0} us, {} episodes",
+            rb.scenario_slowdown,
+            rb.straggler_slowdown,
+            rb.link_slowdown,
+            rb.restart_penalty_us,
+            rb.reshard_us,
+            rb.episodes
+        );
     }
     println!(
         "{} candidates: {} evaluated, {} pruned, on {} threads in {:.3} s",
@@ -485,6 +526,13 @@ fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             if let Some(v) = flags.get(name).and_then(|v| v.parse::<usize>().ok()) {
                 sweep.push((key, Json::num(v.max(1) as f64)));
             }
+        }
+        // --scenario-file: parse eagerly so a malformed spec fails here
+        // as a CLI error, not as a daemon error response line
+        if let Some(path) = flags.get("scenario-file") {
+            let json = Json::read_file(std::path::Path::new(path))?;
+            let spec = distsim::scenario::ScenarioSpec::from_json(&json)?;
+            sweep.push(("scenario", spec.to_json()));
         }
         distsim::service::protocol::build_request_line(
             flag(flags, "id", "ask"),

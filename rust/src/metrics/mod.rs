@@ -65,6 +65,45 @@ pub fn per_gpu_activity_error_pct(pred: &Timeline, truth: &Timeline) -> Vec<f64>
         .collect()
 }
 
+/// Per-device batch time: each device's latest span end relative to the
+/// timeline start (0 for a device with no spans). Under an unhappy-path
+/// scenario the straggling ranks finish late — these are the numbers the
+/// robustness attribution ranks (ISSUE 7).
+pub fn rank_batch_times_us(t: &Timeline) -> Vec<f64> {
+    let t0 = t.start_us();
+    (0..t.n_devices)
+        .map(|d| {
+            t.device_spans(d)
+                .iter()
+                .map(|s| s.end - t0)
+                .fold(0.0f64, f64::max)
+        })
+        .collect()
+}
+
+/// The slowest rank's batch time — what a scenario's straggler actually
+/// costs end-to-end (collective barriers make it gate the iteration).
+pub fn worst_rank_batch_time_us(t: &Timeline) -> f64 {
+    rank_batch_times_us(t).into_iter().fold(0.0f64, f64::max)
+}
+
+/// Nearest-rank percentile (p in [0, 100]) of a value set; 0.0 when
+/// empty. Used for the p99 rank batch time in scenario reporting.
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(f64::total_cmp);
+    let idx = ((p / 100.0 * v.len() as f64).ceil() as usize).clamp(1, v.len()) - 1;
+    v[idx]
+}
+
+/// p99 over [`rank_batch_times_us`] — the tail-rank batch time.
+pub fn p99_rank_batch_time_us(t: &Timeline) -> f64 {
+    percentile(&rank_batch_times_us(t), 99.0)
+}
+
 /// Key for one pipeline-stage execution on one device.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StageKey {
@@ -222,6 +261,45 @@ mod tests {
         sorted.sort();
         assert_eq!(keys, sorted, "BTreeMap must iterate in key order");
         assert_eq!(keys.len(), 3);
+    }
+
+    #[test]
+    fn rank_batch_times_and_worst_rank() {
+        // device 0 finishes at 40, device 1 at 100, device 2 idle
+        let t = tl(
+            vec![
+                mk(0, 0.0, 10.0, 0, true),
+                mk(0, 20.0, 40.0, 0, false),
+                mk(1, 0.0, 100.0, 0, true),
+            ],
+            3,
+        );
+        assert_eq!(rank_batch_times_us(&t), vec![40.0, 100.0, 0.0]);
+        assert_eq!(worst_rank_batch_time_us(&t), 100.0);
+        assert_eq!(p99_rank_batch_time_us(&t), 100.0);
+    }
+
+    #[test]
+    fn rank_batch_times_align_to_timeline_start() {
+        // global offset must not inflate per-rank times
+        let t = tl(
+            vec![mk(0, 1000.0, 1010.0, 0, true), mk(1, 1000.0, 1050.0, 0, true)],
+            2,
+        );
+        assert_eq!(rank_batch_times_us(&t), vec![10.0, 50.0]);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let xs = vec![10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 50.0), 20.0);
+        assert_eq!(percentile(&xs, 75.0), 30.0);
+        assert_eq!(percentile(&xs, 99.0), 40.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        // unsorted input is handled
+        assert_eq!(percentile(&[3.0, 1.0, 2.0], 99.0), 3.0);
     }
 
     #[test]

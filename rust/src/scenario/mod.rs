@@ -1,0 +1,799 @@
+//! Unhappy-path scenario engine: deterministic faults, stragglers, link
+//! degradation and elastic-resize what-ifs (ISSUE 7).
+//!
+//! A [`ScenarioSpec`] is a JSON-round-trippable description of everything
+//! that can go wrong during a training run:
+//!
+//! * **persistent stragglers** — a per-device multiplicative compute
+//!   slowdown for the whole run ("node 3 runs 20% slow" = factor 1.2);
+//! * **straggler episodes** — the same slowdown over a simulated-time
+//!   window only (thermal throttling, a noisy neighbour);
+//! * **link-degradation episodes** — bandwidth / latency multipliers on
+//!   one [`LinkClass`] over a time window (a flapping NIC, an oversubscribed
+//!   spine);
+//! * **device failures** — a crash at `at_us` with checkpoint/restart
+//!   accounting (work since the last checkpoint is lost, the restart costs
+//!   `restart_us`);
+//! * **elastic DP resize** — drop or add data-parallel replicas mid-run,
+//!   paying a re-shard cost and re-balancing the per-replica batch.
+//!
+//! **Determinism contract.** A scenario perturbs the simulation only
+//! through (a) pure multiplicative factors resolved against *unskewed
+//! simulated time* and (b) RNG forks salted by (scenario, rank) — see
+//! [`ScenarioSpec::salt`]. The empty scenario is bit-identical to running
+//! without one (every adjustment is gated on `!is_empty()`), and any
+//! non-empty scenario is bit-identical for any thread or worker count:
+//! the factors are pure functions, and the per-rank scenario RNG streams
+//! are consumed in program order (the DES scheduler's wake order is
+//! logical, not temporal). See DESIGN.md §8.
+//!
+//! **Time-window resolution.** An episode `[start_us, end_us)` applies to
+//! a span iff the span *starts* inside the window, in unskewed simulated
+//! time (clock skew shifts recorded timestamps only, never the simulation
+//! clock — DESIGN.md §2). Spans are not split at window edges: the window
+//! granularity is one kernel / one transfer, which is the resolution the
+//! engine models anyway.
+//!
+//! **What the DES simulates vs what is accounted analytically.** Straggler
+//! factors and link episodes perturb the discrete-event executor span by
+//! span. Failures and elastic resize are *accounting* events: re-simulating
+//! a world-size change mid-iteration would change the partition itself, so
+//! they compose analytically on top of the degraded batch time
+//! ([`ScenarioSpec::compose_batch_us`]) — lost work + restart cost appear
+//! exactly once, and a resize rescales the per-replica load and pays the
+//! re-shard cost once.
+
+use crate::cluster::LinkClass;
+use crate::config::Json;
+
+/// A persistent per-device multiplicative compute slowdown.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Straggler {
+    /// Physical device index (validated against the cluster at admission).
+    pub device: usize,
+    /// Compute-time multiplier (> 0; 1.2 = 20% slower).
+    pub factor: f64,
+}
+
+/// A transient per-device compute slowdown over a simulated-time window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StragglerEpisode {
+    pub device: usize,
+    /// Compute-time multiplier while the episode is active (> 0).
+    pub factor: f64,
+    /// Window start, unskewed simulated µs (inclusive).
+    pub start_us: f64,
+    /// Window end, unskewed simulated µs (exclusive; > `start_us`).
+    pub end_us: f64,
+}
+
+/// A link-class-wide degradation over a simulated-time window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkEpisode {
+    /// Which fabric tier degrades (`"intra"` | `"inter"`).
+    pub link: LinkClass,
+    /// Multiplier on the bandwidth-proportional part of a transfer's time
+    /// (> 0; 2.0 = half the bandwidth).
+    pub bw_factor: f64,
+    /// Multiplier on the link's base latency (> 0).
+    pub lat_factor: f64,
+    pub start_us: f64,
+    pub end_us: f64,
+}
+
+/// A device crash with checkpoint/restart accounting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Failure {
+    pub device: usize,
+    /// Crash time, µs into the run.
+    pub at_us: f64,
+    /// Checkpoint cadence, µs. Work since the last checkpoint is lost:
+    /// `at_us % checkpoint_interval_us` — or all of `at_us` when 0 (no
+    /// checkpointing at all).
+    pub checkpoint_interval_us: f64,
+    /// Cost to restart and rejoin, µs.
+    pub restart_us: f64,
+}
+
+/// An elastic data-parallel resize: drop (`dp_delta < 0`) or add
+/// (`dp_delta > 0`) replicas mid-run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Resize {
+    /// Replica-count change (non-zero).
+    pub dp_delta: i64,
+    /// One-time re-shard / re-materialization cost, µs.
+    pub reshard_us: f64,
+}
+
+/// A full unhappy-path scenario. `Default` is the empty scenario, which
+/// is bit-identical to running without one.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ScenarioSpec {
+    pub stragglers: Vec<Straggler>,
+    pub straggler_episodes: Vec<StragglerEpisode>,
+    pub link_episodes: Vec<LinkEpisode>,
+    pub failures: Vec<Failure>,
+    pub resize: Option<Resize>,
+    /// Extra per-rank multiplicative jitter sigma drawn from the
+    /// (scenario, rank)-salted RNG forks (0 = none).
+    pub sigma: f64,
+}
+
+/// Time-weighted effective degradation factors over a horizon — the
+/// analytical counterpart of the span-by-span DES perturbation, so sweeps
+/// stay cheap (`distsim::predict` runs one extra walk, not a simulation
+/// per episode). Built by [`ScenarioSpec::degrade_over`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Degrade {
+    /// Per-device effective compute multiplier.
+    pub comp: Vec<f64>,
+    /// Per-link-class effective bandwidth-time multiplier
+    /// (index by [`link_idx`]).
+    pub bw: [f64; 2],
+    /// Per-link-class effective latency multiplier.
+    pub lat: [f64; 2],
+}
+
+/// Dense index for a [`LinkClass`] (intra = 0, inter = 1).
+pub fn link_idx(link: LinkClass) -> usize {
+    match link {
+        LinkClass::Intra => 0,
+        LinkClass::Inter => 1,
+    }
+}
+
+impl Degrade {
+    /// Effective compute multiplier for a device (1.0 out of range).
+    pub fn comp_factor(&self, device: usize) -> f64 {
+        self.comp.get(device).copied().unwrap_or(1.0)
+    }
+
+    /// Degrade one transfer duration: the bandwidth-proportional part is
+    /// multiplied, the extra latency is added on top.
+    pub fn link_dur(&self, link: LinkClass, dur: f64, base_lat_us: f64) -> f64 {
+        let i = link_idx(link);
+        dur * self.bw[i] + (self.lat[i] - 1.0) * base_lat_us
+    }
+
+    /// Is this degrade a no-op (all factors exactly 1)?
+    pub fn is_identity(&self) -> bool {
+        self.comp.iter().all(|&f| f == 1.0)
+            && self.bw == [1.0, 1.0]
+            && self.lat == [1.0, 1.0]
+    }
+}
+
+fn overlap_weight(start: f64, end: f64, horizon: f64) -> f64 {
+    if horizon <= 0.0 {
+        return 0.0;
+    }
+    let lo = start.max(0.0);
+    let hi = end.min(horizon);
+    ((hi - lo).max(0.0)) / horizon
+}
+
+impl ScenarioSpec {
+    /// No perturbation at all: running with this spec is bit-identical to
+    /// running without a scenario.
+    pub fn is_empty(&self) -> bool {
+        self.stragglers.is_empty()
+            && self.straggler_episodes.is_empty()
+            && self.link_episodes.is_empty()
+            && self.failures.is_empty()
+            && self.resize.is_none()
+            && self.sigma == 0.0
+    }
+
+    /// Episodes this scenario carries (the service's `episodes_simulated`
+    /// counter counts these per scenario request).
+    pub fn episode_count(&self) -> usize {
+        self.straggler_episodes.len() + self.link_episodes.len() + self.failures.len()
+    }
+
+    /// Deterministic salt for (scenario, rank) RNG forks: FNV-1a over the
+    /// canonical JSON (sorted keys, shortest floats), so equal scenarios
+    /// fork equal streams on every machine and any textual difference
+    /// separates them.
+    pub fn salt(&self) -> u64 {
+        fnv1a64(self.to_json().to_string().as_bytes())
+    }
+
+    /// Persistent compute multiplier for a device (stragglers compose
+    /// multiplicatively when several name the same device).
+    pub fn comp_factor(&self, device: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|s| s.device == device)
+            .fold(1.0, |f, s| f * s.factor)
+    }
+
+    /// Compute multiplier for a span starting at unskewed simulated time
+    /// `t` on `device`: persistent stragglers times every episode whose
+    /// window `[start_us, end_us)` contains `t`.
+    pub fn comp_factor_at(&self, device: usize, t: f64) -> f64 {
+        let mut f = self.comp_factor(device);
+        for e in &self.straggler_episodes {
+            if e.device == device && t >= e.start_us && t < e.end_us {
+                f *= e.factor;
+            }
+        }
+        f
+    }
+
+    /// Degrade one transfer duration for a span starting at `t`:
+    /// `dur * bw_factor + (lat_factor - 1) * base_lat_us` over the
+    /// episodes active on `link` at `t`.
+    pub fn link_dur_at(&self, link: LinkClass, t: f64, dur: f64, base_lat_us: f64) -> f64 {
+        let mut bw = 1.0;
+        let mut lat = 1.0;
+        for e in &self.link_episodes {
+            if e.link == link && t >= e.start_us && t < e.end_us {
+                bw *= e.bw_factor;
+                lat *= e.lat_factor;
+            }
+        }
+        dur * bw + (lat - 1.0) * base_lat_us
+    }
+
+    /// Time-weighted effective factors over `[0, horizon_us)` for
+    /// `devices` devices: each episode contributes `(factor - 1)` scaled
+    /// by its fractional overlap with the horizon, on top of persistent
+    /// factors. With `horizon_us <= 0` only persistent factors apply.
+    pub fn degrade_over(&self, devices: usize, horizon_us: f64) -> Degrade {
+        let mut comp: Vec<f64> = (0..devices).map(|d| self.comp_factor(d)).collect();
+        for e in &self.straggler_episodes {
+            if e.device < devices {
+                comp[e.device] *=
+                    1.0 + (e.factor - 1.0) * overlap_weight(e.start_us, e.end_us, horizon_us);
+            }
+        }
+        let mut bw = [1.0f64; 2];
+        let mut lat = [1.0f64; 2];
+        for e in &self.link_episodes {
+            let i = link_idx(e.link);
+            let w = overlap_weight(e.start_us, e.end_us, horizon_us);
+            bw[i] *= 1.0 + (e.bw_factor - 1.0) * w;
+            lat[i] *= 1.0 + (e.lat_factor - 1.0) * w;
+        }
+        Degrade { comp, bw, lat }
+    }
+
+    /// Total failure accounting: for each failure, the work lost since the
+    /// last checkpoint plus the restart cost. Appears exactly once in a
+    /// scenario batch time ([`ScenarioSpec::compose_batch_us`]).
+    pub fn restart_penalty_us(&self) -> f64 {
+        self.failures
+            .iter()
+            .map(|f| {
+                let lost = if f.checkpoint_interval_us > 0.0 {
+                    f.at_us % f.checkpoint_interval_us
+                } else {
+                    f.at_us
+                };
+                lost + f.restart_us
+            })
+            .sum()
+    }
+
+    /// Data-parallel width after the elastic resize; `None` when the
+    /// resize drops the last replica (the candidate is unreachable under
+    /// this scenario).
+    pub fn resized_dp(&self, dp: usize) -> Option<usize> {
+        match self.resize {
+            None => Some(dp),
+            Some(r) => {
+                let new = dp as i64 + r.dp_delta;
+                if new >= 1 {
+                    Some(new as usize)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Per-replica load multiplier after the resize: the global batch is
+    /// re-balanced over the surviving replicas, so each one carries
+    /// `ceil(global_batch / new_dp)` sequences instead of
+    /// `global_batch / dp`. 1.0 without a resize; `None` when unreachable.
+    pub fn load_ratio(&self, dp: usize, global_batch: usize) -> Option<f64> {
+        let new_dp = self.resized_dp(dp)?;
+        if new_dp == dp {
+            return Some(1.0);
+        }
+        let per_replica = global_batch as f64 / dp as f64;
+        let new_per = (global_batch as f64 / new_dp as f64).ceil();
+        Some(new_per / per_replica)
+    }
+
+    /// Compose the full scenario batch time from the degraded simulated
+    /// batch time: rescale for the elastic resize's per-replica load, then
+    /// add the one-time re-shard cost and the failure restart penalty.
+    /// `None` when the resize makes the candidate unreachable.
+    pub fn compose_batch_us(
+        &self,
+        degraded_us: f64,
+        dp: usize,
+        global_batch: usize,
+    ) -> Option<f64> {
+        let ratio = self.load_ratio(dp, global_batch)?;
+        let reshard = self.resize.map_or(0.0, |r| r.reshard_us);
+        Some(degraded_us * ratio + reshard + self.restart_penalty_us())
+    }
+
+    /// Every device index this scenario names is on the cluster.
+    pub fn validate_devices(&self, devices: usize) -> anyhow::Result<()> {
+        let check = |d: usize, what: &str| {
+            if d >= devices {
+                anyhow::bail!("scenario: {what} device {d} out of range (cluster has {devices})")
+            }
+            Ok(())
+        };
+        for s in &self.stragglers {
+            check(s.device, "straggler")?;
+        }
+        for e in &self.straggler_episodes {
+            check(e.device, "straggler episode")?;
+        }
+        for f in &self.failures {
+            check(f.device, "failure")?;
+        }
+        Ok(())
+    }
+
+    // -- JSON --------------------------------------------------------------
+
+    /// Canonical JSON: empty collections and defaults are omitted, so the
+    /// empty scenario serializes to `{}` and [`ScenarioSpec::salt`] is a
+    /// pure function of the semantic content.
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Vec::new();
+        if !self.stragglers.is_empty() {
+            pairs.push((
+                "stragglers",
+                Json::Arr(
+                    self.stragglers
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("device", Json::num(s.device as f64)),
+                                ("factor", Json::num(s.factor)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.straggler_episodes.is_empty() {
+            pairs.push((
+                "straggler_episodes",
+                Json::Arr(
+                    self.straggler_episodes
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("device", Json::num(e.device as f64)),
+                                ("factor", Json::num(e.factor)),
+                                ("start_us", Json::num(e.start_us)),
+                                ("end_us", Json::num(e.end_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.link_episodes.is_empty() {
+            pairs.push((
+                "link_episodes",
+                Json::Arr(
+                    self.link_episodes
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("link", Json::str(e.link.name())),
+                                ("bw_factor", Json::num(e.bw_factor)),
+                                ("lat_factor", Json::num(e.lat_factor)),
+                                ("start_us", Json::num(e.start_us)),
+                                ("end_us", Json::num(e.end_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.failures.is_empty() {
+            pairs.push((
+                "failures",
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("device", Json::num(f.device as f64)),
+                                ("at_us", Json::num(f.at_us)),
+                                (
+                                    "checkpoint_interval_us",
+                                    Json::num(f.checkpoint_interval_us),
+                                ),
+                                ("restart_us", Json::num(f.restart_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if let Some(r) = self.resize {
+            pairs.push((
+                "resize",
+                Json::obj(vec![
+                    ("dp_delta", Json::num(r.dp_delta as f64)),
+                    ("reshard_us", Json::num(r.reshard_us)),
+                ]),
+            ));
+        }
+        if self.sigma != 0.0 {
+            pairs.push(("sigma", Json::num(self.sigma)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Strict parse: unknown keys (at every level) and out-of-domain
+    /// values are errors, so a typo'd what-if request fails loudly instead
+    /// of silently simulating the happy path.
+    pub fn from_json(j: &Json) -> anyhow::Result<ScenarioSpec> {
+        let obj = j
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("scenario must be an object"))?;
+        let mut spec = ScenarioSpec::default();
+        for (k, v) in obj {
+            match k.as_str() {
+                "stragglers" => {
+                    for e in arr(v, "stragglers")? {
+                        let m = entry(e, "stragglers", &["device", "factor"])?;
+                        spec.stragglers.push(Straggler {
+                            device: usize_field(m, "stragglers", "device")?,
+                            factor: pos_field(m, "stragglers", "factor")?,
+                        });
+                    }
+                }
+                "straggler_episodes" => {
+                    for e in arr(v, "straggler_episodes")? {
+                        let m = entry(
+                            e,
+                            "straggler_episodes",
+                            &["device", "factor", "start_us", "end_us"],
+                        )?;
+                        let ep = StragglerEpisode {
+                            device: usize_field(m, "straggler_episodes", "device")?,
+                            factor: pos_field(m, "straggler_episodes", "factor")?,
+                            start_us: nonneg_field(m, "straggler_episodes", "start_us")?,
+                            end_us: nonneg_field(m, "straggler_episodes", "end_us")?,
+                        };
+                        window(ep.start_us, ep.end_us, "straggler_episodes")?;
+                        spec.straggler_episodes.push(ep);
+                    }
+                }
+                "link_episodes" => {
+                    for e in arr(v, "link_episodes")? {
+                        let m = entry(
+                            e,
+                            "link_episodes",
+                            &["link", "bw_factor", "lat_factor", "start_us", "end_us"],
+                        )?;
+                        let name = m
+                            .get("link")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| {
+                                anyhow::anyhow!("scenario: link_episodes entry needs a 'link' string")
+                            })?;
+                        let ep = LinkEpisode {
+                            link: LinkClass::parse(name).map_err(|_| {
+                                anyhow::anyhow!(
+                                    "scenario: unknown link class '{name}' (want intra|inter)"
+                                )
+                            })?,
+                            bw_factor: pos_field(m, "link_episodes", "bw_factor")?,
+                            lat_factor: pos_field(m, "link_episodes", "lat_factor")?,
+                            start_us: nonneg_field(m, "link_episodes", "start_us")?,
+                            end_us: nonneg_field(m, "link_episodes", "end_us")?,
+                        };
+                        window(ep.start_us, ep.end_us, "link_episodes")?;
+                        spec.link_episodes.push(ep);
+                    }
+                }
+                "failures" => {
+                    for e in arr(v, "failures")? {
+                        let m = entry(
+                            e,
+                            "failures",
+                            &["device", "at_us", "checkpoint_interval_us", "restart_us"],
+                        )?;
+                        spec.failures.push(Failure {
+                            device: usize_field(m, "failures", "device")?,
+                            at_us: nonneg_field(m, "failures", "at_us")?,
+                            checkpoint_interval_us: nonneg_field(
+                                m,
+                                "failures",
+                                "checkpoint_interval_us",
+                            )?,
+                            restart_us: nonneg_field(m, "failures", "restart_us")?,
+                        });
+                    }
+                }
+                "resize" => {
+                    let m = entry(v, "resize", &["dp_delta", "reshard_us"])?;
+                    let delta = m
+                        .get("dp_delta")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("scenario: resize needs a numeric 'dp_delta'")
+                        })?;
+                    if delta == 0.0 || delta.fract() != 0.0 {
+                        anyhow::bail!("scenario: resize dp_delta must be a non-zero integer");
+                    }
+                    spec.resize = Some(Resize {
+                        dp_delta: delta as i64,
+                        reshard_us: nonneg_field(m, "resize", "reshard_us")?,
+                    });
+                }
+                "sigma" => {
+                    let s = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("scenario: sigma must be a number"))?;
+                    if !(s >= 0.0) {
+                        anyhow::bail!("scenario: sigma must be >= 0");
+                    }
+                    spec.sigma = s;
+                }
+                other => anyhow::bail!(
+                    "scenario: unknown key '{other}' (want stragglers, straggler_episodes, \
+                     link_episodes, failures, resize, sigma)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn arr<'j>(v: &'j Json, what: &str) -> anyhow::Result<&'j [Json]> {
+    v.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("scenario: {what} must be an array"))
+}
+
+fn entry<'j>(
+    v: &'j Json,
+    what: &str,
+    allowed: &[&str],
+) -> anyhow::Result<&'j std::collections::BTreeMap<String, Json>> {
+    let m = v
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("scenario: {what} entries must be objects"))?;
+    for k in m.keys() {
+        if !allowed.contains(&k.as_str()) {
+            anyhow::bail!(
+                "scenario: unknown key '{k}' in {what} entry (want {})",
+                allowed.join(", ")
+            );
+        }
+    }
+    Ok(m)
+}
+
+fn num_field(
+    m: &std::collections::BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> anyhow::Result<f64> {
+    m.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow::anyhow!("scenario: {what} entry needs a numeric '{key}'"))
+}
+
+fn usize_field(
+    m: &std::collections::BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> anyhow::Result<usize> {
+    let v = num_field(m, what, key)?;
+    if v < 0.0 || v.fract() != 0.0 {
+        anyhow::bail!("scenario: {what} '{key}' must be a non-negative integer");
+    }
+    Ok(v as usize)
+}
+
+fn pos_field(
+    m: &std::collections::BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> anyhow::Result<f64> {
+    let v = num_field(m, what, key)?;
+    if !(v > 0.0) {
+        anyhow::bail!("scenario: {what} '{key}' must be > 0");
+    }
+    Ok(v)
+}
+
+fn nonneg_field(
+    m: &std::collections::BTreeMap<String, Json>,
+    what: &str,
+    key: &str,
+) -> anyhow::Result<f64> {
+    let v = num_field(m, what, key)?;
+    if !(v >= 0.0) {
+        anyhow::bail!("scenario: {what} '{key}' must be >= 0");
+    }
+    Ok(v)
+}
+
+fn window(start: f64, end: f64, what: &str) -> anyhow::Result<()> {
+    if end <= start {
+        anyhow::bail!("scenario: {what} window must have end_us > start_us");
+    }
+    Ok(())
+}
+
+/// FNV-1a, 64-bit — same construction the cache fingerprint uses; local
+/// because the scenario salt must not depend on the cache module.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> ScenarioSpec {
+        ScenarioSpec {
+            stragglers: vec![Straggler { device: 3, factor: 1.2 }],
+            straggler_episodes: vec![StragglerEpisode {
+                device: 1,
+                factor: 2.0,
+                start_us: 0.0,
+                end_us: 500.0,
+            }],
+            link_episodes: vec![LinkEpisode {
+                link: LinkClass::Inter,
+                bw_factor: 2.0,
+                lat_factor: 1.5,
+                start_us: 100.0,
+                end_us: 600.0,
+            }],
+            failures: vec![Failure {
+                device: 0,
+                at_us: 1700.0,
+                checkpoint_interval_us: 500.0,
+                restart_us: 300.0,
+            }],
+            resize: Some(Resize { dp_delta: -1, reshard_us: 250.0 }),
+            sigma: 0.05,
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_empty_and_serializes_to_braces() {
+        let spec = ScenarioSpec::default();
+        assert!(spec.is_empty());
+        assert_eq!(spec.to_json().to_string(), "{}");
+        assert_eq!(ScenarioSpec::from_json(&Json::parse("{}").unwrap()).unwrap(), spec);
+    }
+
+    #[test]
+    fn full_spec_roundtrips_through_json() {
+        let spec = demo();
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(spec, back);
+        // canonical: re-serialization is byte-identical
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn strict_parse_rejects_bad_input() {
+        for bad in [
+            r#"{"nope":1}"#,
+            r#"{"stragglers":[{"device":0,"factor":1.2,"extra":1}]}"#,
+            r#"{"stragglers":[{"device":0,"factor":0}]}"#,
+            r#"{"stragglers":[{"device":-1,"factor":1.2}]}"#,
+            r#"{"straggler_episodes":[{"device":0,"factor":2,"start_us":5,"end_us":5}]}"#,
+            r#"{"link_episodes":[{"link":"warp","bw_factor":2,"lat_factor":1,"start_us":0,"end_us":1}]}"#,
+            r#"{"resize":{"dp_delta":0,"reshard_us":0}}"#,
+            r#"{"resize":{"dp_delta":1.5,"reshard_us":0}}"#,
+            r#"{"sigma":-0.1}"#,
+            r#"{"failures":[{"device":0,"at_us":-1,"checkpoint_interval_us":0,"restart_us":0}]}"#,
+            r#"[1,2]"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(ScenarioSpec::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn salt_separates_scenarios_and_is_stable() {
+        let a = demo();
+        let mut b = demo();
+        b.stragglers[0].factor = 1.3;
+        assert_ne!(a.salt(), b.salt());
+        assert_eq!(a.salt(), demo().salt());
+    }
+
+    #[test]
+    fn factors_resolve_against_time_windows() {
+        let spec = demo();
+        // persistent straggler on device 3, always on
+        assert!((spec.comp_factor_at(3, 1e9) - 1.2).abs() < 1e-12);
+        // transient on device 1: active at 0, inactive at end (exclusive)
+        assert_eq!(spec.comp_factor_at(1, 0.0), 2.0);
+        assert_eq!(spec.comp_factor_at(1, 499.9), 2.0);
+        assert_eq!(spec.comp_factor_at(1, 500.0), 1.0);
+        // link episode: inside the window bw doubles + latency x1.5
+        let d = spec.link_dur_at(LinkClass::Inter, 200.0, 10.0, 4.0);
+        assert!((d - (10.0 * 2.0 + 0.5 * 4.0)).abs() < 1e-12);
+        assert_eq!(spec.link_dur_at(LinkClass::Inter, 700.0, 10.0, 4.0), 10.0);
+        assert_eq!(spec.link_dur_at(LinkClass::Intra, 200.0, 10.0, 4.0), 10.0);
+    }
+
+    #[test]
+    fn degrade_over_weights_episodes_by_overlap() {
+        let spec = demo();
+        // horizon 1000: device-1 episode covers [0,500) = half the run
+        let deg = spec.degrade_over(4, 1000.0);
+        assert!((deg.comp_factor(1) - 1.5).abs() < 1e-12);
+        assert!((deg.comp_factor(3) - 1.2).abs() < 1e-12);
+        assert_eq!(deg.comp_factor(2), 1.0);
+        // inter link: [100,600) = half the run, bw 1.5x, lat 1.25x
+        assert!((deg.bw[link_idx(LinkClass::Inter)] - 1.5).abs() < 1e-12);
+        assert!((deg.lat[link_idx(LinkClass::Inter)] - 1.25).abs() < 1e-12);
+        assert_eq!(deg.bw[link_idx(LinkClass::Intra)], 1.0);
+        assert!(!deg.is_identity());
+        assert!(ScenarioSpec::default().degrade_over(4, 1000.0).is_identity());
+    }
+
+    #[test]
+    fn restart_penalty_counts_lost_work_and_restart_once() {
+        let spec = demo();
+        // crash at 1700 with checkpoints every 500: 200 lost + 300 restart
+        assert!((spec.restart_penalty_us() - 500.0).abs() < 1e-12);
+        // no checkpointing: everything since the start is lost
+        let no_ckpt = ScenarioSpec {
+            failures: vec![Failure {
+                device: 0,
+                at_us: 1700.0,
+                checkpoint_interval_us: 0.0,
+                restart_us: 300.0,
+            }],
+            ..ScenarioSpec::default()
+        };
+        assert!((no_ckpt.restart_penalty_us() - 2000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resize_rebalances_load_and_can_be_unreachable() {
+        let spec = demo(); // dp_delta -1
+        assert_eq!(spec.resized_dp(2), Some(1));
+        assert_eq!(spec.resized_dp(1), None);
+        // dp 2 -> 1 on batch 16: 8 -> 16 sequences per replica
+        assert_eq!(spec.load_ratio(2, 16), Some(2.0));
+        assert_eq!(spec.load_ratio(1, 16), None);
+        // compose: degraded 1000us doubles, + reshard 250 + restart 500
+        let total = spec.compose_batch_us(1000.0, 2, 16).unwrap();
+        assert!((total - (2000.0 + 250.0 + 500.0)).abs() < 1e-9);
+        assert_eq!(spec.compose_batch_us(1000.0, 1, 16), None);
+        // empty scenario composes to the input
+        assert_eq!(
+            ScenarioSpec::default().compose_batch_us(1234.5, 4, 16),
+            Some(1234.5)
+        );
+    }
+
+    #[test]
+    fn device_validation_checks_every_list() {
+        let spec = demo();
+        assert!(spec.validate_devices(4).is_ok());
+        assert!(spec.validate_devices(3).is_err()); // straggler on device 3
+    }
+}

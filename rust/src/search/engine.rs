@@ -46,6 +46,7 @@ use crate::events::EventDb;
 use crate::model::ModelSpec;
 use crate::partition::partition;
 use crate::profile::{profile_events, ProfileReport};
+use crate::scenario::ScenarioSpec;
 use crate::schedule::SchedKind;
 use crate::strategy::Strategy;
 
@@ -111,6 +112,13 @@ pub struct SweepConfig {
     /// seed's re-profile-per-candidate behaviour (the serial baseline the
     /// fig12 bench compares against).
     pub use_cache: bool,
+    /// Unhappy-path scenario every candidate is additionally scored under
+    /// (`scenario` module). Empty (the default) keeps the sweep nominal:
+    /// no extra walks run and the report carries no robustness block, so
+    /// nominal reports stay bit-identical to pre-scenario builds. Scenario
+    /// scoring perturbs only the analytical re-walk, never a profiled
+    /// cost, so scenario sweeps share the nominal cache fingerprint.
+    pub scenario: ScenarioSpec,
 }
 
 impl Default for SweepConfig {
@@ -132,6 +140,7 @@ impl Default for SweepConfig {
             prune: false,
             prune_margin: 0.10,
             use_cache: true,
+            scenario: ScenarioSpec::default(),
         }
     }
 }
@@ -204,6 +213,11 @@ pub struct SweepCandidate {
     pub table: u32,
     /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
     pub throughput: f64,
+    /// Throughput under [`SweepConfig::scenario`], it/s. 0 when the sweep
+    /// is nominal (empty scenario), the candidate was not evaluated, or
+    /// the scenario's elastic resize leaves it undeployable
+    /// (`dp + dp_delta < 1`).
+    pub scenario_throughput: f64,
     /// Deployable: valid strategy and the shard fits device memory.
     pub reachable: bool,
     /// Skipped by the analytical-bound pruning pass (never simulated).
@@ -262,8 +276,45 @@ pub struct SweepReport {
     /// Pruning-layer accounting (the CLI's pruning block, the service's
     /// `pruning` response object).
     pub pruning: PruneStats,
+    /// Robustness attribution of a scenario sweep; `None` on nominal
+    /// sweeps (empty [`SweepConfig::scenario`]) or when nothing was
+    /// evaluated.
+    pub robustness: Option<RobustnessReport>,
     pub timing: SweepTiming,
     pub threads_used: usize,
+}
+
+/// Where a scenario sweep's robustness story lands: who wins nominally,
+/// who wins under the scenario, what sticking with the nominal winner
+/// would cost, and which degradation mechanism the slowdown comes from.
+/// Deterministic (pure analytical re-walks), so it is covered by the
+/// report's bit-identity contract.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustnessReport {
+    /// Index into `SweepReport::candidates` of the nominal winner.
+    pub nominal_best: usize,
+    /// Index of the best candidate under the scenario ("robust winner").
+    pub scenario_best: usize,
+    /// Robustness regret: `1 - scenario_tp(nominal) / scenario_tp(best)`
+    /// — the throughput fraction lost by deploying the nominal winner
+    /// into the unhappy path. 0 when the same candidate wins both; 1
+    /// when the nominal winner is undeployable under the scenario.
+    pub regret: f64,
+    /// Nominal / scenario throughput of the robust winner (>= 1): how
+    /// much the full scenario (degradation + restart + resize) costs it.
+    pub scenario_slowdown: f64,
+    /// Batch-time stretch of the robust winner with only the stragglers
+    /// applied (1 when the spec has none).
+    pub straggler_slowdown: f64,
+    /// Batch-time stretch of the robust winner with only the link
+    /// episodes applied (1 when the spec has none).
+    pub link_slowdown: f64,
+    /// Lost-work + restart cost charged to the batch, microseconds.
+    pub restart_penalty_us: f64,
+    /// Re-shard cost of the elastic resize (0 without one).
+    pub reshard_us: f64,
+    /// Episodes in the spec (straggler + link episodes + failures).
+    pub episodes: usize,
 }
 
 /// Where a sweep's win came from (requires [`SweepConfig::schedule_axis`]
@@ -623,6 +674,7 @@ impl<'a> SearchEngine<'a> {
             placement: spec.placement,
             table: spec.table,
             throughput: 0.0,
+            scenario_throughput: 0.0,
             reachable: false,
             pruned: false,
             bound_throughput: 0.0,
@@ -673,7 +725,132 @@ impl<'a> SearchEngine<'a> {
         let batch_us = ds.predict_batch_time_us(&mut db);
         cand.reachable = true;
         cand.throughput = 1e6 / batch_us;
+        if !self.cfg.scenario.is_empty() {
+            let (_, degraded_us) =
+                ds.predict_batch_time_us_scenario(&mut db, &self.cfg.scenario);
+            cand.scenario_throughput = self
+                .cfg
+                .scenario
+                .compose_batch_us(degraded_us, spec.strategy.dp, self.cfg.global_batch)
+                .map_or(0.0, |us| 1e6 / us);
+        }
         (cand, profile)
+    }
+
+    /// Degraded analytical re-walk of one deployable spec under a
+    /// (possibly masked) scenario: `(nominal_us, degraded_us)`. The cache
+    /// is warm for any spec the sweep already evaluated, so this costs
+    /// one event-interning pass plus the two walks — no new profiling.
+    fn degraded_walk(
+        &self,
+        spec: &CandidateSpec,
+        tables: &[Vec<usize>],
+        scn: &ScenarioSpec,
+    ) -> (f64, f64) {
+        let cluster = self.cluster_for(spec, tables);
+        let part = partition(
+            self.model,
+            &spec.strategy,
+            &cluster,
+            spec.micro_batch_size,
+        );
+        let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+        let mut db = EventDb::new();
+        crate::engine::build_programs(&part, &sched, &cluster, &mut db);
+        if self.cfg.use_cache {
+            self.cache.profile_into_logged(
+                &mut db,
+                &cluster,
+                &self.book,
+                self.cfg.jitter_sigma,
+                self.cfg.profile_iters,
+                self.cfg.profile_seed,
+                None,
+            );
+        } else {
+            profile_events(
+                &mut db,
+                &cluster,
+                &self.book,
+                self.cfg.jitter_sigma,
+                self.cfg.profile_iters,
+                self.cfg.profile_seed,
+            );
+        }
+        let ds = DistSim::new(&part, &sched, &cluster);
+        ds.predict_batch_time_us_scenario(&mut db, scn)
+    }
+
+    /// Build the robustness block of a scenario sweep: pick the nominal
+    /// and scenario winners, compute the regret, and attribute the robust
+    /// winner's slowdown to stragglers vs link episodes via masked
+    /// re-walks. `None` when nothing was evaluated.
+    fn robustness(
+        &self,
+        candidates: &[SweepCandidate],
+        tables: &[Vec<usize>],
+    ) -> Option<RobustnessReport> {
+        let spec = &self.cfg.scenario;
+        // first-max index folds, mirroring `first_max`'s tie-breaking
+        let mut nominal_best: Option<usize> = None;
+        let mut scenario_best: Option<usize> = None;
+        for (i, c) in candidates.iter().enumerate() {
+            if !c.evaluated() {
+                continue;
+            }
+            if nominal_best.map_or(true, |b| {
+                candidates[b].throughput.total_cmp(&c.throughput).is_lt()
+            }) {
+                nominal_best = Some(i);
+            }
+            if c.scenario_throughput > 0.0
+                && scenario_best.map_or(true, |b| {
+                    candidates[b]
+                        .scenario_throughput
+                        .total_cmp(&c.scenario_throughput)
+                        .is_lt()
+                })
+            {
+                scenario_best = Some(i);
+            }
+        }
+        let nominal_best = nominal_best?;
+        let scenario_best = scenario_best?;
+        let w = &candidates[scenario_best];
+        let wspec = CandidateSpec {
+            strategy: w.strategy,
+            micro_batch_size: w.micro_batch_size,
+            micro_batches: w.micro_batches,
+            schedule: w.schedule,
+            placement: w.placement,
+            table: w.table,
+        };
+        let masked_stretch = |scn: ScenarioSpec| -> f64 {
+            if scn.is_empty() {
+                return 1.0;
+            }
+            let (nominal, degraded) = self.degraded_walk(&wspec, tables, &scn);
+            degraded / nominal
+        };
+        Some(RobustnessReport {
+            nominal_best,
+            scenario_best,
+            regret: 1.0
+                - candidates[nominal_best].scenario_throughput / w.scenario_throughput,
+            scenario_slowdown: w.throughput / w.scenario_throughput,
+            straggler_slowdown: masked_stretch(ScenarioSpec {
+                stragglers: spec.stragglers.clone(),
+                straggler_episodes: spec.straggler_episodes.clone(),
+                ..ScenarioSpec::default()
+            }),
+            link_slowdown: masked_stretch(ScenarioSpec {
+                link_episodes: spec.link_episodes.clone(),
+                ..ScenarioSpec::default()
+            }),
+            restart_penalty_us: spec.restart_penalty_us(),
+            reshard_us: spec.resize.as_ref().map_or(0.0, |r| r.reshard_us),
+            episodes: spec.episode_count(),
+        })
     }
 
     fn resolve_threads(&self, work: usize) -> usize {
@@ -755,6 +932,7 @@ impl<'a> SearchEngine<'a> {
                             placement: specs[i].placement,
                             table: specs[i].table,
                             throughput: 0.0,
+                            scenario_throughput: 0.0,
                             reachable: true,
                             pruned: true,
                             bound_throughput: bounds[i],
@@ -859,36 +1037,45 @@ impl<'a> SearchEngine<'a> {
             total
         };
 
-        SweepReport {
-            candidates: candidates
-                .into_iter()
-                .enumerate()
-                .map(|(i, c)| {
-                    c.unwrap_or_else(|| {
-                        // only reachable when the sweep was cancelled:
-                        // an unevaluated spec comes back as a
-                        // non-deployable placeholder
-                        debug_assert!(self.cancel.is_cancelled());
-                        SweepCandidate {
-                            strategy: specs[i].strategy,
-                            micro_batch_size: specs[i].micro_batch_size,
-                            micro_batches: specs[i].micro_batches,
-                            schedule: specs[i].schedule,
-                            placement: specs[i].placement,
-                            table: specs[i].table,
-                            throughput: 0.0,
-                            reachable: false,
-                            pruned: false,
-                            bound_throughput: bounds[i],
-                        }
-                    })
+        let candidates: Vec<SweepCandidate> = candidates
+            .into_iter()
+            .enumerate()
+            .map(|(i, c)| {
+                c.unwrap_or_else(|| {
+                    // only reachable when the sweep was cancelled:
+                    // an unevaluated spec comes back as a
+                    // non-deployable placeholder
+                    debug_assert!(self.cancel.is_cancelled());
+                    SweepCandidate {
+                        strategy: specs[i].strategy,
+                        micro_batch_size: specs[i].micro_batch_size,
+                        micro_batches: specs[i].micro_batches,
+                        schedule: specs[i].schedule,
+                        placement: specs[i].placement,
+                        table: specs[i].table,
+                        throughput: 0.0,
+                        scenario_throughput: 0.0,
+                        reachable: false,
+                        pruned: false,
+                        bound_throughput: bounds[i],
+                    }
                 })
-                .collect(),
+            })
+            .collect();
+        let robustness = if self.cfg.scenario.is_empty() {
+            None
+        } else {
+            self.robustness(&candidates, tables)
+        };
+
+        SweepReport {
+            candidates,
             profile,
             cache: cache_stats,
             event_uses,
             tables: space.tables.clone(),
             pruning: stats,
+            robustness,
             timing: SweepTiming {
                 total_seconds: t0.elapsed().as_secs_f64(),
                 per_candidate_ms: per_ms,
@@ -1120,6 +1307,42 @@ mod tests {
         let capped = SearchEngine::new(&model, &cluster, &cost, cfg).specs();
         assert_eq!(capped.len(), 3);
         assert_eq!(capped[..], full[..3]);
+    }
+
+    #[test]
+    fn scenario_sweep_scores_candidates_and_attributes_slowdown() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(2, 2);
+        let cost = CostModel::default();
+        let mut cfg = engine_cfg(1, false, true);
+        cfg.scenario.stragglers.push(crate::scenario::Straggler {
+            device: 0,
+            factor: 1.5,
+        });
+        let rep = SearchEngine::new(&model, &cluster, &cost, cfg).sweep();
+        let rb = rep.robustness.expect("scenario sweep carries robustness");
+        assert!(
+            rb.straggler_slowdown > 1.0,
+            "straggler must stretch the robust winner ({})",
+            rb.straggler_slowdown
+        );
+        assert_eq!(rb.link_slowdown, 1.0, "no link episodes in the spec");
+        assert!((0.0..=1.0).contains(&rb.regret), "regret {}", rb.regret);
+        assert_eq!(rb.episodes, 0);
+        for c in rep.candidates.iter().filter(|c| c.evaluated()) {
+            assert!(
+                c.scenario_throughput > 0.0 && c.scenario_throughput <= c.throughput,
+                "{}: scenario {} vs nominal {}",
+                c.strategy,
+                c.scenario_throughput,
+                c.throughput
+            );
+        }
+        // nominal sweeps stay scenario-free
+        let nominal = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true))
+            .sweep();
+        assert!(nominal.robustness.is_none());
+        assert!(nominal.candidates.iter().all(|c| c.scenario_throughput == 0.0));
     }
 
     #[test]

@@ -50,8 +50,8 @@ pub use cache::{
     SNAPSHOT_VERSION,
 };
 pub use engine::{
-    CandidateSpec, PlacementAttribution, ScheduleAttribution, SearchEngine, SweepCandidate,
-    SweepConfig, SweepReport,
+    CandidateSpec, PlacementAttribution, RobustnessReport, ScheduleAttribution, SearchEngine,
+    SweepCandidate, SweepConfig, SweepReport,
 };
 pub use pipeline::{
     enumerate_canonical_tables, CancelToken, CandidateSpace, PlacementOptimizer, PruneStats,

@@ -173,6 +173,11 @@ struct RegistryEntry {
 pub struct CacheRegistry {
     dir: Option<PathBuf>,
     map: Mutex<HashMap<String, RegistryEntry>>,
+    /// Scenario-bearing sweeps served since startup (the `stats` op's
+    /// `scenario.sweeps` counter).
+    scenario_sweeps: AtomicUsize,
+    /// Episodes those sweeps' specs carried (`scenario.episodes`).
+    scenario_episodes: AtomicUsize,
 }
 
 impl CacheRegistry {
@@ -180,7 +185,23 @@ impl CacheRegistry {
         CacheRegistry {
             dir,
             map: Mutex::new(HashMap::new()),
+            scenario_sweeps: AtomicUsize::new(0),
+            scenario_episodes: AtomicUsize::new(0),
         }
+    }
+
+    /// Count one scenario-bearing sweep and its spec's episodes.
+    pub fn record_scenario(&self, episodes: usize) {
+        self.scenario_sweeps.fetch_add(1, Ordering::Relaxed);
+        self.scenario_episodes.fetch_add(episodes, Ordering::Relaxed);
+    }
+
+    /// `(scenario sweeps served, episodes simulated)` since startup.
+    pub fn scenario_counters(&self) -> (usize, usize) {
+        (
+            self.scenario_sweeps.load(Ordering::Relaxed),
+            self.scenario_episodes.load(Ordering::Relaxed),
+        )
     }
 
     fn snapshot_path(dir: &std::path::Path, fp: &str) -> PathBuf {
@@ -788,6 +809,11 @@ fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u
         req.sweep.profile_iters,
         req.sweep.profile_seed,
     );
+    // counted at start-of-run, not admission: cancelled-in-queue and
+    // expired-deadline requests never simulated anything
+    if !req.sweep.scenario.is_empty() {
+        registry.record_scenario(req.sweep.scenario.episode_count());
+    }
     let inject = panic_inject.is_some() && panic_inject == req.id.as_deref();
     let outcome = match catch_unwind(AssertUnwindSafe(|| {
         if inject {
@@ -928,7 +954,10 @@ fn writer_loop(
                 protocol::cancel_response(id, &target, outcome).to_string()
             }
             Outcome::Pong => protocol::pong_response(id).to_string(),
-            Outcome::Stats => protocol::stats_response(id, &registry.summary()).to_string(),
+            Outcome::Stats => {
+                let (sweeps, episodes) = registry.scenario_counters();
+                protocol::stats_response(id, &registry.summary(), sweeps, episodes).to_string()
+            }
             Outcome::Shutdown => protocol::shutdown_response(id).to_string(),
         };
         emit(conn, &line);

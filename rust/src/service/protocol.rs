@@ -19,7 +19,8 @@
 //!            "widened": false, "micro_batch_axis": false,
 //!            "schedule_axis": false, "placement_axis": false,
 //!            "placement_opt": false, "beam": 4,
-//!            "prune": false, "prune_epochs": 1},
+//!            "prune": false, "prune_epochs": 1,
+//!            "scenario": {"stragglers": [{"device": 0, "factor": 1.5}]}},
 //!  "budget": {"max_candidates": 100, "deadline_ms": 60000},
 //!  "timing": false}
 //! ```
@@ -35,6 +36,12 @@
 //! names to overrides. Omitted `sweep` fields take [`SweepConfig`]
 //! defaults, except `threads`, which defaults to 1 inside the service
 //! (request-level parallelism comes from the daemon's worker pool).
+//! `sweep.scenario` is an unhappy-path [`ScenarioSpec`] object
+//! (stragglers, link episodes, failures, elastic resize — docs/FORMATS.md
+//! §Scenario); devices it names must exist on the request's cluster, its
+//! presence adds per-candidate `scenario_throughput` and a `robustness`
+//! result block, and an omitted or empty scenario leaves the response
+//! byte-identical to a pre-scenario build.
 //! `timing: true` opts into wall-clock fields — by default responses carry
 //! only deterministic data, so equal requests produce byte-equal response
 //! lines.
@@ -48,6 +55,7 @@ use crate::cluster::{ClusterSpec, Placement};
 use crate::config::Json;
 use crate::cost::CostBook;
 use crate::model::ModelSpec;
+use crate::scenario::ScenarioSpec;
 use crate::search::{CacheStats, SweepConfig, SweepReport};
 
 /// Every op the request dispatcher accepts, in documentation order.
@@ -269,11 +277,14 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
             | "placement_opt" | "prune" | "use_cache" => v.as_bool().is_some(),
             // seeds travel as numbers or string-wrapped u64s
             "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
+            // unhappy-path scenario: its own strict parser rejects
+            // unknown/mistyped fields (see `scenario::ScenarioSpec`)
+            "scenario" => v.as_obj().is_some(),
             other => anyhow::bail!(
                 "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
                  profile_seed|threads|widened|micro_batch_axis|schedule_axis|\
                  placement_axis|placement_opt|beam|prune|prune_margin|prune_epochs|\
-                 use_cache|max_candidates)"
+                 use_cache|max_candidates|scenario)"
             ),
         };
         anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
@@ -337,6 +348,9 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     }
     if let Some(v) = j.get("max_candidates").and_then(Json::as_usize) {
         cfg.max_candidates = v;
+    }
+    if let Some(v) = j.get("scenario") {
+        cfg.scenario = ScenarioSpec::from_json(v)?;
     }
     Ok(cfg)
 }
@@ -411,6 +425,12 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
             };
             let mut sweep =
                 sweep_config_from_json(j.get("sweep")).map_err(|e| bad(e.to_string()))?;
+            // a scenario naming a device the cluster doesn't have is a
+            // bad_request at admission, not a silent no-op episode
+            sweep
+                .scenario
+                .validate_devices(cluster.total_devices())
+                .map_err(|e| bad(e.to_string()))?;
             let mut deadline_ms = None;
             if let Some(b) = j.get("budget") {
                 let obj = b
@@ -519,8 +539,16 @@ pub fn shutdown_response(id: Option<&str>) -> Json {
     ])
 }
 
-/// Per-fingerprint cache occupancy for the `stats` op.
-pub fn stats_response(id: Option<&str>, caches: &[(String, usize)]) -> Json {
+/// Per-fingerprint cache occupancy plus scenario-sweep counters for the
+/// `stats` op. `scenario_sweeps` counts scenario-bearing sweep requests
+/// served since startup; `scenario_episodes` the episodes those requests'
+/// specs carried (both monotone across the daemon's lifetime).
+pub fn stats_response(
+    id: Option<&str>,
+    caches: &[(String, usize)],
+    scenario_sweeps: usize,
+    scenario_episodes: usize,
+) -> Json {
     Json::obj(vec![
         ("id", id_json(id)),
         ("ok", Json::Bool(true)),
@@ -541,6 +569,13 @@ pub fn stats_response(id: Option<&str>, caches: &[(String, usize)]) -> Json {
                             })
                             .collect(),
                     ),
+                ),
+                (
+                    "scenario",
+                    Json::obj(vec![
+                        ("sweeps", Json::num(scenario_sweeps as f64)),
+                        ("episodes", Json::num(scenario_episodes as f64)),
+                    ]),
                 ),
             ]),
         ),
@@ -589,6 +624,9 @@ pub fn sweep_response(
                 ("pruned", Json::Bool(c.pruned)),
                 ("bound_throughput", Json::num(c.bound_throughput)),
             ];
+            if report.robustness.is_some() {
+                fields.push(("scenario_throughput", Json::num(c.scenario_throughput)));
+            }
             if let Some(t) = table_json(c.table) {
                 fields.push(("table", t));
             }
@@ -668,6 +706,27 @@ pub fn sweep_response(
                 ("winning_placement", Json::str(a.winning_placement.name())),
                 ("placement_speedup", Json::num(a.placement_speedup)),
                 ("strategy_speedup", Json::num(a.strategy_speedup)),
+            ]),
+        ));
+    }
+    if let Some(rb) = &report.robustness {
+        let notation = |i: usize| report.candidates[i].strategy.notation();
+        result.push((
+            "robustness",
+            Json::obj(vec![
+                ("nominal_best", Json::str(notation(rb.nominal_best))),
+                ("scenario_best", Json::str(notation(rb.scenario_best))),
+                (
+                    "scenario_best_throughput",
+                    Json::num(report.candidates[rb.scenario_best].scenario_throughput),
+                ),
+                ("regret", Json::num(rb.regret)),
+                ("scenario_slowdown", Json::num(rb.scenario_slowdown)),
+                ("straggler_slowdown", Json::num(rb.straggler_slowdown)),
+                ("link_slowdown", Json::num(rb.link_slowdown)),
+                ("restart_penalty_us", Json::num(rb.restart_penalty_us)),
+                ("reshard_us", Json::num(rb.reshard_us)),
+                ("episodes", Json::num(rb.episodes as f64)),
             ]),
         ));
     }
@@ -858,6 +917,35 @@ mod tests {
         )
         .unwrap();
         assert_eq!(pod.total_devices(), 16);
+    }
+
+    #[test]
+    fn scenario_parses_and_is_validated_against_the_cluster() {
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40","nodes":2,"gpus_per_node":4},"sweep":{"scenario":{"stragglers":[{"device":3,"factor":1.5}],"resize":{"dp_delta":-1,"reshard_us":250}}}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => {
+                assert_eq!(req.sweep.scenario.stragglers.len(), 1);
+                assert_eq!(req.sweep.scenario.resize.unwrap().dp_delta, -1);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        // device 9 is off an 8-GPU cluster: bad_request, not a no-op
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40","nodes":2,"gpus_per_node":4},"sweep":{"scenario":{"stragglers":[{"device":9,"factor":1.5}]}}}"#;
+        let (_, e) = parse_line(line).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+        assert!(e.message.contains("out of range"), "{}", e.message);
+        // typo'd scenario fields are rejected by the strict spec parser
+        for scn in [
+            r#"{"straglers":[]}"#,
+            r#"{"stragglers":[{"device":0,"factor":"x"}]}"#,
+            r#"[1]"#,
+        ] {
+            let line = format!(
+                r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},"sweep":{{"scenario":{scn}}}}}"#
+            );
+            let (_, e) = parse_line(&line).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::BadRequest, "{scn}");
+        }
     }
 
     #[test]

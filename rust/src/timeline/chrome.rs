@@ -6,9 +6,69 @@
 
 use super::{SpanKind, Timeline};
 use crate::config::Json;
+use crate::scenario::ScenarioSpec;
 
 /// Render a timeline as a Chrome-trace JSON string.
 pub fn to_chrome_trace(t: &Timeline) -> String {
+    finish(trace_events(t))
+}
+
+/// Render a timeline with the scenario's episodes annotated on a
+/// synthetic "scenario" track (tid = device count): straggler and link
+/// episodes become complete ("X") events over their windows, device
+/// failures become instant ("i") markers at their injection time. Lets
+/// Perfetto show *why* a rank's lane stretched where it did.
+pub fn to_chrome_trace_with_scenario(t: &Timeline, spec: &ScenarioSpec) -> String {
+    let mut events = trace_events(t);
+    let tid = t.n_devices as f64;
+    let t0 = t.start_us();
+    events.push(Json::obj(vec![
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(tid)),
+        ("args", Json::obj(vec![("name", Json::str("scenario"))])),
+    ]));
+    let window = |name: String, start: f64, end: f64| {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("episode")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(t0 + start)),
+            ("dur", Json::num(end - start)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid)),
+        ])
+    };
+    for e in &spec.straggler_episodes {
+        events.push(window(
+            format!("straggle dev{} x{}", e.device, e.factor),
+            e.start_us,
+            e.end_us,
+        ));
+    }
+    for e in &spec.link_episodes {
+        events.push(window(
+            format!("degrade {} bw x{} lat x{}", e.link.name(), e.bw_factor, e.lat_factor),
+            e.start_us,
+            e.end_us,
+        ));
+    }
+    for f in &spec.failures {
+        events.push(Json::obj(vec![
+            ("name", Json::str(format!("fail dev{}", f.device))),
+            ("cat", Json::str("episode")),
+            ("ph", Json::str("i")),
+            ("ts", Json::num(t0 + f.at_us)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(tid)),
+            ("s", Json::str("g")),
+        ]));
+    }
+    finish(events)
+}
+
+fn trace_events(t: &Timeline) -> Vec<Json> {
     let mut events = Vec::with_capacity(t.len() + t.n_devices);
     for d in 0..t.n_devices {
         events.push(Json::obj(vec![
@@ -33,6 +93,10 @@ pub fn to_chrome_trace(t: &Timeline) -> String {
             ("tid", Json::num(s.device as f64)),
         ]));
     }
+    events
+}
+
+fn finish(events: Vec<Json>) -> String {
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::str("ms")),
@@ -83,5 +147,44 @@ mod tests {
             .collect();
         assert_eq!(x.len(), 2);
         assert_eq!(x[0].get("cat").unwrap().as_str(), Some("compute"));
+    }
+
+    #[test]
+    fn scenario_trace_adds_episode_track() {
+        let mut t = Timeline::new(2);
+        t.push(Span {
+            device: 0,
+            start: 0.0,
+            end: 5.0,
+            tag: Tag::comp(0, 0, Phase::Fwd, 3),
+        });
+        let mut spec = ScenarioSpec::default();
+        spec.straggler_episodes.push(crate::scenario::StragglerEpisode {
+            device: 1,
+            factor: 2.0,
+            start_us: 0.0,
+            end_us: 100.0,
+        });
+        spec.failures.push(crate::scenario::Failure {
+            device: 0,
+            at_us: 50.0,
+            checkpoint_interval_us: 25.0,
+            restart_us: 10.0,
+        });
+        let s = to_chrome_trace_with_scenario(&t, &spec);
+        let j = Json::parse(&s).unwrap();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let episodes: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("cat").and_then(|c| c.as_str()) == Some("episode"))
+            .collect();
+        assert_eq!(episodes.len(), 2);
+        // all episode events live on the synthetic track past the GPUs
+        assert!(episodes
+            .iter()
+            .all(|e| e.get("tid").unwrap().as_f64() == Some(2.0)));
+        // empty scenario emits the same span set plus the track metadata
+        let base = to_chrome_trace(&t);
+        assert!(base.len() < s.len());
     }
 }

@@ -98,7 +98,12 @@ fn snapshot_format_and_version_are_documented() {
 #[test]
 fn bench_formats_are_documented() {
     let doc = formats_md();
-    for name in ["BENCH_engine.json", "BENCH_service.json", "BENCH_placement.json"] {
+    for name in [
+        "BENCH_engine.json",
+        "BENCH_service.json",
+        "BENCH_placement.json",
+        "BENCH_scenario.json",
+    ] {
         assert!(doc.contains(name), "{name} missing from docs/FORMATS.md");
     }
 }
@@ -133,4 +138,35 @@ fn placement_optimizer_and_pruning_schema_is_documented() {
     use distsim::service::protocol::parse_line;
     let ok = r#"{"model":"bert-large","cluster":{"preset":"a40-a10","nodes":2},"sweep":{"placement_opt":true,"prune_epochs":2,"beam":3}}"#;
     assert!(parse_line(ok).is_ok());
+}
+
+#[test]
+fn scenario_schema_is_documented() {
+    // ISSUE 7 surface: the ScenarioSpec request schema, the scenario
+    // response fields, and the stats counters must all be specified in
+    // docs/FORMATS.md
+    let doc = formats_md();
+    for word in [
+        "straggler_episodes",
+        "link_episodes",
+        "checkpoint_interval_us",
+        "dp_delta",
+        "reshard_us",
+        "scenario_throughput",
+        "robustness",
+        "regret",
+        "straggler_slowdown",
+        "link_slowdown",
+        "restart_penalty_us",
+        "episodes",
+        "scenario-file",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // and the parser accepts exactly what the spec names
+    use distsim::service::protocol::parse_line;
+    let ok = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"scenario":{"stragglers":[{"device":0,"factor":1.5}],"resize":{"dp_delta":-1,"reshard_us":100}}}}"#;
+    assert!(parse_line(ok).is_ok());
+    let typo = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"scenario":{"straggler":[{"device":0,"factor":1.5}]}}}"#;
+    assert!(parse_line(typo).is_err(), "unknown scenario key must be rejected");
 }

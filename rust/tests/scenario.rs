@@ -1,0 +1,262 @@
+//! Integration tests for the unhappy-path scenario engine (ISSUE 7):
+//! empty-scenario bit-identity, thread/worker-count determinism of
+//! scenario-scored sweeps, straggler monotonicity, single-counted restart
+//! accounting, and the elastic-resize strategy flip.
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::RunConfig;
+use distsim::cost::CostModel;
+use distsim::engine::GroundTruth;
+use distsim::scenario::{Failure, Resize, ScenarioSpec, Straggler};
+use distsim::search::{SearchEngine, SweepConfig, SweepReport};
+use distsim::service::{serve_ndjson, ServeOpts};
+use distsim::strategy::Strategy;
+use distsim::timeline::Timeline;
+
+fn small_run_cfg() -> RunConfig {
+    let mut cfg = RunConfig::new(
+        "bert-large",
+        Strategy::new(1, 2, 2),
+        ClusterSpec::a40_cluster(1, 4),
+    );
+    cfg.micro_batches = 2;
+    cfg.micro_batch_size = 2;
+    cfg
+}
+
+/// Every span's placement and exact time bits — bit-level equality.
+fn span_bits(t: &Timeline) -> Vec<(usize, u64, u64)> {
+    t.spans()
+        .iter()
+        .map(|s| (s.device, s.start.to_bits(), s.end.to_bits()))
+        .collect()
+}
+
+fn straggler_spec(device: usize, factor: f64) -> ScenarioSpec {
+    ScenarioSpec {
+        stragglers: vec![Straggler { device, factor }],
+        ..ScenarioSpec::default()
+    }
+}
+
+fn sweep_with(cluster: &ClusterSpec, scenario: ScenarioSpec, threads: usize) -> SweepReport {
+    let model = distsim::model::zoo::bert_large();
+    let cost = CostModel::default();
+    let cfg = SweepConfig {
+        global_batch: 8,
+        profile_iters: 1,
+        threads,
+        scenario,
+        ..SweepConfig::default()
+    };
+    SearchEngine::new(&model, cluster, &cost, cfg).sweep()
+}
+
+#[test]
+fn empty_scenario_is_bit_identical_through_the_public_api() {
+    let cfg = small_run_cfg();
+    let plain = GroundTruth::prepare(&cfg).expect("prepare");
+    let scoped = GroundTruth::prepare(&cfg)
+        .expect("prepare")
+        .with_scenario(Arc::new(ScenarioSpec::default()));
+    for iter in 0..3 {
+        let a = plain.run_iteration(iter);
+        let b = scoped.run_iteration(iter);
+        assert_eq!(
+            span_bits(&a),
+            span_bits(&b),
+            "iteration {iter}: empty scenario must not move a single span"
+        );
+    }
+}
+
+#[test]
+fn scenario_sweep_responses_are_byte_identical_across_worker_counts() {
+    // straggler + failure: exercises both the degraded walk and the
+    // restart accounting through the full daemon path
+    let req = r#"{"id":"scn","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1,"scenario":{"failures":[{"device":1,"at_us":2500,"checkpoint_interval_us":1000,"restart_us":300}],"stragglers":[{"device":0,"factor":1.5}]}}}"#;
+    let serve = |workers: usize| -> Vec<u8> {
+        let mut out = Vec::new();
+        let opts = ServeOpts {
+            workers,
+            cache_dir: None,
+            ..ServeOpts::default()
+        };
+        serve_ndjson(Cursor::new(format!("{req}\n{req}\n")), &mut out, &opts);
+        out
+    };
+    let one = serve(1);
+    let text = String::from_utf8(one.clone()).expect("utf-8 responses");
+    assert!(text.contains("\"robustness\""), "no robustness block: {text}");
+    assert!(
+        text.contains("\"scenario_throughput\""),
+        "no per-candidate scenario throughput: {text}"
+    );
+    for workers in [2, 4] {
+        assert_eq!(
+            one,
+            serve(workers),
+            "scenario sweep responses must be byte-identical at {workers} workers"
+        );
+    }
+}
+
+#[test]
+fn scenario_sweep_reports_are_identical_across_thread_counts() {
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    let spec = straggler_spec(0, 2.0);
+    let r1 = sweep_with(&cluster, spec.clone(), 1);
+    let r4 = sweep_with(&cluster, spec, 4);
+    assert_eq!(r1.candidates.len(), r4.candidates.len());
+    for (a, b) in r1.candidates.iter().zip(&r4.candidates) {
+        assert_eq!(a.strategy, b.strategy);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert_eq!(
+            a.scenario_throughput.to_bits(),
+            b.scenario_throughput.to_bits(),
+            "{}: scenario score differs across thread counts",
+            a.strategy.notation()
+        );
+    }
+    assert_eq!(r1.robustness, r4.robustness);
+    assert!(r1.robustness.is_some());
+}
+
+#[test]
+fn straggler_scores_degrade_monotonically_with_the_factor() {
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    // a factor-1.0 straggler is a non-empty spec with an identity degrade:
+    // the scenario score must equal the nominal score
+    let baseline = sweep_with(&cluster, straggler_spec(0, 1.0), 1);
+    for c in baseline.candidates.iter().filter(|c| c.throughput > 0.0) {
+        assert!(
+            (c.scenario_throughput - c.throughput).abs() < 1e-9,
+            "{}: identity straggler changed the score",
+            c.strategy.notation()
+        );
+    }
+    // the analytical degraded walk is a composition of sums and maxes of
+    // durations, so a larger factor can never score higher
+    let mut prev = baseline;
+    for factor in [1.5, 2.0, 4.0] {
+        let next = sweep_with(&cluster, straggler_spec(0, factor), 1);
+        for (a, b) in prev.candidates.iter().zip(&next.candidates) {
+            assert_eq!(a.strategy, b.strategy);
+            if a.scenario_throughput > 0.0 {
+                assert!(
+                    b.scenario_throughput <= a.scenario_throughput + 1e-9,
+                    "{} sped up when the straggler worsened to x{factor}",
+                    a.strategy.notation()
+                );
+            }
+        }
+        prev = next;
+    }
+
+    // and the discrete-event ground truth agrees on the direction
+    let cfg = small_run_cfg();
+    let nominal = GroundTruth::prepare(&cfg).expect("prepare").run_iteration(0);
+    let slowed = GroundTruth::prepare(&cfg)
+        .expect("prepare")
+        .with_scenario(Arc::new(straggler_spec(0, 4.0)))
+        .run_iteration(0);
+    assert!(
+        slowed.batch_time_us() > nominal.batch_time_us(),
+        "a 4x straggler must stretch the simulated batch"
+    );
+}
+
+#[test]
+fn restart_penalty_is_accounted_exactly_once() {
+    let spec = ScenarioSpec {
+        failures: vec![Failure {
+            device: 1,
+            at_us: 2500.0,
+            checkpoint_interval_us: 1000.0,
+            restart_us: 300.0,
+        }],
+        ..ScenarioSpec::default()
+    };
+    // 500 us of lost work since the last checkpoint + 300 us restart
+    assert!((spec.restart_penalty_us() - 800.0).abs() < 1e-12);
+
+    // a failure-only scenario leaves the walk untouched: every candidate's
+    // scenario batch time is its nominal batch time plus the penalty, once
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    let report = sweep_with(&cluster, spec, 1);
+    let mut checked = 0;
+    for c in &report.candidates {
+        if c.throughput > 0.0 && c.scenario_throughput > 0.0 {
+            let nominal_us = 1e6 / c.throughput;
+            let scenario_us = 1e6 / c.scenario_throughput;
+            assert!(
+                (scenario_us - nominal_us - 800.0).abs() < 1e-3,
+                "{}: expected nominal + 800us, got {} vs {}",
+                c.strategy.notation(),
+                scenario_us,
+                nominal_us
+            );
+            checked += 1;
+        }
+    }
+    assert!(checked > 0, "no candidate was scenario-scored");
+    let rb = report.robustness.expect("robustness block");
+    assert!((rb.restart_penalty_us - 800.0).abs() < 1e-12);
+    assert_eq!(rb.episodes, 1);
+}
+
+#[test]
+fn elastic_resize_flips_the_winner() {
+    // 2 nodes x 1 GPU with a pathological spine: grid(2) is exactly
+    // {2M1P1D, 1M2P1D, 1M1P2D}, and the near-dead inter link makes the
+    // 1.3 GB gradient allreduce of 1M1P2D hopeless, so the nominal winner
+    // splits the model (dp = 1). Dropping one replica (dp_delta -1) then
+    // makes every dp = 1 candidate unreachable — the robust choice must
+    // flip to the data-parallel candidate that can survive the resize.
+    let mut cluster = ClusterSpec::a40_cluster(2, 1);
+    cluster.inter_bw_gbs = 0.02;
+    let spec = ScenarioSpec {
+        resize: Some(Resize {
+            dp_delta: -1,
+            reshard_us: 1000.0,
+        }),
+        ..ScenarioSpec::default()
+    };
+    let report = sweep_with(&cluster, spec, 1);
+    assert_eq!(report.candidates.len(), 3, "grid(2) has 3 strategies");
+    for c in &report.candidates {
+        if c.strategy.dp == 1 {
+            assert_eq!(
+                c.scenario_throughput, 0.0,
+                "{}: dp 1 cannot survive dp_delta -1",
+                c.strategy.notation()
+            );
+        } else {
+            assert!(
+                c.scenario_throughput > 0.0,
+                "{}: dp 2 must survive the resize",
+                c.strategy.notation()
+            );
+        }
+    }
+    let rb = report.robustness.expect("robustness block");
+    let nominal = &report.candidates[rb.nominal_best];
+    let robust = &report.candidates[rb.scenario_best];
+    assert_eq!(
+        nominal.strategy.dp, 1,
+        "over a 0.02 GB/s spine the nominal winner must avoid data \
+         parallelism, got {}",
+        nominal.strategy.notation()
+    );
+    assert_eq!(robust.strategy.dp, 2, "the robust winner must keep a replica to drop");
+    assert_ne!(
+        rb.nominal_best, rb.scenario_best,
+        "the resize what-if must flip the recommendation"
+    );
+    // the nominal winner scores zero under the scenario, so deploying it
+    // forfeits everything: regret is total
+    assert!((rb.regret - 1.0).abs() < 1e-12, "regret {} should be 1", rb.regret);
+}

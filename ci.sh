@@ -60,3 +60,45 @@ for field in '"robustness"' '"scenario_throughput"' '"regret"'; do
     }
 done
 echo "scenario smoke test passed"
+
+# metrics smoke: a sweep followed by a `metrics` op must return the
+# telemetry registry in both exposition forms, and the Prometheus text
+# must round-trip against the structured JSON (values agree)
+MET_REQS='{"id":"m-sweep","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1}}
+{"id":"m","op":"metrics"}'
+MET_OUT=$(printf '%s\n' "$MET_REQS" | ./target/release/distsim serve --stdio --workers 2 2>/dev/null)
+MET_LINE=$(printf '%s\n' "$MET_OUT" | grep '"op":"metrics"') || {
+    echo "metrics smoke: no metrics response in $MET_OUT" >&2
+    exit 1
+}
+for field in '"prometheus"' 'distsim_requests_total' '"sweeps_total"' '"queue_wait_us"' '"deterministic":false'; do
+    printf '%s' "$MET_LINE" | grep -q "$field" || {
+        echo "metrics smoke: missing $field in $MET_LINE" >&2
+        exit 1
+    }
+done
+if command -v python3 >/dev/null 2>&1; then
+    printf '%s' "$MET_LINE" | python3 -c '
+import json, sys
+r = json.loads(sys.stdin.read())["result"]
+m, prom = r["metrics"], r["prometheus"]
+flat = dict(m["counters"])
+flat.update(m["gauges"])
+samples = {}
+for line in prom.splitlines():
+    if line.startswith("#") or not line.strip():
+        continue
+    name, value = line.rsplit(" ", 1)
+    samples[name] = float(value)
+for name, value in flat.items():
+    assert samples["distsim_" + name] == float(value), (name, value, samples)
+for name, h in m["histograms"].items():
+    assert samples["distsim_" + name + "_count"] == float(h["count"]), name
+    assert samples["distsim_" + name + "_sum"] == float(h["sum_us"]), name
+    inf = [b["count"] for b in h["buckets"] if b["le"] == "+Inf"][0]
+    assert inf == h["count"], "last cumulative bucket equals count"
+assert flat["sweeps_total"] == 1 and flat["requests_total"] == 2
+print("prometheus/JSON round-trip consistent:", len(samples), "samples")
+'
+fi
+echo "metrics smoke test passed"

@@ -13,6 +13,12 @@
 //!   stream is byte-identical across worker counts (the per-connection
 //!   determinism contract of ISSUE 6) and reporting aggregate
 //!   requests/second under multi-tenant load.
+//! * **telemetry overhead** — the single-stream dialogue bare vs fully
+//!   instrumented (`sweep.trace: true` everywhere, `--trace-dir`, debug
+//!   logger at a warn threshold), min-of-reps, asserting the tax stays
+//!   under 3% (plus timer slack) and that the deterministic portion of
+//!   the instrumented stream is byte-identical to the bare one (the
+//!   out-of-band timing rule, DESIGN.md §9).
 //!
 //! Emits a machine-readable BENCH_service.json line like the engine bench.
 
@@ -23,6 +29,7 @@ use std::time::Instant;
 
 use distsim::config::Json;
 use distsim::service::{serve_ndjson, serve_tcp, ServeOpts};
+use distsim::telemetry::LogLevel;
 
 fn request(id: &str, model: &str, batch: usize) -> String {
     format!(
@@ -108,6 +115,55 @@ fn run_saturation(workers: usize) -> (BTreeMap<String, Vec<String>>, f64) {
     (by_conn, wall)
 }
 
+/// Run the dialogue `reps` times under `opts`, returning the fastest
+/// wall time and the (identical-across-reps) response stream.
+fn timed_best(input: &str, opts: &ServeOpts, reps: usize) -> (String, f64) {
+    let mut best = f64::INFINITY;
+    let mut stream = String::new();
+    for _ in 0..reps {
+        let mut out = Vec::new();
+        let t0 = Instant::now();
+        serve_ndjson(Cursor::new(input.to_string()), &mut out, opts);
+        best = best.min(t0.elapsed().as_secs_f64());
+        stream = String::from_utf8(out).unwrap();
+    }
+    (stream, best)
+}
+
+/// Strip the gated `trace` block from every response line, leaving the
+/// deterministic payload for byte-comparison against an untraced run.
+fn strip_trace(stream: &str) -> String {
+    stream
+        .lines()
+        .map(|line| {
+            let j = Json::parse(line).expect("response parses");
+            let Some(result) = j.get("result").and_then(Json::as_obj) else {
+                return line.to_string();
+            };
+            if !result.contains_key("trace") {
+                return line.to_string();
+            }
+            let kept: Vec<(&str, Json)> = result
+                .iter()
+                .filter(|(k, _)| k.as_str() != "trace")
+                .map(|(k, v)| (k.as_str(), v.clone()))
+                .collect();
+            Json::obj(vec![
+                ("id", j.get("id").cloned().unwrap_or(Json::Null)),
+                ("ok", j.get("ok").cloned().unwrap_or(Json::Null)),
+                ("result", Json::obj(kept)),
+            ])
+            .to_string()
+        })
+        .collect::<Vec<_>>()
+        .join("
+")
+}
+
+const TELEMETRY_REPS: usize = 3;
+const TELEMETRY_OVERHEAD_BOUND: f64 = 1.03;
+const TELEMETRY_SLACK_SECONDS: f64 = 0.05;
+
 fn main() {
     let input = session();
     let n_requests = input.lines().count();
@@ -176,6 +232,58 @@ fn main() {
         sat_serial_wall / sat_parallel_wall
     );
 
+    // telemetry overhead: the same dialogue bare vs fully instrumented
+    let trace_dir = std::env::temp_dir().join(format!(
+        "distsim_bench_traces_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&trace_dir);
+    let traced_input = input.replace(
+        r#""profile_iters":1"#,
+        r#""profile_iters":1,"trace":true"#,
+    );
+    println!("
+# telemetry: bare vs instrumented (trace blocks + --trace-dir + logger)
+");
+    let (off_stream, off_seconds) = timed_best(
+        &input,
+        &ServeOpts {
+            workers: parallel_workers,
+            ..ServeOpts::default()
+        },
+        TELEMETRY_REPS,
+    );
+    let (on_stream, on_seconds) = timed_best(
+        &traced_input,
+        &ServeOpts {
+            workers: parallel_workers,
+            trace_dir: Some(trace_dir.clone()),
+            // warn threshold: the logger's level check runs on every
+            // event site but nothing prints into the timing
+            log_level: LogLevel::Warn,
+            ..ServeOpts::default()
+        },
+        TELEMETRY_REPS,
+    );
+    let _ = std::fs::remove_dir_all(&trace_dir);
+    let telemetry_identical = strip_trace(&on_stream) == off_stream;
+    assert!(
+        telemetry_identical,
+        "instrumented responses minus their trace blocks must be          byte-identical to the bare stream"
+    );
+    let overhead_ratio = on_seconds / off_seconds;
+    let within_bound =
+        on_seconds <= off_seconds * TELEMETRY_OVERHEAD_BOUND + TELEMETRY_SLACK_SECONDS;
+    println!("telemetry off:     {off_seconds:.3} s (best of {TELEMETRY_REPS})");
+    println!("telemetry on:      {on_seconds:.3} s (best of {TELEMETRY_REPS})");
+    println!(
+        "overhead: {overhead_ratio:.3}x   within {TELEMETRY_OVERHEAD_BOUND:.2}x bound:          {within_bound}   deterministic bytes identical: {telemetry_identical}"
+    );
+    assert!(
+        within_bound,
+        "telemetry overhead {overhead_ratio:.3}x exceeds the          {TELEMETRY_OVERHEAD_BOUND:.2}x budget ({off_seconds:.3}s -> {on_seconds:.3}s)"
+    );
+
     println!(
         "BENCH_service.json {}",
         Json::obj(vec![
@@ -197,6 +305,16 @@ fn main() {
                     ("parallel_seconds", Json::num(sat_parallel_wall)),
                     ("speedup", Json::num(sat_serial_wall / sat_parallel_wall)),
                     ("per_connection_identical", Json::Bool(true)),
+                ])
+            ),
+            (
+                "telemetry",
+                Json::obj(vec![
+                    ("off_seconds", Json::num(off_seconds)),
+                    ("on_seconds", Json::num(on_seconds)),
+                    ("overhead_ratio", Json::num(overhead_ratio)),
+                    ("within_bound", Json::Bool(within_bound)),
+                    ("identical", Json::Bool(telemetry_identical)),
                 ])
             ),
         ])

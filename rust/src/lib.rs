@@ -14,7 +14,9 @@
 //!   16-GPU testbed, analytical & Daydream-style baselines ([`baseline`]),
 //!   the auto-parallel strategy search ([`search`]), and a long-lived
 //!   what-if sweep service ([`service`]) answering concurrent strategy
-//!   queries over a disk-persistent shared profile cache. Beyond the
+//!   queries over a disk-persistent shared profile cache, observed by an
+//!   in-process telemetry layer ([`telemetry`]: metrics registry,
+//!   per-request lifecycle tracing, structured logging). Beyond the
 //!   paper's homogeneous testbeds, clusters can mix device SKUs
 //!   ([`cluster`]: named device kinds + rank→device placement maps) with
 //!   per-kind cost models ([`cost::CostBook`]) and a placement axis in
@@ -50,6 +52,7 @@ pub mod schedule;
 pub mod search;
 pub mod service;
 pub mod strategy;
+pub mod telemetry;
 pub mod timeline;
 pub mod util;
 

@@ -10,6 +10,7 @@
 //!                   [--scenario-file scenario.json]
 //! distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
 //!                   [--save-interval SECS] [--max-queue N]
+//!                   [--log-level error|warn|info|debug] [--trace-dir DIR]
 //! distsim ask       [--model M ...] [--scenario-file scenario.json]
 //!                   | --file req.ndjson  [--connect HOST:PORT]
 //! distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
@@ -123,13 +124,17 @@ USAGE:
                     # unhappy-path ScenarioSpec and prints the robust pick
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
                     [--save-interval SECS] [--max-queue N]
+                    [--log-level error|warn|info|debug] [--trace-dir DIR]
                     # long-lived what-if daemon: one NDJSON request per
                     # line in, one response line out, each connection's
                     # responses in its own admission order;
                     # --save-interval additionally snapshots caches
                     # periodically (atomic tmp-file + rename);
                     # --max-queue bounds queued sweeps (default 1024),
-                    # overflow answered with a structured `unavailable`
+                    # overflow answered with a structured `unavailable`;
+                    # --log-level gates one-line JSON events on stderr
+                    # (default info); --trace-dir writes one Chrome-trace
+                    # file per completed sweep (see FORMATS.md §1.8)
   distsim ask       [--model M --global-batch B ...] | --file req.ndjson
                     [--connect HOST:PORT] [--timing] [--workers W]
                     [--cache-dir DIR] [--scenario-file scenario.json]
@@ -298,11 +303,16 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             }
             Ok(snap) => {
                 save_cache_file = false;
-                eprintln!(
-                    "warning: cache file {} has fingerprint {} (this sweep: {fp}); \
-                     starting cold and leaving the file untouched",
-                    path.display(),
-                    snap.fingerprint
+                distsim::telemetry::Logger::default().warn(
+                    "snapshot_ignored",
+                    &[
+                        (
+                            "path",
+                            distsim::config::Json::str(path.display().to_string()),
+                        ),
+                        ("found", distsim::config::Json::str(&snap.fingerprint)),
+                        ("expected", distsim::config::Json::str(&fp)),
+                    ],
                 );
             }
             Err(e) => {
@@ -441,6 +451,12 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    use distsim::config::Json;
+    use distsim::telemetry::{LogLevel, Logger};
+    let log_level = match flags.get("log-level") {
+        Some(v) => LogLevel::parse(v).map_err(|e| anyhow::anyhow!("bad --log-level: {e}"))?,
+        None => LogLevel::default(),
+    };
     let opts = distsim::service::ServeOpts {
         workers: usize_flag(flags, "workers", 0),
         cache_dir: flags.get("cache-dir").map(std::path::PathBuf::from),
@@ -451,17 +467,31 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .map(std::time::Duration::from_secs),
         // 0 = the default bound; sweeps past it shed with `unavailable`
         max_queue: usize_flag(flags, "max-queue", 0),
+        log_level,
+        trace_dir: flags.get("trace-dir").map(std::path::PathBuf::from),
         ..Default::default()
+    };
+    let log = Logger::new(log_level);
+    let served = |summary: &distsim::service::ServeSummary| {
+        log.info(
+            "served",
+            &[
+                ("requests", Json::num(summary.requests as f64)),
+                ("sweeps", Json::num(summary.sweeps as f64)),
+                ("errors", Json::num(summary.errors as f64)),
+                (
+                    "snapshots_saved",
+                    Json::num(summary.snapshots_saved as f64),
+                ),
+            ],
+        );
     };
     if flags.contains_key("stdio") {
         let stdin = std::io::stdin();
         // Stdout (not its lock) crosses into the writer thread: locks are
         // per-write, and Stdout is Send where StdoutLock is not
         let summary = distsim::service::serve_ndjson(stdin.lock(), std::io::stdout(), &opts);
-        eprintln!(
-            "served {} requests ({} sweeps, {} errors); {} snapshots saved",
-            summary.requests, summary.sweeps, summary.errors, summary.snapshots_saved
-        );
+        served(&summary);
         return Ok(());
     }
     if let Some(port) = flags.get("port") {
@@ -470,12 +500,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             .map_err(|_| anyhow::anyhow!("bad --port '{port}'"))?;
         let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
         // with --port 0 the OS picks; always announce the bound address
-        eprintln!("distsim serve: listening on {}", listener.local_addr()?);
-        let summary = distsim::service::serve_tcp(listener, &opts)?;
-        eprintln!(
-            "served {} requests ({} sweeps, {} errors); {} snapshots saved",
-            summary.requests, summary.sweeps, summary.errors, summary.snapshots_saved
+        log.info(
+            "listening",
+            &[("addr", Json::str(listener.local_addr()?.to_string()))],
         );
+        let summary = distsim::service::serve_tcp(listener, &opts)?;
+        served(&summary);
         return Ok(());
     }
     anyhow::bail!("serve needs a transport: --stdio or --port N")

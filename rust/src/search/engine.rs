@@ -49,6 +49,7 @@ use crate::profile::{profile_events, ProfileReport};
 use crate::scenario::ScenarioSpec;
 use crate::schedule::SchedKind;
 use crate::strategy::Strategy;
+use crate::telemetry::RequestTrace;
 
 use super::cache::{stats_against, CacheStats, EventUse, LookupLog, ProfileCache};
 use super::pipeline::{self, CancelToken, CandidateSpace, EpochPlan, PruneStats, NO_TABLE};
@@ -119,6 +120,13 @@ pub struct SweepConfig {
     /// scoring perturbs only the analytical re-walk, never a profiled
     /// cost, so scenario sweeps share the nominal cache fingerprint.
     pub scenario: ScenarioSpec,
+    /// Request-level flag (`sweep.trace: true`): ask the service to attach
+    /// the opt-in request-lifecycle `trace` block to the response. The
+    /// engine itself ignores it — stage spans are recorded through the
+    /// [`RequestTrace`](crate::telemetry::RequestTrace) installed with
+    /// [`SearchEngine::with_trace`], never through this flag — so sweep
+    /// results are identical either way (DESIGN.md §9).
+    pub trace: bool,
 }
 
 impl Default for SweepConfig {
@@ -141,6 +149,7 @@ impl Default for SweepConfig {
             prune_margin: 0.10,
             use_cache: true,
             scenario: ScenarioSpec::default(),
+            trace: false,
         }
     }
 }
@@ -483,6 +492,10 @@ pub struct SearchEngine<'a> {
     /// Cooperative cancellation flag ([`SearchEngine::with_cancel`]);
     /// default is a never-fired token, so plain sweeps are unaffected.
     cancel: CancelToken,
+    /// Span recorder for the pipeline stages ([`SearchEngine::with_trace`]);
+    /// default is the disabled no-op. Recording is strictly out-of-band:
+    /// it never influences candidate results (DESIGN.md §9).
+    trace: RequestTrace,
     /// The candidate space, built once per engine (the optimizer's table
     /// enumeration and bound-ranking are not free — `space()` memoizes).
     space: OnceLock<CandidateSpace>,
@@ -528,6 +541,7 @@ impl<'a> SearchEngine<'a> {
             cache,
             prior: HashSet::new(),
             cancel: CancelToken::default(),
+            trace: RequestTrace::default(),
             space: OnceLock::new(),
         }
     }
@@ -576,6 +590,15 @@ impl<'a> SearchEngine<'a> {
     /// deadline-bearing requests in the service.
     pub fn with_cancel(mut self, cancel: CancelToken) -> Self {
         self.cancel = cancel;
+        self
+    }
+
+    /// Attach a [`RequestTrace`] recording the sweep's pipeline stages
+    /// (`source`, `bound`, `prune_epoch`, one `evaluate` span per
+    /// candidate batch). With the default disabled trace no clock is
+    /// read; either way the sweep's results are bit-identical.
+    pub fn with_trace(mut self, trace: RequestTrace) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -879,7 +902,9 @@ impl<'a> SearchEngine<'a> {
     /// for any worker count.
     pub fn sweep(&self) -> SweepReport {
         let t0 = Instant::now();
+        let source_span = self.trace.start("source");
         let space = self.space();
+        drop(source_span);
         let specs = &space.specs;
         let tables = &space.tables;
         let n = specs.len();
@@ -895,6 +920,7 @@ impl<'a> SearchEngine<'a> {
         };
 
         if self.cfg.prune {
+            let _span = self.trace.start("bound");
             for (i, spec) in specs.iter().enumerate() {
                 // optimizer candidates were already bounded during table
                 // ranking — identical inputs, identical number
@@ -918,6 +944,7 @@ impl<'a> SearchEngine<'a> {
             // incumbent (epoch 1 = the historical single up-front pass;
             // later epochs are the adaptive re-pruning)
             if self.cfg.prune && incumbent > 0.0 {
+                let _span = self.trace.start("prune_epoch");
                 for &i in plan.remaining() {
                     if !pruned[i]
                         && bounds[i] > 0.0
@@ -955,6 +982,7 @@ impl<'a> SearchEngine<'a> {
             let slots: Vec<Mutex<Option<(SweepCandidate, ProfileReport, f64)>>> =
                 chunk.iter().map(|_| Mutex::new(None)).collect();
             {
+                let _span = self.trace.start("evaluate");
                 let chunk = &chunk;
                 let queue = &queue;
                 let slots = &slots;

@@ -99,6 +99,8 @@ use crate::search::{
     fingerprint, stats_against, CancelToken, ProfileCache, SearchEngine, SweepReport,
 };
 
+use crate::telemetry::{LogLevel, Logger, RequestTrace, ServiceMetrics};
+
 use super::protocol::{self, ErrorKind, Request, ServiceError, SweepRequest};
 
 /// Default admission-queue bound when [`ServeOpts::max_queue`] is 0:
@@ -125,6 +127,16 @@ pub struct ServeOpts {
     /// would overflow it is answered with a structured `unavailable`
     /// error instead (`--max-queue`). 0 means [`DEFAULT_MAX_QUEUE`].
     pub max_queue: usize,
+    /// Severity threshold of the structured stderr logger
+    /// (`--log-level`; default `info`). Events are one-line JSON objects
+    /// with a stable schema — see [`crate::telemetry::log`].
+    pub log_level: LogLevel,
+    /// Write one Chrome-trace JSON file per completed sweep
+    /// (`trace-conn<conn>-seq<seq>.json`) under this directory
+    /// (`--trace-dir`). Implies lifecycle tracing for every sweep; the
+    /// response payload is unaffected unless the request also sets
+    /// `sweep.trace` (DESIGN.md §9).
+    pub trace_dir: Option<PathBuf>,
     /// Test-only fault injection: a sweep whose request id equals this
     /// panics inside the worker while holding the profile-cache entries
     /// lock, exercising the poisoned-lock recovery path end to end. Not
@@ -172,6 +184,8 @@ struct RegistryEntry {
 #[derive(Default)]
 pub struct CacheRegistry {
     dir: Option<PathBuf>,
+    /// Structured logger for snapshot-load/save diagnostics.
+    log: Logger,
     map: Mutex<HashMap<String, RegistryEntry>>,
     /// Scenario-bearing sweeps served since startup (the `stats` op's
     /// `scenario.sweeps` counter).
@@ -184,10 +198,17 @@ impl CacheRegistry {
     pub fn new(dir: Option<PathBuf>) -> Self {
         CacheRegistry {
             dir,
+            log: Logger::default(),
             map: Mutex::new(HashMap::new()),
             scenario_sweeps: AtomicUsize::new(0),
             scenario_episodes: AtomicUsize::new(0),
         }
+    }
+
+    /// Route diagnostics through `log` (builder-style).
+    pub fn with_log(mut self, log: Logger) -> Self {
+        self.log = log;
+        self
     }
 
     /// Count one scenario-bearing sweep and its spec's episodes.
@@ -237,16 +258,24 @@ impl CacheRegistry {
             {
                 Ok(snap) if snap.fingerprint == fp => Some(snap),
                 Ok(snap) => {
-                    eprintln!(
-                        "warning: ignoring snapshot {} (fingerprint {} != {})",
-                        path.display(),
-                        snap.fingerprint,
-                        fp
+                    self.log.warn(
+                        "snapshot_ignored",
+                        &[
+                            ("path", Json::str(path.display().to_string())),
+                            ("found", Json::str(&snap.fingerprint)),
+                            ("expected", Json::str(&fp)),
+                        ],
                     );
                     None
                 }
                 Err(e) => {
-                    eprintln!("warning: ignoring snapshot {}: {e}", path.display());
+                    self.log.warn(
+                        "snapshot_ignored",
+                        &[
+                            ("path", Json::str(path.display().to_string())),
+                            ("error", Json::str(e.to_string())),
+                        ],
+                    );
                     None
                 }
             }
@@ -296,7 +325,13 @@ impl CacheRegistry {
             return 0;
         };
         if let Err(e) = std::fs::create_dir_all(dir) {
-            eprintln!("warning: cannot create cache dir {}: {e}", dir.display());
+            self.log.warn(
+                "cache_dir_error",
+                &[
+                    ("path", Json::str(dir.display().to_string())),
+                    ("error", Json::str(e.to_string())),
+                ],
+            );
             return 0;
         }
         // serialization and disk I/O happen OUTSIDE the registry lock —
@@ -334,10 +369,19 @@ impl CacheRegistry {
                     })
                 });
             match res {
-                Ok(()) => saved += 1,
+                Ok(()) => {
+                    saved += 1;
+                    self.log.debug(
+                        "snapshot_saved",
+                        &[("path", Json::str(path.display().to_string()))],
+                    );
+                }
                 Err(err) => {
                     std::fs::remove_file(&tmp).ok();
-                    eprintln!("warning: {err}");
+                    self.log.warn(
+                        "snapshot_write_failed",
+                        &[("error", Json::str(err.to_string()))],
+                    );
                 }
             }
         }
@@ -395,6 +439,11 @@ enum Outcome {
         fp: String,
         preloaded: Arc<HashSet<String>>,
         include_timing: bool,
+        /// Attach the quantized `trace` block (`sweep.trace: true`).
+        include_trace: bool,
+        /// The job's lifecycle recorder (disabled unless requested or
+        /// `--trace-dir` is set).
+        trace: RequestTrace,
     },
     Error(ServiceError),
     Cancel {
@@ -405,6 +454,9 @@ enum Outcome {
     },
     Pong,
     Stats,
+    /// Telemetry registry snapshot (both exposition forms), assembled by
+    /// the writer at delivery time like `Stats`.
+    Metrics,
     Shutdown,
 }
 
@@ -423,6 +475,8 @@ struct Job {
     admitted_at: Instant,
     /// Fired by a `cancel` op targeting this job's id.
     cancel: CancelToken,
+    /// Lifecycle span recorder; its epoch is the admission instant.
+    trace: RequestTrace,
 }
 
 /// Cancellation handle for an admitted-but-unfinished sweep, kept in
@@ -479,6 +533,8 @@ struct Shared {
     max_queue: usize,
     /// Set when a shutdown op is admitted: transports stop reading.
     stopping: AtomicBool,
+    /// The daemon's telemetry registry (the `metrics` op's source).
+    metrics: ServiceMetrics,
 }
 
 impl Shared {
@@ -492,6 +548,7 @@ impl Shared {
             active: Mutex::default(),
             max_queue,
             stopping: AtomicBool::new(false),
+            metrics: ServiceMetrics::new(),
         }
     }
 
@@ -580,10 +637,13 @@ impl Shared {
         handle.cancel.cancel();
         let yanked = {
             let mut q = lock_recover(&self.queue);
-            q.jobs
+            let yanked = q
+                .jobs
                 .iter()
                 .position(|j| j.conn == conn && j.seq == handle.seq)
-                .and_then(|pos| q.jobs.remove(pos))
+                .and_then(|pos| q.jobs.remove(pos));
+            self.metrics.queue_depth.set(q.jobs.len() as u64);
+            yanked
         };
         match yanked {
             Some(job) => {
@@ -611,7 +671,7 @@ impl Shared {
 
     /// Answer an admitted job that will never run with an `unavailable`
     /// error (queue full, or racing with shutdown).
-    fn shed_job(&self, job: Job, message: String) {
+    fn shed_job(&self, job: Job, err: ServiceError) {
         self.unregister_active(job.conn, &job.req.id, job.seq);
         self.complete(
             job.conn,
@@ -619,7 +679,7 @@ impl Shared {
             Completed {
                 id: job.req.id.clone(),
                 conn: job.conn,
-                outcome: Outcome::Error(ServiceError::new(ErrorKind::Unavailable, message)),
+                outcome: Outcome::Error(err),
             },
         );
     }
@@ -630,25 +690,39 @@ impl Shared {
             // raced with shutdown: answer rather than silently dropping.
             // `unavailable`, not `bad_request` — the request was fine.
             drop(q);
-            self.shed_job(job, "daemon is shutting down".to_string());
+            self.metrics.shed_shutdown_total.inc();
+            self.shed_job(
+                job,
+                ServiceError::new(ErrorKind::Unavailable, "daemon is shutting down"),
+            );
             return;
         }
         if q.jobs.len() >= self.max_queue {
             // bounded admission: shed load with a structured error
-            // instead of growing the queue without bound
+            // instead of growing the queue without bound. `depth` and
+            // `max_queue` travel as machine-readable error fields so
+            // clients back off without parsing the message.
             let depth = q.jobs.len();
             drop(q);
+            self.metrics.shed_queue_full_total.inc();
             self.shed_job(
                 job,
-                format!(
-                    "admission queue is full ({depth} sweeps queued, --max-queue {}); \
-                     retry later",
-                    self.max_queue
-                ),
+                ServiceError::new(
+                    ErrorKind::Unavailable,
+                    format!(
+                        "admission queue is full ({depth} sweeps queued, --max-queue {}); \
+                         retry later",
+                        self.max_queue
+                    ),
+                )
+                .with_detail("depth", Json::num(depth as f64))
+                .with_detail("max_queue", Json::num(self.max_queue as f64)),
             );
             return;
         }
         q.jobs.push_back(job);
+        self.metrics.queue_depth.set(q.jobs.len() as u64);
+        self.metrics.queue_high_water.record_max(q.jobs.len() as u64);
         self.queue_cv.notify_one();
     }
 
@@ -673,7 +747,9 @@ impl Shared {
 /// with a structured shutting-down error ([`Shared::enqueue`]'s backstop).
 /// Termination comes from the transport: the TCP accept loop shuts down
 /// every connection's read half, which EOFs this loop.
-fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
+/// `trace_all` (from `--trace-dir`) enables lifecycle tracing on every
+/// sweep, independent of the per-request `sweep.trace` flag.
+fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize, trace_all: bool) -> bool {
     for line in input.lines() {
         let line = match line {
             Ok(l) => l,
@@ -719,6 +795,20 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
                     },
                 );
             }
+            Ok(Request::Metrics { id }) => {
+                // control op like stats: answered from the registry at
+                // delivery time, never queued behind sweeps
+                let seq = shared.admit(conn);
+                shared.complete(
+                    conn,
+                    seq,
+                    Completed {
+                        id,
+                        conn,
+                        outcome: Outcome::Metrics,
+                    },
+                );
+            }
             Ok(Request::Cancel { id, target }) => {
                 // control op, answered inline: a cancel must work even
                 // (especially) when the job queue is saturated. Per-conn
@@ -761,12 +851,19 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
                         cancel: cancel.clone(),
                     },
                 );
+                let trace = if trace_all || req.sweep.trace {
+                    // epoch = admission: the `queue` span starts here
+                    RequestTrace::enabled()
+                } else {
+                    RequestTrace::disabled()
+                };
                 shared.enqueue(Job {
                     seq,
                     conn,
                     req,
                     admitted_at: Instant::now(),
                     cancel,
+                    trace,
                 });
             }
         }
@@ -775,8 +872,18 @@ fn read_requests<R: BufRead>(shared: &Shared, input: R, conn: usize) -> bool {
 }
 
 /// Execute one admitted sweep job end to end.
-fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u64, Completed) {
+fn run_job(
+    registry: &CacheRegistry,
+    metrics: &ServiceMetrics,
+    job: Job,
+    panic_inject: Option<&str>,
+) -> (u64, Completed) {
     let req = &job.req;
+    // wall-clock telemetry, strictly out-of-band (DESIGN.md §9)
+    metrics
+        .queue_wait_us
+        .observe_us(job.admitted_at.elapsed().as_micros() as u64);
+    job.trace.span_since_epoch("queue");
     let answer = |outcome: Outcome| {
         (
             job.seq,
@@ -815,6 +922,8 @@ fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u
         registry.record_scenario(req.sweep.scenario.episode_count());
     }
     let inject = panic_inject.is_some() && panic_inject == req.id.as_deref();
+    let sweep_started = Instant::now();
+    let sweep_span = job.trace.start("sweep");
     let outcome = match catch_unwind(AssertUnwindSafe(|| {
         if inject {
             // test-only: blow up while holding the entries lock, leaving
@@ -835,6 +944,7 @@ fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u
         )
         .with_prior((*preloaded).clone())
         .with_cancel(job.cancel.clone())
+        .with_trace(job.trace.clone())
         .sweep()
     })) {
         // cancel wins a finish-line race: a report produced while (or
@@ -849,6 +959,8 @@ fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u
             fp,
             preloaded,
             include_timing: req.include_timing,
+            include_trace: req.sweep.trace,
+            trace: job.trace.clone(),
         },
         Err(panic) => {
             let msg = panic
@@ -859,6 +971,10 @@ fn run_job(registry: &CacheRegistry, job: Job, panic_inject: Option<&str>) -> (u
             Outcome::Error(ServiceError::new(ErrorKind::Internal, msg))
         }
     };
+    drop(sweep_span);
+    metrics
+        .sweep_duration_us
+        .observe_us(sweep_started.elapsed().as_micros() as u64);
     answer(outcome)
 }
 
@@ -868,6 +984,7 @@ fn worker_loop(shared: &Shared, registry: &CacheRegistry, panic_inject: Option<&
             let mut q = lock_recover(&shared.queue);
             loop {
                 if let Some(job) = q.jobs.pop_front() {
+                    shared.metrics.queue_depth.set(q.jobs.len() as u64);
                     break job;
                 }
                 if q.closed {
@@ -876,7 +993,7 @@ fn worker_loop(shared: &Shared, registry: &CacheRegistry, panic_inject: Option<&
                 q = shared.queue_cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
-        let (seq, completed) = run_job(registry, job, panic_inject);
+        let (seq, completed) = run_job(registry, &shared.metrics, job, panic_inject);
         // unregister BEFORE completing: once the response is deliverable
         // a cancel for this id must be not_found, never a dangling handle
         shared.unregister_active(completed.conn, &completed.id, seq);
@@ -898,6 +1015,8 @@ fn worker_loop(shared: &Shared, registry: &CacheRegistry, panic_inject: Option<&
 fn writer_loop(
     shared: &Shared,
     registry: &CacheRegistry,
+    log: Logger,
+    trace_dir: Option<&std::path::Path>,
     mut emit: impl FnMut(usize, &str),
     mut on_conn_idle: impl FnMut(usize),
 ) -> ServeSummary {
@@ -927,16 +1046,25 @@ fn writer_loop(
             }
         };
         summary.requests += 1;
+        shared.metrics.requests_total.inc();
         let conn = completed.conn;
+        let seq = cursors.get(&conn).copied().unwrap_or(0);
         let id = completed.id.as_deref();
+        // a completed sweep's trace, kept past serialization so the
+        // Chrome-trace file (if --trace-dir) includes the `write` span
+        let mut sweep_trace: Option<RequestTrace> = None;
         let line = match completed.outcome {
             Outcome::Sweep {
                 report,
                 fp,
                 preloaded,
                 include_timing,
+                include_trace,
+                trace,
             } => {
                 summary.sweeps += 1;
+                let m = &shared.metrics;
+                m.sweeps_total.inc();
                 let prior = seen
                     .entry((conn, fp.clone()))
                     .or_insert_with(|| (*preloaded).clone());
@@ -944,13 +1072,47 @@ fn writer_loop(
                 for u in &report.event_uses {
                     prior.insert(u.key.clone());
                 }
-                protocol::sweep_response(id, &fp, &report, &stats, include_timing).to_string()
+                // deterministic counters, accumulated from the same
+                // as-if-serial stats the response reports
+                m.cache_hits_total.add(stats.hits as u64);
+                m.cache_misses_total.add(stats.misses as u64);
+                m.cache_gpu_seconds.add(stats.gpu_seconds);
+                m.pruning_generated_total.add(report.pruning.generated as u64);
+                m.pruning_bound_pruned_total
+                    .add(report.pruning.bound_pruned as u64);
+                m.pruning_epoch_repruned_total
+                    .add(report.pruning.epoch_repruned as u64);
+                m.pruning_evaluated_total.add(report.pruning.evaluated as u64);
+                m.pruning_gpu_seconds_avoided
+                    .add(report.pruning.gpu_seconds_avoided);
+                // build the opt-in trace block BEFORE the write span: a
+                // response cannot contain the span of its own
+                // serialization (the Chrome file can, and does)
+                let trace_block = if include_trace {
+                    Some(trace.to_json())
+                } else {
+                    None
+                };
+                let write_span = trace.start("write");
+                let line =
+                    protocol::sweep_response(id, &fp, &report, &stats, include_timing, trace_block)
+                        .to_string();
+                drop(write_span);
+                sweep_trace = Some(trace);
+                line
             }
             Outcome::Error(err) => {
                 summary.errors += 1;
+                shared.metrics.error_counter(err.kind).inc();
                 protocol::error_response(id, &err).to_string()
             }
             Outcome::Cancel { target, outcome } => {
+                let m = &shared.metrics;
+                match outcome {
+                    "cancelled_queued" => m.cancel_cancelled_queued_total.inc(),
+                    "cancelling" => m.cancel_cancelling_total.inc(),
+                    _ => m.cancel_not_found_total.inc(),
+                }
                 protocol::cancel_response(id, &target, outcome).to_string()
             }
             Outcome::Pong => protocol::pong_response(id).to_string(),
@@ -958,9 +1120,46 @@ fn writer_loop(
                 let (sweeps, episodes) = registry.scenario_counters();
                 protocol::stats_response(id, &registry.summary(), sweeps, episodes).to_string()
             }
+            Outcome::Metrics => {
+                // reconcile-by-construction: the scenario and cache-
+                // occupancy families are sampled from the same registry
+                // the `stats` op reads, at the same delivery point
+                let m = &shared.metrics;
+                let (sweeps, episodes) = registry.scenario_counters();
+                m.scenario_sweeps_total.set(sweeps as u64);
+                m.scenario_episodes_total.set(episodes as u64);
+                let caches = registry.summary();
+                m.caches.set(caches.len() as u64);
+                m.cache_events
+                    .set(caches.iter().map(|(_, n)| *n as u64).sum());
+                protocol::metrics_response(id, m.export_json(), &m.export_prometheus())
+                    .to_string()
+            }
             Outcome::Shutdown => protocol::shutdown_response(id).to_string(),
         };
         emit(conn, &line);
+        log.debug(
+            "request_done",
+            &[
+                ("conn", Json::num(conn as f64)),
+                ("seq", Json::num(seq as f64)),
+            ],
+        );
+        if let (Some(dir), Some(trace)) = (trace_dir, &sweep_trace) {
+            if trace.is_enabled() {
+                let path = dir.join(format!("trace-conn{conn}-seq{seq}.json"));
+                match std::fs::write(&path, trace.to_chrome_json(id.unwrap_or("anon"))) {
+                    Ok(()) => shared.metrics.traces_written_total.inc(),
+                    Err(e) => log.warn(
+                        "trace_write_failed",
+                        &[
+                            ("path", Json::str(path.display().to_string())),
+                            ("error", Json::str(e.to_string())),
+                        ],
+                    ),
+                }
+            }
+        }
         *cursors.entry(conn).or_insert(0) += 1;
         emitted += 1;
         if shared.response_delivered(conn) {
@@ -984,6 +1183,26 @@ fn resolve_workers(n: usize) -> usize {
 }
 
 // ---------------------------------------------------------------------------
+/// Resolve `--trace-dir`: create the directory up front so per-request
+/// trace writes can't half-fail, and drop the feature (with a logged
+/// warning) when creation fails — tracing must never take the daemon down.
+fn prepare_trace_dir(opts: &ServeOpts, log: Logger) -> Option<PathBuf> {
+    let dir = opts.trace_dir.clone()?;
+    match std::fs::create_dir_all(&dir) {
+        Ok(()) => Some(dir),
+        Err(e) => {
+            log.warn(
+                "trace_write_failed",
+                &[
+                    ("path", Json::str(dir.display().to_string())),
+                    ("error", Json::str(e.to_string())),
+                ],
+            );
+            None
+        }
+    }
+}
+
 // transports
 
 /// Serve one NDJSON stream (stdin/stdout, or any reader/writer pair — the
@@ -995,10 +1214,12 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
     output: W,
     opts: &ServeOpts,
 ) -> ServeSummary {
-    let registry = CacheRegistry::new(opts.cache_dir.clone());
+    let log = Logger::new(opts.log_level);
+    let registry = CacheRegistry::new(opts.cache_dir.clone()).with_log(log);
     let shared = Shared::new(opts.effective_max_queue());
     let workers = resolve_workers(opts.workers);
     let saver = PeriodicSaver::new();
+    let trace_dir = prepare_trace_dir(opts, log);
     let mut summary = ServeSummary::default();
     std::thread::scope(|scope| {
         for _ in 0..workers {
@@ -1015,17 +1236,22 @@ pub fn serve_ndjson<R: BufRead, W: Write + Send>(
                 writer_loop(
                     shared,
                     registry,
+                    log,
+                    trace_dir.as_deref(),
                     |_conn, line| {
                         // a broken pipe must not kill the drain: log and move on
                         if writeln!(output, "{line}").and_then(|()| output.flush()).is_err() {
-                            eprintln!("warning: response dropped (output closed)");
+                            log.warn(
+                                "response_dropped",
+                                &[("reason", Json::str("output closed"))],
+                            );
                         }
                     },
                     |_conn| {}, // single stream: nothing to close per-conn
                 )
             }
         });
-        read_requests(&shared, input, 0);
+        read_requests(&shared, input, 0, trace_dir.is_some());
         shared.close();
         summary = writer.join().expect("writer panicked");
         saver.stop();
@@ -1066,10 +1292,12 @@ fn split_accepted(
 /// admission order, independent of other connections' progress. Returns
 /// when any connection sends a `shutdown` op.
 pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<ServeSummary> {
-    let registry = CacheRegistry::new(opts.cache_dir.clone());
+    let log = Logger::new(opts.log_level);
+    let registry = CacheRegistry::new(opts.cache_dir.clone()).with_log(log);
     let shared = Shared::new(opts.effective_max_queue());
     let workers = resolve_workers(opts.workers);
     let saver = PeriodicSaver::new();
+    let trace_dir = prepare_trace_dir(opts, log);
     listener.set_nonblocking(true)?;
     let conns: Mutex<HashMap<usize, TcpStream>> = Mutex::new(HashMap::new());
     let active_readers = AtomicUsize::new(0);
@@ -1089,20 +1317,30 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                 writer_loop(
                     shared,
                     registry,
+                    log,
+                    trace_dir.as_deref(),
                     |conn, line| {
                         let stream =
                             lock_recover(conns).get(&conn).and_then(|s| s.try_clone().ok());
                         match stream {
                             Some(mut s) => {
                                 if writeln!(s, "{line}").is_err() {
-                                    eprintln!(
-                                        "warning: response dropped (connection {conn} closed)"
+                                    log.warn(
+                                        "response_dropped",
+                                        &[
+                                            ("conn", Json::num(conn as f64)),
+                                            ("reason", Json::str("connection closed")),
+                                        ],
                                     );
                                 }
                             }
-                            None => {
-                                eprintln!("warning: response dropped (connection {conn} gone)")
-                            }
+                            None => log.warn(
+                                "response_dropped",
+                                &[
+                                    ("conn", Json::num(conn as f64)),
+                                    ("reason", Json::str("connection gone")),
+                                ],
+                            ),
                         }
                     },
                     // last pending response delivered after the reader left:
@@ -1129,8 +1367,9 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                         let shared = &shared;
                         let active = &active_readers;
                         let conns = &conns;
+                        let trace_all = trace_dir.is_some();
                         scope.spawn(move || {
-                            read_requests(shared, BufReader::new(read_half), id);
+                            read_requests(shared, BufReader::new(read_half), id, trace_all);
                             // nothing pending? close the socket now; else the
                             // writer closes it after the last response
                             if shared.reader_finished(id) {
@@ -1145,7 +1384,7 @@ pub fn serve_tcp(listener: TcpListener, opts: &ServeOpts) -> anyhow::Result<Serv
                     std::thread::sleep(Duration::from_millis(50));
                 }
                 Err(e) => {
-                    eprintln!("warning: accept failed: {e}");
+                    log.warn("accept_failed", &[("error", Json::str(e.to_string()))]);
                     std::thread::sleep(Duration::from_millis(50));
                 }
             }

@@ -27,6 +27,14 @@
 //! * `distsim serve` / `distsim ask` — the CLI entry points (`main.rs`);
 //!   `ask` doubles as an in-process self-test client.
 //!
+//! The daemon observes itself through [`crate::telemetry`]: a `metrics`
+//! op exposes the registry in structured-JSON and Prometheus text forms,
+//! `sweep.trace: true` returns a quantized per-request lifecycle trace,
+//! `--trace-dir` writes Chrome-trace files of the daemon's own request
+//! handling, and `--log-level` gates one-line JSON log events on stderr.
+//! All of it is out-of-band (DESIGN.md §9): deterministic sweep payloads
+//! are byte-identical whether telemetry is on or off.
+//!
 //! The engine stays the single execution core: the daemon builds the same
 //! [`SearchEngine`](crate::search::SearchEngine) the CLI does, injecting a
 //! shared cache via `with_cache` — there is no service-only sweep fork.

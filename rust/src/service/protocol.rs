@@ -61,7 +61,7 @@ use crate::search::{CacheStats, SweepConfig, SweepReport};
 /// Every op the request dispatcher accepts, in documentation order.
 /// `docs/FORMATS.md` must describe each one (`tests/docs_drift.rs` pins
 /// that), and [`parse_line`]'s dispatcher accepts exactly this set.
-pub const OPS: [&str; 5] = ["sweep", "cancel", "ping", "stats", "shutdown"];
+pub const OPS: [&str; 6] = ["sweep", "cancel", "ping", "stats", "metrics", "shutdown"];
 
 /// What went wrong, coarsely — the machine-readable half of an error
 /// response.
@@ -116,6 +116,10 @@ impl ErrorKind {
 pub struct ServiceError {
     pub kind: ErrorKind,
     pub message: String,
+    /// Extra machine-readable fields merged into the `error` object —
+    /// e.g. `depth`/`max_queue` on admission-queue sheds, so clients can
+    /// back off without parsing the human message.
+    pub detail: Vec<(&'static str, Json)>,
 }
 
 impl ServiceError {
@@ -123,7 +127,14 @@ impl ServiceError {
         ServiceError {
             kind,
             message: message.into(),
+            detail: Vec::new(),
         }
+    }
+
+    /// Attach one structured detail field (builder-style).
+    pub fn with_detail(mut self, key: &'static str, value: Json) -> Self {
+        self.detail.push((key, value));
+        self
     }
 }
 
@@ -154,6 +165,10 @@ pub enum Request {
     Cancel { id: Option<String>, target: String },
     Ping { id: Option<String> },
     Stats { id: Option<String> },
+    /// Telemetry snapshot: the daemon's metric registry in structured-JSON
+    /// and Prometheus text forms. Diagnostic like `stats` — outside the
+    /// byte-identity contract.
+    Metrics { id: Option<String> },
     Shutdown { id: Option<String> },
 }
 
@@ -274,7 +289,7 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
             "global_batch" | "jitter_sigma" | "profile_iters" | "threads" | "prune_margin"
             | "max_candidates" | "prune_epochs" | "beam" => v.as_f64().is_some(),
             "widened" | "micro_batch_axis" | "schedule_axis" | "placement_axis"
-            | "placement_opt" | "prune" | "use_cache" => v.as_bool().is_some(),
+            | "placement_opt" | "prune" | "use_cache" | "trace" => v.as_bool().is_some(),
             // seeds travel as numbers or string-wrapped u64s
             "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
             // unhappy-path scenario: its own strict parser rejects
@@ -284,7 +299,7 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
                 "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
                  profile_seed|threads|widened|micro_batch_axis|schedule_axis|\
                  placement_axis|placement_opt|beam|prune|prune_margin|prune_epochs|\
-                 use_cache|max_candidates|scenario)"
+                 use_cache|max_candidates|scenario|trace)"
             ),
         };
         anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
@@ -352,6 +367,9 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     if let Some(v) = j.get("scenario") {
         cfg.scenario = ScenarioSpec::from_json(v)?;
     }
+    if let Some(v) = j.get("trace").and_then(Json::as_bool) {
+        cfg.trace = v;
+    }
     Ok(cfg)
 }
 
@@ -405,6 +423,7 @@ pub fn parse_line(line: &str) -> Result<Request, (Option<String>, ServiceError)>
         }
         "ping" => Ok(Request::Ping { id }),
         "stats" => Ok(Request::Stats { id }),
+        "metrics" => Ok(Request::Metrics { id }),
         "shutdown" => Ok(Request::Shutdown { id }),
         "sweep" => {
             let model_name = j
@@ -475,16 +494,17 @@ fn id_json(id: Option<&str>) -> Json {
 
 /// One-line error response.
 pub fn error_response(id: Option<&str>, err: &ServiceError) -> Json {
+    let mut fields = vec![
+        ("kind", Json::str(err.kind.name())),
+        ("message", Json::str(&err.message)),
+    ];
+    for (k, v) in &err.detail {
+        fields.push((k, v.clone()));
+    }
     Json::obj(vec![
         ("id", id_json(id)),
         ("ok", Json::Bool(false)),
-        (
-            "error",
-            Json::obj(vec![
-                ("kind", Json::str(err.kind.name())),
-                ("message", Json::str(&err.message)),
-            ]),
-        ),
+        ("error", Json::obj(fields)),
     ])
 }
 
@@ -582,6 +602,29 @@ pub fn stats_response(
     ])
 }
 
+/// Serialize a `metrics` response: the telemetry registry's snapshot in
+/// both exposition forms. `metrics` is [`ServiceMetrics::export_json`]
+/// output, `prometheus` the text form. Diagnostic like `stats`: the
+/// histograms are wall-clock, so the payload is outside the byte-identity
+/// contract (DESIGN.md §9) — hence the explicit `deterministic: false`.
+///
+/// [`ServiceMetrics::export_json`]: crate::telemetry::ServiceMetrics::export_json
+pub fn metrics_response(id: Option<&str>, metrics: Json, prometheus: &str) -> Json {
+    Json::obj(vec![
+        ("id", id_json(id)),
+        ("ok", Json::Bool(true)),
+        (
+            "result",
+            Json::obj(vec![
+                ("op", Json::str("metrics")),
+                ("deterministic", Json::Bool(false)),
+                ("metrics", metrics),
+                ("prometheus", Json::str(prometheus)),
+            ]),
+        ),
+    ])
+}
+
 fn cache_stats_json(s: &CacheStats) -> Json {
     Json::obj(vec![
         ("hits", Json::num(s.hits as f64)),
@@ -602,6 +645,7 @@ pub fn sweep_response(
     report: &SweepReport,
     cache: &CacheStats,
     include_timing: bool,
+    trace: Option<Json>,
 ) -> Json {
     let table_json = |idx: u32| {
         report
@@ -738,6 +782,12 @@ pub fn sweep_response(
                 ("threads_used", Json::num(report.threads_used as f64)),
             ]),
         ));
+    }
+    // opt-in (`sweep.trace: true`) request-lifecycle block — wall-clock,
+    // quantized, explicitly non-deterministic; absent by default so the
+    // payload stays byte-identical (DESIGN.md §9)
+    if let Some(t) = trace {
+        result.push(("trace", t));
     }
     Json::obj(vec![
         ("id", id_json(id)),
@@ -971,6 +1021,55 @@ mod tests {
             j.get("error").unwrap().get("kind").and_then(Json::as_str),
             Some("bad_json")
         );
+    }
+
+    #[test]
+    fn parse_metrics_op_and_sweep_trace_flag() {
+        assert!(matches!(
+            parse_line(r#"{"op":"metrics"}"#).unwrap(),
+            Request::Metrics { id: None }
+        ));
+        assert!(matches!(
+            parse_line(r#"{"id":"m1","op":"metrics"}"#).unwrap(),
+            Request::Metrics { id: Some(_) }
+        ));
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"trace":true}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => assert!(req.sweep.trace),
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        // trace must be a bool, like every other sweep flag
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"trace":"yes"}}"#;
+        let (_, e) = parse_line(line).unwrap_err();
+        assert_eq!(e.kind, ErrorKind::BadRequest);
+    }
+
+    #[test]
+    fn error_detail_fields_land_in_the_error_object() {
+        let e = ServiceError::new(ErrorKind::Unavailable, "admission queue is full")
+            .with_detail("depth", Json::num(32.0))
+            .with_detail("max_queue", Json::num(32.0));
+        let j = Json::parse(&error_response(Some("r1"), &e).to_string()).unwrap();
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("kind").and_then(Json::as_str), Some("unavailable"));
+        assert_eq!(err.get("depth").and_then(Json::as_u64), Some(32));
+        assert_eq!(err.get("max_queue").and_then(Json::as_u64), Some(32));
+    }
+
+    #[test]
+    fn metrics_response_carries_both_exposition_forms() {
+        let m = crate::telemetry::ServiceMetrics::new();
+        m.requests_total.inc();
+        let line =
+            metrics_response(Some("m1"), m.export_json(), &m.export_prometheus()).to_string();
+        assert!(!line.contains('\n'), "must stay one line: {line}");
+        let j = Json::parse(&line).unwrap();
+        let r = j.get("result").unwrap();
+        assert_eq!(r.get("op").and_then(Json::as_str), Some("metrics"));
+        assert_eq!(r.get("deterministic").and_then(Json::as_bool), Some(false));
+        assert!(r.get("metrics").unwrap().get("counters").is_some());
+        let prom = r.get("prometheus").and_then(Json::as_str).unwrap();
+        assert!(prom.contains("distsim_requests_total 1"));
     }
 
     #[test]

@@ -1,0 +1,163 @@
+//! Structured leveled logging: one JSON object per line on stderr.
+//!
+//! Replaces the daemon's ad-hoc `eprintln!("warning: ...")` prose. Every
+//! event is a single-line JSON object with a stable schema:
+//!
+//! ```json
+//! {"event":"snapshot_ignored","level":"warn","path":"...","ts_ms":1700000000000}
+//! ```
+//!
+//! `level` and `event` are always present; `ts_ms` (wall-clock Unix
+//! milliseconds) is always present and, like everything on stderr, is
+//! out-of-band with respect to the determinism contract (DESIGN.md §9).
+//! Remaining keys are event-specific. Key order is sorted (the JSON
+//! substrate sorts object keys). The event vocabulary is [`LOG_EVENTS`];
+//! the docs-drift test pins it against FORMATS.md.
+
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::config::json::Json;
+
+/// Every `event` name the daemon and CLI emit, pinned by docs drift.
+pub const LOG_EVENTS: [&str; 10] = [
+    "accept_failed",
+    "cache_dir_error",
+    "listening",
+    "request_done",
+    "response_dropped",
+    "served",
+    "snapshot_ignored",
+    "snapshot_saved",
+    "snapshot_write_failed",
+    "trace_write_failed",
+];
+
+/// Severity, most to least severe. `--log-level` picks the threshold;
+/// events above it are suppressed. Default `info`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum LogLevel {
+    Error,
+    Warn,
+    #[default]
+    Info,
+    Debug,
+}
+
+impl LogLevel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LogLevel::Error => "error",
+            LogLevel::Warn => "warn",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> Result<LogLevel, String> {
+        match s {
+            "error" => Ok(LogLevel::Error),
+            "warn" => Ok(LogLevel::Warn),
+            "info" => Ok(LogLevel::Info),
+            "debug" => Ok(LogLevel::Debug),
+            other => Err(format!(
+                "unknown log level '{other}' (expected error|warn|info|debug)"
+            )),
+        }
+    }
+}
+
+/// A cheap, copyable handle: a severity threshold over stderr.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Logger {
+    level: LogLevel,
+}
+
+impl Logger {
+    pub fn new(level: LogLevel) -> Self {
+        Logger { level }
+    }
+
+    pub fn enabled(&self, level: LogLevel) -> bool {
+        level <= self.level
+    }
+
+    /// Emit one structured event line on stderr (if `level` passes the
+    /// threshold). `fields` are event-specific key/value pairs.
+    pub fn event(&self, level: LogLevel, event: &'static str, fields: &[(&str, Json)]) {
+        if !self.enabled(level) {
+            return;
+        }
+        let ts_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut pairs = vec![
+            ("level", Json::str(level.name())),
+            ("event", Json::str(event)),
+            ("ts_ms", Json::num(ts_ms as f64)),
+        ];
+        for (k, v) in fields {
+            pairs.push((*k, v.clone()));
+        }
+        eprintln!("{}", Json::obj(pairs));
+    }
+
+    pub fn error(&self, event: &'static str, fields: &[(&str, Json)]) {
+        self.event(LogLevel::Error, event, fields);
+    }
+
+    pub fn warn(&self, event: &'static str, fields: &[(&str, Json)]) {
+        self.event(LogLevel::Warn, event, fields);
+    }
+
+    pub fn info(&self, event: &'static str, fields: &[(&str, Json)]) {
+        self.event(LogLevel::Info, event, fields);
+    }
+
+    pub fn debug(&self, event: &'static str, fields: &[(&str, Json)]) {
+        self.event(LogLevel::Debug, event, fields);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_most_severe_first() {
+        assert!(LogLevel::Error < LogLevel::Warn);
+        assert!(LogLevel::Warn < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+    }
+
+    #[test]
+    fn threshold_gates_events() {
+        let warn_only = Logger::new(LogLevel::Warn);
+        assert!(warn_only.enabled(LogLevel::Error));
+        assert!(warn_only.enabled(LogLevel::Warn));
+        assert!(!warn_only.enabled(LogLevel::Info));
+        assert!(!warn_only.enabled(LogLevel::Debug));
+    }
+
+    #[test]
+    fn parse_round_trips_names() {
+        for level in [
+            LogLevel::Error,
+            LogLevel::Warn,
+            LogLevel::Info,
+            LogLevel::Debug,
+        ] {
+            assert_eq!(LogLevel::parse(level.name()), Ok(level));
+        }
+        assert!(LogLevel::parse("verbose").is_err());
+    }
+
+    #[test]
+    fn log_events_are_sorted_and_unique() {
+        let mut sorted = LOG_EVENTS.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted, LOG_EVENTS.to_vec());
+    }
+}

@@ -1,0 +1,27 @@
+//! In-process observability for the what-if daemon.
+//!
+//! Three pieces, all designed around one rule — **timing is out-of-band**
+//! (DESIGN.md §9). Deterministic response payloads never carry wall-clock
+//! data; everything here surfaces through explicitly non-deterministic
+//! channels (the `metrics` op, the opt-in `trace` block, `--trace-dir`
+//! files, stderr):
+//!
+//! * [`registry`] — a lock-cheap metrics registry ([`ServiceMetrics`]):
+//!   label-free atomic counters, gauges, and fixed-bucket histograms,
+//!   exposed by the NDJSON `metrics` op in structured-JSON and
+//!   Prometheus text forms.
+//! * [`trace`] — per-request lifecycle tracing ([`RequestTrace`]):
+//!   admission → queue → pipeline stages → write spans, surfaced as an
+//!   opt-in quantized response block and as Chrome-trace files of the
+//!   daemon itself.
+//! * [`log`] — a structured leveled [`Logger`] (`--log-level`): one JSON
+//!   event per line on stderr with a stable schema, replacing ad-hoc
+//!   `eprintln!` prose.
+
+pub mod log;
+pub mod registry;
+pub mod trace;
+
+pub use log::{LogLevel, Logger, LOG_EVENTS};
+pub use registry::{ServiceMetrics, HISTOGRAM_BOUNDS_US, PROMETHEUS_PREFIX};
+pub use trace::{RequestTrace, SpanTimer, TraceSpan, TRACE_PHASES, TRACE_QUANTUM_US};

@@ -1,0 +1,434 @@
+//! Lock-cheap metrics registry for the what-if daemon.
+//!
+//! A fixed, label-free set of named counters, gauges, and fixed-bucket
+//! histograms, every one a plain atomic — no locks, no allocation on the
+//! hot path, `Ordering::Relaxed` everywhere (the registry is diagnostic,
+//! like the `stats` op, and sits outside the byte-identity determinism
+//! contract; see DESIGN.md §9).
+//!
+//! Two exposition forms, both produced from the same snapshot pass:
+//!
+//! * [`ServiceMetrics::export_json`] — a structured [`Json`] object
+//!   (`counters` / `gauges` / `histograms`), key order deterministic
+//!   (the JSON substrate sorts object keys).
+//! * [`ServiceMetrics::export_prometheus`] — the Prometheus text
+//!   exposition format, one `# TYPE` comment plus samples per metric,
+//!   in the fixed declaration order of [`ServiceMetrics::names`].
+//!
+//! Metric names are bare (`queue_depth`); the Prometheus form prefixes
+//! every family with `distsim_`. Histogram buckets carry the standard
+//! cumulative `le` label — the only label anywhere in the registry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::config::json::Json;
+use crate::service::protocol::ErrorKind;
+
+/// Upper bounds (µs, inclusive) of the shared histogram buckets; an
+/// implicit `+Inf` bucket follows. Log-spaced from 100µs to 60s.
+pub const HISTOGRAM_BOUNDS_US: [u64; 7] = [
+    100, 1_000, 10_000, 100_000, 1_000_000, 10_000_000, 60_000_000,
+];
+
+const BUCKETS: usize = HISTOGRAM_BOUNDS_US.len() + 1;
+
+/// Prometheus metric-family prefix used by [`ServiceMetrics::export_prometheus`].
+pub const PROMETHEUS_PREFIX: &str = "distsim_";
+
+/// Per-[`ErrorKind`] counter names, aligned with [`ErrorKind::ALL`].
+const ERROR_METRIC_NAMES: [&str; 7] = [
+    "errors_bad_json_total",
+    "errors_bad_request_total",
+    "errors_deadline_total",
+    "errors_internal_total",
+    "errors_cli_total",
+    "errors_unavailable_total",
+    "errors_cancelled_total",
+];
+
+/// A monotonically increasing integer counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A set-to-latest (or ratcheting max) integer gauge.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    /// Ratchet the gauge up to `v` if `v` exceeds the current value.
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A monotonically increasing float counter (GPU-seconds and friends),
+/// stored as integer micro-units so it stays a single atomic.
+#[derive(Debug, Default)]
+pub struct FloatCounter(AtomicU64);
+
+impl FloatCounter {
+    pub fn add(&self, v: f64) {
+        if v > 0.0 {
+            self.0.fetch_add((v * 1e6).round() as u64, Ordering::Relaxed);
+        }
+    }
+    pub fn get(&self) -> f64 {
+        self.0.load(Ordering::Relaxed) as f64 / 1e6
+    }
+}
+
+/// A fixed-bucket latency histogram over [`HISTOGRAM_BOUNDS_US`].
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe_us(&self, us: u64) {
+        let idx = HISTOGRAM_BOUNDS_US
+            .iter()
+            .position(|&b| us <= b)
+            .unwrap_or(BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Cumulative (Prometheus-style) bucket counts, then total count and
+    /// summed microseconds.
+    fn snapshot(&self) -> ([u64; BUCKETS], u64, u64) {
+        let mut cum = [0u64; BUCKETS];
+        let mut running = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            running += b.load(Ordering::Relaxed);
+            cum[i] = running;
+        }
+        (
+            cum,
+            self.count.load(Ordering::Relaxed),
+            self.sum_us.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Upper-bound label (`le`) for bucket `i`, Prometheus-style.
+fn bucket_le(i: usize) -> String {
+    if i < HISTOGRAM_BOUNDS_US.len() {
+        HISTOGRAM_BOUNDS_US[i].to_string()
+    } else {
+        "+Inf".to_string()
+    }
+}
+
+/// The daemon's full metric set. One instance per serve call, shared by
+/// the reader, worker, and writer threads through `Shared`.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    // -- counters (monotonic, deterministic given a request schedule) --
+    pub requests_total: Counter,
+    pub sweeps_total: Counter,
+    pub shed_queue_full_total: Counter,
+    pub shed_shutdown_total: Counter,
+    pub cancel_cancelled_queued_total: Counter,
+    pub cancel_cancelling_total: Counter,
+    pub cancel_not_found_total: Counter,
+    errors: [Counter; 7],
+    pub cache_hits_total: Counter,
+    pub cache_misses_total: Counter,
+    pub cache_gpu_seconds: FloatCounter,
+    pub pruning_generated_total: Counter,
+    pub pruning_bound_pruned_total: Counter,
+    pub pruning_epoch_repruned_total: Counter,
+    pub pruning_evaluated_total: Counter,
+    pub pruning_gpu_seconds_avoided: FloatCounter,
+    pub scenario_sweeps_total: Gauge,
+    pub scenario_episodes_total: Gauge,
+    pub traces_written_total: Counter,
+    // -- gauges ------------------------------------------------------
+    pub queue_depth: Gauge,
+    pub queue_high_water: Gauge,
+    pub caches: Gauge,
+    pub cache_events: Gauge,
+    // -- histograms (wall-clock; never deterministic) ----------------
+    pub queue_wait_us: Histogram,
+    pub sweep_duration_us: Histogram,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The per-kind error counter for `kind`.
+    pub fn error_counter(&self, kind: ErrorKind) -> &Counter {
+        let idx = ErrorKind::ALL
+            .iter()
+            .position(|k| *k == kind)
+            .expect("every ErrorKind appears in ALL");
+        &self.errors[idx]
+    }
+
+    /// Counter samples `(name, value)` in fixed declaration order.
+    /// Scenario totals are sampled here even though they are stored as
+    /// set-at-exposition gauges — their source of truth is the cache
+    /// registry's monotonic counters, so they expose as counters.
+    fn counter_samples(&self) -> Vec<(&'static str, f64)> {
+        let mut v: Vec<(&'static str, f64)> = vec![
+            ("requests_total", self.requests_total.get() as f64),
+            ("sweeps_total", self.sweeps_total.get() as f64),
+            (
+                "shed_queue_full_total",
+                self.shed_queue_full_total.get() as f64,
+            ),
+            ("shed_shutdown_total", self.shed_shutdown_total.get() as f64),
+            (
+                "cancel_cancelled_queued_total",
+                self.cancel_cancelled_queued_total.get() as f64,
+            ),
+            (
+                "cancel_cancelling_total",
+                self.cancel_cancelling_total.get() as f64,
+            ),
+            (
+                "cancel_not_found_total",
+                self.cancel_not_found_total.get() as f64,
+            ),
+        ];
+        for (i, name) in ERROR_METRIC_NAMES.iter().enumerate() {
+            v.push((name, self.errors[i].get() as f64));
+        }
+        v.extend([
+            ("cache_hits_total", self.cache_hits_total.get() as f64),
+            ("cache_misses_total", self.cache_misses_total.get() as f64),
+            ("cache_gpu_seconds", self.cache_gpu_seconds.get()),
+            (
+                "pruning_generated_total",
+                self.pruning_generated_total.get() as f64,
+            ),
+            (
+                "pruning_bound_pruned_total",
+                self.pruning_bound_pruned_total.get() as f64,
+            ),
+            (
+                "pruning_epoch_repruned_total",
+                self.pruning_epoch_repruned_total.get() as f64,
+            ),
+            (
+                "pruning_evaluated_total",
+                self.pruning_evaluated_total.get() as f64,
+            ),
+            (
+                "pruning_gpu_seconds_avoided",
+                self.pruning_gpu_seconds_avoided.get(),
+            ),
+            (
+                "scenario_sweeps_total",
+                self.scenario_sweeps_total.get() as f64,
+            ),
+            (
+                "scenario_episodes_total",
+                self.scenario_episodes_total.get() as f64,
+            ),
+            (
+                "traces_written_total",
+                self.traces_written_total.get() as f64,
+            ),
+        ]);
+        v
+    }
+
+    fn gauge_samples(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("queue_depth", self.queue_depth.get() as f64),
+            ("queue_high_water", self.queue_high_water.get() as f64),
+            ("caches", self.caches.get() as f64),
+            ("cache_events", self.cache_events.get() as f64),
+        ]
+    }
+
+    fn histogram_samples(&self) -> Vec<(&'static str, &Histogram)> {
+        vec![
+            ("queue_wait_us", &self.queue_wait_us),
+            ("sweep_duration_us", &self.sweep_duration_us),
+        ]
+    }
+
+    /// Every metric family name, in exposition order. The docs-drift
+    /// test pins each of these against FORMATS.md.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.counter_samples()
+            .iter()
+            .map(|(n, _)| *n)
+            .chain(self.gauge_samples().iter().map(|(n, _)| *n))
+            .chain(self.histogram_samples().iter().map(|(n, _)| *n))
+            .collect()
+    }
+
+    /// Structured-JSON exposition form.
+    pub fn export_json(&self) -> Json {
+        let counters = Json::Obj(
+            self.counter_samples()
+                .into_iter()
+                .map(|(n, v)| (n.to_string(), Json::num(v)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            self.gauge_samples()
+                .into_iter()
+                .map(|(n, v)| (n.to_string(), Json::num(v)))
+                .collect(),
+        );
+        let histograms = Json::Obj(
+            self.histogram_samples()
+                .into_iter()
+                .map(|(n, h)| {
+                    let (cum, count, sum_us) = h.snapshot();
+                    let buckets = Json::Arr(
+                        cum.iter()
+                            .enumerate()
+                            .map(|(i, c)| {
+                                Json::obj(vec![
+                                    ("le", Json::str(bucket_le(i))),
+                                    ("count", Json::num(*c as f64)),
+                                ])
+                            })
+                            .collect(),
+                    );
+                    (
+                        n.to_string(),
+                        Json::obj(vec![
+                            ("count", Json::num(count as f64)),
+                            ("sum_us", Json::num(sum_us as f64)),
+                            ("buckets", buckets),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("histograms", histograms),
+        ])
+    }
+
+    /// Prometheus text exposition form (one string, newline-separated).
+    pub fn export_prometheus(&self) -> String {
+        let mut out = String::new();
+        let fmt_num = |v: f64| Json::num(v).to_string();
+        for (name, value) in self.counter_samples() {
+            out.push_str(&format!(
+                "# TYPE {p}{name} counter\n{p}{name} {}\n",
+                fmt_num(value),
+                p = PROMETHEUS_PREFIX,
+            ));
+        }
+        for (name, value) in self.gauge_samples() {
+            out.push_str(&format!(
+                "# TYPE {p}{name} gauge\n{p}{name} {}\n",
+                fmt_num(value),
+                p = PROMETHEUS_PREFIX,
+            ));
+        }
+        for (name, h) in self.histogram_samples() {
+            let (cum, count, sum_us) = h.snapshot();
+            out.push_str(&format!(
+                "# TYPE {p}{name} histogram\n",
+                p = PROMETHEUS_PREFIX
+            ));
+            for (i, c) in cum.iter().enumerate() {
+                out.push_str(&format!(
+                    "{p}{name}_bucket{{le=\"{}\"}} {c}\n",
+                    bucket_le(i),
+                    p = PROMETHEUS_PREFIX,
+                ));
+            }
+            out.push_str(&format!(
+                "{p}{name}_sum {sum_us}\n{p}{name}_count {count}\n",
+                p = PROMETHEUS_PREFIX
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_metric_names_align_with_error_kinds() {
+        for (i, kind) in ErrorKind::ALL.iter().enumerate() {
+            let expected = format!("errors_{}_total", kind.name());
+            assert_eq!(ERROR_METRIC_NAMES[i], expected, "index {i}");
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_cover_overflow() {
+        let h = Histogram::default();
+        h.observe_us(50); // le 100
+        h.observe_us(500); // le 1000
+        h.observe_us(999_999_999); // +Inf
+        let (cum, count, sum) = h.snapshot();
+        assert_eq!(count, 3);
+        assert_eq!(sum, 50 + 500 + 999_999_999);
+        assert_eq!(cum[0], 1);
+        assert_eq!(cum[1], 2);
+        assert_eq!(cum[BUCKETS - 1], 3, "last bucket counts everything");
+    }
+
+    #[test]
+    fn exposition_forms_cover_every_name() {
+        let m = ServiceMetrics::new();
+        m.requests_total.inc();
+        m.queue_depth.set(3);
+        m.queue_wait_us.observe_us(1234);
+        let json = m.export_json().to_string();
+        let prom = m.export_prometheus();
+        for name in m.names() {
+            assert!(json.contains(&format!("\"{name}\"")), "json lacks {name}");
+            assert!(
+                prom.contains(&format!("{PROMETHEUS_PREFIX}{name}")),
+                "prometheus lacks {name}"
+            );
+        }
+        // the text form parses line-by-line: every non-comment line is
+        // `name[{le="..."}] value`
+        for line in prom.lines() {
+            if line.starts_with('#') {
+                continue;
+            }
+            let (_, value) = line.rsplit_once(' ').expect("sample line");
+            value.parse::<f64>().expect("numeric sample value");
+        }
+    }
+
+    #[test]
+    fn float_counter_round_trips_micro_units() {
+        let c = FloatCounter::default();
+        c.add(1.25);
+        c.add(0.75);
+        assert!((c.get() - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,258 @@
+//! Per-request lifecycle tracing for the what-if daemon.
+//!
+//! Every job carries a [`RequestTrace`]. Disabled (the default) it is a
+//! `None` — recording is a no-op and no clock is ever read. Enabled, it
+//! captures named wall-clock spans relative to the admission instant:
+//! `queue` (admission → worker pickup), `sweep` (the whole engine run),
+//! the engine's pipeline stages (`source`, `bound`, `prune_epoch`,
+//! `evaluate` — one `evaluate` span per candidate batch), and `write`
+//! (response serialization; Chrome-trace files only, since a response
+//! cannot contain the span of its own serialization).
+//!
+//! Two surfaces, both out-of-band with respect to the determinism
+//! contract (DESIGN.md §9):
+//!
+//! * [`RequestTrace::to_json`] — the opt-in `trace` response block
+//!   (`sweep.trace: true`), durations quantized to [`TRACE_QUANTUM_US`]
+//!   and flagged `"deterministic": false`.
+//! * [`RequestTrace::to_chrome_json`] — a Chrome-trace JSON document
+//!   (unquantized), written under `--trace-dir` via the same
+//!   [`crate::timeline::chrome`] envelope as the simulated timelines.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::json::Json;
+use crate::search::cache::lock_recover;
+use crate::timeline::chrome;
+
+/// Span names a [`RequestTrace`] can record. The docs-drift test pins
+/// each of these against FORMATS.md. `write` only ever appears in
+/// Chrome-trace files: the response's `trace` block is serialized before
+/// the write span is recorded.
+pub const TRACE_PHASES: [&str; 7] = [
+    "queue",
+    "sweep",
+    "source",
+    "bound",
+    "prune_epoch",
+    "evaluate",
+    "write",
+];
+
+/// Quantum (µs) applied to the span fields of the `trace` response
+/// block: starts and durations are rounded to the nearest multiple.
+pub const TRACE_QUANTUM_US: u64 = 100;
+
+/// One recorded span, microseconds relative to the trace epoch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSpan {
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+#[derive(Debug)]
+struct TraceInner {
+    epoch: Instant,
+    spans: Mutex<Vec<TraceSpan>>,
+}
+
+/// A shared, clonable span recorder; `Default` is the disabled no-op.
+#[derive(Debug, Clone, Default)]
+pub struct RequestTrace {
+    inner: Option<Arc<TraceInner>>,
+}
+
+impl RequestTrace {
+    /// An enabled trace whose epoch is now (the admission instant).
+    pub fn enabled() -> Self {
+        RequestTrace {
+            inner: Some(Arc::new(TraceInner {
+                epoch: Instant::now(),
+                spans: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// The disabled no-op recorder (same as `Default`).
+    pub fn disabled() -> Self {
+        RequestTrace::default()
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Start a span now; it is recorded when the returned timer drops.
+    /// On a disabled trace this reads no clock and records nothing.
+    pub fn start(&self, name: &'static str) -> SpanTimer {
+        SpanTimer {
+            inner: self
+                .inner
+                .as_ref()
+                .map(|i| (Arc::clone(i), name, Instant::now())),
+        }
+    }
+
+    /// Record a span running from the trace epoch until now — used for
+    /// the `queue` span, whose start *is* the admission instant.
+    pub fn span_since_epoch(&self, name: &'static str) {
+        if let Some(inner) = &self.inner {
+            let dur = Instant::now().saturating_duration_since(inner.epoch);
+            push_span(inner, name, 0, dur.as_micros() as u64);
+        }
+    }
+
+    /// All recorded spans, ordered by start time (name breaks ties).
+    pub fn spans(&self) -> Vec<TraceSpan> {
+        let Some(inner) = &self.inner else {
+            return Vec::new();
+        };
+        let mut spans = lock_recover(&inner.spans).clone();
+        spans.sort_by(|a, b| (a.start_us, a.name).cmp(&(b.start_us, b.name)));
+        spans
+    }
+
+    /// The opt-in `trace` response block: spans quantized to
+    /// [`TRACE_QUANTUM_US`] and explicitly marked non-deterministic.
+    pub fn to_json(&self) -> Json {
+        let q = |us: u64| {
+            let half = TRACE_QUANTUM_US / 2;
+            ((us + half) / TRACE_QUANTUM_US * TRACE_QUANTUM_US) as f64
+        };
+        let spans = self
+            .spans()
+            .into_iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("name", Json::str(s.name)),
+                    ("start_us", Json::num(q(s.start_us))),
+                    ("dur_us", Json::num(q(s.dur_us))),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("deterministic", Json::Bool(false)),
+            ("quantum_us", Json::num(TRACE_QUANTUM_US as f64)),
+            ("spans", Json::Arr(spans)),
+        ])
+    }
+
+    /// A Chrome-trace JSON document of this request's own lifecycle
+    /// (unquantized), openable in the same viewer as the simulated
+    /// timelines. `label` names the single track (usually the request id).
+    pub fn to_chrome_json(&self, label: &str) -> String {
+        let mut events = vec![Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(0.0)),
+            (
+                "args",
+                Json::obj(vec![("name", Json::str(format!("request {label}")))]),
+            ),
+        ])];
+        for s in self.spans() {
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.name)),
+                ("cat", Json::str("daemon")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(s.start_us as f64)),
+                ("dur", Json::num(s.dur_us as f64)),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(0.0)),
+            ]));
+        }
+        chrome::finish(events)
+    }
+}
+
+fn push_span(inner: &TraceInner, name: &'static str, start_us: u64, dur_us: u64) {
+    lock_recover(&inner.spans).push(TraceSpan {
+        name,
+        start_us,
+        dur_us,
+    });
+}
+
+/// RAII span timer from [`RequestTrace::start`]; records on drop.
+#[derive(Debug)]
+pub struct SpanTimer {
+    inner: Option<(Arc<TraceInner>, &'static str, Instant)>,
+}
+
+impl Drop for SpanTimer {
+    fn drop(&mut self) {
+        if let Some((inner, name, t0)) = self.inner.take() {
+            let start = t0.saturating_duration_since(inner.epoch).as_micros() as u64;
+            let dur = Instant::now().saturating_duration_since(t0).as_micros() as u64;
+            push_span(&inner, name, start, dur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let t = RequestTrace::disabled();
+        let timer = t.start("sweep");
+        drop(timer);
+        t.span_since_epoch("queue");
+        assert!(!t.is_enabled());
+        assert!(t.spans().is_empty());
+    }
+
+    #[test]
+    fn enabled_trace_records_named_spans() {
+        let t = RequestTrace::enabled();
+        t.span_since_epoch("queue");
+        let timer = t.start("sweep");
+        drop(timer);
+        let names: Vec<&str> = t.spans().iter().map(|s| s.name).collect();
+        assert_eq!(names.len(), 2);
+        assert!(names.contains(&"queue"));
+        assert!(names.contains(&"sweep"));
+        for name in &names {
+            assert!(TRACE_PHASES.contains(name), "unknown phase {name}");
+        }
+    }
+
+    #[test]
+    fn trace_block_is_marked_non_deterministic_and_quantized() {
+        let t = RequestTrace::enabled();
+        t.span_since_epoch("queue");
+        let block = t.to_json();
+        assert_eq!(block.get("deterministic").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            block.get("quantum_us").and_then(Json::as_u64),
+            Some(TRACE_QUANTUM_US)
+        );
+        let spans = match block.get("spans") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("spans not an array: {other:?}"),
+        };
+        for s in spans {
+            let start = s.get("start_us").and_then(Json::as_u64).unwrap();
+            let dur = s.get("dur_us").and_then(Json::as_u64).unwrap();
+            assert_eq!(start % TRACE_QUANTUM_US, 0);
+            assert_eq!(dur % TRACE_QUANTUM_US, 0);
+        }
+    }
+
+    #[test]
+    fn chrome_export_is_valid_json_with_trace_events() {
+        let t = RequestTrace::enabled();
+        let timer = t.start("sweep");
+        drop(timer);
+        let doc = Json::parse(&t.to_chrome_json("req-1")).expect("valid chrome json");
+        let events = match doc.get("traceEvents") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert!(events.len() >= 2, "metadata + at least one span");
+    }
+}

@@ -96,7 +96,10 @@ fn trace_events(t: &Timeline) -> Vec<Json> {
     events
 }
 
-fn finish(events: Vec<Json>) -> String {
+/// Wrap pre-built trace events (metadata + spans) in the Chrome-trace
+/// envelope. Public so the service's self-tracing ([`crate::telemetry`])
+/// emits files openable in the same viewer as the simulated timelines.
+pub fn finish(events: Vec<Json>) -> String {
     Json::obj(vec![
         ("traceEvents", Json::Arr(events)),
         ("displayTimeUnit", Json::str("ms")),

@@ -170,3 +170,54 @@ fn scenario_schema_is_documented() {
     let typo = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"scenario":{"straggler":[{"device":0,"factor":1.5}]}}}"#;
     assert!(parse_line(typo).is_err(), "unknown scenario key must be rejected");
 }
+
+#[test]
+fn telemetry_surfaces_are_documented() {
+    // ISSUE 8 surface: the `metrics` op's two exposition forms, every
+    // metric family name, the trace block and its span vocabulary, the
+    // stderr log-event schema, and the new serve flags must all be
+    // specified in docs/FORMATS.md
+    let doc = formats_md();
+    for name in distsim::telemetry::ServiceMetrics::new().names() {
+        assert!(
+            doc.contains(name),
+            "metric family '{name}' is exposed by the metrics op but not \
+             documented in docs/FORMATS.md"
+        );
+    }
+    for phase in distsim::telemetry::TRACE_PHASES {
+        assert!(
+            doc.contains(&format!("`{phase}`")),
+            "trace span '{phase}' can be emitted but is not documented in \
+             docs/FORMATS.md"
+        );
+    }
+    for event in distsim::telemetry::LOG_EVENTS {
+        assert!(
+            doc.contains(&format!("`{event}`")),
+            "log event '{event}' can be emitted but is not documented in \
+             docs/FORMATS.md"
+        );
+    }
+    for word in [
+        "log-level",
+        "trace-dir",
+        "prometheus",
+        "distsim_",
+        "quantum_us",
+        "deterministic",
+        "depth",
+        "max_queue",
+        "trace-conn",
+        "ts_ms",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // and the parser accepts exactly what the spec names
+    use distsim::service::protocol::parse_line;
+    assert!(parse_line(r#"{"op":"metrics"}"#).is_ok());
+    let traced = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"trace":true}}"#;
+    assert!(parse_line(traced).is_ok());
+    let typo = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"trace":1}}"#;
+    assert!(parse_line(typo).is_err(), "trace must be a bool");
+}

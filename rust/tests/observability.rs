@@ -1,0 +1,365 @@
+//! Integration tests for the telemetry subsystem (ISSUE 8): the
+//! out-of-band timing rule (telemetry on vs off must not move a single
+//! response byte), the `metrics` op's reconciliation with `stats`, the
+//! opt-in `trace` response block, structured `unavailable` shed fields,
+//! and `--trace-dir` Chrome-trace files.
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use distsim::config::Json;
+use distsim::service::{serve_ndjson, ServeOpts, ServeSummary};
+use distsim::telemetry::{LogLevel, ServiceMetrics, TRACE_PHASES, TRACE_QUANTUM_US};
+
+/// Run an NDJSON session in-process and return its response lines.
+fn run_lines(input: &str, opts: &ServeOpts) -> (Vec<String>, ServeSummary) {
+    let mut out: Vec<u8> = Vec::new();
+    let summary = serve_ndjson(Cursor::new(input.to_string()), &mut out, opts);
+    let text = String::from_utf8(out).expect("responses are utf-8");
+    (text.lines().map(str::to_string).collect(), summary)
+}
+
+fn opts_with_workers(workers: usize) -> ServeOpts {
+    ServeOpts {
+        workers,
+        ..ServeOpts::default()
+    }
+}
+
+/// A small, fast sweep request: 6 candidates on 4 devices.
+fn small_sweep(id: &str, global_batch: usize) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4}},"sweep":{{"global_batch":{global_batch},"profile_iters":1}}}}"#
+    )
+}
+
+/// Same sweep with extra `sweep` fields spliced in (e.g. `"trace":true`).
+fn sweep_with(id: &str, global_batch: usize, extra: &str) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4}},"sweep":{{"global_batch":{global_batch},"profile_iters":1,{extra}}}}}"#
+    )
+}
+
+fn parse(line: &str) -> Json {
+    Json::parse(line).unwrap_or_else(|e| panic!("unparseable response '{line}': {e}"))
+}
+
+fn result_field<'a>(j: &'a Json, k: &str) -> &'a Json {
+    j.get("result")
+        .unwrap_or_else(|| panic!("no result in {j}"))
+        .get(k)
+        .unwrap_or_else(|| panic!("no result.{k} in {j}"))
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "distsim_observability_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn counter(metrics: &Json, name: &str) -> u64 {
+    result_field(metrics, "metrics")
+        .get("counters")
+        .and_then(|c| c.get(name))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("no counter {name} in {metrics}"))
+}
+
+fn gauge(metrics: &Json, name: &str) -> u64 {
+    result_field(metrics, "metrics")
+        .get("gauges")
+        .and_then(|g| g.get(name))
+        .and_then(Json::as_u64)
+        .unwrap_or_else(|| panic!("no gauge {name} in {metrics}"))
+}
+
+/// The tentpole's hard constraint: a fully instrumented daemon
+/// (`--trace-dir` tracing every sweep, debug logging) must produce the
+/// exact same response bytes as a bare one — all timing is out-of-band
+/// (DESIGN.md §9), and the `trace` block stays gated on `sweep.trace`.
+#[test]
+fn telemetry_on_and_off_response_streams_are_byte_identical() {
+    let input = [
+        small_sweep("a", 4),
+        r#"{"id":"p","op":"ping"}"#.to_string(),
+        small_sweep("b", 8),
+        small_sweep("a2", 4), // repeat: cache-hit accounting included
+    ]
+    .join("\n");
+    let dir = fresh_dir("identity");
+    let (off, _) = run_lines(&input, &opts_with_workers(2));
+    let (on, _) = run_lines(
+        &input,
+        &ServeOpts {
+            workers: 2,
+            trace_dir: Some(dir.clone()),
+            log_level: LogLevel::Debug,
+            ..ServeOpts::default()
+        },
+    );
+    assert_eq!(off, on, "telemetry moved a response byte");
+    // tracing really was live on the instrumented run
+    let n_files = std::fs::read_dir(&dir).expect("trace dir exists").count();
+    assert_eq!(n_files, 3, "one Chrome-trace file per completed sweep");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `sweep.trace: true` adds exactly one `trace` key to the result — the
+/// rest of the payload is the byte-identical deterministic sweep. The
+/// block itself is quantized and flagged non-deterministic.
+#[test]
+fn trace_block_is_opt_in_quantized_and_additive() {
+    let (plain_lines, _) = run_lines(&small_sweep("t", 4), &opts_with_workers(1));
+    let (traced_lines, _) = run_lines(
+        &sweep_with("t", 4, r#""trace":true"#),
+        &opts_with_workers(1),
+    );
+    let plain = parse(&plain_lines[0]);
+    let traced = parse(&traced_lines[0]);
+
+    let plain_result = plain.get("result").unwrap().as_obj().unwrap();
+    let traced_result = traced.get("result").unwrap().as_obj().unwrap();
+    assert_eq!(traced_result.len(), plain_result.len() + 1);
+    for (k, v) in plain_result {
+        assert_eq!(
+            traced_result.get(k).map(|t| t.to_string()),
+            Some(v.to_string()),
+            "deterministic field {k} changed under tracing"
+        );
+    }
+
+    let block = traced_result.get("trace").expect("trace block present");
+    assert_eq!(
+        block.get("deterministic").and_then(Json::as_bool),
+        Some(false)
+    );
+    assert_eq!(
+        block.get("quantum_us").and_then(Json::as_u64),
+        Some(TRACE_QUANTUM_US)
+    );
+    let spans = block.get("spans").and_then(Json::as_arr).unwrap();
+    let names: Vec<&str> = spans
+        .iter()
+        .map(|s| s.get("name").and_then(Json::as_str).unwrap())
+        .collect();
+    for phase in ["queue", "sweep", "source", "evaluate"] {
+        assert!(names.contains(&phase), "missing {phase} span: {names:?}");
+    }
+    for name in &names {
+        assert!(TRACE_PHASES.contains(name), "undocumented phase {name}");
+    }
+    for s in spans {
+        let start = s.get("start_us").and_then(Json::as_u64).unwrap();
+        let dur = s.get("dur_us").and_then(Json::as_u64).unwrap();
+        assert_eq!(start % TRACE_QUANTUM_US, 0, "unquantized start in {s}");
+        assert_eq!(dur % TRACE_QUANTUM_US, 0, "unquantized dur in {s}");
+    }
+}
+
+/// The `metrics` op reconciles exactly with `stats` (same registry, same
+/// delivery point), counts every delivered request including itself, and
+/// agrees with the per-response cache accounting.
+#[test]
+fn metrics_op_reconciles_with_stats_and_is_monotonic() {
+    let input = [
+        small_sweep("a", 4),
+        sweep_with(
+            "scn",
+            4,
+            r#""scenario":{"stragglers":[{"device":0,"factor":1.5}]}"#,
+        ),
+        small_sweep("a2", 4), // repeat: guaranteed cache hits
+        r#"{"id":"st","op":"stats"}"#.to_string(),
+        r#"{"id":"m1","op":"metrics"}"#.to_string(),
+        r#"{"id":"m2","op":"metrics"}"#.to_string(),
+    ]
+    .join("\n");
+    let (lines, summary) = run_lines(&input, &opts_with_workers(2));
+    assert_eq!(lines.len(), 6);
+    assert_eq!(summary.sweeps, 3);
+
+    let hits: u64 = lines[..3]
+        .iter()
+        .map(|l| {
+            result_field(&parse(l), "cache")
+                .get("hits")
+                .and_then(Json::as_u64)
+                .unwrap()
+        })
+        .sum();
+    assert!(hits > 0, "the repeated sweep must hit the cache");
+
+    let stats = parse(&lines[3]);
+    let m1 = parse(&lines[4]);
+    let m2 = parse(&lines[5]);
+    assert_eq!(
+        result_field(&m1, "deterministic").as_bool(),
+        Some(false),
+        "the metrics payload is diagnostic, like stats"
+    );
+
+    // exact reconciliation with the stats op
+    let scenario = result_field(&stats, "scenario");
+    assert_eq!(
+        counter(&m1, "scenario_sweeps_total"),
+        scenario.get("sweeps").and_then(Json::as_u64).unwrap()
+    );
+    assert_eq!(
+        counter(&m1, "scenario_episodes_total"),
+        scenario.get("episodes").and_then(Json::as_u64).unwrap()
+    );
+    let caches = result_field(&stats, "caches").as_arr().unwrap();
+    assert_eq!(gauge(&m1, "caches"), caches.len() as u64);
+    let events: u64 = caches
+        .iter()
+        .map(|c| c.get("events").and_then(Json::as_u64).unwrap())
+        .sum();
+    assert_eq!(gauge(&m1, "cache_events"), events);
+
+    // request/sweep/cache counters agree with the session itself
+    assert_eq!(counter(&m1, "sweeps_total"), 3);
+    assert_eq!(counter(&m1, "cache_hits_total"), hits);
+    assert_eq!(
+        counter(&m1, "requests_total"),
+        5,
+        "3 sweeps + stats + this metrics response"
+    );
+    assert_eq!(counter(&m2, "requests_total"), 6, "monotonic across calls");
+
+    // both exposition forms carry the same values
+    let prom = result_field(&m1, "prometheus").as_str().unwrap();
+    for (name, value) in [
+        ("sweeps_total", counter(&m1, "sweeps_total")),
+        ("cache_hits_total", hits),
+        ("requests_total", 5),
+    ] {
+        let line = format!("distsim_{name} {value}");
+        assert!(
+            prom.lines().any(|l| l == line),
+            "prometheus text lacks '{line}':\n{prom}"
+        );
+    }
+    // the wall-clock histograms saw every executed sweep
+    let wait = result_field(&m1, "metrics")
+        .get("histograms")
+        .and_then(|h| h.get("queue_wait_us"))
+        .expect("queue_wait_us histogram");
+    assert_eq!(wait.get("count").and_then(Json::as_u64), Some(3));
+
+    // every name the registry declares appears in both forms
+    let m = ServiceMetrics::new();
+    let json_text = result_field(&m1, "metrics").to_string();
+    for name in m.names() {
+        assert!(json_text.contains(&format!("\"{name}\"")), "json lacks {name}");
+        assert!(prom.contains(&format!("distsim_{name}")), "prom lacks {name}");
+    }
+}
+
+/// Queue-full sheds carry machine-readable `depth` / `max_queue` fields
+/// next to the prose message (FORMATS.md §1.6).
+#[test]
+fn queue_full_shed_carries_structured_depth_fields() {
+    let input = [
+        small_sweep("s0", 4),
+        small_sweep("s1", 4),
+        small_sweep("s2", 4),
+        small_sweep("s3", 4),
+    ]
+    .join("\n");
+    let opts = ServeOpts {
+        workers: 1,
+        max_queue: 1,
+        ..ServeOpts::default()
+    };
+    let (lines, _) = run_lines(&input, &opts);
+    let sheds: Vec<Json> = lines
+        .iter()
+        .map(|l| parse(l))
+        .filter(|j| j.get("ok").and_then(Json::as_bool) == Some(false))
+        .collect();
+    assert!(!sheds.is_empty(), "queue bound 1 with a 4-sweep burst must shed");
+    for j in &sheds {
+        let err = j.get("error").unwrap();
+        assert_eq!(err.get("kind").and_then(Json::as_str), Some("unavailable"));
+        assert_eq!(err.get("max_queue").and_then(Json::as_u64), Some(1), "{j}");
+        assert!(
+            err.get("depth").and_then(Json::as_u64).unwrap() >= 1,
+            "{j}"
+        );
+        // the prose message is still there for humans
+        assert!(err
+            .get("message")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("queue is full"));
+    }
+}
+
+/// `--trace-dir` writes one valid Chrome-trace JSON file per completed
+/// sweep, named `trace-conn<conn>-seq<seq>.json`, with the documented
+/// phase names — including the engine's `bound` stage when pruning and
+/// the `write` span the response block can never contain.
+#[test]
+fn trace_dir_files_are_valid_chrome_traces_with_expected_phases() {
+    let dir = fresh_dir("chrome");
+    let input = [
+        sweep_with("pruned", 8, r#""prune":true"#),
+        r#"{"id":"p","op":"ping"}"#.to_string(), // control ops are never traced
+        small_sweep("plain", 4),
+    ]
+    .join("\n");
+    let opts = ServeOpts {
+        workers: 2,
+        trace_dir: Some(dir.clone()),
+        log_level: LogLevel::Error,
+        ..ServeOpts::default()
+    };
+    let (lines, summary) = run_lines(&input, &opts);
+    assert_eq!((lines.len(), summary.sweeps), (3, 2));
+
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .expect("trace dir")
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .collect();
+    names.sort();
+    assert_eq!(
+        names,
+        vec!["trace-conn0-seq0.json", "trace-conn0-seq2.json"],
+        "one file per sweep, keyed by connection and per-conn seq"
+    );
+
+    for (file, expect_bound) in [("trace-conn0-seq0.json", true), ("trace-conn0-seq2.json", false)]
+    {
+        let text = std::fs::read_to_string(dir.join(file)).unwrap();
+        let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{file} invalid: {e}"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let phases: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("name").and_then(Json::as_str).unwrap())
+            .collect();
+        for phase in ["queue", "sweep", "source", "evaluate", "write"] {
+            assert!(phases.contains(&phase), "{file} lacks {phase}: {phases:?}");
+        }
+        assert_eq!(
+            phases.contains(&"bound"),
+            expect_bound,
+            "only the pruned sweep runs the bound stage: {file} {phases:?}"
+        );
+        // the metadata track is labeled with the request id
+        let meta = events
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .expect("thread_name metadata");
+        let label = meta
+            .get("args")
+            .and_then(|a| a.get("name"))
+            .and_then(Json::as_str)
+            .unwrap();
+        assert!(label.starts_with("request "), "{label}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

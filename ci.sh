@@ -102,3 +102,21 @@ print("prometheus/JSON round-trip consistent:", len(samples), "samples")
 '
 fi
 echo "metrics smoke test passed"
+
+# memory smoke: a capacity-capped sweep must discard infeasible
+# candidates as deterministic oom placeholders at the head of the
+# pipeline and still crown a feasible winner (the per-rank memory
+# model end-to-end)
+MEM_REQ='{"id":"mem-smoke","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4,"capacity_bytes":3000000000},"sweep":{"global_batch":4,"profile_iters":1,"recompute_axis":true,"zero_axis":true}}'
+MEM_OUT=$(printf '%s\n' "$MEM_REQ" | ./target/release/distsim serve --stdio --workers 2)
+printf '%s' "$MEM_OUT" | grep -q '"ok":true' || {
+    echo "memory smoke test failed: $MEM_OUT" >&2
+    exit 1
+}
+for field in '"reason":"oom"' '"memory_pruned"' '"peak_bytes"' '"best"'; do
+    printf '%s' "$MEM_OUT" | grep -q "$field" || {
+        echo "memory smoke: missing $field in $MEM_OUT" >&2
+        exit 1
+    }
+done
+echo "memory smoke test passed"

@@ -8,7 +8,10 @@
 //! For each scenario the staged sweep runs at 1 worker thread and at N,
 //! and the best-candidate checksum is asserted bit-equal (the pipeline's
 //! thread-count determinism contract); the shipped 16-rank scenario also
-//! asserts the optimizer strictly beats every named placement. Emits a
+//! asserts the optimizer strictly beats every named placement. A third,
+//! capacity-capped scenario (ISSUE 9) measures the memory feasibility
+//! stage: candidates the cap makes infeasible are discarded at the head
+//! of the pipeline and the avoided profiling cost is reported. Emits a
 //! machine-readable `BENCH_placement.json` line (see docs/FORMATS.md §3).
 
 use std::time::Instant;
@@ -178,6 +181,95 @@ fn main() {
             (
                 "optimizer_speedup_vs_named",
                 Json::num(if named > 0.0 { optimized / named } else { 0.0 }),
+            ),
+            ("best_checksum", Json::str(&checksum)),
+            ("identical", Json::Bool(identical)),
+        ]));
+    }
+
+    // Feasibility scenario (ISSUE 9): a capacity-capped mixed fleet
+    // where the memory stage discards infeasible candidates at the
+    // head of the pipeline, before any profiling is spent on them.
+    {
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4).with_uniform_capacity(3_000_000_000);
+        let ranks = cluster.total_devices();
+        let mem_cfg = SweepConfig {
+            global_batch: 16,
+            profile_iters: 1,
+            threads: parallel,
+            micro_batch_axis: true,
+            recompute_axis: true,
+            zero_axis: true,
+            prune: true,
+            ..SweepConfig::default()
+        };
+        println!("# {ranks}-rank capacity-capped fleet (3.0 GB/rank)");
+        let (capped, capped_wall) = run(&cluster, mem_cfg.clone());
+        let (capped_1t, _) = run(
+            &cluster,
+            SweepConfig {
+                threads: 1,
+                ..mem_cfg
+            },
+        );
+
+        let checksum = best_checksum(&capped);
+        let identical = checksum == best_checksum(&capped_1t);
+        assert!(
+            identical,
+            "capacity-capped sweep: best candidate differs across thread counts"
+        );
+        assert!(
+            capped.pruning.memory_pruned > 0,
+            "the 3.0 GB cap must make some candidate infeasible"
+        );
+        let best = capped
+            .best()
+            .expect("a feasible winner must exist under the 3.0 GB cap");
+        assert!(
+            best.fits && best.peak_bytes <= 3_000_000_000,
+            "the winner must fit its cap (peak {} bytes)",
+            best.peak_bytes
+        );
+
+        println!(
+            "memory: {} generated, {} memory-pruned (oom), {} evaluated in \
+             {capped_wall:.3} s ({:.2} gpu-s avoided by the memory stage, \
+             {:.2} by the bound)\n",
+            capped.pruning.generated,
+            capped.pruning.memory_pruned,
+            capped.pruning.evaluated,
+            capped.pruning.memory_gpu_seconds_avoided,
+            capped.pruning.gpu_seconds_avoided
+        );
+
+        scenarios.push(Json::obj(vec![
+            ("ranks", Json::num(ranks as f64)),
+            ("model", Json::str("bert-large")),
+            ("staged_seconds", Json::num(capped_wall)),
+            (
+                "staged_generated",
+                Json::num(capped.pruning.generated as f64),
+            ),
+            (
+                "staged_evaluated",
+                Json::num(capped.pruning.evaluated as f64),
+            ),
+            (
+                "memory_pruned",
+                Json::num(capped.pruning.memory_pruned as f64),
+            ),
+            (
+                "memory_gpu_seconds_avoided",
+                Json::num(capped.pruning.memory_gpu_seconds_avoided),
+            ),
+            (
+                "bound_pruned",
+                Json::num(capped.pruning.bound_pruned as f64),
+            ),
+            (
+                "gpu_seconds_avoided",
+                Json::num(capped.pruning.gpu_seconds_avoided),
             ),
             ("best_checksum", Json::str(&checksum)),
             ("identical", Json::Bool(identical)),

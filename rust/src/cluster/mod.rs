@@ -39,6 +39,13 @@ pub struct DeviceSpec {
     pub launch_overhead_us: f64,
     /// Device memory, GiB (for deployability checks).
     pub mem_gib: f64,
+    /// Usable training-state budget, bytes. `None` (the default) keeps
+    /// the pre-memory behaviour: the per-rank accounting never prunes,
+    /// and every serialization stays byte-identical to the old format.
+    /// Deliberately separate from `mem_gib`: capacities opt *in* to
+    /// feasibility pruning (and are usually set below the headline HBM
+    /// size to leave allocator/framework headroom).
+    pub capacity_bytes: Option<u64>,
 }
 
 impl DeviceSpec {
@@ -50,6 +57,7 @@ impl DeviceSpec {
             mem_bw_gbs: 696.0,
             launch_overhead_us: 8.0,
             mem_gib: 48.0,
+            capacity_bytes: None,
         }
     }
 
@@ -61,6 +69,7 @@ impl DeviceSpec {
             mem_bw_gbs: 600.0,
             launch_overhead_us: 8.0,
             mem_gib: 24.0,
+            capacity_bytes: None,
         }
     }
 
@@ -72,20 +81,42 @@ impl DeviceSpec {
             mem_bw_gbs: 2039.0,
             launch_overhead_us: 6.0,
             mem_gib: 80.0,
+            capacity_bytes: None,
         }
     }
 
+    /// Canonical JSON. `capacity_bytes` is emitted only when set, so a
+    /// capacity-less device serializes byte-identically to the pre-memory
+    /// format (and capacity-less cache fingerprints stay unchanged).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(&self.name)),
             ("peak_tflops", Json::num(self.peak_tflops)),
             ("mem_bw_gbs", Json::num(self.mem_bw_gbs)),
             ("launch_overhead_us", Json::num(self.launch_overhead_us)),
             ("mem_gib", Json::num(self.mem_gib)),
-        ])
+        ];
+        if let Some(cap) = self.capacity_bytes {
+            fields.push(("capacity_bytes", Json::num(cap as f64)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        // capacity gates feasibility pruning, so a mistyped value must
+        // fail loudly rather than silently disable (or enable) pruning
+        let capacity_bytes = match j.get("capacity_bytes") {
+            None => None,
+            Some(v) => {
+                // as_u64 is a saturating cast, so vet the raw number
+                let f = v.as_f64().unwrap_or(-1.0);
+                anyhow::ensure!(
+                    f > 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64,
+                    "capacity_bytes must be a positive integer byte count"
+                );
+                Some(f as u64)
+            }
+        };
         Ok(DeviceSpec {
             name: j
                 .get("name")
@@ -99,6 +130,7 @@ impl DeviceSpec {
                 .and_then(Json::as_f64)
                 .unwrap_or(8.0),
             mem_gib: j.get("mem_gib").and_then(Json::as_f64).unwrap_or(24.0),
+            capacity_bytes,
         })
     }
 }
@@ -469,6 +501,32 @@ impl ClusterSpec {
             .into_iter()
             .map(|k| self.kind_spec(k).mem_gib)
             .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Does any in-use SKU declare an explicit training-state capacity?
+    /// This is the opt-in switch of the per-rank memory accounting
+    /// ([`crate::memory`]): capacity-less clusters never feasibility-prune
+    /// and keep every response byte-identical to pre-memory builds.
+    pub fn has_capacity(&self) -> bool {
+        self.kinds_in_use()
+            .into_iter()
+            .any(|k| self.kind_spec(k).capacity_bytes.is_some())
+    }
+
+    /// A kind's explicit capacity, if declared.
+    pub fn capacity_of_kind(&self, kind: usize) -> Option<u64> {
+        self.kind_spec(kind).capacity_bytes
+    }
+
+    /// The same fleet with every kind capped at `bytes` (test and preset
+    /// convenience — real fleets usually cap per SKU via the spec JSON).
+    pub fn with_uniform_capacity(&self, bytes: u64) -> Self {
+        let mut c = self.clone();
+        c.device.capacity_bytes = Some(bytes);
+        for k in &mut c.extra_kinds {
+            k.capacity_bytes = Some(bytes);
+        }
+        c
     }
 
     // -- placement --------------------------------------------------------
@@ -952,6 +1010,35 @@ mod tests {
         // two tables with the same rank→class map canonicalize equal
         let other = vec![1, 4, 0, 6, 3, 5, 2, 7];
         assert_eq!(c.canonicalize_table(&other), canon);
+    }
+
+    #[test]
+    fn capacity_json_roundtrips_and_is_absent_by_default() {
+        // capacity-less specs serialize byte-identically to pre-memory
+        let plain = ClusterSpec::a40_cluster(2, 4);
+        assert!(!plain.has_capacity());
+        assert!(!plain.to_json().to_string().contains("capacity_bytes"));
+        // capped specs round-trip and flip the opt-in switch
+        let capped = plain.with_uniform_capacity(3_000_000_000);
+        assert!(capped.has_capacity());
+        assert_eq!(capped.capacity_of_kind(0), Some(3_000_000_000));
+        let j = Json::parse(&capped.to_json().to_string()).unwrap();
+        assert_eq!(ClusterSpec::from_json(&j).unwrap(), capped);
+        // mixed fleets cap every kind
+        let mixed = ClusterSpec::mixed_a40_a10(2, 4).with_uniform_capacity(1 << 30);
+        assert_eq!(mixed.capacity_of_kind(0), Some(1 << 30));
+        assert_eq!(mixed.capacity_of_kind(1), Some(1 << 30));
+    }
+
+    #[test]
+    fn capacity_must_be_a_positive_integer() {
+        for bad in [r#""48GiB""#, "0", "-5", "1.5"] {
+            let text = format!(
+                r#"{{"name":"A40","peak_tflops":149.7,"mem_bw_gbs":696,"launch_overhead_us":8,"mem_gib":48,"capacity_bytes":{bad}}}"#
+            );
+            let j = Json::parse(&text).unwrap();
+            assert!(DeviceSpec::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

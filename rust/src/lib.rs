@@ -42,6 +42,7 @@ pub mod distsim;
 pub mod engine;
 pub mod events;
 pub mod exp;
+pub mod memory;
 pub mod metrics;
 pub mod model;
 pub mod partition;

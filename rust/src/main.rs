@@ -117,11 +117,18 @@ USAGE:
                     [--placement-opt] [--beam N] [--prune] [--prune-epochs N]
                     [--no-cache] [--max-candidates N] [--cache-file F]
                     [--scenario-file scenario.json]
+                    [--memory] [--recompute-axis] [--zero-axis]
+                    [--capacity-gib G]
                     # --placement-opt searches rank→device tables beyond
                     # the named placements; --prune-epochs N re-prunes
                     # against the incumbent every 1/N of the sweep;
                     # --scenario-file scores every candidate under an
-                    # unhappy-path ScenarioSpec and prints the robust pick
+                    # unhappy-path ScenarioSpec and prints the robust pick;
+                    # --memory prices per-rank peak bytes for every
+                    # candidate; --recompute-axis / --zero-axis add
+                    # activation-recompute and ZeRO-1 points to the sweep;
+                    # --capacity-gib caps every device SKU so infeasible
+                    # candidates are pruned for free before profiling
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
                     [--save-interval SECS] [--max-queue N]
                     [--log-level error|warn|info|debug] [--trace-dir DIR]
@@ -168,6 +175,15 @@ fn cluster_from_flags(flags: &HashMap<String, String>) -> anyhow::Result<Cluster
     };
     if let Some(p) = flags.get("placement") {
         cluster.placement = distsim::cluster::Placement::parse(p)?;
+    }
+    // --capacity-gib: declare a uniform per-device memory capacity; the
+    // sweep's memory stage only ever prunes against declared capacities
+    if let Some(g) = flags.get("capacity-gib") {
+        let gib: f64 = g
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad --capacity-gib '{g}'"))?;
+        anyhow::ensure!(gib > 0.0, "--capacity-gib must be positive");
+        cluster = cluster.with_uniform_capacity((gib * 1_073_741_824.0).round() as u64);
     }
     Ok(cluster)
 }
@@ -257,6 +273,9 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         prune_epochs: usize_flag(flags, "prune-epochs", 1),
         max_candidates: usize_flag(flags, "max-candidates", 0),
         prune: flags.contains_key("prune"),
+        memory: flags.contains_key("memory"),
+        recompute_axis: flags.contains_key("recompute-axis"),
+        zero_axis: flags.contains_key("zero-axis"),
         use_cache: !flags.contains_key("no-cache"),
         ..distsim::search::SweepConfig::default()
     };
@@ -328,7 +347,9 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let report = engine.sweep();
 
     for (c, ms) in report.candidates.iter().zip(&report.timing.per_candidate_ms) {
-        let status = if c.pruned {
+        let status = if !c.fits {
+            format!("oom (peak {:.2} GiB)", c.peak_bytes as f64 / 1_073_741_824.0)
+        } else if c.pruned {
             format!("pruned (bound {:.3} it/s)", c.bound_throughput)
         } else if !c.reachable {
             "unreachable".to_string()
@@ -400,6 +421,25 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         report.pruning.evaluated,
         report.pruning.gpu_seconds_avoided
     );
+    // memory accounting block: only when the stage actually priced
+    // something, so capacity-less runs print byte-identical output
+    let memory_active = report.pruning.memory_pruned > 0
+        || report.candidates.iter().any(|c| c.peak_bytes > 0);
+    if memory_active {
+        let peak = report
+            .candidates
+            .iter()
+            .map(|c| c.peak_bytes)
+            .max()
+            .unwrap_or(0);
+        println!(
+            "memory: {} memory-pruned (oom), worst candidate peak {:.2} GiB/rank; \
+             {:.2} gpu-s avoided by the memory stage",
+            report.pruning.memory_pruned,
+            peak as f64 / 1_073_741_824.0,
+            report.pruning.memory_gpu_seconds_avoided
+        );
+    }
     println!(
         "profiling: {:.2} gpu-s over {} unique events; cache {} hits / {} misses ({:.0}% hit rate)",
         report.profile.gpu_seconds,
@@ -545,6 +585,9 @@ fn cmd_ask(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             ("placement-axis", "placement_axis"),
             ("placement-opt", "placement_opt"),
             ("prune", "prune"),
+            ("memory", "memory"),
+            ("recompute-axis", "recompute_axis"),
+            ("zero-axis", "zero_axis"),
         ] {
             if flags.contains_key(name) {
                 sweep.push((key, Json::Bool(true)));

@@ -1,0 +1,299 @@
+//! Per-rank peak-memory accounting (ISSUE 9).
+//!
+//! The sweep's candidate space is honest only if every candidate it ranks
+//! can actually be deployed: at large model scales the binding constraint
+//! is device memory, not throughput. This module prices, for every rank
+//! of a `(strategy, micro-batch, schedule)` point, the peak bytes of the
+//! four training-state families —
+//!
+//! * **weights** — the rank's parameter shard, fp32;
+//! * **gradients** — one fp32 gradient per local parameter (held across
+//!   the backward regardless of DP degree);
+//! * **optimizer state** — Adam's two fp32 moments (8 bytes/param),
+//!   divided across the DP group under ZeRO stage 1;
+//! * **activations** — the live forward activations awaiting their
+//!   backward: per in-flight micro-batch
+//!   ([`PipelineSchedule::max_in_flight`]), one `(mbs·seq, hidden)` fp32
+//!   tensor per resident layer — or just the stage-boundary tensor under
+//!   full recomputation.
+//!
+//! — and gates them against the per-SKU
+//! [`capacity_bytes`](crate::cluster::DeviceSpec::capacity_bytes).
+//! Capacities are strictly opt-in: a rank on a capacity-less SKU never
+//! fails, and a capacity-less fleet never prunes, keeping every response
+//! byte-identical to pre-memory builds.
+//!
+//! Deliberate approximations (DESIGN.md §10): activations are not divided
+//! by the tensor-MP degree (Megatron's sequence-parallel-free layout
+//! keeps full activations on every MP rank for most of the layer body);
+//! temporary workspace, fragmentation and the embedding-lookup footprint
+//! are absorbed into whatever headroom the operator left between
+//! `capacity_bytes` and the physical HBM size. The model is therefore
+//! *monotone and comparable across candidates* rather than
+//! allocator-exact, which is what a pruning stage needs.
+
+use crate::cluster::ClusterSpec;
+use crate::partition::Partition;
+use crate::schedule::PipelineSchedule;
+
+/// Activation-recomputation policy: one point of the sweep's
+/// `recompute_axis`. `Full` re-runs every layer's forward inside the
+/// backward (only stage-boundary activations stay resident), trading
+/// activation memory for recomputed FLOPs — see
+/// [`crate::partition::partition_opts`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Recompute {
+    #[default]
+    None,
+    Full,
+}
+
+impl Recompute {
+    /// The deterministic axis order the sweep enumerates, baseline first.
+    pub const AXIS: [Recompute; 2] = [Recompute::None, Recompute::Full];
+
+    /// Canonical serialization name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Recompute::None => "none",
+            Recompute::Full => "full",
+        }
+    }
+
+    pub fn parse(name: &str) -> anyhow::Result<Recompute> {
+        match name {
+            "none" => Ok(Recompute::None),
+            "full" => Ok(Recompute::Full),
+            other => anyhow::bail!("unknown recompute policy '{other}' (none|full)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Recompute {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// One pipeline stage's per-rank residency, by family.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageBytes {
+    pub weights: u64,
+    pub grads: u64,
+    pub optimizer: u64,
+    pub activations: u64,
+}
+
+impl StageBytes {
+    pub fn total(&self) -> u64 {
+        self.weights + self.grads + self.optimizer + self.activations
+    }
+}
+
+/// The per-rank verdict of one candidate on one fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryReport {
+    /// The worst rank's residency — what the sweep surfaces as
+    /// `peak_bytes`.
+    pub peak_bytes: u64,
+    /// Lowest rank attaining the peak.
+    pub peak_rank: usize,
+    /// That rank's pipeline stage.
+    pub peak_stage: usize,
+    /// The peak stage's family breakdown.
+    pub breakdown: StageBytes,
+    /// Does every rank with a declared capacity fit?
+    pub fits: bool,
+    /// Ranks whose SKU declares a capacity their residency exceeds,
+    /// ascending.
+    pub oom_ranks: Vec<usize>,
+}
+
+/// Price one stage's per-rank residency under the candidate's axes. The
+/// result depends only on the stage (every `(mp, dp)` lane of a stage
+/// holds the same shard sizes); capacities are applied per rank by
+/// [`assess`].
+pub fn stage_bytes(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    stage: usize,
+    recompute: Recompute,
+    zero_stage: u8,
+) -> StageBytes {
+    let params = part.stages[stage].params_per_rank;
+    let weights = params * 4;
+    let grads = params * 4;
+    let optimizer = {
+        let full = params * 8; // Adam: two fp32 moments
+        let dp = part.strategy.dp as u64;
+        if zero_stage >= 1 && dp > 1 {
+            full.div_ceil(dp)
+        } else {
+            full
+        }
+    };
+    // one (mbs·seq, hidden) fp32 tensor per resident layer output, per
+    // in-flight micro-batch; full recompute keeps only the stage input
+    let act_mb = (part.micro_batch_size * part.seq) as u64 * part.hidden as u64 * 4;
+    let resident_layers = match recompute {
+        Recompute::None => part.stages[stage].layers.len() as u64,
+        Recompute::Full => 1,
+    };
+    let in_flight = sched.max_in_flight(stage) as u64;
+    StageBytes {
+        weights,
+        grads,
+        optimizer,
+        activations: act_mb * resident_layers * in_flight,
+    }
+}
+
+/// Assess every rank of the partition's strategy against the fleet's
+/// declared capacities. The rank→SKU map goes through the cluster's
+/// placement, so two placements of one strategy can differ in
+/// feasibility on a mixed fleet.
+pub fn assess(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    cluster: &ClusterSpec,
+    recompute: Recompute,
+    zero_stage: u8,
+) -> MemoryReport {
+    let strategy = part.strategy;
+    let per_stage: Vec<StageBytes> = (0..strategy.pp)
+        .map(|s| stage_bytes(part, sched, s, recompute, zero_stage))
+        .collect();
+    let mut peak_bytes = 0u64;
+    let mut peak_rank = 0usize;
+    let mut peak_stage = 0usize;
+    let mut oom_ranks = Vec::new();
+    for rank in 0..strategy.world_size() {
+        let stage = strategy.coords(rank).pp;
+        let bytes = per_stage[stage].total();
+        if bytes > peak_bytes {
+            peak_bytes = bytes;
+            peak_rank = rank;
+            peak_stage = stage;
+        }
+        let kind = cluster.kind_of_rank(rank);
+        if let Some(cap) = cluster.capacity_of_kind(kind) {
+            if bytes > cap {
+                oom_ranks.push(rank);
+            }
+        }
+    }
+    MemoryReport {
+        peak_bytes,
+        peak_rank,
+        peak_stage,
+        breakdown: per_stage[peak_stage],
+        fits: oom_ranks.is_empty(),
+        oom_ranks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+    use crate::partition::partition_opts;
+    use crate::schedule::SchedKind;
+    use crate::strategy::Strategy;
+
+    fn report(
+        mp: usize,
+        pp: usize,
+        dp: usize,
+        mbs: usize,
+        micro_batches: usize,
+        recompute: Recompute,
+        zero_stage: u8,
+        cluster: &ClusterSpec,
+    ) -> MemoryReport {
+        let m = zoo::bert_large();
+        let s = Strategy::new(mp, pp, dp);
+        let part = partition_opts(&m, &s, cluster, mbs, recompute, zero_stage);
+        let sched = SchedKind::Dapple.build(pp, micro_batches);
+        assess(&part, &sched, cluster, recompute, zero_stage)
+    }
+
+    #[test]
+    fn capacity_less_fleets_never_fail() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let r = report(1, 1, 16, 4, 1, Recompute::None, 0, &c);
+        assert!(r.fits);
+        assert!(r.oom_ranks.is_empty());
+        assert!(r.peak_bytes > 0);
+    }
+
+    #[test]
+    fn breakdown_matches_the_formulas() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let m = zoo::bert_large();
+        let s = Strategy::new(2, 2, 4);
+        let part = partition_opts(&m, &s, &c, 2, Recompute::None, 0);
+        let sched = SchedKind::Dapple.build(2, 2);
+        let sb = stage_bytes(&part, &sched, 0, Recompute::None, 0);
+        let params = part.stages[0].params_per_rank;
+        assert_eq!(sb.weights, params * 4);
+        assert_eq!(sb.grads, params * 4);
+        assert_eq!(sb.optimizer, params * 8);
+        let act_mb = (2 * m.seq * m.hidden) as u64 * 4;
+        let layers = part.stages[0].layers.len() as u64;
+        assert_eq!(
+            sb.activations,
+            act_mb * layers * sched.max_in_flight(0) as u64
+        );
+        assert_eq!(
+            sb.total(),
+            sb.weights + sb.grads + sb.optimizer + sb.activations
+        );
+    }
+
+    #[test]
+    fn zero_stage_divides_optimizer_bytes_by_dp() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let base = report(1, 2, 4, 2, 2, Recompute::None, 0, &c);
+        let zero = report(1, 2, 4, 2, 2, Recompute::None, 1, &c);
+        assert_eq!(zero.breakdown.optimizer, base.breakdown.optimizer.div_ceil(4));
+        // and dp=1 is a no-op
+        let solo = report(1, 2, 1, 2, 2, Recompute::None, 0, &c);
+        let solo_z = report(1, 2, 1, 2, 2, Recompute::None, 1, &c);
+        assert_eq!(solo.peak_bytes, solo_z.peak_bytes);
+    }
+
+    #[test]
+    fn recompute_keeps_only_the_stage_boundary_activation() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let base = report(1, 2, 4, 2, 2, Recompute::None, 0, &c);
+        let rc = report(1, 2, 4, 2, 2, Recompute::Full, 0, &c);
+        let layers = base.breakdown.activations / rc.breakdown.activations;
+        assert!(layers > 1, "bert-large stages hold many layers");
+        assert_eq!(rc.breakdown.weights, base.breakdown.weights);
+        assert!(rc.peak_bytes < base.peak_bytes);
+    }
+
+    #[test]
+    fn tight_capacity_flags_every_rank_of_the_fat_stage() {
+        // cap the fleet just under the dp-only residency: every rank OOMs
+        let c = ClusterSpec::a40_cluster(4, 4);
+        let probe = report(1, 1, 16, 4, 1, Recompute::None, 0, &c);
+        let capped = c.with_uniform_capacity(probe.peak_bytes - 1);
+        let r = report(1, 1, 16, 4, 1, Recompute::None, 0, &capped);
+        assert!(!r.fits);
+        assert_eq!(r.oom_ranks, (0..16).collect::<Vec<_>>());
+        // one byte more and everything fits again
+        let roomy = c.with_uniform_capacity(probe.peak_bytes);
+        assert!(report(1, 1, 16, 4, 1, Recompute::None, 0, &roomy).fits);
+    }
+
+    #[test]
+    fn peak_rank_is_the_lowest_rank_of_the_heaviest_stage() {
+        let c = ClusterSpec::a40_cluster(4, 4);
+        // pp=2, Dapple, 2 micro-batches: stage 0 keeps 2 micro-batches
+        // in flight to stage 1's one — strictly heavier activations
+        let r = report(2, 2, 4, 2, 2, Recompute::None, 0, &c);
+        assert_eq!(r.peak_stage, 0);
+        assert_eq!(r.peak_rank, 0);
+    }
+}

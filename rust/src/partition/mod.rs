@@ -14,6 +14,7 @@
 use crate::cluster::ClusterSpec;
 use crate::cost::OpClass;
 use crate::events::{CommEvent, CompEvent};
+use crate::memory::Recompute;
 use crate::model::{Layer, ModelSpec};
 use crate::strategy::Strategy;
 
@@ -164,12 +165,38 @@ fn layer_comp_events(
     }
 }
 
-/// Partition `model` under `strategy` for micro-batches of `mbs` sequences.
+/// Partition `model` under `strategy` for micro-batches of `mbs` sequences
+/// (the historical entry point: no recomputation, no optimizer sharding).
 pub fn partition(
     model: &ModelSpec,
     strategy: &Strategy,
     cluster: &ClusterSpec,
     mbs: usize,
+) -> Partition {
+    partition_opts(model, strategy, cluster, mbs, Recompute::None, 0)
+}
+
+/// [`partition`] with the memory-trading axes applied:
+///
+/// * `recompute == Full` folds each layer's forward work into its
+///   backward event (flops, bytes, and the recomputed forward's MP
+///   all-reduces) — the classic activation-checkpointing trade. The
+///   merged event carries a distinct name (`…+rc`), so it interns, caches
+///   and prices separately from the plain backward.
+/// * `zero_stage == 1` shards optimizer state across the DP group; each
+///   rank then re-gathers updated parameters after the step, which this
+///   model folds into the existing DP collective as extra payload
+///   (`grad_bytes_per_rank` grows by the parameter bytes).
+///
+/// Both the ground-truth engine and the analytical model consume the
+/// partition, so one transformation covers every prediction path.
+pub fn partition_opts(
+    model: &ModelSpec,
+    strategy: &Strategy,
+    cluster: &ClusterSpec,
+    mbs: usize,
+    recompute: Recompute,
+    zero_stage: u8,
 ) -> Partition {
     let pp = strategy.pp;
     let mp = strategy.mp;
@@ -203,6 +230,20 @@ pub fn partition(
             // kind per rank (heterogeneous fleets intern one event per SKU)
             let (fwd, bwd, params) =
                 layer_comp_events(layer, li, mbs, model.seq, mp, &cluster.device.name);
+            // full recomputation: the backward re-runs this layer's
+            // forward before differentiating it — merge the forward into
+            // the backward event under a distinct name so the combined
+            // kernel is profiled/priced as its own entity
+            let bwd = if recompute == Recompute::Full {
+                CompEvent {
+                    name: format!("{}+rc", bwd.name),
+                    flops: bwd.flops + fwd.flops,
+                    bytes: bwd.bytes + fwd.bytes,
+                    ..bwd
+                }
+            } else {
+                bwd
+            };
             let is_sharded = mp > 1;
             let mp_allreduce = if is_sharded {
                 Some(CommEvent::AllReduce {
@@ -213,11 +254,16 @@ pub fn partition(
             } else {
                 None
             };
-            let (arf, arb) = match layer {
+            let (arf, mut arb) = match layer {
                 Layer::Transformer(_) if is_sharded => (2, 2),
                 _ if is_sharded => (1, 1),
                 _ => (0, 0),
             };
+            // the recomputed forward repeats its MP all-reduces inside
+            // the backward phase
+            if recompute == Recompute::Full {
+                arb += arf;
+            }
             stage_params += params;
             layers.push(LayerWork {
                 layer_idx: li,
@@ -241,7 +287,15 @@ pub fn partition(
         .iter()
         .map(|st| {
             if strategy.dp > 1 {
-                st.params_per_rank * 4
+                // ZeRO-1 re-gathers the sharded optimizer's updated
+                // parameters after the step; fold that payload into the
+                // DP collective (same ring, same link class)
+                let gather = if zero_stage >= 1 {
+                    st.params_per_rank * 4
+                } else {
+                    0
+                };
+                st.params_per_rank * 4 + gather
             } else {
                 0
             }
@@ -390,6 +444,42 @@ mod tests {
         let (m2, s2, c2) = setup(2, 2, 2);
         let p2 = partition(&m2, &s2, &c2, 4);
         assert!(p2.grad_bytes_per_rank.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn recompute_full_folds_fwd_into_bwd() {
+        let (m, s, c) = setup(2, 2, 1);
+        let plain = partition(&m, &s, &c, 4);
+        let rc = partition_opts(&m, &s, &c, 4, Recompute::Full, 0);
+        for (a, b) in plain.stages.iter().zip(&rc.stages) {
+            for (la, lb) in a.layers.iter().zip(&b.layers) {
+                // the forward pass itself is untouched
+                assert_eq!(la.fwd, lb.fwd);
+                // the backward grows by exactly the recomputed forward
+                assert_eq!(lb.bwd.flops, la.bwd.flops + la.fwd.flops);
+                assert_eq!(lb.bwd.bytes, la.bwd.bytes + la.fwd.bytes);
+                assert_eq!(lb.bwd.name, format!("{}+rc", la.bwd.name));
+                assert_eq!(lb.ar_count_bwd, la.ar_count_bwd + la.ar_count_fwd);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_stage_grows_the_dp_collective_iff_dp_gt_1() {
+        let (m, s, c) = setup(1, 2, 2);
+        let plain = partition(&m, &s, &c, 4);
+        let zero = partition_opts(&m, &s, &c, 4, Recompute::None, 1);
+        for (a, b) in plain
+            .grad_bytes_per_rank
+            .iter()
+            .zip(&zero.grad_bytes_per_rank)
+        {
+            assert_eq!(*b, 2 * a, "gather payload equals the grad payload");
+        }
+        // without DP there is no optimizer shard to gather back
+        let (m1, s1, c1) = setup(1, 2, 1);
+        let z1 = partition_opts(&m1, &s1, &c1, 4, Recompute::None, 1);
+        assert!(z1.grad_bytes_per_rank.iter().all(|&b| b == 0));
     }
 
     #[test]

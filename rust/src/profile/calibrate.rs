@@ -76,6 +76,7 @@ pub fn fit_scale(cal: &mut Calibration, cost: &CostModel, host_peak_tflops: f64)
         mem_bw_gbs: 50.0,
         launch_overhead_us: 20.0,
         mem_gib: 16.0,
+        capacity_bytes: None,
     };
     let ratios: Vec<f64> = cal
         .points

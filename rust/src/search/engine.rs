@@ -43,8 +43,9 @@ use crate::cluster::{ClusterSpec, PlacementPolicy};
 use crate::cost::{CostBook, CostModel};
 use crate::distsim::DistSim;
 use crate::events::EventDb;
+use crate::memory::{self, Recompute};
 use crate::model::ModelSpec;
-use crate::partition::partition;
+use crate::partition::partition_opts;
 use crate::profile::{profile_events, ProfileReport};
 use crate::scenario::ScenarioSpec;
 use crate::schedule::SchedKind;
@@ -120,6 +121,25 @@ pub struct SweepConfig {
     /// scoring perturbs only the analytical re-walk, never a profiled
     /// cost, so scenario sweeps share the nominal cache fingerprint.
     pub scenario: ScenarioSpec,
+    /// Enumerate the activation-recomputation axis: every point is
+    /// additionally evaluated under `recompute: full` (re-run each
+    /// layer's forward inside the backward, keeping only stage-boundary
+    /// activations resident). Trades recomputed FLOPs for activation
+    /// memory; the baseline `none` point always comes first, so axis-off
+    /// sweeps are order-preserved prefixes.
+    pub recompute_axis: bool,
+    /// Enumerate the ZeRO optimizer-state sharding axis: every dp>1
+    /// point is additionally evaluated under `zero_stage: 1` (Adam
+    /// moments divided across the DP group, paid for with a gather
+    /// folded into the DP collective). dp=1 points are not duplicated —
+    /// stage 1 degenerates to stage 0 there.
+    pub zero_axis: bool,
+    /// Force per-rank memory accounting on (peak bytes priced for every
+    /// candidate) even when no device declares a `capacity_bytes`.
+    /// Accounting switches on implicitly whenever a capacity or a memory
+    /// axis is present; off (the default) keeps every report
+    /// byte-identical to pre-memory builds.
+    pub memory: bool,
     /// Request-level flag (`sweep.trace: true`): ask the service to attach
     /// the opt-in request-lifecycle `trace` block to the response. The
     /// engine itself ignores it — stage spans are recorded through the
@@ -149,6 +169,9 @@ impl Default for SweepConfig {
             prune_margin: 0.10,
             use_cache: true,
             scenario: ScenarioSpec::default(),
+            recompute_axis: false,
+            zero_axis: false,
+            memory: false,
             trace: false,
         }
     }
@@ -173,6 +196,12 @@ pub struct CandidateSpec {
     /// `placement` is [`PlacementPolicy::Optimized`];
     /// [`pipeline::NO_TABLE`] otherwise.
     pub table: u32,
+    /// Activation-recomputation policy this point trains under
+    /// ([`Recompute::None`] outside the recompute axis).
+    pub recompute: Recompute,
+    /// ZeRO optimizer-state sharding stage, 0 or 1 (0 outside the zero
+    /// axis).
+    pub zero_stage: u8,
 }
 
 impl CandidateSpec {
@@ -188,6 +217,8 @@ impl CandidateSpec {
                 schedule: SchedKind::Dapple,
                 placement: PlacementPolicy::Cluster,
                 table: NO_TABLE,
+                recompute: Recompute::None,
+                zero_stage: 0,
             };
         }
         let per_replica = global_batch / strategy.dp;
@@ -203,6 +234,8 @@ impl CandidateSpec {
             schedule: SchedKind::Dapple,
             placement: PlacementPolicy::Cluster,
             table: NO_TABLE,
+            recompute: Recompute::None,
+            zero_stage: 0,
         }
     }
 }
@@ -220,6 +253,10 @@ pub struct SweepCandidate {
     /// Index into [`SweepReport::tables`] for optimizer candidates
     /// ([`pipeline::NO_TABLE`] otherwise).
     pub table: u32,
+    /// Activation-recomputation policy the point was simulated under.
+    pub recompute: Recompute,
+    /// ZeRO optimizer-state sharding stage the point was simulated under.
+    pub zero_stage: u8,
     /// DistSim-predicted throughput, it/s (0 if unreachable or pruned).
     pub throughput: f64,
     /// Throughput under [`SweepConfig::scenario`], it/s. 0 when the sweep
@@ -234,12 +271,21 @@ pub struct SweepCandidate {
     /// Analytical throughput upper bound, it/s (0 when not computed or
     /// not deployable).
     pub bound_throughput: f64,
+    /// Worst-rank peak training-state residency, bytes (0 when memory
+    /// accounting is off — see [`SearchEngine::memory_active`]).
+    pub peak_bytes: u64,
+    /// Every capacity-declaring rank holds this candidate's residency.
+    /// `true` when accounting is off or no capacity is declared; `false`
+    /// marks the memory stage's `oom` placeholders.
+    pub fits: bool,
 }
 
 impl SweepCandidate {
-    /// Did this candidate produce a usable throughput number?
+    /// Did this candidate produce a usable throughput number? Memory-
+    /// infeasible candidates never do — a fully-OOM space therefore ranks
+    /// nothing and [`SweepReport::best`] returns `None`.
     pub fn evaluated(&self) -> bool {
-        self.reachable && !self.pruned && self.throughput > 0.0
+        self.reachable && !self.pruned && self.fits && self.throughput > 0.0
     }
 
     /// Legacy [`super::Candidate`] view (pruned counts as not reachable,
@@ -659,16 +705,32 @@ impl<'a> SearchEngine<'a> {
         }
     }
 
+    /// Is per-rank memory accounting live for this sweep? On when any
+    /// device kind declares a [`capacity_bytes`]
+    /// ([`ClusterSpec::has_capacity`]) or any memory flag/axis of the
+    /// config asks for the numbers; off by default, keeping reports
+    /// byte-identical to pre-memory builds.
+    ///
+    /// [`capacity_bytes`]: crate::cluster::DeviceSpec::capacity_bytes
+    pub fn memory_active(&self) -> bool {
+        self.cfg.memory
+            || self.cfg.recompute_axis
+            || self.cfg.zero_axis
+            || self.cluster.has_capacity()
+    }
+
     fn bound_with(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> f64 {
         if !self.valid(spec) {
             return 0.0;
         }
         let cluster = self.cluster_for(spec, tables);
-        let part = partition(
+        let part = partition_opts(
             self.model,
             &spec.strategy,
             &cluster,
             spec.micro_batch_size,
+            spec.recompute,
+            spec.zero_stage,
         );
         if !cluster.fits(part.max_params_per_rank()) {
             return 0.0;
@@ -696,11 +758,15 @@ impl<'a> SearchEngine<'a> {
             schedule: spec.schedule,
             placement: spec.placement,
             table: spec.table,
+            recompute: spec.recompute,
+            zero_stage: spec.zero_stage,
             throughput: 0.0,
             scenario_throughput: 0.0,
             reachable: false,
             pruned: false,
             bound_throughput: 0.0,
+            peak_bytes: 0,
+            fits: true,
         };
         if !self.valid(spec) {
             // match the legacy evaluate_candidate: invalid candidates
@@ -710,16 +776,29 @@ impl<'a> SearchEngine<'a> {
             return (cand, ProfileReport::default());
         }
         let cluster = self.cluster_for(spec, tables);
-        let part = partition(
+        let part = partition_opts(
             self.model,
             &spec.strategy,
             &cluster,
             spec.micro_batch_size,
+            spec.recompute,
+            spec.zero_stage,
         );
         if !cluster.fits(part.max_params_per_rank()) {
             return (cand, ProfileReport::default());
         }
         let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+        if self.memory_active() {
+            let mem = memory::assess(&part, &sched, &cluster, spec.recompute, spec.zero_stage);
+            cand.peak_bytes = mem.peak_bytes;
+            cand.fits = mem.fits;
+            if !mem.fits {
+                // infeasible: never profiled, never simulated. The
+                // sweep's memory stage prunes these before dispatch;
+                // direct calls get the same free verdict.
+                return (cand, ProfileReport::default());
+            }
+        }
         let mut db = EventDb::new();
         crate::engine::build_programs(&part, &sched, &cluster, &mut db);
         let profile = if self.cfg.use_cache {
@@ -771,11 +850,13 @@ impl<'a> SearchEngine<'a> {
         scn: &ScenarioSpec,
     ) -> (f64, f64) {
         let cluster = self.cluster_for(spec, tables);
-        let part = partition(
+        let part = partition_opts(
             self.model,
             &spec.strategy,
             &cluster,
             spec.micro_batch_size,
+            spec.recompute,
+            spec.zero_stage,
         );
         let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
         let mut db = EventDb::new();
@@ -847,6 +928,8 @@ impl<'a> SearchEngine<'a> {
             schedule: w.schedule,
             placement: w.placement,
             table: w.table,
+            recompute: w.recompute,
+            zero_stage: w.zero_stage,
         };
         let masked_stretch = |scn: ScenarioSpec| -> f64 {
             if scn.is_empty() {
@@ -919,9 +1002,69 @@ impl<'a> SearchEngine<'a> {
             ..PruneStats::default()
         };
 
+        // stage 0 of the pipeline: memory-feasibility pruning. Free — no
+        // profiling, no simulation, just every rank's closed-form
+        // residency — so infeasible points never reach the bound pass or
+        // the evaluator. Only explicit capacities can fail a rank, so a
+        // capacity-less fleet walks this stage without pruning anything
+        // (and skips it entirely unless a memory flag/axis asked for the
+        // numbers). Runs independently of `cfg.prune`: feasibility is a
+        // hard constraint, not a performance heuristic.
+        let mut memory_pruned = vec![false; n];
+        let mut peak_of = vec![0u64; n];
+        if self.memory_active() {
+            let _span = self.trace.start("memory");
+            for (i, spec) in specs.iter().enumerate() {
+                if !self.valid(spec) {
+                    // invalid specs keep the evaluator's cheap
+                    // unreachable path (micro-batching zeroed, etc.)
+                    continue;
+                }
+                let cluster = self.cluster_for(spec, tables);
+                let part = partition_opts(
+                    self.model,
+                    &spec.strategy,
+                    &cluster,
+                    spec.micro_batch_size,
+                    spec.recompute,
+                    spec.zero_stage,
+                );
+                let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+                let mem =
+                    memory::assess(&part, &sched, &cluster, spec.recompute, spec.zero_stage);
+                peak_of[i] = mem.peak_bytes;
+                if !mem.fits {
+                    memory_pruned[i] = true;
+                    pruned[i] = true;
+                    stats.memory_pruned += 1;
+                    candidates[i] = Some(SweepCandidate {
+                        strategy: spec.strategy,
+                        micro_batch_size: spec.micro_batch_size,
+                        micro_batches: spec.micro_batches,
+                        schedule: spec.schedule,
+                        placement: spec.placement,
+                        table: spec.table,
+                        recompute: spec.recompute,
+                        zero_stage: spec.zero_stage,
+                        throughput: 0.0,
+                        scenario_throughput: 0.0,
+                        reachable: false,
+                        pruned: true,
+                        bound_throughput: 0.0,
+                        peak_bytes: mem.peak_bytes,
+                        fits: false,
+                    });
+                }
+            }
+        }
+
         if self.cfg.prune {
             let _span = self.trace.start("bound");
             for (i, spec) in specs.iter().enumerate() {
+                if pruned[i] {
+                    // memory-pruned: never scheduled, no bound needed
+                    continue;
+                }
                 // optimizer candidates were already bounded during table
                 // ranking — identical inputs, identical number
                 bounds[i] = match space.seed_bounds[i] {
@@ -958,11 +1101,15 @@ impl<'a> SearchEngine<'a> {
                             schedule: specs[i].schedule,
                             placement: specs[i].placement,
                             table: specs[i].table,
+                            recompute: specs[i].recompute,
+                            zero_stage: specs[i].zero_stage,
                             throughput: 0.0,
                             scenario_throughput: 0.0,
                             reachable: true,
                             pruned: true,
                             bound_throughput: bounds[i],
+                            peak_bytes: peak_of[i],
+                            fits: true,
                         });
                         if epoch <= 1 {
                             stats.bound_pruned += 1;
@@ -1037,6 +1184,7 @@ impl<'a> SearchEngine<'a> {
         // nor evaluated; count only what actually ran (identical to
         // `n - pruned` when the token never fired)
         stats.evaluated = candidates.iter().filter(|c| c.is_some()).count()
+            - stats.memory_pruned
             - stats.bound_pruned
             - stats.epoch_repruned;
 
@@ -1046,8 +1194,23 @@ impl<'a> SearchEngine<'a> {
         // interleaving and of other sweeps sharing the cache
         let event_uses = log.into_uses(self.cfg.profile_iters);
         let cache_stats = stats_against(&event_uses, &self.prior);
-        stats.gpu_seconds_avoided =
-            self.gpu_seconds_avoided(specs, tables, &pruned, &event_uses);
+        // gpu-seconds-avoided attribution: the memory stage sits at the
+        // head of the pipeline, so events shared between a memory-pruned
+        // and a bound-pruned candidate are credited to the memory stage;
+        // the total over both stages is identical to the pre-memory
+        // single-pass accounting.
+        let mut counted: HashSet<String> =
+            event_uses.iter().map(|u| u.key.clone()).collect();
+        counted.extend(self.prior.iter().cloned());
+        stats.memory_gpu_seconds_avoided =
+            self.gpu_seconds_avoided(specs, tables, &memory_pruned, &mut counted);
+        let bound_pruned_mask: Vec<bool> = pruned
+            .iter()
+            .zip(&memory_pruned)
+            .map(|(&p, &m)| p && !m)
+            .collect();
+        stats.gpu_seconds_avoided = stats.memory_gpu_seconds_avoided
+            + self.gpu_seconds_avoided(specs, tables, &bound_pruned_mask, &mut counted);
         let profile = if self.cfg.use_cache {
             ProfileReport {
                 gpu_seconds: cache_stats.gpu_seconds,
@@ -1081,11 +1244,15 @@ impl<'a> SearchEngine<'a> {
                         schedule: specs[i].schedule,
                         placement: specs[i].placement,
                         table: specs[i].table,
+                        recompute: specs[i].recompute,
+                        zero_stage: specs[i].zero_stage,
                         throughput: 0.0,
                         scenario_throughput: 0.0,
                         reachable: false,
                         pruned: false,
                         bound_throughput: bounds[i],
+                        peak_bytes: peak_of[i],
+                        fits: true,
                     }
                 })
             })
@@ -1124,36 +1291,40 @@ impl<'a> SearchEngine<'a> {
     /// Requires the cache path's [`LookupLog`] to know what the sweep
     /// already measured, so a cache-off sweep reports 0 (that mode exists
     /// only as the legacy per-candidate re-profiling baseline). Pruned
-    /// candidates always have a positive bound, so their partitions are
-    /// valid and deployable by construction — only event *interning* runs
-    /// here, no simulation.
+    /// candidates are always valid specs (bound-pruned ones carry a
+    /// positive bound; memory-pruned ones were assessed, which only
+    /// happens to valid specs), so their partitions are deployable by
+    /// construction — only event *interning* runs here, no simulation.
+    ///
+    /// `counted` carries the already-paid-for descriptors across calls:
+    /// the sweep's own measurements plus the prior (a warm snapshot's
+    /// keys) on entry — pruning avoids nothing for events a hit would
+    /// have served — and grows with each selected candidate's events, so
+    /// calling once per pipeline stage attributes every shared event to
+    /// the earliest stage.
     fn gpu_seconds_avoided(
         &self,
         specs: &[CandidateSpec],
         tables: &[Vec<usize>],
-        pruned: &[bool],
-        event_uses: &[EventUse],
+        select: &[bool],
+        counted: &mut HashSet<String>,
     ) -> f64 {
-        if !self.cfg.use_cache || !pruned.iter().any(|&p| p) {
+        if !self.cfg.use_cache || !select.iter().any(|&p| p) {
             return 0.0;
         }
-        // already paid for: this sweep's own measurements AND the prior
-        // (a warm snapshot's keys) — pruning avoids nothing for events a
-        // hit would have served, mirroring the cache block's accounting
-        let mut counted: HashSet<String> =
-            event_uses.iter().map(|u| u.key.clone()).collect();
-        counted.extend(self.prior.iter().cloned());
         let mut avoided = 0.0;
         for (i, spec) in specs.iter().enumerate() {
-            if !pruned[i] {
+            if !select[i] {
                 continue;
             }
             let cluster = self.cluster_for(spec, tables);
-            let part = partition(
+            let part = partition_opts(
                 self.model,
                 &spec.strategy,
                 &cluster,
                 spec.micro_batch_size,
+                spec.recompute,
+                spec.zero_stage,
             );
             let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
             let mut db = EventDb::new();
@@ -1371,6 +1542,109 @@ mod tests {
             .sweep();
         assert!(nominal.robustness.is_none());
         assert!(nominal.candidates.iter().all(|c| c.scenario_throughput == 0.0));
+    }
+
+    #[test]
+    fn memory_stage_prunes_infeasible_candidates_for_free() {
+        let model = zoo::bert_large();
+        // ~3 GB budget: dp-heavy replicas (~5.6 GB of fp32 state) OOM,
+        // sharded candidates (~1.4 GB) fit
+        let cap = 3_000_000_000u64;
+        let cluster = ClusterSpec::a40_cluster(2, 2).with_uniform_capacity(cap);
+        let cost = CostModel::default();
+        let rep = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true)).sweep();
+        assert!(rep.pruning.memory_pruned >= 1, "{:?}", rep.pruning);
+        let oom: Vec<_> = rep.candidates.iter().filter(|c| !c.fits).collect();
+        assert_eq!(oom.len(), rep.pruning.memory_pruned);
+        for c in &oom {
+            assert!(!c.reachable && c.pruned, "{c:?}");
+            assert_eq!(c.throughput, 0.0);
+            assert!(c.peak_bytes > cap, "{c:?}");
+        }
+        let best = rep.best().expect("sharded candidates fit");
+        assert!(best.fits && best.peak_bytes > 0 && best.peak_bytes <= cap);
+        // pruning was free and is accounted
+        assert!(rep.pruning.memory_gpu_seconds_avoided > 0.0);
+        assert!(
+            rep.pruning.gpu_seconds_avoided >= rep.pruning.memory_gpu_seconds_avoided
+        );
+        assert_eq!(
+            rep.pruning.generated,
+            rep.pruning.memory_pruned
+                + rep.pruning.bound_pruned
+                + rep.pruning.epoch_repruned
+                + rep.pruning.evaluated
+        );
+        // bit-identity across worker counts with the memory stage active
+        let rep4 = SearchEngine::new(&model, &cluster, &cost, engine_cfg(4, false, true)).sweep();
+        assert_eq!(rep.candidates, rep4.candidates);
+        assert_eq!(rep.pruning, rep4.pruning);
+    }
+
+    #[test]
+    fn fully_oom_space_ranks_nothing() {
+        let model = zoo::bert_large();
+        // one byte of capacity: nothing fits anywhere
+        let cluster = ClusterSpec::a40_cluster(2, 2).with_uniform_capacity(1);
+        let cost = CostModel::default();
+        let rep = SearchEngine::new(&model, &cluster, &cost, engine_cfg(1, false, true)).sweep();
+        assert_eq!(rep.pruning.memory_pruned, rep.candidates.len());
+        assert_eq!(rep.pruning.evaluated, 0);
+        assert!(rep.best().is_none(), "a fully-OOM space has no winner");
+        assert!(rep.second_best().is_none());
+        assert!(rep.worst().is_none());
+        assert!(rep.speedup().is_none());
+        assert_eq!(rep.evaluated_count(), 0);
+        // nothing was profiled: the whole space was pruned for free
+        assert_eq!(rep.profile.gpu_seconds, 0.0);
+        assert!(rep.event_uses.is_empty());
+        for c in &rep.candidates {
+            assert!(!c.fits && !c.reachable && c.pruned);
+            assert!(c.peak_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn memory_axes_change_nothing_until_capacities_bind() {
+        // recompute/zero points are real sweep points: the axis-off
+        // prefix keeps its values, recompute never beats its own baseline
+        // on throughput (it strictly adds backward FLOPs), and zero-1
+        // strictly cuts optimizer residency on dp>1 points
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(2, 2);
+        let cost = CostModel::default();
+        let cfg = SweepConfig {
+            recompute_axis: true,
+            zero_axis: true,
+            threads: 1,
+            ..SweepConfig::default()
+        };
+        let rep = SearchEngine::new(&model, &cluster, &cost, cfg).sweep();
+        assert!(rep.candidates.len() > 6);
+        for c in rep.candidates.iter().filter(|c| c.evaluated()) {
+            assert!(c.fits && c.peak_bytes > 0, "{c:?}");
+            if c.recompute == Recompute::Full {
+                let base = rep
+                    .candidates
+                    .iter()
+                    .find(|b| {
+                        b.strategy == c.strategy
+                            && b.micro_batch_size == c.micro_batch_size
+                            && b.schedule == c.schedule
+                            && b.zero_stage == c.zero_stage
+                            && b.recompute == Recompute::None
+                    })
+                    .expect("baseline point exists");
+                assert!(
+                    c.throughput <= base.throughput,
+                    "recompute must not speed up {}: {} > {}",
+                    c.strategy,
+                    c.throughput,
+                    base.throughput
+                );
+                assert!(c.peak_bytes < base.peak_bytes, "{}", c.strategy);
+            }
+        }
     }
 
     #[test]

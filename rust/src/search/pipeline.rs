@@ -48,6 +48,7 @@ use std::sync::Arc;
 use crate::baseline::analytical::analytical_batch_time_us;
 use crate::cluster::{ClusterSpec, Placement, PlacementPolicy};
 use crate::cost::CostModel;
+use crate::memory::Recompute;
 use crate::model::ModelSpec;
 use crate::partition::partition;
 use crate::schedule::SchedKind;
@@ -117,6 +118,12 @@ impl CancelToken {
 pub struct PruneStats {
     /// Candidates the sources generated (= `SweepReport::candidates` len).
     pub generated: usize,
+    /// Pruned by the memory-feasibility stage at the head of the pipeline
+    /// (ISSUE 9): some rank's peak residency exceeds its SKU's declared
+    /// `capacity_bytes`. Free — no profiling, no simulation — and
+    /// independent of `SweepConfig::prune` (feasibility is a hard
+    /// constraint, not a performance heuristic).
+    pub memory_pruned: usize,
     /// Pruned by the initial incumbent (the analytically-best candidate,
     /// evaluated first).
     pub bound_pruned: usize,
@@ -129,8 +136,13 @@ pub struct PruneStats {
     /// deterministic noise-free estimate (the profiler's cost laws, never
     /// an actual measurement) of every event only pruned candidates
     /// reference, each counted once like the cache dedup. 0 on cache-off
-    /// sweeps, whose evaluated event set is untracked.
+    /// sweeps, whose evaluated event set is untracked. Includes
+    /// `memory_gpu_seconds_avoided`.
     pub gpu_seconds_avoided: f64,
+    /// The memory stage's share of `gpu_seconds_avoided`: events shared
+    /// between a memory-pruned and a bound-pruned candidate are credited
+    /// here (the memory stage runs first).
+    pub memory_gpu_seconds_avoided: f64,
 }
 
 /// The sweep's candidate space: index-addressed specs plus the placement
@@ -176,12 +188,10 @@ fn strategy_points(cluster: &ClusterSpec, cfg: &SweepConfig) -> Vec<CandidateSpe
                 // only the Naive-labeled copy
                 if per_replica % mbs == 0 && !(cfg.schedule_axis && mbs == per_replica) {
                     specs.push(CandidateSpec {
-                        strategy: s,
                         micro_batch_size: mbs,
                         micro_batches: per_replica / mbs,
                         schedule,
-                        placement: PlacementPolicy::Cluster,
-                        table: NO_TABLE,
+                        ..base
                     });
                 }
             }
@@ -192,26 +202,65 @@ fn strategy_points(cluster: &ClusterSpec, cfg: &SweepConfig) -> Vec<CandidateSpe
         // the schedule axis only applies when per_replica > 1
         if cfg.schedule_axis && per_replica > 1 {
             specs.push(CandidateSpec {
-                strategy: s,
                 micro_batch_size: 1,
                 micro_batches: per_replica,
                 schedule: SchedKind::GPipe,
-                placement: PlacementPolicy::Cluster,
-                table: NO_TABLE,
+                ..base
             });
             push_mb_grid(&mut specs, SchedKind::GPipe);
             // naive: the whole replica batch as one micro-batch
             specs.push(CandidateSpec {
-                strategy: s,
                 micro_batch_size: per_replica,
                 micro_batches: 1,
                 schedule: SchedKind::Naive,
-                placement: PlacementPolicy::Cluster,
-                table: NO_TABLE,
+                ..base
             });
         }
     }
     specs
+}
+
+/// Source stage 2b: the memory axes — each point replicated across the
+/// enabled recompute/ZeRO grids, point-major with the `(none, 0)`
+/// baseline first, so axis-off sweeps are order-preserved sub-sequences.
+/// Degenerate variants are skipped: the `micro_batch_size == 0` sentinel
+/// is unreachable under every axis value, and `zero_stage: 1` with
+/// `dp == 1` simulates and prices bit-identically to stage 0 (nothing to
+/// shard, no extra gather), so only dp>1 points grow ZeRO variants.
+fn replicate_over_memory_axes(
+    specs: Vec<CandidateSpec>,
+    cfg: &SweepConfig,
+) -> Vec<CandidateSpec> {
+    if !cfg.recompute_axis && !cfg.zero_axis {
+        return specs;
+    }
+    let mut out = Vec::with_capacity(specs.len() * 4);
+    for base in specs {
+        out.push(base);
+        if base.micro_batch_size == 0 {
+            continue;
+        }
+        if cfg.recompute_axis {
+            out.push(CandidateSpec {
+                recompute: Recompute::Full,
+                ..base
+            });
+        }
+        if cfg.zero_axis && base.strategy.dp > 1 {
+            out.push(CandidateSpec {
+                zero_stage: 1,
+                ..base
+            });
+            if cfg.recompute_axis {
+                out.push(CandidateSpec {
+                    recompute: Recompute::Full,
+                    zero_stage: 1,
+                    ..base
+                });
+            }
+        }
+    }
+    out
 }
 
 /// Source stage 3: the named-placement axis — each point replicated
@@ -229,11 +278,15 @@ fn replicate_over_placements(specs: Vec<CandidateSpec>) -> Vec<CandidateSpec> {
 }
 
 /// Compose the full candidate space for one sweep. Order: the
-/// strategy/schedule/micro-batch points (× the named-placement axis when
-/// on), then the placement optimizer's `Placement::Table` candidates —
-/// per strategy in enumeration order, bound-descending within a strategy.
+/// strategy/schedule/micro-batch points (× the memory axes when on, ×
+/// the named-placement axis when on), then the placement optimizer's
+/// `Placement::Table` candidates — per strategy in enumeration order,
+/// bound-descending within a strategy. The optimizer searches placements
+/// at the `(recompute: none, zero_stage: 0)` baseline only: its table
+/// ranking is memory-point-independent in relative order, and the named
+/// axes already cover the cross products.
 pub fn build_space(model: &ModelSpec, cluster: &ClusterSpec, cfg: &SweepConfig) -> CandidateSpace {
-    let mut specs = strategy_points(cluster, cfg);
+    let mut specs = replicate_over_memory_axes(strategy_points(cluster, cfg), cfg);
     // named axis and optimizer are both no-ops on homogeneous clusters,
     // where every placement prices identically
     if cfg.placement_axis && cluster.is_heterogeneous() {
@@ -958,5 +1011,49 @@ mod tests {
         // homogeneous clusters skip the optimizer entirely
         let h = build_space(&model, &ClusterSpec::a40_cluster(2, 4), &cfg);
         assert!(h.tables.is_empty());
+    }
+
+    #[test]
+    fn memory_axes_expand_points_defaults_first() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::a40_cluster(4, 4);
+        let base = build_space(&model, &cluster, &SweepConfig::default()).specs;
+        let cfg = SweepConfig {
+            recompute_axis: true,
+            zero_axis: true,
+            ..SweepConfig::default()
+        };
+        let grown = build_space(&model, &cluster, &cfg).specs;
+        assert!(grown.len() > base.len());
+        // axis-off points survive, in order, as the (none, 0) sub-sequence
+        let defaults: Vec<&CandidateSpec> = grown
+            .iter()
+            .filter(|s| s.recompute == Recompute::None && s.zero_stage == 0)
+            .collect();
+        assert_eq!(defaults.len(), base.len());
+        for (a, b) in defaults.iter().zip(&base) {
+            assert_eq!(**a, *b);
+        }
+        // ZeRO variants only where there is a DP group to shard across
+        for s in &grown {
+            if s.zero_stage == 1 {
+                assert!(s.strategy.dp > 1, "{s:?}");
+            }
+        }
+        assert!(grown
+            .iter()
+            .any(|s| s.recompute == Recompute::Full && s.zero_stage == 1));
+        // single-axis runs expand too, without the cross product
+        let rc_only = build_space(
+            &model,
+            &cluster,
+            &SweepConfig {
+                recompute_axis: true,
+                ..SweepConfig::default()
+            },
+        )
+        .specs;
+        assert!(rc_only.len() > base.len());
+        assert!(rc_only.iter().all(|s| s.zero_stage == 0));
     }
 }

@@ -1078,6 +1078,8 @@ fn writer_loop(
                 m.cache_misses_total.add(stats.misses as u64);
                 m.cache_gpu_seconds.add(stats.gpu_seconds);
                 m.pruning_generated_total.add(report.pruning.generated as u64);
+                m.pruning_memory_pruned_total
+                    .add(report.pruning.memory_pruned as u64);
                 m.pruning_bound_pruned_total
                     .add(report.pruning.bound_pruned as u64);
                 m.pruning_epoch_repruned_total

@@ -19,6 +19,7 @@
 //!            "widened": false, "micro_batch_axis": false,
 //!            "schedule_axis": false, "placement_axis": false,
 //!            "placement_opt": false, "beam": 4,
+//!            "recompute_axis": false, "zero_axis": false, "memory": false,
 //!            "prune": false, "prune_epochs": 1,
 //!            "scenario": {"stragglers": [{"device": 0, "factor": 1.5}]}},
 //!  "budget": {"max_candidates": 100, "deadline_ms": 60000},
@@ -42,6 +43,13 @@
 //! presence adds per-candidate `scenario_throughput` and a `robustness`
 //! result block, and an omitted or empty scenario leaves the response
 //! byte-identical to a pre-scenario build.
+//! `sweep.recompute_axis` / `sweep.zero_axis` / `sweep.memory` opt into
+//! per-rank memory accounting (ISSUE 9): candidates gain
+//! `peak_bytes`/`fits`/`recompute`/`zero_stage` fields, infeasible points
+//! come back as `reason: "oom"` placeholders, and the `pruning` block
+//! gains `memory_pruned`. A preset cluster can cap every SKU with
+//! `capacity_bytes`; with no capacity and no memory flag the response is
+//! byte-identical to a pre-memory build.
 //! `timing: true` opts into wall-clock fields — by default responses carry
 //! only deterministic data, so equal requests produce byte-equal response
 //! lines.
@@ -220,6 +228,17 @@ pub fn cluster_from_json(j: &Json) -> anyhow::Result<ClusterSpec> {
             cluster.placement = Placement::from_json(p)?;
             cluster.validate()?;
         }
+        // uniform training-state budget for every SKU of the preset —
+        // the shorthand's way to opt into memory-feasibility pruning
+        // (full cluster objects set per-device `capacity_bytes` instead)
+        if let Some(v) = j.get("capacity_bytes") {
+            let f = v.as_f64().unwrap_or(-1.0);
+            anyhow::ensure!(
+                f > 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64,
+                "capacity_bytes must be a positive integer byte count"
+            );
+            cluster = cluster.with_uniform_capacity(f as u64);
+        }
         return Ok(cluster);
     }
     ClusterSpec::from_json(j)
@@ -289,7 +308,8 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
             "global_batch" | "jitter_sigma" | "profile_iters" | "threads" | "prune_margin"
             | "max_candidates" | "prune_epochs" | "beam" => v.as_f64().is_some(),
             "widened" | "micro_batch_axis" | "schedule_axis" | "placement_axis"
-            | "placement_opt" | "prune" | "use_cache" | "trace" => v.as_bool().is_some(),
+            | "placement_opt" | "recompute_axis" | "zero_axis" | "memory" | "prune"
+            | "use_cache" | "trace" => v.as_bool().is_some(),
             // seeds travel as numbers or string-wrapped u64s
             "profile_seed" => matches!(v, Json::Num(_)) || v.as_str().is_some(),
             // unhappy-path scenario: its own strict parser rejects
@@ -298,8 +318,8 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
             other => anyhow::bail!(
                 "unknown sweep field '{other}' (global_batch|jitter_sigma|profile_iters|\
                  profile_seed|threads|widened|micro_batch_axis|schedule_axis|\
-                 placement_axis|placement_opt|beam|prune|prune_margin|prune_epochs|\
-                 use_cache|max_candidates|scenario|trace)"
+                 placement_axis|placement_opt|recompute_axis|zero_axis|memory|beam|\
+                 prune|prune_margin|prune_epochs|use_cache|max_candidates|scenario|trace)"
             ),
         };
         anyhow::ensure!(ok, "sweep field '{k}' has the wrong type");
@@ -343,6 +363,15 @@ fn sweep_config_from_json(j: Option<&Json>) -> anyhow::Result<SweepConfig> {
     }
     if let Some(v) = j.get("placement_opt").and_then(Json::as_bool) {
         cfg.placement_opt = v;
+    }
+    if let Some(v) = j.get("recompute_axis").and_then(Json::as_bool) {
+        cfg.recompute_axis = v;
+    }
+    if let Some(v) = j.get("zero_axis").and_then(Json::as_bool) {
+        cfg.zero_axis = v;
+    }
+    if let Some(v) = j.get("memory").and_then(Json::as_bool) {
+        cfg.memory = v;
     }
     if let Some(v) = j.get("beam").and_then(Json::as_usize) {
         anyhow::ensure!(v >= 1, "beam must be >= 1");
@@ -653,6 +682,13 @@ pub fn sweep_response(
             .get(idx as usize)
             .map(|t| Json::Arr(t.iter().map(|&d| Json::num(d as f64)).collect()))
     };
+    // memory accounting ran iff some candidate carries a peak (every
+    // valid candidate does once the stage runs — weights are never 0) or
+    // the stage pruned something; derived from the report itself so the
+    // gate is deterministic and needs no side-channel. Off ⇒ responses
+    // stay byte-identical to pre-memory builds.
+    let memory = report.pruning.memory_pruned > 0
+        || report.candidates.iter().any(|c| c.peak_bytes > 0);
     let candidates: Vec<Json> = report
         .candidates
         .iter()
@@ -671,6 +707,16 @@ pub fn sweep_response(
             if report.robustness.is_some() {
                 fields.push(("scenario_throughput", Json::num(c.scenario_throughput)));
             }
+            if memory {
+                fields.push(("recompute", Json::str(c.recompute.name())));
+                fields.push(("zero_stage", Json::num(c.zero_stage as f64)));
+                fields.push(("peak_bytes", Json::num(c.peak_bytes as f64)));
+                fields.push(("fits", Json::Bool(c.fits)));
+                if !c.fits {
+                    // the memory stage's free placeholder verdict
+                    fields.push(("reason", Json::str("oom")));
+                }
+            }
             if let Some(t) = table_json(c.table) {
                 fields.push(("table", t));
             }
@@ -688,22 +734,35 @@ pub fn sweep_response(
         ("pruned", Json::num(report.pruned_count() as f64)),
         (
             "pruning",
-            Json::obj(vec![
-                ("generated", Json::num(report.pruning.generated as f64)),
-                (
-                    "bound_pruned",
-                    Json::num(report.pruning.bound_pruned as f64),
-                ),
-                (
-                    "epoch_repruned",
-                    Json::num(report.pruning.epoch_repruned as f64),
-                ),
-                ("evaluated", Json::num(report.pruning.evaluated as f64)),
-                (
-                    "gpu_seconds_avoided",
-                    Json::num(report.pruning.gpu_seconds_avoided),
-                ),
-            ]),
+            Json::obj({
+                let mut fields = vec![
+                    ("generated", Json::num(report.pruning.generated as f64)),
+                    (
+                        "bound_pruned",
+                        Json::num(report.pruning.bound_pruned as f64),
+                    ),
+                    (
+                        "epoch_repruned",
+                        Json::num(report.pruning.epoch_repruned as f64),
+                    ),
+                    ("evaluated", Json::num(report.pruning.evaluated as f64)),
+                    (
+                        "gpu_seconds_avoided",
+                        Json::num(report.pruning.gpu_seconds_avoided),
+                    ),
+                ];
+                if memory {
+                    fields.push((
+                        "memory_pruned",
+                        Json::num(report.pruning.memory_pruned as f64),
+                    ));
+                    fields.push((
+                        "memory_gpu_seconds_avoided",
+                        Json::num(report.pruning.memory_gpu_seconds_avoided),
+                    ));
+                }
+                fields
+            }),
         ),
         ("cache", cache_stats_json(cache)),
     ];
@@ -714,6 +773,9 @@ pub fn sweep_response(
             ("placement", Json::str(b.placement.name())),
             ("throughput", Json::num(b.throughput)),
         ];
+        if memory {
+            fields.push(("peak_bytes", Json::num(b.peak_bytes as f64)));
+        }
         if let Some(t) = table_json(b.table) {
             fields.push(("table", t));
         }
@@ -995,6 +1057,46 @@ mod tests {
             );
             let (_, e) = parse_line(&line).unwrap_err();
             assert_eq!(e.kind, ErrorKind::BadRequest, "{scn}");
+        }
+    }
+
+    #[test]
+    fn memory_sweep_keys_parse_strictly() {
+        let line = r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"recompute_axis":true,"zero_axis":true,"memory":true}}"#;
+        match parse_line(line).unwrap() {
+            Request::Sweep(req) => {
+                assert!(req.sweep.recompute_axis);
+                assert!(req.sweep.zero_axis);
+                assert!(req.sweep.memory);
+            }
+            other => panic!("expected sweep, got {other:?}"),
+        }
+        // the axes are booleans like every other axis flag
+        for body in [
+            r#""sweep":{"recompute_axis":1}"#,
+            r#""sweep":{"zero_axis":"yes"}"#,
+            r#""sweep":{"memory":0}"#,
+        ] {
+            let line =
+                format!(r#"{{"model":"bert-large","cluster":{{"preset":"a40"}},{body}}}"#);
+            let (_, e) = parse_line(&line).unwrap_err();
+            assert_eq!(e.kind, ErrorKind::BadRequest, "{body}");
+        }
+    }
+
+    #[test]
+    fn preset_capacity_bytes_caps_every_sku() {
+        let c = cluster_from_json(
+            &Json::parse(r#"{"preset":"a40","nodes":2,"gpus_per_node":4,"capacity_bytes":3000000000}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(c.has_capacity());
+        // mistyped capacities are rejected, never silently cast
+        for cap in ["\"48GiB\"", "0", "-5", "1.5"] {
+            let j = Json::parse(&format!(r#"{{"preset":"a40","capacity_bytes":{cap}}}"#))
+                .unwrap();
+            assert!(cluster_from_json(&j).is_err(), "{cap}");
         }
     }
 

@@ -157,6 +157,7 @@ pub struct ServiceMetrics {
     pub cache_misses_total: Counter,
     pub cache_gpu_seconds: FloatCounter,
     pub pruning_generated_total: Counter,
+    pub pruning_memory_pruned_total: Counter,
     pub pruning_bound_pruned_total: Counter,
     pub pruning_epoch_repruned_total: Counter,
     pub pruning_evaluated_total: Counter,
@@ -224,6 +225,10 @@ impl ServiceMetrics {
             (
                 "pruning_generated_total",
                 self.pruning_generated_total.get() as f64,
+            ),
+            (
+                "pruning_memory_pruned_total",
+                self.pruning_memory_pruned_total.get() as f64,
             ),
             (
                 "pruning_bound_pruned_total",

@@ -4,8 +4,9 @@
 //! `None` — recording is a no-op and no clock is ever read. Enabled, it
 //! captures named wall-clock spans relative to the admission instant:
 //! `queue` (admission → worker pickup), `sweep` (the whole engine run),
-//! the engine's pipeline stages (`source`, `bound`, `prune_epoch`,
-//! `evaluate` — one `evaluate` span per candidate batch), and `write`
+//! the engine's pipeline stages (`source`, `memory`, `bound`,
+//! `prune_epoch`, `evaluate` — one `evaluate` span per candidate
+//! batch), and `write`
 //! (response serialization; Chrome-trace files only, since a response
 //! cannot contain the span of its own serialization).
 //!
@@ -30,10 +31,11 @@ use crate::timeline::chrome;
 /// each of these against FORMATS.md. `write` only ever appears in
 /// Chrome-trace files: the response's `trace` block is serialized before
 /// the write span is recorded.
-pub const TRACE_PHASES: [&str; 7] = [
+pub const TRACE_PHASES: [&str; 8] = [
     "queue",
     "sweep",
     "source",
+    "memory",
     "bound",
     "prune_epoch",
     "evaluate",

@@ -9,8 +9,11 @@
 
 use std::collections::BTreeMap;
 
+use crate::cluster::ClusterSpec;
+use crate::memory::Recompute;
 use crate::metrics::StageKey;
-use crate::schedule::Phase;
+use crate::partition::Partition;
+use crate::schedule::{Phase, PipelineSchedule};
 use crate::timeline::{Span, SpanKind, Timeline};
 use crate::util::{stats, TimeUs};
 
@@ -154,10 +157,106 @@ pub fn bubble_ratio(t: &Timeline) -> f64 {
     idle / (bt * t.n_devices as f64)
 }
 
+/// In-flight activation high-water by prefix rescan: for every prefix of
+/// the stage's task list, count micro-batches whose forward has run but
+/// whose backward has not. A set-semantics reimplementation of
+/// [`PipelineSchedule::max_in_flight`]'s running counter.
+pub fn in_flight_by_rescan(sched: &PipelineSchedule, stage: usize) -> usize {
+    let tasks = &sched.stage_tasks[stage];
+    (0..=tasks.len())
+        .map(|i| {
+            let prefix = &tasks[..i];
+            (0..sched.micro_batches)
+                .filter(|&mb| {
+                    let fwd = prefix
+                        .iter()
+                        .any(|t| t.mb == mb && t.phase == Phase::Fwd);
+                    let bwd = prefix
+                        .iter()
+                        .any(|t| t.mb == mb && t.phase == Phase::Bwd);
+                    fwd && !bwd
+                })
+                .count()
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// One rank's peak residency by literal DESIGN.md §10 arithmetic, summed
+/// in u128 with no per-stage memoization — the memory model's executable
+/// specification. [`crate::memory::assess`] must agree byte-for-byte;
+/// `tests/memory_model.rs` asserts the differential.
+pub fn rank_peak_bytes(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    rank: usize,
+    recompute: Recompute,
+    zero_stage: u8,
+) -> u64 {
+    let stage = part.strategy.coords(rank).pp;
+    let params = part.stages[stage].params_per_rank as u128;
+    let mut total: u128 = 0;
+    total += params * 4; // weights, fp32
+    total += params * 4; // gradients, fp32
+    let opt = params * 8; // Adam moments
+    let dp = part.strategy.dp as u128;
+    total += if zero_stage >= 1 && dp > 1 {
+        opt.div_ceil(dp)
+    } else {
+        opt
+    };
+    let act_mb = part.micro_batch_size as u128 * part.seq as u128 * part.hidden as u128 * 4;
+    let resident = match recompute {
+        Recompute::None => part.stages[stage].layers.len() as u128,
+        Recompute::Full => 1,
+    };
+    total += act_mb * resident * in_flight_by_rescan(sched, stage) as u128;
+    total as u64
+}
+
+/// Fleet feasibility by full per-rank rescan: `(fits, oom_ranks)` against
+/// each rank's SKU capacity, ranks ascending.
+pub fn memory_feasible(
+    part: &Partition,
+    sched: &PipelineSchedule,
+    cluster: &ClusterSpec,
+    recompute: Recompute,
+    zero_stage: u8,
+) -> (bool, Vec<usize>) {
+    let mut oom = Vec::new();
+    for rank in 0..part.strategy.world_size() {
+        let bytes = rank_peak_bytes(part, sched, rank, recompute, zero_stage);
+        if let Some(cap) = cluster.capacity_of_kind(cluster.kind_of_rank(rank)) {
+            if bytes > cap {
+                oom.push(rank);
+            }
+        }
+    }
+    (oom.is_empty(), oom)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::timeline::Tag;
+
+    #[test]
+    fn in_flight_rescan_matches_the_running_counter() {
+        for pp in [1usize, 2, 4] {
+            for m in [1usize, 2, 4, 8] {
+                for sched in [crate::schedule::gpipe(pp, m), crate::schedule::dapple(pp, m)] {
+                    for s in 0..pp {
+                        assert_eq!(
+                            in_flight_by_rescan(&sched, s),
+                            sched.max_in_flight(s),
+                            "{} pp={pp} m={m} stage={s}",
+                            sched.name
+                        );
+                    }
+                }
+            }
+        }
+    }
 
     fn tl() -> Timeline {
         let mut t = Timeline::new(2);

@@ -316,6 +316,111 @@ fn search_placement_opt_prints_the_pruning_block_and_optimized_rows() {
 }
 
 #[test]
+fn search_with_capacity_prints_the_memory_block_and_oom_rows() {
+    let out = bin()
+        .args([
+            "search",
+            "--model",
+            "bert-large",
+            "--device",
+            "a40",
+            "--nodes",
+            "1",
+            "--gpus-per-node",
+            "4",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--capacity-gib",
+            "2.8",
+            "--recompute-axis",
+            "--zero-axis",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // infeasible rows are marked, the accounting block is printed, and a
+    // feasible winner still emerges
+    assert!(text.contains("oom (peak"), "{text}");
+    assert!(text.contains("memory:"), "{text}");
+    assert!(text.contains("memory-pruned"), "{text}");
+    assert!(text.contains("avoided by the memory stage"), "{text}");
+    assert!(text.contains("best "), "{text}");
+}
+
+#[test]
+fn search_where_nothing_fits_reports_no_winner_cleanly() {
+    let out = bin()
+        .args([
+            "search",
+            "--model",
+            "bert-large",
+            "--nodes",
+            "1",
+            "--gpus-per-node",
+            "4",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--capacity-gib",
+            "0.001",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        text.contains("no reachable candidate"),
+        "all-OOM space must rank nothing: {text}"
+    );
+    assert!(text.contains("oom (peak"), "{text}");
+}
+
+#[test]
+fn ask_forwards_the_memory_flags_to_the_service() {
+    let out = bin()
+        .args([
+            "ask",
+            "--model",
+            "bert-large",
+            "--device",
+            "a40",
+            "--nodes",
+            "1",
+            "--gpus-per-node",
+            "4",
+            "--global-batch",
+            "4",
+            "--profile-iters",
+            "1",
+            "--capacity-gib",
+            "2.8",
+            "--zero-axis",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let j = distsim::config::Json::parse(stdout.lines().next().unwrap()).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{stdout}");
+    let result = j.get("result").unwrap();
+    let pruning = result.get("pruning").unwrap();
+    assert!(
+        pruning
+            .get("memory_pruned")
+            .and_then(|v| v.as_usize())
+            .unwrap()
+            >= 1,
+        "{stdout}"
+    );
+    assert!(stdout.contains("\"reason\":\"oom\""), "{stdout}");
+    assert!(stdout.contains("zero_stage"), "{stdout}");
+}
+
+#[test]
 fn bad_strategy_rejected() {
     let out = bin()
         .args(["simulate", "--strategy", "9X"])

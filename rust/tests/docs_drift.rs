@@ -172,6 +172,46 @@ fn scenario_schema_is_documented() {
 }
 
 #[test]
+fn memory_model_schema_is_documented() {
+    // ISSUE 9 surface: the per-rank memory model's request fields, the
+    // per-candidate verdict fields, the oom placeholder, the pruning
+    // counters, the CLI flags and the metrics family must all be
+    // specified in docs/FORMATS.md
+    let doc = formats_md();
+    for word in [
+        "capacity_bytes",
+        "recompute_axis",
+        "zero_axis",
+        "`memory`",
+        "peak_bytes",
+        "`fits`",
+        "`oom`",
+        "recompute",
+        "zero_stage",
+        "memory_pruned",
+        "memory_gpu_seconds_avoided",
+        "pruning_memory_pruned_total",
+        "capacity-gib",
+        "recompute-axis",
+        "zero-axis",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // and the parser accepts exactly what the spec names
+    use distsim::service::protocol::parse_line;
+    let ok = r#"{"model":"bert-large","cluster":{"preset":"a40","capacity_bytes":3000000000},"sweep":{"recompute_axis":true,"zero_axis":true,"memory":true}}"#;
+    assert!(parse_line(ok).is_ok());
+    for bad in [
+        r#"{"model":"bert-large","cluster":{"preset":"a40","capacity_bytes":"48GiB"}}"#,
+        r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"recompute_axis":1}}"#,
+        r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"zero_axis":"yes"}}"#,
+        r#"{"model":"bert-large","cluster":{"preset":"a40"},"sweep":{"memory":0.5}}"#,
+    ] {
+        assert!(parse_line(bad).is_err(), "must reject: {bad}");
+    }
+}
+
+#[test]
 fn telemetry_surfaces_are_documented() {
     // ISSUE 8 surface: the `metrics` op's two exposition forms, every
     // metric family name, the trace block and its span vocabulary, the

@@ -1,0 +1,294 @@
+//! Property tests pinning the per-rank memory model (ISSUE 9): peak
+//! residency monotonicity along the strategy axes, the ZeRO-1 and
+//! recompute trade-offs, and feasibility-pruning soundness — every
+//! engine verdict checked against the naive rescan reference in
+//! `testutil::naive`.
+//!
+//! pp monotonicity only holds when pp divides the layer count (uneven
+//! splits concentrate layers on one stage), so every sampled pp here is
+//! a divisor of BERT-large's 24 layers.
+
+use distsim::cluster::ClusterSpec;
+use distsim::cost::CostModel;
+use distsim::memory::{self, Recompute};
+use distsim::model::zoo;
+use distsim::partition::partition_opts;
+use distsim::schedule::SchedKind;
+use distsim::search::{SearchEngine, SweepConfig};
+use distsim::strategy::Strategy;
+use distsim::testutil::{check, naive, pick};
+
+/// Valid BERT-large points on a 16-device fleet: mp divides 16 heads,
+/// pp divides 24 layers, world size <= 16.
+const STRATEGIES: [(usize, usize, usize); 10] = [
+    (1, 1, 1),
+    (1, 1, 2),
+    (2, 1, 1),
+    (1, 2, 1),
+    (2, 2, 2),
+    (1, 2, 4),
+    (4, 2, 2),
+    (2, 4, 2),
+    (1, 4, 4),
+    (2, 2, 4),
+];
+
+#[allow(clippy::too_many_arguments)]
+fn peak(
+    mp: usize,
+    pp: usize,
+    dp: usize,
+    mbs: usize,
+    micro_batches: usize,
+    sched: SchedKind,
+    rc: Recompute,
+    zero: u8,
+    cluster: &ClusterSpec,
+) -> u64 {
+    let model = zoo::bert_large();
+    let s = Strategy::new(mp, pp, dp);
+    let part = partition_opts(&model, &s, cluster, mbs, rc, zero);
+    let sch = sched.build(pp, micro_batches);
+    memory::assess(&part, &sch, cluster, rc, zero).peak_bytes
+}
+
+#[test]
+fn peak_bytes_monotone_in_mp_pp_and_mbs() {
+    let cluster = ClusterSpec::a40_cluster(4, 4);
+    check("memory-monotonicity", 64, |rng| {
+        let sched = *pick(rng, &[SchedKind::Dapple, SchedKind::GPipe]);
+        let m = *pick(rng, &[1usize, 2, 4, 8]);
+        let mbs = *pick(rng, &[1usize, 2, 4]);
+        let dp = *pick(rng, &[1usize, 2]);
+        let rc = *pick(rng, &[Recompute::None, Recompute::Full]);
+        let zero = rng.below(2) as u8;
+        // doubling mp at fixed (pp, dp): never more resident bytes
+        for pp in [1usize, 2] {
+            let p1 = peak(1, pp, dp, mbs, m, sched, rc, zero, &cluster);
+            let p2 = peak(2, pp, dp, mbs, m, sched, rc, zero, &cluster);
+            let p4 = peak(4, pp, dp, mbs, m, sched, rc, zero, &cluster);
+            assert!(
+                p4 <= p2 && p2 <= p1,
+                "mp not monotone: {p1} -> {p2} -> {p4} (pp={pp} dp={dp} mbs={mbs} m={m} {sched} {rc} z{zero})"
+            );
+        }
+        // deepening the pipeline over divisor pp at fixed (mp, dp)
+        for mp in [1usize, 2] {
+            let p1 = peak(mp, 1, dp, mbs, m, sched, rc, zero, &cluster);
+            let p2 = peak(mp, 2, dp, mbs, m, sched, rc, zero, &cluster);
+            let p4 = peak(mp, 4, dp, mbs, m, sched, rc, zero, &cluster);
+            assert!(
+                p4 <= p2 && p2 <= p1,
+                "pp not monotone: {p1} -> {p2} -> {p4} (mp={mp} dp={dp} mbs={mbs} m={m} {sched} {rc} z{zero})"
+            );
+        }
+        // growing the micro-batch at a fixed point: never fewer bytes
+        let (mp, pp, dp) = *pick(rng, &STRATEGIES);
+        let b1 = peak(mp, pp, dp, 1, m, sched, rc, zero, &cluster);
+        let b2 = peak(mp, pp, dp, 2, m, sched, rc, zero, &cluster);
+        let b4 = peak(mp, pp, dp, 4, m, sched, rc, zero, &cluster);
+        assert!(
+            b1 <= b2 && b2 <= b4,
+            "mbs not monotone: {b1} -> {b2} -> {b4} ({mp}M{pp}P{dp}D m={m} {sched} {rc} z{zero})"
+        );
+    });
+}
+
+#[test]
+fn zero_one_shrinks_optimizer_state_iff_dp_exceeds_one() {
+    let cluster = ClusterSpec::a40_cluster(4, 4);
+    let model = zoo::bert_large();
+    check("zero-stage", 48, |rng| {
+        let (mp, pp, dp) = *pick(rng, &STRATEGIES);
+        let mbs = *pick(rng, &[1usize, 2, 4]);
+        let m = *pick(rng, &[1usize, 2, 4]);
+        let s = Strategy::new(mp, pp, dp);
+        let sch = SchedKind::Dapple.build(pp, m);
+        for stage in 0..pp {
+            let base = {
+                let part = partition_opts(&model, &s, &cluster, mbs, Recompute::None, 0);
+                memory::stage_bytes(&part, &sch, stage, Recompute::None, 0)
+            };
+            let zero = {
+                let part = partition_opts(&model, &s, &cluster, mbs, Recompute::None, 1);
+                memory::stage_bytes(&part, &sch, stage, Recompute::None, 1)
+            };
+            // only the optimizer family moves, and only when dp > 1
+            assert_eq!(zero.weights, base.weights, "stage {stage}");
+            assert_eq!(zero.grads, base.grads, "stage {stage}");
+            assert_eq!(zero.activations, base.activations, "stage {stage}");
+            if dp > 1 {
+                assert!(
+                    zero.optimizer < base.optimizer,
+                    "{mp}M{pp}P{dp}D stage {stage}: ZeRO-1 must strictly shrink \
+                     optimizer state ({} !< {})",
+                    zero.optimizer,
+                    base.optimizer
+                );
+                assert_eq!(zero.optimizer, base.optimizer.div_ceil(dp as u64));
+            } else {
+                assert_eq!(zero.optimizer, base.optimizer, "dp=1 is a no-op");
+            }
+        }
+    });
+}
+
+#[test]
+fn recompute_full_strictly_shrinks_activations() {
+    let cluster = ClusterSpec::a40_cluster(4, 4);
+    let model = zoo::bert_large();
+    check("recompute-bytes", 48, |rng| {
+        let (mp, pp, dp) = *pick(rng, &STRATEGIES);
+        let mbs = *pick(rng, &[1usize, 2, 4]);
+        let m = *pick(rng, &[1usize, 2, 4]);
+        let s = Strategy::new(mp, pp, dp);
+        let sch = SchedKind::Dapple.build(pp, m);
+        let base_part = partition_opts(&model, &s, &cluster, mbs, Recompute::None, 0);
+        let rc_part = partition_opts(&model, &s, &cluster, mbs, Recompute::Full, 0);
+        for stage in 0..pp {
+            let base = memory::stage_bytes(&base_part, &sch, stage, Recompute::None, 0);
+            let rc = memory::stage_bytes(&rc_part, &sch, stage, Recompute::Full, 0);
+            // bert-large holds >= 6 layers per stage at pp <= 4, so the
+            // stage-boundary-only residency is a strict reduction
+            assert!(
+                rc.activations < base.activations,
+                "{mp}M{pp}P{dp}D stage {stage}: {} !< {}",
+                rc.activations,
+                base.activations
+            );
+            assert_eq!(rc.weights, base.weights);
+            assert_eq!(rc.grads, base.grads);
+            assert_eq!(rc.optimizer, base.optimizer);
+        }
+    });
+}
+
+#[test]
+fn recompute_full_never_beats_its_baseline_twin() {
+    // memory is the only thing recompute buys: the merged backward event
+    // carries the forward's flops and bytes on top of its own, and the
+    // deterministic roofline is monotone in both — so the full-recompute
+    // twin of any evaluated point can never be faster
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(2, 2);
+    let cost = CostModel::default();
+    let cfg = SweepConfig {
+        recompute_axis: true,
+        memory: true,
+        micro_batch_axis: true,
+        ..SweepConfig::default()
+    };
+    let report = SearchEngine::new(&model, &cluster, &cost, cfg).sweep();
+    let mut checked = 0usize;
+    for f in report
+        .candidates
+        .iter()
+        .filter(|c| c.recompute == Recompute::Full && c.evaluated())
+    {
+        let base = report
+            .candidates
+            .iter()
+            .find(|c| {
+                c.recompute == Recompute::None
+                    && c.zero_stage == f.zero_stage
+                    && c.strategy == f.strategy
+                    && c.micro_batch_size == f.micro_batch_size
+                    && c.micro_batches == f.micro_batches
+                    && c.schedule == f.schedule
+                    && c.placement == f.placement
+            })
+            .expect("every full point has a baseline twin");
+        assert!(
+            f.throughput <= base.throughput,
+            "{}: recompute sped up {} -> {}",
+            f.strategy,
+            base.throughput,
+            f.throughput
+        );
+        assert!(
+            f.peak_bytes < base.peak_bytes,
+            "{}: recompute must shrink the peak",
+            f.strategy
+        );
+        checked += 1;
+    }
+    assert!(checked > 0, "axis produced no evaluated full points");
+}
+
+#[test]
+fn assess_matches_the_naive_reference() {
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(4, 4);
+    check("memory-differential", 48, |rng| {
+        let (mp, pp, dp) = *pick(rng, &STRATEGIES);
+        let mbs = *pick(rng, &[1usize, 2, 4]);
+        let m = *pick(rng, &[1usize, 2, 4, 8]);
+        let sched = *pick(rng, &[SchedKind::Dapple, SchedKind::GPipe]);
+        let rc = *pick(rng, &[Recompute::None, Recompute::Full]);
+        let zero = rng.below(2) as u8;
+        let s = Strategy::new(mp, pp, dp);
+        let part = partition_opts(&model, &s, &cluster, mbs, rc, zero);
+        let sch = sched.build(pp, m);
+        let naive_peak = (0..s.world_size())
+            .map(|r| naive::rank_peak_bytes(&part, &sch, r, rc, zero))
+            .max()
+            .unwrap();
+        let rep = memory::assess(&part, &sch, &cluster, rc, zero);
+        assert_eq!(rep.peak_bytes, naive_peak, "{mp}M{pp}P{dp}D {sched} {rc} z{zero}");
+        // capacities straddling the peak, plus a random one below it:
+        // fits and the exact oom rank set must agree with the rescan
+        for cap in [naive_peak - 1, naive_peak, 1 + rng.below(naive_peak)] {
+            let capped = cluster.with_uniform_capacity(cap);
+            let rep = memory::assess(&part, &sch, &capped, rc, zero);
+            let (fits, oom) = naive::memory_feasible(&part, &sch, &capped, rc, zero);
+            assert_eq!(rep.fits, fits, "cap {cap}");
+            assert_eq!(rep.oom_ranks, oom, "cap {cap}");
+        }
+    });
+}
+
+#[test]
+fn engine_feasibility_verdicts_match_the_naive_reference() {
+    // the staged pipeline's oom placeholders, differentially: every
+    // candidate the memory stage priced must carry exactly the verdict
+    // the naive per-rank rescan reaches from the candidate's own fields
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(2, 2).with_uniform_capacity(3_000_000_000);
+    let cost = CostModel::default();
+    let cfg = SweepConfig {
+        micro_batch_axis: true,
+        recompute_axis: true,
+        zero_axis: true,
+        ..SweepConfig::default()
+    };
+    let report = SearchEngine::new(&model, &cluster, &cost, cfg).sweep();
+    assert!(report.pruning.memory_pruned > 0, "capacity must bind");
+    let mut priced = 0usize;
+    for c in report.candidates.iter().filter(|c| c.peak_bytes > 0) {
+        let part = partition_opts(
+            &model,
+            &c.strategy,
+            &cluster,
+            c.micro_batch_size,
+            c.recompute,
+            c.zero_stage,
+        );
+        let sch = c.schedule.build(c.strategy.pp, c.micro_batches);
+        let naive_peak = (0..c.strategy.world_size())
+            .map(|r| naive::rank_peak_bytes(&part, &sch, r, c.recompute, c.zero_stage))
+            .max()
+            .unwrap();
+        let (fits, _) = naive::memory_feasible(&part, &sch, &cluster, c.recompute, c.zero_stage);
+        assert_eq!(c.peak_bytes, naive_peak, "{}", c.strategy);
+        assert_eq!(c.fits, fits, "{}", c.strategy);
+        if !c.fits {
+            // oom placeholders are deterministic tombstones, never ranked
+            assert!(!c.reachable && c.pruned, "{}", c.strategy);
+            assert_eq!(c.throughput, 0.0, "{}", c.strategy);
+        }
+        priced += 1;
+    }
+    assert!(priced > 0, "memory stage priced nothing");
+    let best = report.best().expect("something fits under 3 GB");
+    assert!(best.fits && best.peak_bytes <= 3_000_000_000);
+}

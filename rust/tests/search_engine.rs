@@ -57,6 +57,35 @@ fn sweep_is_deterministic_with_pruning_and_widened_space() {
 }
 
 #[test]
+fn memory_constrained_sweep_is_deterministic_across_thread_counts() {
+    // capacity + both memory axes: the feasibility stage prunes, the
+    // survivors replicate over (recompute, zero) — and the deterministic
+    // payload must still be identical on 1, 2 and 8 worker threads
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::a40_cluster(2, 2).with_uniform_capacity(3_000_000_000);
+    let cost = CostModel::default();
+    let cfg = |threads| SweepConfig {
+        threads,
+        jitter_sigma: 0.02,
+        profile_iters: 2,
+        micro_batch_axis: true,
+        recompute_axis: true,
+        zero_axis: true,
+        ..SweepConfig::default()
+    };
+    let one = SearchEngine::new(&model, &cluster, &cost, cfg(1)).sweep();
+    assert!(one.pruning.memory_pruned > 0, "capacity must bind");
+    assert!(one.best().is_some(), "something must still fit");
+    for threads in [2, 8] {
+        let many = SearchEngine::new(&model, &cluster, &cost, cfg(threads)).sweep();
+        assert_eq!(one.candidates, many.candidates, "{threads} threads");
+        assert_eq!(one.profile, many.profile, "{threads} threads");
+        assert_eq!(one.cache, many.cache, "{threads} threads");
+        assert_eq!(one.pruning, many.pruning, "{threads} threads");
+    }
+}
+
+#[test]
 fn cache_dedups_profiling_across_candidates() {
     let cached = run_sweep(SweepConfig::default());
     let uncached = run_sweep(SweepConfig {

@@ -305,6 +305,137 @@ fn placement_opt_fields_are_strictly_validated() {
 }
 
 #[test]
+fn capacity_less_responses_carry_no_memory_vocabulary() {
+    // byte-identity with pre-memory builds: unless a capacity or a memory
+    // axis is in play, none of the memory fields may appear anywhere in
+    // the response stream
+    let (lines, _) = run_lines(&small_sweep("plain", 4), &opts_with_workers(2));
+    assert_eq!(lines.len(), 1);
+    assert_eq!(parse(&lines[0]).get("ok").and_then(Json::as_bool), Some(true));
+    for word in [
+        "peak_bytes",
+        "memory_pruned",
+        "memory_gpu_seconds_avoided",
+        "recompute",
+        "zero_stage",
+        "\"fits\"",
+        "\"oom\"",
+    ] {
+        assert!(
+            !lines[0].contains(word),
+            "capacity-less response leaked '{word}': {}",
+            lines[0]
+        );
+    }
+}
+
+/// A memory-constrained sweep: 3 GB cap on a 4-device A40 preset, with
+/// both memory axes enumerated.
+fn capped_sweep(id: &str) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4,"capacity_bytes":3000000000}},"sweep":{{"global_batch":4,"profile_iters":1,"recompute_axis":true,"zero_axis":true}}}}"#
+    )
+}
+
+#[test]
+fn memory_constrained_sweep_reports_oom_placeholders_and_a_feasible_best() {
+    let (lines, _) = run_lines(&capped_sweep("cap"), &opts_with_workers(2));
+    let j = parse(&lines[0]);
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+
+    // pruning identity now includes the memory stage at the head
+    let pruning = result_field(&j, "pruning");
+    let field = |k: &str| pruning.get(k).and_then(Json::as_f64).unwrap();
+    assert!(field("memory_pruned") >= 1.0, "3 GB must OOM something: {j}");
+    assert_eq!(
+        field("generated"),
+        field("memory_pruned")
+            + field("bound_pruned")
+            + field("epoch_repruned")
+            + field("evaluated")
+    );
+    assert!(field("memory_gpu_seconds_avoided") >= 0.0);
+    assert!(field("gpu_seconds_avoided") >= field("memory_gpu_seconds_avoided"));
+
+    // every oom placeholder is a deterministic tombstone
+    let cands = result_field(&j, "candidates").as_arr().unwrap();
+    let mut ooms = 0;
+    for c in cands {
+        let fits = c.get("fits").and_then(Json::as_bool).unwrap();
+        let peak = c.get("peak_bytes").and_then(Json::as_f64).unwrap();
+        assert!(c.get("recompute").and_then(Json::as_str).is_some());
+        assert!(c.get("zero_stage").and_then(Json::as_usize).is_some());
+        if !fits {
+            assert_eq!(c.get("reason").and_then(Json::as_str), Some("oom"), "{c}");
+            assert_eq!(c.get("reachable").and_then(Json::as_bool), Some(false));
+            assert_eq!(c.get("pruned").and_then(Json::as_bool), Some(true));
+            assert!(peak > 3e9, "{c}");
+            ooms += 1;
+        }
+    }
+    assert!(ooms >= 1, "{j}");
+    // and the winner actually fits
+    let best = result_field(&j, "best");
+    assert!(best.get("peak_bytes").and_then(Json::as_f64).unwrap() <= 3e9);
+
+    // byte-identity across worker counts, memory stage and axes on
+    for workers in [1, 4] {
+        let (again, _) = run_lines(&capped_sweep("cap"), &opts_with_workers(workers));
+        assert_eq!(lines, again, "{workers} workers diverged");
+    }
+}
+
+#[test]
+fn an_all_oom_space_ranks_nothing_but_answers_cleanly() {
+    // 1-byte capacity: every candidate is infeasible; the response is
+    // still ok:true, with no best/worst/speedup and zero evaluated
+    let line = r#"{"id":"void","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4,"capacity_bytes":1},"sweep":{"global_batch":4,"profile_iters":1}}"#;
+    let (lines, summary) = run_lines(line, &opts_with_workers(2));
+    let j = parse(&lines[0]);
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j}");
+    assert_eq!(summary.errors, 0);
+    let result = j.get("result").unwrap();
+    assert!(result.get("best").is_none(), "nothing fits: {j}");
+    assert!(result.get("worst").is_none());
+    assert!(result.get("speedup").is_none());
+    let pruning = result_field(&j, "pruning");
+    let cands = result_field(&j, "candidates").as_arr().unwrap();
+    assert_eq!(
+        pruning.get("memory_pruned").and_then(Json::as_usize),
+        Some(cands.len())
+    );
+    assert_eq!(pruning.get("evaluated").and_then(Json::as_usize), Some(0));
+    for c in cands {
+        assert_eq!(c.get("fits").and_then(Json::as_bool), Some(false), "{c}");
+        assert_eq!(c.get("reason").and_then(Json::as_str), Some("oom"));
+    }
+    // no profiling happened: the whole space was discarded for free
+    let cache = result_field(&j, "cache");
+    assert_eq!(cache.get("gpu_seconds").and_then(Json::as_f64), Some(0.0));
+}
+
+#[test]
+fn memory_fields_are_strictly_validated() {
+    for (body, cluster) in [
+        (r#""sweep":{"recompute_axis":1}"#, r#"{"preset":"a40"}"#),
+        (r#""sweep":{"zero_axis":"on"}"#, r#"{"preset":"a40"}"#),
+        (r#""sweep":{"memory":0}"#, r#"{"preset":"a40"}"#),
+        (
+            r#""sweep":{}"#,
+            r#"{"preset":"a40","capacity_bytes":"48GiB"}"#,
+        ),
+        (r#""sweep":{}"#, r#"{"preset":"a40","capacity_bytes":0}"#),
+        (r#""sweep":{}"#, r#"{"preset":"a40","capacity_bytes":1.5}"#),
+    ] {
+        let line = format!(r#"{{"model":"bert-large","cluster":{cluster},{body}}}"#);
+        let (lines, _) = run_lines(&line, &opts_with_workers(1));
+        let j = parse(&lines[0]);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{line}");
+        assert_eq!(error_kind(&j), "bad_request", "{line}");
+    }
+}
+
+#[test]
 fn save_interval_persists_snapshots_while_the_daemon_runs() {
     use std::io::{BufReader, Read};
     use std::sync::mpsc;

@@ -120,3 +120,32 @@ for field in '"reason":"oom"' '"memory_pruned"' '"peak_bytes"' '"best"'; do
     }
 done
 echo "memory smoke test passed"
+
+# plan smoke: two identical sweeps through one daemon session must ride
+# the compiled-plan cache — the second is a full plan hit — and answer
+# with byte-identical response lines (the DESIGN.md §11 contract).
+# --workers 1 keeps the compiles/hits accounting deterministic.
+PLAN_REQ='{"id":"plan-smoke","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":4,"profile_iters":1,"prune":true}}'
+PLAN_REQS="$PLAN_REQ
+$PLAN_REQ
+{\"id\":\"plan-stats\",\"op\":\"stats\"}"
+PLAN_OUT=$(printf '%s\n' "$PLAN_REQS" | ./target/release/distsim serve --stdio --workers 1 2>/dev/null)
+PLAN_LINES=$(printf '%s\n' "$PLAN_OUT" | grep -c '"id":"plan-smoke"')
+test "$PLAN_LINES" = 2 || {
+    echo "plan smoke: expected 2 sweep responses, got $PLAN_LINES: $PLAN_OUT" >&2
+    exit 1
+}
+FIRST=$(printf '%s\n' "$PLAN_OUT" | grep '"id":"plan-smoke"' | sed -n 1p)
+SECOND=$(printf '%s\n' "$PLAN_OUT" | grep '"id":"plan-smoke"' | sed -n 2p)
+test "$FIRST" = "$SECOND" || {
+    echo "plan smoke: plan-hit response not byte-identical to the compile response" >&2
+    echo "first:  $FIRST" >&2
+    echo "second: $SECOND" >&2
+    exit 1
+}
+STATS_LINE=$(printf '%s\n' "$PLAN_OUT" | grep '"id":"plan-stats"')
+printf '%s' "$STATS_LINE" | grep -q '"plans":{"compiles":1,"hits":1,"partial":0}' || {
+    echo "plan smoke: stats must report one compile and one full hit: $STATS_LINE" >&2
+    exit 1
+}
+echo "plan smoke test passed"

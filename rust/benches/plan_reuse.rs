@@ -1,0 +1,150 @@
+//! Bench: cold sweep vs a warm compiled-plan sweep (ISSUE 10) on a
+//! 64-rank mixed fleet.
+//!
+//! The cold path re-plans from scratch — candidate enumeration, memory
+//! verdicts, analytical bounds, event interning — on every sweep; the
+//! warm path compiles a [`SweepPlan`] once and re-launches it, paying
+//! only execution. Both use fresh `ProfileCache`s per rep so the delta
+//! is the planning phase, not profile-measurement sharing. The winners
+//! are asserted bit-equal (the DESIGN.md §11 byte-identity contract)
+//! and relaunching the plan on the identical request must be a full
+//! hit. Emits a machine-readable `BENCH_plan.json` line (see
+//! docs/FORMATS.md §3).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::Json;
+use distsim::cost::CostBook;
+use distsim::model::zoo;
+use distsim::search::{ProfileCache, SearchEngine, SweepConfig, SweepPlan, SweepReport};
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Canonical digest of the winning candidate (same recipe as the
+/// placement bench): bit-equal checksums mean bit-equal winners.
+fn best_checksum(rep: &SweepReport) -> String {
+    let mut s = String::new();
+    if let Some(b) = rep.best() {
+        s.push_str(&format!(
+            "{}/{}/{}/mbs{}x{}/tp{:016x}",
+            b.strategy.notation(),
+            b.schedule.name(),
+            b.placement.name(),
+            b.micro_batch_size,
+            b.micro_batches,
+            b.throughput.to_bits()
+        ));
+        if let Some(t) = rep.winning_table() {
+            s.push_str(&format!("/table{t:?}"));
+        }
+    }
+    format!("{:016x}", fnv1a64(s.as_bytes()))
+}
+
+fn main() {
+    let reps = 3;
+    let model = zoo::bert_large();
+    let cluster = ClusterSpec::mixed_a40_a10(8, 8);
+    let ranks = cluster.total_devices();
+    let book = CostBook::default();
+    let cfg = SweepConfig {
+        global_batch: 16,
+        profile_iters: 1,
+        threads: std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8),
+        placement_axis: true,
+        prune: true,
+        ..SweepConfig::default()
+    };
+
+    println!("# {ranks}-rank mixed fleet, cold vs warm compiled plan ({reps} reps)");
+
+    // cold: every rep re-plans from scratch
+    let mut cold_wall = f64::INFINITY;
+    let mut cold_checksum = String::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rep = SearchEngine::with_book(
+            &model,
+            &cluster,
+            book.clone(),
+            cfg.clone(),
+            Arc::new(ProfileCache::new()),
+        )
+        .sweep();
+        cold_wall = cold_wall.min(t0.elapsed().as_secs_f64());
+        cold_checksum = best_checksum(&rep);
+    }
+
+    // warm: compile once, every rep sweeps through the shared plan
+    let t0 = Instant::now();
+    let plan = Arc::new(SweepPlan::compile(&model, &cluster, &book, &cfg));
+    let compile_wall = t0.elapsed().as_secs_f64();
+    let mut warm_wall = f64::INFINITY;
+    let mut warm_checksum = String::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let rep = SearchEngine::with_book(
+            &model,
+            &cluster,
+            book.clone(),
+            cfg.clone(),
+            Arc::new(ProfileCache::new()),
+        )
+        .with_plan(plan.clone())
+        .sweep();
+        warm_wall = warm_wall.min(t0.elapsed().as_secs_f64());
+        warm_checksum = best_checksum(&rep);
+    }
+
+    let identical = cold_checksum == warm_checksum;
+    assert!(
+        identical,
+        "plan-cached sweep crowned a different winner than the cold sweep \
+         (cold {cold_checksum}, warm {warm_checksum})"
+    );
+    let (_, reuse) = plan.launch(&model, &cluster, &book, &cfg, None);
+    assert!(
+        reuse.full_hit(),
+        "relaunching the plan on the identical request must reuse every \
+         component: {reuse:?}"
+    );
+
+    let speedup = cold_wall / warm_wall;
+    println!(
+        "cold: {cold_wall:.3} s   warm: {warm_wall:.3} s   speedup {speedup:.2}x \
+         (one-time compile {compile_wall:.3} s, {} candidates, {} events, \
+         checksum {cold_checksum})",
+        plan.candidate_count(),
+        plan.event_count()
+    );
+
+    println!(
+        "BENCH_plan.json {}",
+        Json::obj(vec![
+            ("bench", Json::str("plan_reuse")),
+            ("ranks", Json::num(ranks as f64)),
+            ("model", Json::str("bert-large")),
+            ("candidates", Json::num(plan.candidate_count() as f64)),
+            ("events", Json::num(plan.event_count() as f64)),
+            ("cold_seconds", Json::num(cold_wall)),
+            ("warm_seconds", Json::num(warm_wall)),
+            ("speedup", Json::num(speedup)),
+            ("compile_seconds", Json::num(compile_wall)),
+            ("full_hit", Json::Bool(reuse.full_hit())),
+            ("best_checksum", Json::str(&cold_checksum)),
+            ("identical", Json::Bool(identical)),
+        ])
+    );
+}

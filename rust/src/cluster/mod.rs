@@ -529,6 +529,21 @@ impl ClusterSpec {
         c
     }
 
+    /// The same fleet with every explicit capacity cap removed. Capacity
+    /// gates only the per-rank memory stage — never the candidate space,
+    /// the analytical bounds or the event set — so the plan compiler
+    /// ([`crate::search::SweepPlan`]) fingerprints those components
+    /// against this capacity-stripped form, letting a capacity delta
+    /// invalidate nothing but the memory verdicts.
+    pub fn sans_capacity(&self) -> Self {
+        let mut c = self.clone();
+        c.device.capacity_bytes = None;
+        for k in &mut c.extra_kinds {
+            k.capacity_bytes = None;
+        }
+        c
+    }
+
     // -- placement --------------------------------------------------------
 
     /// The placement-equivalence class of a physical device slot:

@@ -118,7 +118,7 @@ USAGE:
                     [--no-cache] [--max-candidates N] [--cache-file F]
                     [--scenario-file scenario.json]
                     [--memory] [--recompute-axis] [--zero-axis]
-                    [--capacity-gib G]
+                    [--capacity-gib G] [--plan-cache]
                     # --placement-opt searches rank→device tables beyond
                     # the named placements; --prune-epochs N re-prunes
                     # against the incumbent every 1/N of the sweep;
@@ -128,7 +128,11 @@ USAGE:
                     # candidate; --recompute-axis / --zero-axis add
                     # activation-recompute and ZeRO-1 points to the sweep;
                     # --capacity-gib caps every device SKU so infeasible
-                    # candidates are pruned for free before profiling
+                    # candidates are pruned for free before profiling;
+                    # --plan-cache compiles the sweep plan (candidate
+                    # space, bounds, memory verdicts, event set) up front
+                    # and feeds the engine from it — identical output,
+                    # plus a plan accounting line (DESIGN.md §11)
   distsim serve     --stdio | --port N  [--workers W] [--cache-dir DIR]
                     [--save-interval SECS] [--max-queue N]
                     [--log-level error|warn|info|debug] [--trace-dir DIR]
@@ -148,7 +152,10 @@ USAGE:
                     # self-test client: runs the request in-process, or
                     # sends it to a running daemon with --connect;
                     # --scenario-file attaches an unhappy-path scenario
-                    # to the flag-built sweep request
+                    # to the flag-built sweep request; a multi-line
+                    # --file session shares one compiled-plan cache, so
+                    # repeated request shapes skip re-planning (the
+                    # trailing stats line, if any, reports the hits)
   distsim calibrate [--artifacts DIR] [--iters 5] [--out calibration.json]
   distsim exp       fig3|fig8|fig9|fig10|fig11|fig12|table2|table3|
                     ablate-allreduce|ablate-noise|ablate-hierarchy|ablate-schedule|all [--fast]
@@ -343,6 +350,25 @@ fn cmd_search(flags: &HashMap<String, String>) -> anyhow::Result<()> {
                 eprintln!("{}", distsim::service::cli_error_line(&e));
             }
         }
+    }
+    // --plan-cache: compile the sweep plan up front and feed the engine
+    // from it. Output is byte-identical to a plan-less run (the plan's
+    // components are exactly what the engine would recompute); a one-shot
+    // CLI run gains the accounting line below, while the daemon reuses
+    // plans across requests (DESIGN.md §11).
+    if flags.contains_key("plan-cache") {
+        let t0 = std::time::Instant::now();
+        let plan = std::sync::Arc::new(distsim::search::SweepPlan::compile(
+            &model, &cluster, &book, &cfg,
+        ));
+        println!(
+            "plan: compiled {} candidates, {} interned events in {:.1} ms (shape {:016x})",
+            plan.candidate_count(),
+            plan.event_count(),
+            t0.elapsed().as_secs_f64() * 1e3,
+            plan.shape()
+        );
+        engine = engine.with_plan(plan);
     }
     let report = engine.sweep();
 

@@ -187,7 +187,7 @@ pub fn stats_against(uses: &[EventUse], prior: &HashSet<String>) -> CacheStats {
 /// whose SKU identity is unknown.
 pub const SNAPSHOT_VERSION: usize = 2;
 
-fn fnv1a64(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf29ce484222325u64;
     for &b in bytes {
         h ^= b as u64;

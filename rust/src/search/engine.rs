@@ -54,6 +54,7 @@ use crate::telemetry::RequestTrace;
 
 use super::cache::{stats_against, CacheStats, EventUse, LookupLog, ProfileCache};
 use super::pipeline::{self, CancelToken, CandidateSpace, EpochPlan, PruneStats, NO_TABLE};
+use super::plan::SweepPlan;
 
 /// Sweep parameters. `Default` mirrors the seed's protocol (power-of-two
 /// grid, DistSim profiling seed 7777, cache on, no pruning).
@@ -545,6 +546,13 @@ pub struct SearchEngine<'a> {
     /// The candidate space, built once per engine (the optimizer's table
     /// enumeration and bound-ranking are not free — `space()` memoizes).
     space: OnceLock<CandidateSpace>,
+    /// Compiled plan feeding the staged pipeline
+    /// ([`SearchEngine::with_plan`]): candidate space, bound vector,
+    /// memory verdicts and interned event set come from the plan instead
+    /// of being re-derived. Every component is — by the plan's dependency
+    /// tagging — bit-identical to what this engine would recompute, so a
+    /// planned sweep's report is byte-identical to a plan-less one.
+    plan: Option<Arc<SweepPlan>>,
 }
 
 impl<'a> SearchEngine<'a> {
@@ -589,6 +597,7 @@ impl<'a> SearchEngine<'a> {
             cancel: CancelToken::default(),
             trace: RequestTrace::default(),
             space: OnceLock::new(),
+            plan: None,
         }
     }
 
@@ -602,7 +611,11 @@ impl<'a> SearchEngine<'a> {
     /// set one, or the optimizer's table resolved from `tables`. Profiled
     /// costs are placement-independent, so every placement shares the
     /// engine's cache (see [`super::cache::fingerprint`]).
-    fn cluster_for(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> Cow<'a, ClusterSpec> {
+    pub(super) fn cluster_for(
+        &self,
+        spec: &CandidateSpec,
+        tables: &[Vec<usize>],
+    ) -> Cow<'a, ClusterSpec> {
         if spec.table != NO_TABLE {
             let t = tables
                 .get(spec.table as usize)
@@ -648,6 +661,24 @@ impl<'a> SearchEngine<'a> {
         self
     }
 
+    /// Feed the sweep from a compiled [`SweepPlan`] (ISSUE 10): the
+    /// candidate space, analytical bounds, memory verdicts and interned
+    /// event set are taken from the plan instead of being re-derived.
+    /// The caller is responsible for launching the plan against this
+    /// engine's exact request first ([`SweepPlan::launch`]) — a
+    /// mismatched plan's per-candidate components are ignored
+    /// defensively, never half-applied.
+    pub fn with_plan(mut self, plan: Arc<SweepPlan>) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// The model this engine sweeps (plan compilation reuses the
+    /// engine's candidate-scoped helpers and needs the inputs back).
+    pub fn model(&self) -> &'a ModelSpec {
+        self.model
+    }
+
     /// The shared profile cache (for persistence after the sweep).
     pub fn cache(&self) -> &Arc<ProfileCache> {
         &self.cache
@@ -663,6 +694,9 @@ impl<'a> SearchEngine<'a> {
     /// budgeted sweep is a prefix of the full one. Built once per engine
     /// and memoized (the config is fixed at construction).
     pub fn space(&self) -> &CandidateSpace {
+        if let Some(plan) = &self.plan {
+            return plan.space();
+        }
         self.space
             .get_or_init(|| pipeline::build_space(self.model, self.cluster, &self.cfg))
     }
@@ -673,7 +707,7 @@ impl<'a> SearchEngine<'a> {
         self.space().specs.clone()
     }
 
-    fn valid(&self, spec: &CandidateSpec) -> bool {
+    pub(super) fn valid(&self, spec: &CandidateSpec) -> bool {
         spec.micro_batch_size >= 1
             && spec.strategy.is_valid_for(
                 self.model.heads,
@@ -719,7 +753,7 @@ impl<'a> SearchEngine<'a> {
             || self.cluster.has_capacity()
     }
 
-    fn bound_with(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> f64 {
+    pub(super) fn bound_with(&self, spec: &CandidateSpec, tables: &[Vec<usize>]) -> f64 {
         if !self.valid(spec) {
             return 0.0;
         }
@@ -1014,26 +1048,42 @@ impl<'a> SearchEngine<'a> {
         let mut peak_of = vec![0u64; n];
         if self.memory_active() {
             let _span = self.trace.start("memory");
+            // a compiled plan carries the verdicts already (tagged by the
+            // capacity inputs, so they are exactly what assess() would
+            // return here); recompute only without one
+            let verdicts = self.plan.as_ref().and_then(|p| p.memory_for(n));
             for (i, spec) in specs.iter().enumerate() {
                 if !self.valid(spec) {
                     // invalid specs keep the evaluator's cheap
                     // unreachable path (micro-batching zeroed, etc.)
                     continue;
                 }
-                let cluster = self.cluster_for(spec, tables);
-                let part = partition_opts(
-                    self.model,
-                    &spec.strategy,
-                    &cluster,
-                    spec.micro_batch_size,
-                    spec.recompute,
-                    spec.zero_stage,
-                );
-                let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
-                let mem =
-                    memory::assess(&part, &sched, &cluster, spec.recompute, spec.zero_stage);
-                peak_of[i] = mem.peak_bytes;
-                if !mem.fits {
+                let (peak_bytes, fits) = match verdicts {
+                    Some(v) => (v.peak_bytes[i], v.fits[i]),
+                    None => {
+                        let cluster = self.cluster_for(spec, tables);
+                        let part = partition_opts(
+                            self.model,
+                            &spec.strategy,
+                            &cluster,
+                            spec.micro_batch_size,
+                            spec.recompute,
+                            spec.zero_stage,
+                        );
+                        let sched =
+                            spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+                        let mem = memory::assess(
+                            &part,
+                            &sched,
+                            &cluster,
+                            spec.recompute,
+                            spec.zero_stage,
+                        );
+                        (mem.peak_bytes, mem.fits)
+                    }
+                };
+                peak_of[i] = peak_bytes;
+                if !fits {
                     memory_pruned[i] = true;
                     pruned[i] = true;
                     stats.memory_pruned += 1;
@@ -1051,7 +1101,7 @@ impl<'a> SearchEngine<'a> {
                         reachable: false,
                         pruned: true,
                         bound_throughput: 0.0,
-                        peak_bytes: mem.peak_bytes,
+                        peak_bytes,
                         fits: false,
                     });
                 }
@@ -1060,6 +1110,9 @@ impl<'a> SearchEngine<'a> {
 
         if self.cfg.prune {
             let _span = self.trace.start("bound");
+            // a compiled plan already holds the full bound vector (tagged
+            // by model/cluster/axes + cost book — identical numbers)
+            let plan_bounds = self.plan.as_ref().and_then(|p| p.bounds_for(n));
             for (i, spec) in specs.iter().enumerate() {
                 if pruned[i] {
                     // memory-pruned: never scheduled, no bound needed
@@ -1067,9 +1120,10 @@ impl<'a> SearchEngine<'a> {
                 }
                 // optimizer candidates were already bounded during table
                 // ranking — identical inputs, identical number
-                bounds[i] = match space.seed_bounds[i] {
-                    Some(b) => b,
-                    None => self.bound_with(spec, tables),
+                bounds[i] = match (plan_bounds, space.seed_bounds[i]) {
+                    (Some(pb), _) => pb[i],
+                    (None, Some(b)) => b,
+                    (None, None) => self.bound_with(spec, tables),
                 };
             }
         }
@@ -1313,6 +1367,28 @@ impl<'a> SearchEngine<'a> {
             return 0.0;
         }
         let mut avoided = 0.0;
+        // a compiled plan already interned every candidate's event
+        // descriptors — identical keys, identical estimator inputs, so the
+        // figure matches the cold path bit for bit
+        if let Some(ev) = self.plan.as_ref().and_then(|p| p.events_for(specs.len())) {
+            for (i, spec) in specs.iter().enumerate() {
+                if !select[i] {
+                    continue;
+                }
+                let cluster = self.cluster_for(spec, tables);
+                for &id in &ev.per_candidate[i] {
+                    if counted.insert(ev.keys[id as usize].clone()) {
+                        avoided += estimate_event_gpu_seconds(
+                            &ev.events[id as usize],
+                            &cluster,
+                            &self.book,
+                            self.cfg.profile_iters,
+                        );
+                    }
+                }
+            }
+            return avoided;
+        }
         for (i, spec) in specs.iter().enumerate() {
             if !select[i] {
                 continue;

@@ -36,6 +36,13 @@
 //!   space beyond the paper's power-of-two grid: every (mp, pp, dp)
 //!   factoring [`Strategy::enumerate`] allows, and a micro-batch-size axis
 //!   for pipelined candidates.
+//! * [`SweepPlan`] (`plan`) splits *planning* from *execution*: the
+//!   candidate space, canonical table pool, analytical bounds, memory
+//!   verdicts and interned event set compile once, each tagged with the
+//!   fingerprint of the inputs it reads, and a delta request rebuilds only
+//!   the tagged components it touches ([`SweepPlan::launch`]). Plans feed
+//!   the engine through [`SearchEngine::with_plan`] and never change
+//!   sweep bytes — only cost.
 //!
 //! The legacy free functions ([`grid_search`], [`evaluate_candidate`])
 //! remain as thin wrappers over the engine so the fig12/table2/table3
@@ -44,6 +51,7 @@
 pub mod cache;
 pub mod engine;
 pub mod pipeline;
+pub mod plan;
 
 pub use cache::{
     fingerprint, stats_against, CacheSnapshot, CacheStats, EventUse, LookupLog, ProfileCache,
@@ -57,6 +65,7 @@ pub use pipeline::{
     enumerate_canonical_tables, CancelToken, CandidateSpace, PlacementOptimizer, PruneStats,
     NO_TABLE, PLACEMENT_EXHAUSTIVE_LIMIT,
 };
+pub use plan::{MemoryVerdicts, PlanEvents, PlanReuse, SweepPlan, TableMemo};
 
 use crate::cluster::ClusterSpec;
 use crate::config::RunConfig;

@@ -286,6 +286,23 @@ fn replicate_over_placements(specs: Vec<CandidateSpec>) -> Vec<CandidateSpec> {
 /// ranking is memory-point-independent in relative order, and the named
 /// axes already cover the cross products.
 pub fn build_space(model: &ModelSpec, cluster: &ClusterSpec, cfg: &SweepConfig) -> CandidateSpace {
+    build_space_seeded(model, cluster, cfg, None)
+}
+
+/// [`build_space`] with an optionally pre-computed canonical-table
+/// enumeration: the enumeration is a pure function of the cluster's
+/// device-class structure, so the plan compiler's
+/// [`TableMemo`](super::plan::TableMemo) hands one in and repeated
+/// requests against the same fleet skip the symmetry-reduced DFS (and
+/// its per-table canonicalization) entirely. `None` as the *inner* value
+/// means the memoized enumeration overflowed the exhaustive limit — the
+/// beam regime, exactly as a fresh enumeration would have chosen.
+pub fn build_space_seeded(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    cfg: &SweepConfig,
+    precomputed: Option<&Option<Vec<Vec<usize>>>>,
+) -> CandidateSpace {
     let mut specs = replicate_over_memory_axes(strategy_points(cluster, cfg), cfg);
     // named axis and optimizer are both no-ops on homogeneous clusters,
     // where every placement prices identically
@@ -296,10 +313,14 @@ pub fn build_space(model: &ModelSpec, cluster: &ClusterSpec, cfg: &SweepConfig) 
     let mut seed_bounds: Vec<Option<f64>> = vec![None; specs.len()];
     if cfg.placement_opt && cluster.is_heterogeneous() {
         let opt = PlacementOptimizer::new(model, cluster, cfg);
-        // the canonical enumeration is strategy-independent: run it once,
-        // and intern tables so strategies sharing a table share one pool
-        // entry (candidates still carry their own spec each)
-        let canonical = enumerate_canonical_tables(cluster, PLACEMENT_EXHAUSTIVE_LIMIT);
+        // the canonical enumeration is strategy-independent: run it once
+        // (or take the memoized copy), and intern tables so strategies
+        // sharing a table share one pool entry (candidates still carry
+        // their own spec each)
+        let canonical = match precomputed {
+            Some(memoized) => memoized.clone(),
+            None => enumerate_canonical_tables(cluster, PLACEMENT_EXHAUSTIVE_LIMIT),
+        };
         let mut interned: HashMap<Vec<usize>, u32> = HashMap::new();
         let devices = cluster.total_devices();
         let strategies = if cfg.widened {

@@ -1,0 +1,632 @@
+//! Compiled sweep plans (ISSUE 10): split **planning** from **execution**.
+//!
+//! Every sweep used to re-derive the candidate space, the canonical
+//! placement tables, the per-candidate memory verdicts, the analytical
+//! bounds and the interned event set from scratch — even when a request
+//! differed from the previous one by a single delta (a cost-book edit, a
+//! new capacity cap). Borrowing the Program/CostModel/Launcher split from
+//! zosimos and DistIR's compile-once IR, a [`SweepPlan`] captures those
+//! planning stages once and replays them:
+//!
+//! * [`SweepPlan::compile`] runs the candidate sources (via the
+//!   device-class-memoized table pool, see [`TableMemo`]), the analytical
+//!   bound stage, the memory stage and the per-candidate event interning,
+//!   and **tags every component with the fingerprint of exactly the
+//!   inputs it reads**:
+//!   - the candidate list + table pool + event set depend on the request
+//!     *shape* (model, capacity-stripped cluster — placement included —
+//!     and the space-defining sweep axes);
+//!   - the bound vector additionally carries the cost-book fingerprint
+//!     (conservative: the bound layer prices at ideal peak rates, so a
+//!     book edit re-runs only this cheap stage);
+//!   - the memory verdicts additionally carry the per-kind capacity list
+//!     and the `memory` flag;
+//!   - the scenario salt marks the plan's evaluation context (it gates no
+//!     planning component — scenarios perturb only the analytical
+//!     re-walk — but a full *plan hit* is only declared when it matches).
+//! * [`SweepPlan::launch`] compares the tags a new request produces
+//!   against the plan's and rebuilds **only** the mismatched components:
+//!   an identical request is a 100% hit (every component reused, zero
+//!   candidate-space/bound/memory recomputation); a cost-book edit keeps
+//!   the candidate list, memory verdicts and event set; a capacity edit
+//!   re-runs only the memory stage; a topology edit recompiles.
+//!
+//! **Byte-identity.** A plan never enters a [`SweepReport`]: the engine
+//! consumes the plan's components through the same staged pipeline
+//! (`SearchEngine::with_plan`), and each component is — by the tag
+//! discipline above — bit-identical to what the cold path would have
+//! recomputed. Plan reuse therefore changes *cost*, never *bytes*;
+//! `tests/plan_reuse.rs` pins serialized-response equality.
+//!
+//! [`SweepReport`]: super::SweepReport
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::cluster::ClusterSpec;
+use crate::cost::CostBook;
+use crate::events::{Event, EventDb};
+use crate::memory;
+use crate::model::ModelSpec;
+use crate::partition::partition_opts;
+
+use super::cache::{fnv1a64, lock_recover, ProfileCache};
+use super::engine::{SearchEngine, SweepConfig};
+use super::pipeline::{self, CandidateSpace, PLACEMENT_EXHAUSTIVE_LIMIT};
+
+/// Which of a plan's components a [`SweepPlan::launch`] (or
+/// [`SweepPlan::reuse_against`]) could reuse for a request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanReuse {
+    /// Candidate list + canonical table pool + seed bounds reused.
+    pub space: bool,
+    /// Per-candidate analytical bound vector reused.
+    pub bounds: bool,
+    /// Per-candidate memory verdicts reused.
+    pub memory: bool,
+    /// Interned per-candidate event set reused.
+    pub events: bool,
+    /// The scenario salt matched (no component hangs off it — scenarios
+    /// only perturb evaluation — but a full hit requires it).
+    pub scenario: bool,
+}
+
+impl PlanReuse {
+    /// Every component reused and the scenario salt matched: the request
+    /// is a 100% plan hit.
+    pub fn full_hit(&self) -> bool {
+        self.space && self.bounds && self.memory && self.events && self.scenario
+    }
+
+    /// At least one component reused (a delta request that kept some of
+    /// the plan alive).
+    pub fn any(&self) -> bool {
+        self.space || self.bounds || self.memory || self.events
+    }
+}
+
+/// The memory stage's per-candidate output, index-aligned with the
+/// plan's candidate list. Empty (`active: false`) when the request keeps
+/// per-rank accounting off ([`SearchEngine::memory_active`]).
+#[derive(Debug, Clone, Default)]
+pub struct MemoryVerdicts {
+    pub active: bool,
+    /// Worst rank's peak residency per candidate (0 for invalid specs,
+    /// which the memory stage skips).
+    pub peak_bytes: Vec<u64>,
+    /// Whether every rank fits its SKU's declared capacity.
+    pub fits: Vec<bool>,
+}
+
+/// The plan-wide interned event set: every distinct event descriptor any
+/// valid candidate references, plus each candidate's id list in its
+/// deterministic interning order. Replaces the per-sweep re-interning
+/// the pruning-cost accounting used to pay.
+#[derive(Debug, Clone, Default)]
+pub struct PlanEvents {
+    /// Distinct descriptors, in first-reference order.
+    pub events: Vec<Event>,
+    /// Canonical key string per event (index-aligned with `events`).
+    pub keys: Vec<String>,
+    /// Per-candidate indices into `events`/`keys`, in the candidate's own
+    /// `EventDb` interning order (empty for invalid/non-deployable specs).
+    pub per_candidate: Vec<Vec<u32>>,
+}
+
+/// The component tags one request produces (all FNV-1a of canonical
+/// serializations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct PlanTags {
+    shape: u64,
+    bounds: u64,
+    memory: u64,
+    scenario: u64,
+}
+
+impl PlanTags {
+    fn of(model: &ModelSpec, cluster: &ClusterSpec, book: &CostBook, cfg: &SweepConfig) -> Self {
+        let shape = SweepPlan::shape_fingerprint(model, cluster, cfg);
+        let bounds = fnv1a64(format!("{shape:016x}|book={}", book.to_json()).as_bytes());
+        let caps: Vec<Option<u64>> = cluster
+            .kinds_in_use()
+            .into_iter()
+            .map(|k| cluster.capacity_of_kind(k))
+            .collect();
+        let memory =
+            fnv1a64(format!("{shape:016x}|caps={caps:?}|mem={}", cfg.memory).as_bytes());
+        let scenario = fnv1a64(format!("scn={}", cfg.scenario.to_json()).as_bytes());
+        PlanTags {
+            shape,
+            bounds,
+            memory,
+            scenario,
+        }
+    }
+}
+
+/// A compiled sweep: the planning stages' outputs, each tagged with the
+/// fingerprint of the inputs it was derived from (module docs).
+#[derive(Debug, Clone)]
+pub struct SweepPlan {
+    shape: u64,
+    bounds_tag: u64,
+    memory_tag: u64,
+    scenario_tag: u64,
+    space: Arc<CandidateSpace>,
+    bounds: Arc<Vec<f64>>,
+    memory: Arc<MemoryVerdicts>,
+    events: Arc<PlanEvents>,
+}
+
+impl SweepPlan {
+    /// The request-shape fingerprint: everything the candidate space and
+    /// event set are a function of — the model, the capacity-stripped
+    /// cluster (topology, device kinds, placement), and the
+    /// space-defining sweep axes. Capacity caps, cost books, scenarios
+    /// and the profiling protocol are deliberately excluded: deltas in
+    /// those must land on the *same* plan slot so `launch` can reuse the
+    /// untouched components.
+    pub fn shape_fingerprint(model: &ModelSpec, cluster: &ClusterSpec, cfg: &SweepConfig) -> u64 {
+        let desc = format!(
+            "distsim-plan-shape/v1|model={model:?}|cluster={}|gb={}|wid={}|mba={}|sa={}|pa={}|po={}|beam={}|ra={}|za={}|maxc={}",
+            cluster.sans_capacity().to_json(),
+            cfg.global_batch,
+            cfg.widened,
+            cfg.micro_batch_axis,
+            cfg.schedule_axis,
+            cfg.placement_axis,
+            cfg.placement_opt,
+            cfg.beam,
+            cfg.recompute_axis,
+            cfg.zero_axis,
+            cfg.max_candidates,
+        );
+        fnv1a64(desc.as_bytes())
+    }
+
+    /// Compile a request into a plan (no memoized table pool).
+    pub fn compile(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        book: &CostBook,
+        cfg: &SweepConfig,
+    ) -> SweepPlan {
+        Self::compile_memo(model, cluster, book, cfg, None)
+    }
+
+    /// Compile with a shared [`TableMemo`], so repeated requests against
+    /// the same fleet skip the canonical-table enumeration entirely.
+    pub fn compile_memo(
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        book: &CostBook,
+        cfg: &SweepConfig,
+        memo: Option<&TableMemo>,
+    ) -> SweepPlan {
+        let tags = PlanTags::of(model, cluster, book, cfg);
+        let space = Arc::new(build_space_for(model, cluster, cfg, memo));
+        let eng = scratch_engine(model, cluster, book, cfg);
+        let bounds = Arc::new(compute_bounds(&eng, &space));
+        let memory = Arc::new(compute_memory(&eng, &space));
+        let events = Arc::new(compute_events(&eng, &space));
+        SweepPlan {
+            shape: tags.shape,
+            bounds_tag: tags.bounds,
+            memory_tag: tags.memory,
+            scenario_tag: tags.scenario,
+            space,
+            bounds,
+            memory,
+            events,
+        }
+    }
+
+    /// Which components a request could reuse, without rebuilding
+    /// anything. A component whose inputs' fingerprint matches its tag is
+    /// reusable; a shape mismatch invalidates every per-candidate
+    /// component (they are indexed by the candidate list).
+    pub fn reuse_against(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        book: &CostBook,
+        cfg: &SweepConfig,
+    ) -> PlanReuse {
+        let tags = PlanTags::of(model, cluster, book, cfg);
+        let space = tags.shape == self.shape;
+        PlanReuse {
+            space,
+            bounds: space && tags.bounds == self.bounds_tag,
+            memory: space && tags.memory == self.memory_tag,
+            events: space, // the event set reads exactly the shape inputs
+            scenario: tags.scenario == self.scenario_tag,
+        }
+    }
+
+    /// Launch the plan against a (possibly delta-carrying) request:
+    /// reuse every component whose tag still matches, rebuild only the
+    /// rest, and return the refreshed plan (tagged for the new request)
+    /// plus what was reused. An identical request returns a clone sharing
+    /// every component (`PlanReuse::full_hit`).
+    pub fn launch(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        book: &CostBook,
+        cfg: &SweepConfig,
+        memo: Option<&TableMemo>,
+    ) -> (SweepPlan, PlanReuse) {
+        let tags = PlanTags::of(model, cluster, book, cfg);
+        let reuse = self.reuse_against(model, cluster, book, cfg);
+        let space = if reuse.space {
+            self.space.clone()
+        } else {
+            Arc::new(build_space_for(model, cluster, cfg, memo))
+        };
+        let eng = scratch_engine(model, cluster, book, cfg);
+        let bounds = if reuse.bounds {
+            self.bounds.clone()
+        } else {
+            Arc::new(compute_bounds(&eng, &space))
+        };
+        let memory = if reuse.memory {
+            self.memory.clone()
+        } else {
+            Arc::new(compute_memory(&eng, &space))
+        };
+        let events = if reuse.events {
+            self.events.clone()
+        } else {
+            Arc::new(compute_events(&eng, &space))
+        };
+        (
+            SweepPlan {
+                shape: tags.shape,
+                bounds_tag: tags.bounds,
+                memory_tag: tags.memory,
+                scenario_tag: tags.scenario,
+                space,
+                bounds,
+                memory,
+                events,
+            },
+            reuse,
+        )
+    }
+
+    /// The request-shape fingerprint this plan was compiled for.
+    pub fn shape(&self) -> u64 {
+        self.shape
+    }
+
+    /// The compiled candidate space (specs + table pool + seed bounds).
+    pub fn space(&self) -> &CandidateSpace {
+        &self.space
+    }
+
+    /// Shared handle on the candidate space (for pointer-identity
+    /// assertions in tests).
+    pub fn space_arc(&self) -> &Arc<CandidateSpace> {
+        &self.space
+    }
+
+    pub fn candidate_count(&self) -> usize {
+        self.space.specs.len()
+    }
+
+    /// Distinct events any valid candidate references.
+    pub fn event_count(&self) -> usize {
+        self.events.events.len()
+    }
+
+    /// The bound vector, if it is index-aligned with a space of `n`
+    /// candidates (defensive: an engine handed a mismatched plan falls
+    /// back to recomputing).
+    pub(super) fn bounds_for(&self, n: usize) -> Option<&[f64]> {
+        (self.bounds.len() == n).then(|| self.bounds.as_slice())
+    }
+
+    /// The memory verdicts, if active and index-aligned.
+    pub(super) fn memory_for(&self, n: usize) -> Option<&MemoryVerdicts> {
+        (self.memory.active && self.memory.peak_bytes.len() == n).then(|| &*self.memory)
+    }
+
+    /// The interned event set, if index-aligned.
+    pub(super) fn events_for(&self, n: usize) -> Option<&PlanEvents> {
+        (self.events.per_candidate.len() == n).then(|| &*self.events)
+    }
+}
+
+/// Device-class-keyed memo of the canonical placement-table enumeration
+/// (the satellite fix of ISSUE 10): [`pipeline::build_space`] used to
+/// re-run [`pipeline::enumerate_canonical_tables`] — a symmetry-reduced
+/// DFS plus one `canonicalize_table` per emitted table — for **every**
+/// request against the same fleet. The enumeration is a pure function of
+/// the cluster's `(node, kind)` class structure, so one memo entry per
+/// class signature serves every request shape on that fleet. `None`
+/// entries (space larger than [`PLACEMENT_EXHAUSTIVE_LIMIT`]) are
+/// memoized too: the aborted DFS that discovers the overflow is itself
+/// worth skipping.
+#[derive(Debug, Default)]
+pub struct TableMemo {
+    map: Mutex<HashMap<String, Arc<Option<Vec<Vec<usize>>>>>>,
+}
+
+impl TableMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The canonical table enumeration for this fleet, computed at most
+    /// once per device-class signature.
+    pub fn canonical_for(&self, cluster: &ClusterSpec) -> Arc<Option<Vec<Vec<usize>>>> {
+        let sig = format!("{:?}", cluster.device_classes());
+        let mut map = lock_recover(&self.map);
+        map.entry(sig)
+            .or_insert_with(|| {
+                Arc::new(pipeline::enumerate_canonical_tables(
+                    cluster,
+                    PLACEMENT_EXHAUSTIVE_LIMIT,
+                ))
+            })
+            .clone()
+    }
+
+    /// Distinct fleets memoized so far.
+    pub fn len(&self) -> usize {
+        lock_recover(&self.map).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Build the candidate space, routing the canonical-table enumeration
+/// through the memo when one is supplied (homogeneous fleets and
+/// optimizer-off sweeps never touch it).
+fn build_space_for(
+    model: &ModelSpec,
+    cluster: &ClusterSpec,
+    cfg: &SweepConfig,
+    memo: Option<&TableMemo>,
+) -> CandidateSpace {
+    match memo {
+        Some(m) if cfg.placement_opt && cluster.is_heterogeneous() => {
+            let canonical = m.canonical_for(cluster);
+            pipeline::build_space_seeded(model, cluster, cfg, Some(&canonical))
+        }
+        _ => pipeline::build_space(model, cluster, cfg),
+    }
+}
+
+/// A throwaway engine used only for its candidate-scoped helpers
+/// (`valid`/`cluster_for`/`bound_with`/`memory_active`); its cache is
+/// never touched during compilation.
+fn scratch_engine<'a>(
+    model: &'a ModelSpec,
+    cluster: &'a ClusterSpec,
+    book: &CostBook,
+    cfg: &SweepConfig,
+) -> SearchEngine<'a> {
+    SearchEngine::with_book(
+        model,
+        cluster,
+        book.clone(),
+        cfg.clone(),
+        Arc::new(ProfileCache::new()),
+    )
+}
+
+/// The bound stage, for every candidate (memory-independent: the sweep
+/// consults the vector only for candidates the memory stage kept, so
+/// capacity deltas never touch it). Identical numbers to the cold path:
+/// the optimizer's seed bound where one exists, the placement-aware
+/// analytical bound otherwise.
+fn compute_bounds(eng: &SearchEngine<'_>, space: &CandidateSpace) -> Vec<f64> {
+    space
+        .specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| match space.seed_bounds[i] {
+            Some(b) => b,
+            None => eng.bound_with(spec, &space.tables),
+        })
+        .collect()
+}
+
+/// The memory stage: per-candidate `(peak_bytes, fits)` verdicts,
+/// skipping invalid specs exactly as the sweep's own stage does.
+fn compute_memory(eng: &SearchEngine<'_>, space: &CandidateSpace) -> MemoryVerdicts {
+    if !eng.memory_active() {
+        return MemoryVerdicts::default();
+    }
+    let n = space.specs.len();
+    let mut out = MemoryVerdicts {
+        active: true,
+        peak_bytes: vec![0; n],
+        fits: vec![true; n],
+    };
+    for (i, spec) in space.specs.iter().enumerate() {
+        if !eng.valid(spec) {
+            continue;
+        }
+        let cluster = eng.cluster_for(spec, &space.tables);
+        let part = partition_opts(
+            eng.model(),
+            &spec.strategy,
+            &cluster,
+            spec.micro_batch_size,
+            spec.recompute,
+            spec.zero_stage,
+        );
+        let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+        let mem = memory::assess(&part, &sched, &cluster, spec.recompute, spec.zero_stage);
+        out.peak_bytes[i] = mem.peak_bytes;
+        out.fits[i] = mem.fits;
+    }
+    out
+}
+
+/// Intern every valid candidate's events into the plan-wide set —
+/// deliberately *without* the SKU-capacity (`cluster.fits`) gate, because
+/// the cold path's pruning-cost accounting interns events for any valid
+/// pruned candidate, fitting or not. Per-candidate id lists keep each
+/// candidate's own `EventDb` interning order, so replaying them visits
+/// keys in exactly the order the cold path's re-interning would — the
+/// accounting stays bit-identical.
+fn compute_events(eng: &SearchEngine<'_>, space: &CandidateSpace) -> PlanEvents {
+    let mut out = PlanEvents::default();
+    let mut index: HashMap<String, u32> = HashMap::new();
+    for spec in &space.specs {
+        let mut ids: Vec<u32> = Vec::new();
+        if eng.valid(spec) {
+            let cluster = eng.cluster_for(spec, &space.tables);
+            let part = partition_opts(
+                eng.model(),
+                &spec.strategy,
+                &cluster,
+                spec.micro_batch_size,
+                spec.recompute,
+                spec.zero_stage,
+            );
+            let sched = spec.schedule.build(spec.strategy.pp, spec.micro_batches);
+            let mut db = EventDb::new();
+            crate::engine::build_programs(&part, &sched, &cluster, &mut db);
+            for id in db.ids() {
+                let key = db.get(id).key();
+                let plan_id = match index.get(&key) {
+                    Some(&p) => p,
+                    None => {
+                        let p = out.events.len() as u32;
+                        out.events.push(db.get(id).clone());
+                        out.keys.push(key.clone());
+                        index.insert(key, p);
+                        p
+                    }
+                };
+                ids.push(plan_id);
+            }
+        }
+        out.per_candidate.push(ids);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::zoo;
+
+    fn mixed_cfg() -> SweepConfig {
+        SweepConfig {
+            global_batch: 8,
+            placement_opt: true,
+            prune: true,
+            ..SweepConfig::default()
+        }
+    }
+
+    #[test]
+    fn identical_request_is_a_full_hit_sharing_every_component() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4);
+        let book = CostBook::default();
+        let cfg = mixed_cfg();
+        let plan = SweepPlan::compile(&model, &cluster, &book, &cfg);
+        let (again, reuse) = plan.launch(&model, &cluster, &book, &cfg, None);
+        assert!(reuse.full_hit(), "{reuse:?}");
+        assert!(Arc::ptr_eq(&plan.space, &again.space));
+        assert!(Arc::ptr_eq(&plan.bounds, &again.bounds));
+        assert!(Arc::ptr_eq(&plan.memory, &again.memory));
+        assert!(Arc::ptr_eq(&plan.events, &again.events));
+    }
+
+    #[test]
+    fn cost_book_delta_reprices_bounds_and_keeps_the_rest() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4);
+        let cfg = mixed_cfg();
+        let plan = SweepPlan::compile(&model, &cluster, &CostBook::default(), &cfg);
+        let mut edited = CostBook::default();
+        edited.base.eff_max *= 0.9;
+        let (next, reuse) = plan.launch(&model, &cluster, &edited, &cfg, None);
+        assert!(reuse.space && reuse.events && reuse.memory && !reuse.bounds);
+        assert!(Arc::ptr_eq(&plan.space, &next.space));
+        assert!(Arc::ptr_eq(&plan.events, &next.events));
+        // the bound layer prices at ideal peak rates (book-independent),
+        // so the conservatively recomputed vector is value-identical
+        assert_eq!(*plan.bounds, *next.bounds);
+        assert!(!Arc::ptr_eq(&plan.bounds, &next.bounds));
+    }
+
+    #[test]
+    fn capacity_delta_reruns_only_the_memory_stage() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4);
+        let book = CostBook::default();
+        let cfg = mixed_cfg();
+        let plan = SweepPlan::compile(&model, &cluster, &book, &cfg);
+        assert!(!plan.memory.active, "no capacity, no memory flag");
+        let capped = cluster.with_uniform_capacity(3_000_000_000);
+        let (next, reuse) = plan.launch(&model, &capped, &book, &cfg, None);
+        assert!(reuse.space && reuse.bounds && reuse.events && !reuse.memory);
+        assert!(Arc::ptr_eq(&plan.space, &next.space));
+        assert!(next.memory.active);
+        assert_eq!(next.memory.peak_bytes.len(), next.candidate_count());
+    }
+
+    #[test]
+    fn topology_delta_recompiles_everything() {
+        let model = zoo::bert_large();
+        let book = CostBook::default();
+        let cfg = mixed_cfg();
+        let plan = SweepPlan::compile(&model, &ClusterSpec::mixed_a40_a10(2, 4), &book, &cfg);
+        let grown = ClusterSpec::mixed_a40_a10(4, 4);
+        let reuse = plan.reuse_against(&model, &grown, &book, &cfg);
+        assert!(!reuse.any(), "{reuse:?}");
+    }
+
+    #[test]
+    fn scenario_delta_reuses_components_but_is_not_a_full_hit() {
+        let model = zoo::bert_large();
+        let cluster = ClusterSpec::mixed_a40_a10(2, 4);
+        let book = CostBook::default();
+        let cfg = mixed_cfg();
+        let plan = SweepPlan::compile(&model, &cluster, &book, &cfg);
+        let mut salted = cfg.clone();
+        salted.scenario = crate::scenario::ScenarioSpec {
+            stragglers: vec![crate::scenario::Straggler {
+                device: 0,
+                factor: 1.5,
+            }],
+            ..Default::default()
+        };
+        let reuse = plan.reuse_against(&model, &cluster, &book, &salted);
+        assert!(reuse.space && reuse.bounds && reuse.memory && reuse.events);
+        assert!(!reuse.scenario && !reuse.full_hit());
+    }
+
+    #[test]
+    fn table_memo_computes_each_fleet_once() {
+        let memo = TableMemo::new();
+        let mixed = ClusterSpec::mixed_a40_a10(2, 4);
+        let a = memo.canonical_for(&mixed);
+        let b = memo.canonical_for(&mixed);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.as_ref().as_ref().map(Vec::len), Some(70));
+        assert_eq!(memo.len(), 1);
+        // a different fleet is a different entry
+        let _ = memo.canonical_for(&ClusterSpec::a40_cluster(2, 2));
+        assert_eq!(memo.len(), 2);
+        // and a memoized compile produces the same space as a cold one
+        let model = zoo::bert_large();
+        let book = CostBook::default();
+        let cfg = mixed_cfg();
+        let cold = SweepPlan::compile(&model, &mixed, &book, &cfg);
+        let warm = SweepPlan::compile_memo(&model, &mixed, &book, &cfg, Some(&memo));
+        assert_eq!(cold.space.specs, warm.space.specs);
+        assert_eq!(cold.space.tables, warm.space.tables);
+        assert_eq!(*cold.bounds, *warm.bounds);
+    }
+}

@@ -94,9 +94,11 @@ use std::time::{Duration, Instant};
 use crate::cluster::ClusterSpec;
 use crate::config::Json;
 use crate::cost::CostBook;
+use crate::model::ModelSpec;
 use crate::search::cache::lock_recover;
 use crate::search::{
-    fingerprint, stats_against, CancelToken, ProfileCache, SearchEngine, SweepReport,
+    fingerprint, stats_against, CancelToken, ProfileCache, SearchEngine, SweepConfig, SweepPlan,
+    SweepReport, TableMemo,
 };
 
 use crate::telemetry::{LogLevel, Logger, RequestTrace, ServiceMetrics};
@@ -179,6 +181,118 @@ struct RegistryEntry {
     protocol: (f64, usize, u64),
 }
 
+/// Compiled sweep plans shared daemon-wide, one slot per request-*shape*
+/// fingerprint ([`SweepPlan::shape_fingerprint`]) — deltas that keep the
+/// shape (cost-book edits, capacity caps, scenario salts) land on the
+/// same slot so [`SweepPlan::launch`] can reuse the untouched components.
+/// Always on and fully transparent to clients: the plan feeds the engine
+/// the exact components the cold path would recompute, so sweep payloads
+/// stay byte-identical; only the `stats`/`metrics` ops see the accounting.
+///
+/// Every [`PlanCache::resolve`] increments exactly one of the three
+/// counters, so `compiles + hits + partial` equals the number of
+/// plan-cached sweeps — the invariant the `stats` op's `plans` block and
+/// the `plan_*_total` metric families both report.
+#[derive(Default)]
+pub struct PlanCache {
+    /// Device-class-keyed canonical-table memo shared by every compile
+    /// (the satellite hoist: one enumeration per fleet, not per request).
+    tables: TableMemo,
+    map: Mutex<HashMap<u64, Arc<SweepPlan>>>,
+    /// Cold compiles (no plan for the shape yet).
+    compiles: AtomicUsize,
+    /// Full hits (every component reused, zero recomputation).
+    hits: AtomicUsize,
+    /// Partial reuses (same shape, at least one component rebuilt — or a
+    /// scenario-only delta, which rebuilds nothing but is not a full hit).
+    partial: AtomicUsize,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The plan for a request, compiled/launched as needed. The
+    /// `plan_compile_us` histogram is observed whenever any compilation
+    /// ran — cold compiles and partial reuses, never full hits. The
+    /// `plan_*_total` families are *not* incremented here: they are
+    /// sampled from [`PlanCache::counters`] at metrics-exposition time,
+    /// exactly like the scenario totals, so `stats` and `metrics` always
+    /// reconcile.
+    ///
+    /// Compilation happens *outside* the map lock (the same invariant
+    /// [`CacheRegistry::resolve`] documents for snapshot I/O), so two
+    /// workers racing on a cold shape may both compile — the duplicate
+    /// work is idempotent (identical components, identical response
+    /// bytes); only the accounting split between `compiles` and `hits`
+    /// depends on the interleaving, which is why the `stats` op is
+    /// documented as diagnostic rather than deterministic.
+    pub fn resolve(
+        &self,
+        model: &ModelSpec,
+        cluster: &ClusterSpec,
+        book: &CostBook,
+        cfg: &SweepConfig,
+        metrics: &ServiceMetrics,
+    ) -> Arc<SweepPlan> {
+        let shape = SweepPlan::shape_fingerprint(model, cluster, cfg);
+        let existing = lock_recover(&self.map).get(&shape).cloned();
+        match existing {
+            Some(plan) => {
+                let reuse = plan.reuse_against(model, cluster, book, cfg);
+                if reuse.full_hit() {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return plan;
+                }
+                let t0 = Instant::now();
+                let (next, _) = plan.launch(model, cluster, book, cfg, Some(&self.tables));
+                metrics
+                    .plan_compile_us
+                    .observe_us(t0.elapsed().as_micros() as u64);
+                self.partial.fetch_add(1, Ordering::Relaxed);
+                let next = Arc::new(next);
+                lock_recover(&self.map).insert(shape, next.clone());
+                next
+            }
+            None => {
+                let t0 = Instant::now();
+                let plan = Arc::new(SweepPlan::compile_memo(
+                    model,
+                    cluster,
+                    book,
+                    cfg,
+                    Some(&self.tables),
+                ));
+                metrics
+                    .plan_compile_us
+                    .observe_us(t0.elapsed().as_micros() as u64);
+                self.compiles.fetch_add(1, Ordering::Relaxed);
+                lock_recover(&self.map).insert(shape, plan.clone());
+                plan
+            }
+        }
+    }
+
+    /// `(compiles, full hits, partial reuses)` since startup.
+    pub fn counters(&self) -> (usize, usize, usize) {
+        (
+            self.compiles.load(Ordering::Relaxed),
+            self.hits.load(Ordering::Relaxed),
+            self.partial.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Distinct request shapes currently holding a plan.
+    pub fn len(&self) -> usize {
+        lock_recover(&self.map).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// Shared profile caches, one per (cluster, cost, protocol) fingerprint —
 /// the daemon-lifetime generalization of a sweep's single cache.
 #[derive(Default)]
@@ -187,6 +301,10 @@ pub struct CacheRegistry {
     /// Structured logger for snapshot-load/save diagnostics.
     log: Logger,
     map: Mutex<HashMap<String, RegistryEntry>>,
+    /// Compiled sweep plans, beside the profile caches (ISSUE 10): the
+    /// profile cache shares *measurements* across sweeps, the plan cache
+    /// shares *planning* across sweeps.
+    plans: PlanCache,
     /// Scenario-bearing sweeps served since startup (the `stats` op's
     /// `scenario.sweeps` counter).
     scenario_sweeps: AtomicUsize,
@@ -200,6 +318,7 @@ impl CacheRegistry {
             dir,
             log: Logger::default(),
             map: Mutex::new(HashMap::new()),
+            plans: PlanCache::new(),
             scenario_sweeps: AtomicUsize::new(0),
             scenario_episodes: AtomicUsize::new(0),
         }
@@ -215,6 +334,11 @@ impl CacheRegistry {
     pub fn record_scenario(&self, episodes: usize) {
         self.scenario_sweeps.fetch_add(1, Ordering::Relaxed);
         self.scenario_episodes.fetch_add(episodes, Ordering::Relaxed);
+    }
+
+    /// The daemon-wide plan cache.
+    pub fn plans(&self) -> &PlanCache {
+        &self.plans
     }
 
     /// `(scenario sweeps served, episodes simulated)` since startup.
@@ -930,6 +1054,17 @@ fn run_job(
             // it poisoned for every later request to recover from
             cache.panic_holding_entries_lock();
         }
+        // compiled-plan resolve (ISSUE 10): a repeat of an earlier
+        // request's shape reuses its candidate space, bounds, memory
+        // verdicts and event set — transparently, since every component
+        // is bit-identical to what the engine would recompute below
+        let plan = registry.plans.resolve(
+            &req.model,
+            &req.cluster,
+            &req.cost,
+            &req.sweep,
+            metrics,
+        );
         // the snapshot's keys are the engine's prior: in-sweep accounting
         // (pruning.gpu_seconds_avoided) then agrees with the writer's
         // as-if-serial cache block that nothing a hit would have served
@@ -945,6 +1080,7 @@ fn run_job(
         .with_prior((*preloaded).clone())
         .with_cancel(job.cancel.clone())
         .with_trace(job.trace.clone())
+        .with_plan(plan)
         .sweep()
     })) {
         // cancel wins a finish-line race: a report produced while (or
@@ -1120,7 +1256,14 @@ fn writer_loop(
             Outcome::Pong => protocol::pong_response(id).to_string(),
             Outcome::Stats => {
                 let (sweeps, episodes) = registry.scenario_counters();
-                protocol::stats_response(id, &registry.summary(), sweeps, episodes).to_string()
+                protocol::stats_response(
+                    id,
+                    &registry.summary(),
+                    sweeps,
+                    episodes,
+                    registry.plans().counters(),
+                )
+                .to_string()
             }
             Outcome::Metrics => {
                 // reconcile-by-construction: the scenario and cache-
@@ -1130,6 +1273,10 @@ fn writer_loop(
                 let (sweeps, episodes) = registry.scenario_counters();
                 m.scenario_sweeps_total.set(sweeps as u64);
                 m.scenario_episodes_total.set(episodes as u64);
+                let (compiles, hits, partial) = registry.plans().counters();
+                m.plan_compiles_total.set(compiles as u64);
+                m.plan_hits_total.set(hits as u64);
+                m.plan_partial_reuse_total.set(partial as u64);
                 let caches = registry.summary();
                 m.caches.set(caches.len() as u64);
                 m.cache_events

@@ -20,7 +20,11 @@
 //!   (`--max-queue`, overflow shed with structured `unavailable` errors),
 //!   the worker pool with cooperative sweep cancellation (`cancel` op),
 //!   the per-fingerprint [`CacheRegistry`] with disk-persistent
-//!   snapshots, and the per-connection in-order writer that keeps each
+//!   snapshots, the per-shape [`PlanCache`] of compiled sweep plans
+//!   (the profile cache shares *measurements*, the plan cache shares
+//!   *planning* — candidate spaces, bounds, memory verdicts, event
+//!   sets — with delta-aware invalidation; DESIGN.md §11), and the
+//!   per-connection in-order writer that keeps each
 //!   connection's response stream deterministic without cross-connection
 //!   head-of-line blocking (see the module docs for the determinism,
 //!   fairness and cancellation contracts).
@@ -43,6 +47,6 @@ pub mod daemon;
 pub mod protocol;
 
 pub use daemon::{
-    serve_ndjson, serve_tcp, CacheRegistry, ServeOpts, ServeSummary, DEFAULT_MAX_QUEUE,
+    serve_ndjson, serve_tcp, CacheRegistry, PlanCache, ServeOpts, ServeSummary, DEFAULT_MAX_QUEUE,
 };
 pub use protocol::{cli_error_line, ErrorKind, Request, ServiceError, SweepRequest};

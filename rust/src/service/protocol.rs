@@ -591,13 +591,17 @@ pub fn shutdown_response(id: Option<&str>) -> Json {
 /// Per-fingerprint cache occupancy plus scenario-sweep counters for the
 /// `stats` op. `scenario_sweeps` counts scenario-bearing sweep requests
 /// served since startup; `scenario_episodes` the episodes those requests'
-/// specs carried (both monotone across the daemon's lifetime).
+/// specs carried (both monotone across the daemon's lifetime). `plans`
+/// is the plan cache's `(compiles, full hits, partial reuses)` trio —
+/// also monotone, and every plan-cached sweep increments exactly one.
 pub fn stats_response(
     id: Option<&str>,
     caches: &[(String, usize)],
     scenario_sweeps: usize,
     scenario_episodes: usize,
+    plans: (usize, usize, usize),
 ) -> Json {
+    let (plan_compiles, plan_hits, plan_partial) = plans;
     Json::obj(vec![
         ("id", id_json(id)),
         ("ok", Json::Bool(true)),
@@ -624,6 +628,17 @@ pub fn stats_response(
                     Json::obj(vec![
                         ("sweeps", Json::num(scenario_sweeps as f64)),
                         ("episodes", Json::num(scenario_episodes as f64)),
+                    ]),
+                ),
+                // plan-cache accounting (ISSUE 10): every plan-cached
+                // sweep lands in exactly one of the three buckets, so
+                // compiles + hits + partial == plan-cached sweeps served
+                (
+                    "plans",
+                    Json::obj(vec![
+                        ("compiles", Json::num(plan_compiles as f64)),
+                        ("hits", Json::num(plan_hits as f64)),
+                        ("partial", Json::num(plan_partial as f64)),
                     ]),
                 ),
             ]),

@@ -162,6 +162,14 @@ pub struct ServiceMetrics {
     pub pruning_epoch_repruned_total: Counter,
     pub pruning_evaluated_total: Counter,
     pub pruning_gpu_seconds_avoided: FloatCounter,
+    // plan-cache accounting (ISSUE 10): set at exposition from the plan
+    // cache's own monotonic counters — the same source the `stats` op's
+    // `plans` block reads — so the two always reconcile. Every plan
+    // resolve increments exactly one of the three, so compiles + hits +
+    // partial equals the number of plan-cached sweeps.
+    pub plan_compiles_total: Gauge,
+    pub plan_hits_total: Gauge,
+    pub plan_partial_reuse_total: Gauge,
     pub scenario_sweeps_total: Gauge,
     pub scenario_episodes_total: Gauge,
     pub traces_written_total: Counter,
@@ -173,6 +181,10 @@ pub struct ServiceMetrics {
     // -- histograms (wall-clock; never deterministic) ----------------
     pub queue_wait_us: Histogram,
     pub sweep_duration_us: Histogram,
+    /// Wall-clock of plan compilation (full compiles and the rebuilt
+    /// portion of partial reuses; full hits compile nothing and observe
+    /// nothing).
+    pub plan_compile_us: Histogram,
 }
 
 impl ServiceMetrics {
@@ -247,6 +259,15 @@ impl ServiceMetrics {
                 self.pruning_gpu_seconds_avoided.get(),
             ),
             (
+                "plan_compiles_total",
+                self.plan_compiles_total.get() as f64,
+            ),
+            ("plan_hits_total", self.plan_hits_total.get() as f64),
+            (
+                "plan_partial_reuse_total",
+                self.plan_partial_reuse_total.get() as f64,
+            ),
+            (
                 "scenario_sweeps_total",
                 self.scenario_sweeps_total.get() as f64,
             ),
@@ -275,6 +296,7 @@ impl ServiceMetrics {
         vec![
             ("queue_wait_us", &self.queue_wait_us),
             ("sweep_duration_us", &self.sweep_duration_us),
+            ("plan_compile_us", &self.plan_compile_us),
         ]
     }
 

@@ -103,6 +103,7 @@ fn bench_formats_are_documented() {
         "BENCH_service.json",
         "BENCH_placement.json",
         "BENCH_scenario.json",
+        "BENCH_plan.json",
     ] {
         assert!(doc.contains(name), "{name} missing from docs/FORMATS.md");
     }
@@ -209,6 +210,36 @@ fn memory_model_schema_is_documented() {
     ] {
         assert!(parse_line(bad).is_err(), "must reject: {bad}");
     }
+}
+
+#[test]
+fn plan_cache_schema_is_documented() {
+    // ISSUE 10 surface: the stats response's plan-accounting block, the
+    // plan metric families, and the CLI flag must all be specified in
+    // docs/FORMATS.md (the metric names are additionally covered by
+    // `telemetry_surfaces_are_documented` via `ServiceMetrics::names`)
+    let doc = formats_md();
+    for word in [
+        "`plans`",
+        "`compiles`",
+        "`hits`",
+        "`partial`",
+        "plan_compiles_total",
+        "plan_hits_total",
+        "plan_partial_reuse_total",
+        "plan_compile_us",
+        "plan-cache",
+    ] {
+        assert!(doc.contains(word), "'{word}' missing from docs/FORMATS.md");
+    }
+    // the plan cache is daemon-transparent: no new request keys, so the
+    // schema a plan-cached daemon accepts is exactly the documented one
+    use distsim::service::protocol::parse_line;
+    assert!(
+        parse_line(r#"{"op":"sweep","model":"bert-large","cluster":{"preset":"a40"},"sweep":{"plan":true}}"#)
+            .is_err(),
+        "the plan cache must not grow the request schema"
+    );
 }
 
 #[test]

@@ -1,0 +1,231 @@
+//! Compiled sweep plans (ISSUE 10): byte-identity and delta-aware reuse.
+//!
+//! The contract under test: a [`SweepPlan`] changes what a sweep *costs*,
+//! never what it *returns*. Every test here serializes reports through
+//! the same `protocol::sweep_response` path the daemon writes, so
+//! "identical" means identical response bytes, not just equal floats.
+
+use std::io::Cursor;
+use std::sync::Arc;
+
+use distsim::cluster::ClusterSpec;
+use distsim::config::Json;
+use distsim::cost::CostBook;
+use distsim::model::{zoo, ModelSpec};
+use distsim::search::{ProfileCache, SearchEngine, SweepConfig, SweepPlan, SweepReport};
+use distsim::service::{protocol, serve_ndjson, ServeOpts};
+
+fn model() -> ModelSpec {
+    zoo::bert_large()
+}
+
+fn cfg() -> SweepConfig {
+    SweepConfig {
+        global_batch: 8,
+        profile_iters: 1,
+        prune: true,
+        ..SweepConfig::default()
+    }
+}
+
+/// A fresh engine over its own cache — the cold path the plan must match.
+fn engine<'a>(
+    model: &'a ModelSpec,
+    cluster: &'a ClusterSpec,
+    book: &CostBook,
+    cfg: &SweepConfig,
+) -> SearchEngine<'a> {
+    SearchEngine::with_book(
+        model,
+        cluster,
+        book.clone(),
+        cfg.clone(),
+        Arc::new(ProfileCache::new()),
+    )
+}
+
+/// Serialize a report exactly as the daemon's writer would (fixed id and
+/// fingerprint, engine-side cache stats, no timing, no trace).
+fn serialize(report: &SweepReport) -> String {
+    protocol::sweep_response(Some("x"), "fp", report, &report.cache, false, None).to_string()
+}
+
+#[test]
+fn planned_sweep_is_byte_identical_to_cold_and_relaunch_is_a_full_hit() {
+    let model = model();
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    let book = CostBook::default();
+    let cfg = cfg();
+
+    // two cold sweeps pin the baseline's own determinism first
+    let cold_a = serialize(&engine(&model, &cluster, &book, &cfg).sweep());
+    let cold_b = serialize(&engine(&model, &cluster, &book, &cfg).sweep());
+    assert_eq!(cold_a, cold_b, "cold sweeps must agree with themselves");
+
+    // compile once, launch twice: both planned sweeps match the cold bytes
+    let plan = Arc::new(SweepPlan::compile(&model, &cluster, &book, &cfg));
+    let warm_1 = serialize(
+        &engine(&model, &cluster, &book, &cfg)
+            .with_plan(plan.clone())
+            .sweep(),
+    );
+    assert_eq!(cold_a, warm_1, "planned sweep diverged from cold bytes");
+
+    let (relaunched, reuse) = plan.launch(&model, &cluster, &book, &cfg, None);
+    assert!(reuse.full_hit(), "identical request must be a 100% hit: {reuse:?}");
+    let warm_2 = serialize(
+        &engine(&model, &cluster, &book, &cfg)
+            .with_plan(Arc::new(relaunched))
+            .sweep(),
+    );
+    assert_eq!(cold_a, warm_2, "relaunched plan diverged from cold bytes");
+}
+
+/// The delta matrix at sweep level: each single-input delta keeps every
+/// untouched component and the delta'd sweep still matches its own cold
+/// baseline byte for byte.
+#[test]
+fn delta_launches_stay_byte_identical_to_their_cold_baselines() {
+    let model = model();
+    let cluster = ClusterSpec::a40_cluster(1, 4);
+    let book = CostBook::default();
+    let cfg = cfg();
+    let plan = SweepPlan::compile(&model, &cluster, &book, &cfg);
+
+    // capacity delta: memory stage re-runs, space/bounds/events reused
+    let capped = cluster.with_uniform_capacity(2_000_000_000);
+    let (for_capped, reuse) = plan.launch(&model, &capped, &book, &cfg, None);
+    assert!(
+        reuse.space && reuse.bounds && reuse.events && !reuse.memory,
+        "capacity delta reuse: {reuse:?}"
+    );
+    let cold = serialize(&engine(&model, &capped, &book, &cfg).sweep());
+    let warm = serialize(
+        &engine(&model, &capped, &book, &cfg)
+            .with_plan(Arc::new(for_capped))
+            .sweep(),
+    );
+    assert_eq!(cold, warm, "capacity-delta planned sweep diverged");
+
+    // cost-book delta: bounds re-price, everything else reused
+    let mut edited = CostBook::default();
+    edited.base.eff_max *= 0.9;
+    let (for_edited, reuse) = plan.launch(&model, &cluster, &edited, &cfg, None);
+    assert!(
+        reuse.space && reuse.memory && reuse.events && !reuse.bounds,
+        "cost-book delta reuse: {reuse:?}"
+    );
+    let cold = serialize(&engine(&model, &cluster, &edited, &cfg).sweep());
+    let warm = serialize(
+        &engine(&model, &cluster, &edited, &cfg)
+            .with_plan(Arc::new(for_edited))
+            .sweep(),
+    );
+    assert_eq!(cold, warm, "cost-book-delta planned sweep diverged");
+
+    // shape delta (batch axis): nothing survives, and the fresh plan's
+    // sweep still matches its cold baseline
+    let mut bigger = cfg.clone();
+    bigger.global_batch = 16;
+    let reuse = plan.reuse_against(&model, &cluster, &book, &bigger);
+    assert!(!reuse.any(), "shape delta must invalidate everything: {reuse:?}");
+    let (fresh, _) = plan.launch(&model, &cluster, &book, &bigger, None);
+    let cold = serialize(&engine(&model, &cluster, &book, &bigger).sweep());
+    let warm = serialize(
+        &engine(&model, &cluster, &book, &bigger)
+            .with_plan(Arc::new(fresh))
+            .sweep(),
+    );
+    assert_eq!(cold, warm, "recompiled planned sweep diverged");
+}
+
+// ---------------------------------------------------------------------------
+// daemon end to end
+
+fn run_lines(input: &str, workers: usize) -> Vec<String> {
+    let mut out: Vec<u8> = Vec::new();
+    serve_ndjson(
+        Cursor::new(input.to_string()),
+        &mut out,
+        &ServeOpts {
+            workers,
+            ..ServeOpts::default()
+        },
+    );
+    String::from_utf8(out)
+        .expect("responses are utf-8")
+        .lines()
+        .map(str::to_string)
+        .collect()
+}
+
+fn sweep_line(id: &str, global_batch: usize) -> String {
+    format!(
+        r#"{{"id":"{id}","op":"sweep","model":"bert-large","cluster":{{"preset":"a40","nodes":1,"gpus_per_node":4}},"sweep":{{"global_batch":{global_batch},"profile_iters":1,"prune":true}}}}"#
+    )
+}
+
+/// Sweep responses through the always-on daemon plan cache are
+/// bit-identical for any worker count — including repeated shapes, where
+/// later requests ride the compiled plan.
+#[test]
+fn daemon_plan_cache_keeps_responses_bit_identical_for_any_worker_count() {
+    let input = [
+        sweep_line("a", 8),
+        sweep_line("b", 16),
+        sweep_line("a-again", 8),
+        sweep_line("a-thrice", 8),
+    ]
+    .join("\n");
+    let serial = run_lines(&input, 1);
+    assert_eq!(serial.len(), 4);
+    for workers in [2, 4] {
+        assert_eq!(
+            serial,
+            run_lines(&input, workers),
+            "{workers} workers diverged from serial with the plan cache on"
+        );
+    }
+}
+
+/// With one worker the accounting is exact: the repeat of a shape is a
+/// full plan hit, a scenario-salted repeat is a partial reuse, and
+/// `compiles + hits + partial` equals the plan-cached sweeps served.
+#[test]
+fn stats_reports_plan_hits_and_the_accounting_reconciles() {
+    let salted = r#"{"id":"c","op":"sweep","model":"bert-large","cluster":{"preset":"a40","nodes":1,"gpus_per_node":4},"sweep":{"global_batch":8,"profile_iters":1,"prune":true,"scenario":{"stragglers":[{"device":0,"factor":1.5}]}}}"#;
+    let input = [
+        sweep_line("cold", 8),
+        sweep_line("warm", 8),
+        salted.to_string(),
+        r#"{"id":"s","op":"stats"}"#.to_string(),
+    ]
+    .join("\n");
+    let lines = run_lines(&input, 1);
+    assert_eq!(lines.len(), 4);
+
+    // identical requests answer with identical bytes modulo the id
+    let strip_id = |line: &str, id: &str| line.replace(&format!(r#""id":"{id}""#), r#""id":_"#);
+    assert_eq!(
+        strip_id(&lines[0], "cold"),
+        strip_id(&lines[1], "warm"),
+        "plan-hit response diverged from the compile response"
+    );
+
+    let stats = Json::parse(&lines[3]).expect("stats line parses");
+    let plans = stats
+        .get("result")
+        .and_then(|r| r.get("plans"))
+        .unwrap_or_else(|| panic!("no result.plans in {stats}"));
+    let field = |k: &str| {
+        plans
+            .get(k)
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| panic!("no plans.{k} in {stats}"))
+    };
+    let (compiles, hits, partial) = (field("compiles"), field("hits"), field("partial"));
+    assert_eq!(compiles, 1, "one shape, one cold compile");
+    assert_eq!(hits, 1, "the identical repeat is a full hit");
+    assert_eq!(partial, 1, "the scenario-salted repeat is a partial reuse");
+    assert_eq!(compiles + hits + partial, 3, "every sweep lands in one bucket");
+}
